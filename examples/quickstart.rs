@@ -1,0 +1,75 @@
+//! Quickstart: the paper's Fig. 1 — build the S-SGD DAG of a 3-layer
+//! network on 4 GPUs, simulate it on the K80 cluster model, and show the
+//! schedule three ways (task table, ASCII Gantt, Graphviz DOT).
+//!
+//!     cargo run --release --example quickstart
+
+use dagsgd::cluster::presets;
+use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+use dagsgd::frameworks::strategy;
+use dagsgd::models::layer::{LayerKind, LayerSpec, NetSpec};
+use dagsgd::sim::{executor, timeline};
+use dagsgd::util::units::fmt_dur;
+
+fn main() {
+    // The 3-layer model of Fig. 1.
+    let net = NetSpec {
+        name: "fig1-3layer".into(),
+        layers: (0..3)
+            .map(|i| {
+                LayerSpec::new(
+                    &format!("layer{}", i + 1),
+                    LayerKind::Conv,
+                    2_000_000,           // 8 MB of gradients per layer
+                    300e6 * (i + 1) as f64, // deeper layers cost more
+                    1e5,
+                )
+            })
+            .collect(),
+        input_bytes: 3 * 224 * 224,
+        default_batch: 64,
+    };
+    let cluster = presets::k80_cluster();
+    let job = JobSpec {
+        net,
+        batch_per_gpu: 64,
+        nodes: 1,
+        gpus_per_node: 4,
+        iterations: 3,
+    };
+    let fw = strategy::caffe_mpi();
+
+    let (dag, res) = build_ssgd_dag(&cluster, &job, &fw);
+    println!(
+        "Fig. 1 DAG: {} tasks, {} edges over {} resources\n",
+        dag.len(),
+        dag.edge_count(),
+        res.pool.len()
+    );
+
+    // Print iteration 0's tasks like the paper's T0..T35 walk-through.
+    println!("iteration 0 task list:");
+    for (i, t) in dag.tasks.iter().enumerate().filter(|(_, t)| t.iter == 0) {
+        println!(
+            "  T{i:<3} {:28} [{}] {:>9} on {}",
+            t.name,
+            match t.kind() {
+                dagsgd::dag::node::TaskKind::Compute => "compute",
+                dagsgd::dag::node::TaskKind::Comm => "comm   ",
+            },
+            fmt_dur(t.duration),
+            res.pool.name(t.resource),
+        );
+    }
+
+    let sim = executor::simulate(&dag, &res.pool);
+    println!("\nmakespan of 3 chained iterations: {}", fmt_dur(sim.makespan));
+    println!("critical path lower bound:        {}", fmt_dur(dag.critical_path_length().unwrap()));
+
+    println!("\nschedule (i=io (incl. decode) h=h2d f=fwd b=bwd a=agg u=upd):");
+    print!("{}", timeline::ascii_gantt(&dag, &res.pool, &sim, 100));
+
+    let dot_path = std::env::temp_dir().join("dagsgd_fig1.dot");
+    std::fs::write(&dot_path, dag.to_dot()).expect("write dot");
+    println!("\nGraphviz DOT written to {} (render: dot -Tpng)", dot_path.display());
+}

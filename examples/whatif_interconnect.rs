@@ -1,0 +1,110 @@
+//! What-if interconnect study — the paper's closing question ("even
+//! NVLink and InfiniBand cannot catch up with the growth of GPU computing
+//! power"): sweep the inter-node bandwidth and find where gradient
+//! communication stops being hidable for each network, plus the all-reduce
+//! algorithm crossover.
+//!
+//!     cargo run --release --example whatif_interconnect
+
+use dagsgd::cluster::presets;
+use dagsgd::comm::allreduce::{allreduce_time, Algorithm};
+use dagsgd::dag::builder::{comm_topo, iteration_time, JobSpec};
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::util::cli::Args;
+use dagsgd::util::table::{f, Table};
+use dagsgd::util::units::gbit_s;
+
+fn main() {
+    let args = Args::from_env();
+    let gbps_list: Vec<f64> = args
+        .str_list_or("gbps", &["10", "25", "50", "100", "200", "400", "1000"])
+        .iter()
+        .map(|s| s.parse().expect("bad gbps"))
+        .collect();
+
+    // ---- Part 1: bandwidth sweep on the V100 cluster, 16 GPUs ----
+    println!("== V100 cluster, 4x4 GPUs, Caffe-MPI: inter-node bandwidth sweep ==");
+    let mut t = Table::new(&["net Gbps", "alexnet S", "googlenet S", "resnet50 S"]);
+    for &gbps in &gbps_list {
+        let mut cluster = presets::v100_cluster();
+        cluster.net_bw = gbit_s(gbps);
+        let mut row = vec![format!("{gbps}")];
+        for net in zoo::all() {
+            let single = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net: net.clone(),
+                nodes: 1,
+                gpus_per_node: 1,
+                iterations: 8,
+            };
+            let multi = JobSpec {
+                nodes: 4,
+                gpus_per_node: 4,
+                ..single.clone()
+            };
+            let fw = strategy::caffe_mpi();
+            let t1 = iteration_time(&cluster, &single, &fw);
+            let tn = iteration_time(&cluster, &multi, &fw);
+            row.push(f(16.0 * t1 / tn, 2));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!("(speedup vs 1 GPU; where a column stops improving, the bottleneck has moved off the network)");
+
+    // ---- Part 2: all-reduce algorithm comparison per message size ----
+    println!("\n== all-reduce algorithm cost on the V100/IB cluster (16 GPUs) ==");
+    let cluster = presets::v100_cluster();
+    let topo = comm_topo(&cluster, 4, 4);
+    let mut t2 = Table::new(&["message", "ring", "tree", "hierarchical", "ps"]);
+    for kb in [4.0, 64.0, 1024.0, 16.0 * 1024.0, 256.0 * 1024.0] {
+        let bytes = kb * 1024.0;
+        let label = if kb >= 1024.0 {
+            format!("{:.0}MB", kb / 1024.0)
+        } else {
+            format!("{kb:.0}KB")
+        };
+        t2.row(&[
+            label,
+            f(allreduce_time(Algorithm::Ring, &topo, bytes) * 1e3, 3),
+            f(allreduce_time(Algorithm::Tree, &topo, bytes) * 1e3, 3),
+            f(allreduce_time(Algorithm::Hierarchical, &topo, bytes) * 1e3, 3),
+            f(allreduce_time(Algorithm::ParameterServer, &topo, bytes) * 1e3, 3),
+        ]);
+    }
+    t2.print();
+    println!("(milliseconds per all-reduce; the latency floor on small messages is\n the paper's finding #4 — layer-wise exchange wastes fast networks)");
+
+    // ---- Part 3: compute-growth thought experiment ----
+    println!("\n== how much faster can GPUs get before 100Gb IB is the wall? ==");
+    let mut t3 = Table::new(&["GPU speed ×", "resnet50 16-GPU speedup", "comm-bound?"]);
+    for mult in [0.5, 1.0, 2.0, 4.0, 8.0] {
+        let mut cluster = presets::v100_cluster();
+        cluster.gpu.peak_flops *= mult;
+        cluster.gpu.mem_bw *= mult;
+        let net = zoo::resnet50();
+        let single = JobSpec {
+            batch_per_gpu: net.default_batch,
+            net: net.clone(),
+            nodes: 1,
+            gpus_per_node: 1,
+            iterations: 8,
+        };
+        let multi = JobSpec {
+            nodes: 4,
+            gpus_per_node: 4,
+            ..single.clone()
+        };
+        let fw = strategy::caffe_mpi();
+        let t1 = iteration_time(&cluster, &single, &fw);
+        let tn = iteration_time(&cluster, &multi, &fw);
+        let s = 16.0 * t1 / tn;
+        t3.row(&[
+            format!("{mult}x"),
+            f(s, 2),
+            (if s < 12.0 { "yes" } else { "no" }).to_string(),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,138 @@
+"""AOT compile path: lower the L2 train/update steps to HLO **text** and
+dump initial parameters + metadata for the Rust runtime.
+
+Run once by `make artifacts`; the Rust binary is self-contained afterwards.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--d-model 128 ...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: model.Config) -> str:
+    spec = model.param_spec(cfg)
+    args = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in spec]
+    args.append(jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32))  # tokens
+    args.append(jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32))  # targets
+    return to_hlo_text(jax.jit(model.make_train_step(cfg)).lower(*args))
+
+
+def lower_update_step(cfg: model.Config) -> str:
+    spec = model.param_spec(cfg)
+    args = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in spec] * 2
+    return to_hlo_text(jax.jit(model.make_update_step(cfg)).lower(*args))
+
+
+def write_params(cfg: model.Config, path: str, seed: int) -> list:
+    """Dump initial parameters as one flat little-endian f32 blob; return
+    the parameter table (name, shape, numel, offset-in-floats)."""
+    params = model.init_params(cfg, seed=seed)
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for (name, shape), p in zip(model.param_spec(cfg), params):
+            arr = np.asarray(p, dtype="<f4")
+            f.write(arr.tobytes())
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "numel": int(arr.size),
+                    "offset": offset,
+                }
+            )
+            offset += int(arr.size)
+    return table
+
+
+def build(cfg: model.Config, out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+
+    train_hlo = lower_train_step(cfg)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+
+    update_hlo = lower_update_step(cfg)
+    with open(os.path.join(out_dir, "update_step.hlo.txt"), "w") as f:
+        f.write(update_hlo)
+
+    table = write_params(cfg, os.path.join(out_dir, "params.bin"), seed)
+
+    meta = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+        },
+        "params": table,
+        "total_params": sum(t["numel"] for t in table),
+        "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "update_step": "update_step.hlo.txt",
+            "params": "params.bin",
+        },
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = model.Config(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        n_layers=args.n_layers,
+        seq=args.seq,
+        batch=args.batch,
+        lr=args.lr,
+    )
+    meta = build(cfg, args.out_dir, seed=args.seed)
+    print(
+        f"wrote artifacts to {args.out_dir}: "
+        f"{meta['total_params']} parameters, "
+        f"{len(meta['params'])} tensors"
+    )
+
+
+if __name__ == "__main__":
+    main()

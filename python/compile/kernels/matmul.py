@@ -1,0 +1,138 @@
+"""Layer-1 Pallas kernel: tiled matmul with fused bias + GELU epilogue.
+
+This is the compute hot-spot of the L2 transformer (QKV/out projections,
+MLP, LM head). Hardware adaptation of the paper's cuDNN GEMMs (DESIGN.md
+§Hardware-Adaptation):
+
+* the CUDA threadblock tiling becomes a Pallas ``grid`` over (M/bm, N/bn,
+  K/bk) with ``BlockSpec`` index maps describing the HBM→VMEM schedule;
+* the tensor-core WMMA tile becomes an MXU-shaped ``bm×bk @ bk×bn`` block
+  matmul (default 128×128×128 — one MXU-aligned tile, fp32 accumulate);
+* the bias/activation epilogue is fused into the last K-step while the
+  accumulator tile is still VMEM-resident (cuDNN's fused epilogue).
+
+VMEM footprint per grid step = (bm·bk + bk·bn + bm·bn + bn) · 4 B
+≈ 192 KiB at the default tile — far under the ~16 MiB VMEM budget, leaving
+room for double-buffering (see DESIGN.md §Perf).
+
+Lowered with ``interpret=True``: the CPU PJRT client cannot execute Mosaic
+custom-calls; on a real TPU the same code compiles natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, b_ref, o_ref, *, nsteps_k, activation):
+    """Grid point (i, j, k): accumulate X[i,k] @ Y[k,j] into O[i,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if b_ref is not None:
+            acc = acc + b_ref[...]
+        if activation == "gelu":
+            c = jnp.sqrt(2.0 / jnp.pi).astype(acc.dtype)
+            acc = 0.5 * acc * (1.0 + jnp.tanh(c * (acc + 0.044715 * acc**3)))
+        o_ref[...] = acc
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
+def matmul(
+    x,
+    y,
+    bias=None,
+    activation=None,
+    bm=DEFAULT_BLOCK,
+    bn=DEFAULT_BLOCK,
+    bk=DEFAULT_BLOCK,
+    interpret=True,
+):
+    """``x @ y (+ bias) (∘ gelu)`` via the Pallas kernel.
+
+    ``x``: (M, K), ``y``: (K, N), ``bias``: (N,) or None. Arbitrary M/N/K —
+    inputs are zero-padded up to tile multiples and the result sliced back.
+    """
+    assert x.ndim == 2 and y.ndim == 2 and x.shape[1] == y.shape[0]
+    if activation not in (None, "gelu"):
+        raise ValueError(f"unsupported activation {activation}")
+    m, kdim = x.shape
+    n = y.shape[1]
+    # Shrink tiles for small problems, then pad to multiples.
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    yp = _pad_to(_pad_to(y, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = yp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    args = [xp, yp]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    if bias is not None:
+        assert bias.shape == (n,)
+        args.append(_pad_to(bias, 0, bn))
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
+        kernel = functools.partial(
+            _matmul_kernel, nsteps_k=grid[2], activation=activation
+        )
+    else:
+        kernel = functools.partial(
+            lambda xr, yr, orf, **kw: _matmul_kernel(xr, yr, None, orf, **kw),
+            nsteps_k=grid[2],
+            activation=activation,
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, with_bias=True):
+    """Estimated VMEM bytes held per grid step (perf-model input)."""
+    tiles = bm * bk + bk * bn + bm * bn + (bn if with_bias else 0)
+    return 4 * tiles
+
+
+def mxu_utilization(bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """Fraction of a 128×128 MXU an individual block matmul can feed
+    (1.0 when every tile dimension is a multiple of 128)."""
+    def frac(d):
+        return min(d, 128) / 128.0
+
+    return frac(bm) * frac(bn) * frac(bk)

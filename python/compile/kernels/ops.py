@@ -1,0 +1,157 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+``pl.pallas_call`` has no automatic VJP, so each op defines its backward
+pass explicitly — with the backward matmuls routed through the same Pallas
+matmul kernel, keeping the MXU path on both sides of autodiff (this is
+what cuDNN does with dedicated dgrad/wgrad kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+from . import layernorm as ln
+from . import softmax as sm
+from . import ref
+
+
+# --------------------------------------------------------------------------
+# matmul (+bias, +gelu)
+# --------------------------------------------------------------------------
+
+
+def _gelu_grad(z):
+    """d/dz gelu(z) for the tanh approximation used in the kernel."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+    u = c * (z + 0.044715 * z**3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * z**2)
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * du
+
+
+@jax.custom_vjp
+def matmul(x, y, bias):
+    return mm.matmul(x, y, bias=bias)
+
+
+def _matmul_fwd(x, y, bias):
+    return mm.matmul(x, y, bias=bias), (x, y)
+
+
+def _matmul_bwd(res, dout):
+    x, y = res
+    dx = mm.matmul(dout, y.T)
+    dy = mm.matmul(x.T, dout)
+    db = jnp.sum(dout, axis=0)
+    return dx, dy, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@jax.custom_vjp
+def matmul_gelu(x, y, bias):
+    return mm.matmul(x, y, bias=bias, activation="gelu")
+
+
+def _matmul_gelu_fwd(x, y, bias):
+    # Rematerialize z = x@y+b in the backward instead of saving it
+    # (memory-for-compute, the standard epilogue-fusion trade).
+    return mm.matmul(x, y, bias=bias, activation="gelu"), (x, y, bias)
+
+
+def _matmul_gelu_bwd(res, dout):
+    x, y, bias = res
+    z = mm.matmul(x, y, bias=bias)
+    dz = dout * _gelu_grad(z)
+    dx = mm.matmul(dz, y.T)
+    dy = mm.matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dy, db
+
+
+matmul_gelu.defvjp(_matmul_gelu_fwd, _matmul_gelu_bwd)
+
+
+# --------------------------------------------------------------------------
+# layernorm
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    return ln.layernorm(x, gamma, beta)
+
+
+def _layernorm_fwd(x, gamma, beta):
+    return ln.layernorm(x, gamma, beta), (x, gamma)
+
+
+def _layernorm_bwd(res, dout):
+    x, gamma = res
+    eps = 1e-5
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * inv
+    dg = jnp.sum(dout * xhat, axis=0)
+    db = jnp.sum(dout, axis=0)
+    dxhat = dout * gamma
+    dx = inv * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+    return dx, dg, db
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)
+
+
+# --------------------------------------------------------------------------
+# causal softmax
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def causal_softmax(x):
+    return sm.softmax_rows(x, causal=True)
+
+
+def _causal_softmax_fwd(x):
+    p = sm.softmax_rows(x, causal=True)
+    return p, (p,)
+
+
+def _causal_softmax_bwd(res, dout):
+    (p,) = res
+    # Masked entries have p = 0, so their dx is 0 automatically.
+    dx = p * (dout - jnp.sum(dout * p, axis=-1, keepdims=True))
+    return (dx,)
+
+
+causal_softmax.defvjp(_causal_softmax_fwd, _causal_softmax_bwd)
+
+
+# --------------------------------------------------------------------------
+# reference (pure-jnp) twins used by the model-level equivalence test
+# --------------------------------------------------------------------------
+
+
+def matmul_ref(x, y, bias):
+    return ref.matmul(x, y, bias=bias)
+
+
+def matmul_gelu_ref(x, y, bias):
+    return ref.matmul(x, y, bias=bias, activation="gelu")
+
+
+def layernorm_ref(x, gamma, beta):
+    return ref.layernorm(x, gamma, beta)
+
+
+def causal_softmax_ref(x):
+    r, n = x.shape
+    row = jnp.arange(r)[:, None] % n
+    col = jnp.arange(n)[None, :]
+    return ref.softmax_rows(x, mask=col <= row)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+The pytest suite asserts `kernels.<k>(...) ≈ ref.<k>(...)` over a
+hypothesis-driven sweep of shapes; the L2 model is additionally checked
+end-to-end against a reference model built exclusively from these.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y, bias=None, activation=None):
+    """`x @ y (+ bias) (∘ activation)` in fp32."""
+    out = jnp.matmul(x, y)
+    if bias is not None:
+        out = out + bias
+    if activation == "gelu":
+        out = gelu(out)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation}")
+    return out
+
+
+def gelu(x):
+    """tanh-approximated GELU (matches the kernel's epilogue)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """Row-wise LayerNorm over the last axis."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def softmax_rows(x, mask=None):
+    """Numerically stable row softmax; `mask` (broadcastable, bool) marks
+    positions kept — masked-out entries get probability 0."""
+    if mask is not None:
+        x = jnp.where(mask, x, jnp.finfo(x.dtype).min)
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def sgd_update(param, grad, lr):
+    """Vanilla SGD step."""
+    return param - lr * grad

@@ -1,0 +1,97 @@
+"""L1 performance report: VMEM footprint and MXU-utilization estimates for
+every GEMM the transformer config runs through the Pallas matmul kernel.
+
+`interpret=True` gives CPU-numpy timings, which say nothing about TPU
+performance — so the §Perf deliverable for L1 is *structural*: tile sizes
+vs the ~16 MiB VMEM budget and MXU alignment of every operand. Run:
+
+    cd python && python -m compile.kernels.report [--d-model 128 ...]
+"""
+
+import argparse
+
+from . import matmul as mm
+from .. import model
+
+
+def gemm_shapes(cfg: model.Config):
+    """Every (name, M, K, N) GEMM in one fwd+bwd step (per worker)."""
+    rows = cfg.batch * cfg.seq
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes = []
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"block{i}.qkv", rows, d, 3 * d),
+            (f"block{i}.attn_out", rows, d, d),
+            (f"block{i}.mlp_in(gelu)", rows, d, ff),
+            (f"block{i}.mlp_out", rows, ff, d),
+        ]
+    shapes.append(("head", rows, d, v))
+    # Backward adds dgrad (M,N)x(N,K) and wgrad (K,M)x(M,N) per GEMM.
+    bwd = []
+    for name, m, k, n in shapes:
+        bwd.append((name + ".dgrad", m, n, k))
+        bwd.append((name + ".wgrad", k, m, n))
+    return shapes + bwd
+
+
+def report(cfg: model.Config, bm=128, bn=128, bk=128):
+    lines = []
+    total_flops = 0.0
+    worst_util = 1.0
+    for name, m, k, n in gemm_shapes(cfg):
+        eb_m, eb_k, eb_n = min(bm, m), min(bk, k), min(bn, n)
+        vmem = mm.vmem_bytes(eb_m, eb_n, eb_k)
+        util = mm.mxu_utilization(eb_m, eb_n, eb_k)
+        worst_util = min(worst_util, util)
+        flops = 2.0 * m * k * n
+        total_flops += flops
+        lines.append(
+            f"{name:24} {m:>6}x{k:<6}x{n:<6} tile {eb_m}x{eb_k}x{eb_n} "
+            f"vmem {vmem / 1024:8.1f}KiB  mxu {util * 100:5.1f}%  "
+            f"{flops / 1e6:9.1f} MFLOP"
+        )
+    header = (
+        f"L1 GEMM report — d_model={cfg.d_model} layers={cfg.n_layers} "
+        f"batch={cfg.batch} seq={cfg.seq} (tiles ≤ {bm}x{bk}x{bn})"
+    )
+    budget = 16 * 1024 * 1024
+    max_vmem = max(
+        mm.vmem_bytes(min(bm, m), min(bn, n), min(bk, k))
+        for _, m, k, n in gemm_shapes(cfg)
+    )
+    footer = (
+        f"total {total_flops / 1e9:.2f} GFLOP/step | max tile VMEM "
+        f"{max_vmem / 1024:.1f}KiB of {budget // 1024}KiB budget "
+        f"({budget / max_vmem:.0f}x double-buffer headroom) | worst MXU "
+        f"utilization {worst_util * 100:.1f}%"
+    )
+    return header, lines, footer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    cfg = model.Config(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        n_layers=args.n_layers,
+        seq=args.seq,
+        batch=args.batch,
+    )
+    header, lines, footer = report(cfg)
+    print(header)
+    for l in lines:
+        print(" ", l)
+    print(footer)
+
+
+if __name__ == "__main__":
+    main()

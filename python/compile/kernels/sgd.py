@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: fused SGD parameter update.
+
+`p ← p − lr·g` over a flat fp32 vector, tiled into VMEM chunks — the
+paper's step-6 "update" task as a single bandwidth-bound kernel (its
+CUDA counterpart is a grid-stride elementwise kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 16_384
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def sgd_update(param, grad, lr, chunk=DEFAULT_CHUNK, interpret=True):
+    """SGD step on tensors of any shape (flattened internally)."""
+    assert param.shape == grad.shape
+    flat_p = param.reshape(-1)
+    flat_g = grad.reshape(-1)
+    n = flat_p.shape[0]
+    c = min(chunk, n)
+    pad = (-n) % c
+    if pad:
+        flat_p = jnp.pad(flat_p, (0, pad))
+        flat_g = jnp.pad(flat_g, (0, pad))
+    lr_arr = jnp.asarray([lr], dtype=param.dtype)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(flat_p.shape[0] // c,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat_p.shape, param.dtype),
+        interpret=interpret,
+    )(flat_p, flat_g, lr_arr)
+    return out[:n].reshape(param.shape)

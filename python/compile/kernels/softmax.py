@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: masked row softmax (attention probabilities).
+
+The row dimension is tiled; the full softmax axis lives in one VMEM block
+(attention rows are seq-length sized — ≤ a few K elements — so a
+register/VMEM single-pass max-subtract-exp-normalize is the natural TPU
+shape for CUDA's warp-reduction softmax).
+
+The causal mask is computed inside the kernel from absolute row/column
+indices, so no mask tensor ever travels through HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_BLOCK = 128
+
+
+def _softmax_kernel(x_ref, o_ref, *, rows, causal):
+    x = x_ref[...]
+    if causal:
+        # Absolute row index within the (padded) matrix; the softmax axis
+        # is the key position. Rows attend to columns ≤ their own seq pos.
+        i = pl.program_id(0)
+        n = x.shape[-1]
+        row = i * rows + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        # Row r of the flattened (batch·seq) matrix has seq position r % n.
+        keep = col <= (row % n)
+        x = jnp.where(keep, x, jnp.finfo(x.dtype).min)
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "rows", "interpret"))
+def softmax_rows(x, causal=False, rows=DEFAULT_ROW_BLOCK, interpret=True):
+    """Row softmax of a 2-D ``x`` (R, N). With ``causal=True``, ``R`` must
+    be a multiple of ``N`` (flattened (batch·seq, seq) attention scores)
+    and entry (r, c) is masked out when ``c > r % N``."""
+    assert x.ndim == 2
+    r, n = x.shape
+    if causal:
+        assert r % n == 0, "causal softmax expects (batch*seq, seq) scores"
+    rows_eff = min(rows, r)
+    pad = (-r) % rows_eff
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        functools.partial(_softmax_kernel, rows=rows_eff, causal=causal),
+        grid=(xp.shape[0] // rows_eff,),
+        in_specs=[pl.BlockSpec((rows_eff, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_eff, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:r]

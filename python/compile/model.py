@@ -1,0 +1,238 @@
+"""Layer-2: the JAX model — a decoder-only transformer LM trained with
+S-SGD by the Rust coordinator.
+
+Forward/backward are built on the differentiable Pallas ops in
+``kernels.ops`` (tiled matmul + fused epilogues, fused LayerNorm, causal
+softmax). ``train_step`` takes the flat parameter list plus a token batch
+and returns ``(loss, *gradients)``; ``update_step`` applies SGD via the
+Pallas update kernel. Both are AOT-lowered to HLO text by ``aot.py`` and
+executed from Rust — Python never runs at training time.
+
+A pure-jnp twin (``*_ref``) of the whole model exists for the kernel-vs-
+reference equivalence tests.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ops
+from .kernels import sgd as sgd_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Transformer hyper-parameters (sizes chosen MXU/VMEM-friendly —
+    multiples of 128 where it matters)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    seq: int = 64
+    batch: int = 8
+    lr: float = 0.05
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+def param_spec(cfg: Config) -> List[tuple]:
+    """Ordered (name, shape) of every parameter tensor. This order *is*
+    the ABI between the artifacts and the Rust runtime (meta.json)."""
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        spec += [
+            (p + "ln1.g", (cfg.d_model,)),
+            (p + "ln1.b", (cfg.d_model,)),
+            (p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "attn.bqkv", (3 * cfg.d_model,)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "attn.bo", (cfg.d_model,)),
+            (p + "ln2.g", (cfg.d_model,)),
+            (p + "ln2.b", (cfg.d_model,)),
+            (p + "mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.b1", (cfg.d_ff,)),
+            (p + "mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.b2", (cfg.d_model,)),
+        ]
+    spec += [
+        ("lnf.g", (cfg.d_model,)),
+        ("lnf.b", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return spec
+
+
+def param_count(cfg: Config) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def init_params(cfg: Config, seed: int = 0) -> List[jnp.ndarray]:
+    """Scaled-normal init for matrices, ones/zeros for norms and biases."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", ".bqkv", ".bo", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            scale = 0.02 if "emb" in name else (1.0 / shape[0]) ** 0.5
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _forward(params, tokens, cfg: Config, k):
+    """Logits (B·S, V). `k` selects the kernel set: pallas ops or the
+    pure-jnp reference twins."""
+    matmul, matmul_gelu, layernorm, csoftmax = k
+    it = iter(params)
+
+    def take():
+        return next(it)
+
+    tok_emb, pos_emb = take(), take()
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = tok_emb[tokens] + pos_emb[None, :, :]  # (B, S, D)
+    x = x.reshape(b * s, d)
+
+    for _ in range(cfg.n_layers):
+        ln1_g, ln1_b = take(), take()
+        wqkv, bqkv = take(), take()
+        wo, bo = take(), take()
+        ln2_g, ln2_b = take(), take()
+        w1, b1, w2, b2 = take(), take(), take(), take()
+
+        # --- attention ---
+        h = layernorm(x, ln1_g, ln1_b)
+        qkv = matmul(h, wqkv, bqkv)  # (B·S, 3D)
+        q, kk, v = jnp.split(qkv, 3, axis=1)
+
+        def heads(t):
+            return (
+                t.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            )  # (B, H, S, dh)
+
+        q, kk, v = heads(q), heads(kk), heads(v)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / jnp.sqrt(
+            jnp.float32(cfg.d_head)
+        )
+        probs = csoftmax(scores.reshape(b * cfg.n_heads * s, s)).reshape(
+            b, cfg.n_heads, s, s
+        )
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+        x = x + matmul(ctx, wo, bo)
+
+        # --- MLP ---
+        h = layernorm(x, ln2_g, ln2_b)
+        h = matmul_gelu(h, w1, b1)
+        x = x + matmul(h, w2, b2)
+
+    lnf_g, lnf_b = take(), take()
+    head = take()
+    x = layernorm(x, lnf_g, lnf_b)
+    logits = matmul(x, head, jnp.zeros((cfg.vocab,), jnp.float32))
+    return logits
+
+
+_PALLAS_KERNELS = (ops.matmul, ops.matmul_gelu, ops.layernorm, ops.causal_softmax)
+_REF_KERNELS = (
+    ops.matmul_ref,
+    ops.matmul_gelu_ref,
+    ops.layernorm_ref,
+    ops.causal_softmax_ref,
+)
+
+
+def forward(params, tokens, cfg: Config):
+    return _forward(params, tokens, cfg, _PALLAS_KERNELS)
+
+
+def forward_ref(params, tokens, cfg: Config):
+    return _forward(params, tokens, cfg, _REF_KERNELS)
+
+
+def _loss_from_logits(logits, targets, vocab):
+    tgt = targets.reshape(-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=1)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, tokens, targets, cfg: Config):
+    """Mean next-token cross-entropy."""
+    return _loss_from_logits(forward(params, tokens, cfg), targets, cfg.vocab)
+
+
+def loss_fn_ref(params, tokens, targets, cfg: Config):
+    return _loss_from_logits(forward_ref(params, tokens, cfg), targets, cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# the two AOT entry points
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: Config):
+    """`(params..., tokens, targets) → (loss, grad_0, ..., grad_{P-1})`."""
+    nparams = len(param_spec(cfg))
+
+    def train_step(*args):
+        params = list(args[:nparams])
+        tokens, targets = args[nparams], args[nparams + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, tokens, targets, cfg)
+        )(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_update_step(cfg: Config):
+    """`(params..., grads...) → (new_params...)` via the Pallas SGD kernel
+    (learning rate is baked into the artifact, like a compiled optimizer)."""
+    nparams = len(param_spec(cfg))
+
+    def update_step(*args):
+        params = args[:nparams]
+        grads = args[nparams:]
+        return tuple(
+            sgd_kernel.sgd_update(p, g, cfg.lr) for p, g in zip(params, grads)
+        )
+
+    return update_step
+
+
+def example_batch(cfg: Config, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    targets = jax.random.randint(k2, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    return tokens, targets

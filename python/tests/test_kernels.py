@@ -1,0 +1,146 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+swept over shapes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import layernorm as ln
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels import sgd
+from compile.kernels import softmax as sm
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=160)
+SMALL_DIMS = st.integers(min_value=1, max_value=96)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS)
+def test_matmul_matches_ref(m, k, n):
+    x, y = rand(0, m, k), rand(1, k, n)
+    np.testing.assert_allclose(mm.matmul(x, y), ref.matmul(x, y), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS)
+def test_matmul_bias_matches_ref(m, k, n):
+    x, y, b = rand(0, m, k), rand(1, k, n), rand(2, n)
+    np.testing.assert_allclose(
+        mm.matmul(x, y, bias=b), ref.matmul(x, y, bias=b), rtol=2e-4, atol=2e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS)
+def test_matmul_gelu_matches_ref(m, k, n):
+    x, y, b = rand(0, m, k), rand(1, k, n), rand(2, n)
+    np.testing.assert_allclose(
+        mm.matmul(x, y, bias=b, activation="gelu"),
+        ref.matmul(x, y, bias=b, activation="gelu"),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 128, 32), (128, 128, 128)])
+def test_matmul_block_shapes_equivalent(bm, bn, bk):
+    x, y = rand(0, 200, 144), rand(1, 144, 72)
+    expect = ref.matmul(x, y)
+    got = mm.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, expect, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_rejects_bad_activation():
+    x, y = rand(0, 8, 8), rand(1, 8, 8)
+    with pytest.raises(ValueError):
+        mm.matmul(x, y, activation="relu6")
+
+
+def test_vmem_and_mxu_estimates():
+    assert mm.vmem_bytes(128, 128, 128) == 4 * (3 * 128 * 128 + 128)
+    assert mm.mxu_utilization(128, 128, 128) == 1.0
+    assert mm.mxu_utilization(64, 128, 128) == 0.5
+
+
+# -------------------------------------------------------------- layernorm
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=DIMS, d=st.integers(min_value=2, max_value=256))
+def test_layernorm_matches_ref(r, d):
+    x, g, b = rand(0, r, d), rand(1, d), rand(2, d)
+    np.testing.assert_allclose(
+        ln.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_layernorm_normalizes():
+    x = rand(3, 64, 128) * 10 + 5
+    out = ln.layernorm(x, jnp.ones(128), jnp.zeros(128))
+    np.testing.assert_allclose(np.mean(out, axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.std(out, axis=-1), 1.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------- softmax
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=DIMS, n=st.integers(min_value=1, max_value=128))
+def test_softmax_matches_ref(r, n):
+    x = rand(0, r, n) * 5
+    np.testing.assert_allclose(
+        sm.softmax_rows(x), ref.softmax_rows(x), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(min_value=1, max_value=6), s=st.integers(min_value=1, max_value=48))
+def test_causal_softmax_masks_future(b, s):
+    x = rand(1, b * s, s) * 3
+    p = np.asarray(sm.softmax_rows(x, causal=True))
+    for r in range(b * s):
+        pos = r % s
+        assert np.all(p[r, pos + 1 :] == 0.0), f"row {r} leaks future"
+        np.testing.assert_allclose(p[r, : pos + 1].sum(), 1.0, rtol=1e-5)
+
+
+def test_softmax_rows_sum_to_one():
+    x = rand(2, 100, 50) * 10
+    p = np.asarray(sm.softmax_rows(x))
+    np.testing.assert_allclose(p.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+# -------------------------------------------------------------------- sgd
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=1, max_value=100_000), lr=st.floats(0.0, 1.0))
+def test_sgd_matches_ref(n, lr):
+    p, g = rand(0, n), rand(1, n)
+    np.testing.assert_allclose(
+        sgd.sgd_update(p, g, lr), ref.sgd_update(p, g, lr), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_sgd_preserves_shape():
+    p, g = rand(0, 12, 34), rand(1, 12, 34)
+    out = sgd.sgd_update(p, g, 0.1)
+    assert out.shape == (12, 34)
+    np.testing.assert_allclose(out, np.asarray(p) - 0.1 * np.asarray(g), rtol=1e-6)
+
+
+def test_sgd_zero_lr_is_identity():
+    p, g = rand(0, 1000), rand(1, 1000)
+    np.testing.assert_allclose(sgd.sgd_update(p, g, 0.0), p)

@@ -1,0 +1,72 @@
+"""Gradient correctness of the differentiable Pallas ops: each custom VJP
+against jax.grad of the pure-jnp reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+D = st.integers(min_value=2, max_value=64)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def grads_close(f_pallas, f_ref, args, rtol=3e-4, atol=3e-4):
+    g_pallas = jax.grad(lambda *a: jnp.sum(f_pallas(*a) ** 2), argnums=range(len(args)))(*args)
+    g_ref = jax.grad(lambda *a: jnp.sum(f_ref(*a) ** 2), argnums=range(len(args)))(*args)
+    for gp, gr in zip(g_pallas, g_ref):
+        np.testing.assert_allclose(gp, gr, rtol=rtol, atol=atol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=D, k=D, n=D)
+def test_matmul_grads(m, k, n):
+    args = (rand(0, m, k), rand(1, k, n), rand(2, n))
+    grads_close(ops.matmul, ops.matmul_ref, args)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=D, k=D, n=D)
+def test_matmul_gelu_grads(m, k, n):
+    args = (rand(0, m, k), rand(1, k, n), rand(2, n))
+    grads_close(ops.matmul_gelu, ops.matmul_gelu_ref, args)
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=D, d=D)
+def test_layernorm_grads(r, d):
+    args = (rand(0, r, d), rand(1, d), rand(2, d))
+    grads_close(ops.layernorm, ops.layernorm_ref, args, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(min_value=1, max_value=4), s=st.integers(min_value=2, max_value=24))
+def test_causal_softmax_grads(b, s):
+    args = (rand(0, b * s, s),)
+    grads_close(ops.causal_softmax, ops.causal_softmax_ref, args, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_grad_finite_differences():
+    """Independent check that the custom VJP isn't just matching a wrong
+    reference: central finite differences on a tiny case."""
+    x, y, b = rand(0, 3, 4), rand(1, 4, 2), rand(2, 2)
+
+    def f(x_):
+        return float(jnp.sum(ops.matmul(x_, y, b) ** 2))
+
+    g = np.asarray(jax.grad(lambda x_: jnp.sum(ops.matmul(x_, y, b) ** 2))(x))
+    eps = 1e-3
+    for i in range(3):
+        for j in range(4):
+            xp = np.asarray(x).copy()
+            xm = np.asarray(x).copy()
+            xp[i, j] += eps
+            xm[i, j] -= eps
+            fd = (f(jnp.asarray(xp)) - f(jnp.asarray(xm))) / (2 * eps)
+            np.testing.assert_allclose(g[i, j], fd, rtol=2e-2, atol=2e-3)

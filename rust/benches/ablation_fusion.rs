@@ -1,0 +1,125 @@
+//! Ablation bench: gradient fusion (tensor bucketing) and WFBP — the
+//! design-space study behind the paper's future-work sentence on better
+//! network utilization, plus the straggler-sensitivity study the DAG
+//! model enables.
+//!
+//!     cargo bench --bench ablation_fusion
+
+use dagsgd::analytic::{eqs, fusion, speedup};
+use dagsgd::bench::harness::Bench;
+use dagsgd::cluster::presets;
+use dagsgd::comm::allreduce::CommTopo;
+use dagsgd::dag::builder::{build_ssgd_dag, comm_topo, JobSpec};
+use dagsgd::frameworks::strategy;
+use dagsgd::sim::executor::simulate;
+use dagsgd::sim::failures::{inject, Fault};
+use dagsgd::models::zoo;
+use dagsgd::util::table::{f, Table};
+use dagsgd::util::units::fmt_bytes;
+
+fn fusion_table(
+    name: &str,
+    inputs: &eqs::IterInputs,
+    bytes: &[f64],
+    topo: &CommTopo,
+    fw: &strategy::Strategy,
+) {
+    println!("\n-- fusion scan: {name} --");
+    let (points, best) = fusion::optimal_bucket_bytes(inputs, bytes, topo, fw);
+    let mut t = Table::new(&["bucket cap", "buckets", "compute+comm (s)", "vs layer-wise"]);
+    let layerwise = points.first().unwrap().iter_time;
+    for p in &points {
+        t.row(&[
+            fmt_bytes(p.cap_bytes),
+            p.buckets.to_string(),
+            f(p.iter_time, 5),
+            format!("{}%", f(100.0 * (layerwise - p.iter_time) / layerwise, 2)),
+        ]);
+    }
+    t.print();
+    println!(
+        "best: cap {} ({} buckets), {}% over layer-wise",
+        fmt_bytes(best.cap_bytes),
+        best.buckets,
+        f(100.0 * (layerwise - best.iter_time) / layerwise, 2)
+    );
+}
+
+fn main() {
+    let mut bench = Bench::new("ablation_fusion");
+
+    // --- fusion scans on the comm-bound configurations ---
+    for (cname, cluster) in [("k80-10gbe", presets::k80_cluster()), ("v100-ib", presets::v100_cluster())] {
+        let net = zoo::resnet50();
+        let job = JobSpec {
+            batch_per_gpu: net.default_batch,
+            net: net.clone(),
+            nodes: 4,
+            gpus_per_node: 4,
+            iterations: 1,
+        };
+        let fw = strategy::caffe_mpi();
+        let inputs = speedup::iter_inputs(&cluster, &job, &fw);
+        let topo = comm_topo(&cluster, 4, 4);
+        let bytes: Vec<f64> = net.layers.iter().map(|l| l.param_bytes() as f64).collect();
+        bench.case(&format!("fusion_scan_{cname}"), 12.0, || {
+            fusion::optimal_bucket_bytes(&inputs, &bytes, &topo, &fw).1.iter_time
+        });
+        fusion_table(&format!("resnet50 on {cname}, 4x4 GPUs"), &inputs, &bytes, &topo, &fw);
+    }
+
+    // --- WFBP on/off across the grid (the CNTK gap, quantified) ---
+    println!("\n-- WFBP ablation: iteration time without/with overlap --");
+    let mut t = Table::new(&["cluster", "net", "no overlap (s)", "wfbp (s)", "gain"]);
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net: net.clone(),
+                nodes: 4,
+                gpus_per_node: 4,
+                iterations: 1,
+            };
+            let inputs = speedup::iter_inputs(&cluster, &job, &strategy::caffe_mpi());
+            let off = eqs::eq3_overlap_io(&inputs);
+            let on = eqs::eq5_wfbp(&inputs);
+            t.row(&[
+                cluster.name.clone(),
+                net.name.clone(),
+                f(off, 4),
+                f(on, 4),
+                format!("{}%", f(100.0 * (off - on) / off, 1)),
+            ]);
+        }
+    }
+    t.print();
+
+    // --- straggler sensitivity (bulk-synchronous amplification) ---
+    println!("\n-- straggler study: one slow GPU among 16 (ResNet, V100) --");
+    let cluster = presets::v100_cluster();
+    let job = JobSpec {
+        net: zoo::resnet50(),
+        batch_per_gpu: 32,
+        nodes: 4,
+        gpus_per_node: 4,
+        iterations: 6,
+    };
+    let fw = strategy::caffe_mpi();
+    let mut t2 = Table::new(&["straggler slowdown", "iter time (s)", "vs healthy"]);
+    let (dag0, res) = build_ssgd_dag(&cluster, &job, &fw);
+    let healthy = simulate(&dag0, &res.pool).makespan;
+    for factor in [1.0, 1.1, 1.25, 1.5, 2.0, 4.0] {
+        let mut dag = dag0.clone();
+        inject(&mut dag, &res.pool, &[Fault::StragglerGpu { rank: 5, factor }]);
+        let m = simulate(&dag, &res.pool).makespan;
+        t2.row(&[
+            format!("{factor}x"),
+            f(m / job.iterations as f64, 4),
+            format!("+{}%", f(100.0 * (m - healthy) / healthy, 1)),
+        ]);
+    }
+    t2.print();
+    println!("(S-SGD is bulk-synchronous: the whole cluster inherits the slowest rank)");
+
+    bench.report();
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate paper Fig. 2 (a and b) — single-node scaling of the
+//! four frameworks × three CNNs at 1/2/4 GPUs on both clusters — and time
+//! the simulation sweep itself.
+//!
+//!     cargo bench --bench fig2_single_node
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::cluster::presets;
+use dagsgd::experiments::fig2;
+
+fn main() {
+    let mut bench = Bench::new("fig2_single_node");
+
+    let k80 = bench.case("fig2a_k80_sweep", (3 * 4 * 3) as f64, || {
+        fig2::run(&presets::k80_cluster(), &[1, 2, 4])
+    });
+    let v100 = bench.case("fig2b_v100_sweep", (3 * 4 * 3) as f64, || {
+        fig2::run(&presets::v100_cluster(), &[1, 2, 4])
+    });
+
+    println!("\n-- Fig. 2a: K80 server (PCIe) --");
+    print!("{}", fig2::render(&k80));
+    println!("\n-- Fig. 2b: V100 server (NVLink) --");
+    print!("{}", fig2::render(&v100));
+
+    // The figure's qualitative claims, verified on the regenerated data.
+    let speedup = |pts: &[fig2::Point], net: &str, fw: &str| {
+        pts.iter()
+            .find(|p| p.net == net && p.framework == fw && p.gpus == 4)
+            .unwrap()
+            .speedup
+    };
+    println!("\n-- shape checks (paper §V.C.1) --");
+    println!(
+        "caffe-mpi googlenet k80 4gpu:  {:.2} (paper: ~linear)",
+        speedup(&k80, "googlenet", "caffe-mpi")
+    );
+    println!(
+        "cntk alexnet k80 4gpu:         {:.2} (paper: poor, JPEG decode)",
+        speedup(&k80, "alexnet", "cntk")
+    );
+    println!(
+        "caffe-mpi alexnet v100 4gpu:   {:.2} (paper: poor, slow SSD)",
+        speedup(&v100, "alexnet", "caffe-mpi")
+    );
+
+    bench.report();
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate paper Fig. 3 (a and b) — multi-node scaling at
+//! 4/8/16 GPUs (1/2/4 nodes × 4) on both clusters.
+//!
+//!     cargo bench --bench fig3_multi_node
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::cluster::presets;
+use dagsgd::experiments::fig3;
+
+fn main() {
+    let mut bench = Bench::new("fig3_multi_node");
+
+    let k80 = bench.case("fig3a_k80_sweep", (3 * 4 * 3) as f64, || {
+        fig3::run(&presets::k80_cluster(), &[1, 2, 4])
+    });
+    let v100 = bench.case("fig3b_v100_sweep", (3 * 4 * 3) as f64, || {
+        fig3::run(&presets::v100_cluster(), &[1, 2, 4])
+    });
+
+    println!("\n-- Fig. 3a: K80 cluster (10GbE) --");
+    print!("{}", fig3::render(&k80));
+    println!("\n-- Fig. 3b: V100 cluster (100Gb InfiniBand) --");
+    print!("{}", fig3::render(&v100));
+
+    let speedup = |pts: &[fig3::Point], net: &str, fw: &str| {
+        pts.iter()
+            .find(|p| p.net == net && p.framework == fw && p.nodes == 4)
+            .unwrap()
+            .speedup
+    };
+    println!("\n-- shape checks (paper §V.C.2) --");
+    println!(
+        "caffe-mpi resnet50 k80 4-node:   {:.2} (paper: near-linear)",
+        speedup(&k80, "resnet50", "caffe-mpi")
+    );
+    println!(
+        "tensorflow resnet50 k80 4-node:  {:.2} (paper: worst, gRPC)",
+        speedup(&k80, "resnet50", "tensorflow")
+    );
+    println!(
+        "caffe-mpi resnet50 v100 4-node:  {:.2} (paper: comm-bound, <linear)",
+        speedup(&v100, "resnet50", "caffe-mpi")
+    );
+
+    bench.report();
+}

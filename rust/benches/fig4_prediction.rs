@@ -1,0 +1,35 @@
+//! Bench: regenerate paper Fig. 4 — DAG-model prediction vs measurement
+//! across 3 CNNs × 2 clusters × GPU counts, reporting the per-net mean
+//! errors the paper quotes (9.4 % AlexNet, 4.7 % GoogleNet, 4.6 % ResNet).
+//!
+//!     cargo bench --bench fig4_prediction
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::cluster::presets;
+use dagsgd::experiments::fig4;
+use dagsgd::util::table::f;
+
+fn main() {
+    let mut bench = Bench::new("fig4_prediction");
+    let configs = [(1, 2), (1, 4), (2, 4), (4, 4)];
+
+    let k80 = bench.case("fig4_k80", (3 * configs.len()) as f64, || {
+        fig4::run(&presets::k80_cluster(), &configs, 7)
+    });
+    let v100 = bench.case("fig4_v100", (3 * configs.len()) as f64, || {
+        fig4::run(&presets::v100_cluster(), &configs, 7)
+    });
+
+    println!("\n-- Fig. 4: prediction vs measurement --");
+    print!("{}", fig4::render(&k80));
+    print!("{}", fig4::render(&v100));
+
+    println!("\n-- mean |error| per net (paper: alexnet 9.4%, googlenet 4.7%, resnet 4.6%) --");
+    let mut all = k80;
+    all.extend(v100);
+    for (net, err) in fig4::mean_errors(&all) {
+        println!("  {net:<12} {}%", f(err, 1));
+    }
+
+    bench.report();
+}

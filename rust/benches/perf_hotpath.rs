@@ -1,0 +1,102 @@
+//! Bench: the hot paths of the L3 coordinator (the §Perf deliverable).
+//!
+//! * discrete-event engine — simulated tasks/second (target ≥ 1 M/s)
+//! * S-SGD DAG construction — DAGs/second at paper scale
+//! * ring vs flat all-reduce — effective GB/s on gradient-sized buffers
+//! * WFBP bucketing — tensors/second
+//!
+//!     cargo bench --bench perf_hotpath
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::cluster::presets;
+use dagsgd::coordinator::allreduce::{flat_allreduce, ring_allreduce, DEFAULT_CHUNK};
+use dagsgd::coordinator::bucket::make_buckets;
+use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::sim::executor::simulate;
+use dagsgd::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("perf_hotpath").with_iters(2, 7);
+
+    // --- simulator engine throughput at paper scale (16 GPUs, ResNet) ---
+    let cluster = presets::v100_cluster();
+    let job = JobSpec {
+        net: zoo::resnet50(),
+        batch_per_gpu: 32,
+        nodes: 4,
+        gpus_per_node: 4,
+        iterations: 10,
+    };
+    let fw = strategy::caffe_mpi();
+    let (dag, res) = build_ssgd_dag(&cluster, &job, &fw);
+    let ntasks = dag.len() as f64;
+    println!("resnet50 4x4 x10it DAG: {} tasks, {} edges", dag.len(), dag.edge_count());
+    bench.case("sim_execute_resnet_dag (tasks/s)", ntasks, || {
+        simulate(&dag, &res.pool).makespan
+    });
+
+    // --- DAG construction ---
+    bench.case("build_ssgd_dag (tasks/s)", ntasks, || {
+        build_ssgd_dag(&cluster, &job, &fw).0.len()
+    });
+
+    // --- ring all-reduce bandwidth: transformer-sized gradients ---
+    let mut rng = Rng::new(7);
+    let grad_len = 2 * 1024 * 1024; // 8 MB per rank, fp32
+    for ranks in [2usize, 4, 8] {
+        let mut bufs: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| {
+                let mut v = vec![0f32; grad_len];
+                rng.fill_f32(&mut v, -1.0, 1.0);
+                v
+            })
+            .collect();
+        let bytes_moved = (2 * (ranks - 1)) as f64 / ranks as f64
+            * (grad_len * 4) as f64
+            * ranks as f64; // total traffic the ring schedule models
+        bench.case(&format!("ring_allreduce_8MB_x{ranks} (B/s)"), bytes_moved, || {
+            let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            ring_allreduce(&mut refs, DEFAULT_CHUNK);
+        });
+        let mut bufs2: Vec<Vec<f32>> = (0..ranks).map(|_| vec![1f32; grad_len]).collect();
+        bench.case(&format!("flat_allreduce_8MB_x{ranks} (B/s)"), bytes_moved, || {
+            let mut refs: Vec<&mut [f32]> = bufs2.iter_mut().map(|b| b.as_mut_slice()).collect();
+            flat_allreduce(&mut refs);
+        });
+    }
+
+    // --- memcpy reference (the roofline for shared-memory reduce) ---
+    let src = vec![1f32; grad_len];
+    let mut dst = vec![0f32; grad_len];
+    bench.case("memcpy_8MB (B/s)", (grad_len * 4) as f64, || {
+        dst.copy_from_slice(&src);
+        dst[0]
+    });
+
+    // --- WFBP bucketing at ResNet granularity ---
+    let sizes: Vec<usize> = zoo::resnet50()
+        .layers
+        .iter()
+        .filter(|l| l.params > 0)
+        .map(|l| l.param_bytes() as usize)
+        .collect();
+    bench.case("make_buckets_resnet (tensors/s)", sizes.len() as f64, || {
+        make_buckets(&sizes, 4 << 20).len()
+    });
+
+    bench.report();
+
+    // §Perf acceptance: engine ≥ 1M tasks/s; ring within 4x of memcpy/rank.
+    let sim_rate = ntasks / bench.mean_of("sim_execute_resnet_dag (tasks/s)").unwrap();
+    println!("\nsim engine: {:.2}M tasks/s (target >= 1M/s)", sim_rate / 1e6);
+    let ring4 = bench.mean_of("ring_allreduce_8MB_x4 (B/s)").unwrap();
+    let memcpy = bench.mean_of("memcpy_8MB (B/s)").unwrap();
+    println!(
+        "ring x4 vs memcpy: {:.1}x slower ({:.2} GB/s vs {:.2} GB/s)",
+        ring4 / memcpy,
+        (2.0 * 3.0 / 4.0 * (grad_len * 4) as f64 * 4.0) / ring4 / 1e9,
+        (grad_len * 4) as f64 / memcpy / 1e9
+    );
+}

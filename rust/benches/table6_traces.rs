@@ -1,0 +1,66 @@
+//! Bench: regenerate the §VI layer-wise trace dataset (Table VI format) —
+//! 3 CNNs × 2 clusters × 100 iterations — and time generation, writing
+//! and parsing.
+//!
+//!     cargo bench --bench table6_traces
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::trace::format::Trace;
+use dagsgd::trace::{dataset, table6};
+use dagsgd::util::table::Table;
+
+fn main() {
+    let mut bench = Bench::new("table6_traces");
+
+    // Generate the full dataset (the paper's download package).
+    let traces = bench.case("generate_dataset_100it", 6.0, || dataset::generate_all(100, 1));
+    let total_records: usize = traces
+        .iter()
+        .map(|t| t.iterations.len() * t.iterations[0].len())
+        .sum();
+
+    // Serialize + parse round-trip at dataset scale.
+    let texts: Vec<String> =
+        bench.case("serialize_dataset", total_records as f64, || {
+            traces.iter().map(|t| t.to_text()).collect()
+        });
+    bench.case("parse_dataset", total_records as f64, || {
+        texts
+            .iter()
+            .map(|s| Trace::parse(s).unwrap())
+            .collect::<Vec<_>>()
+    });
+
+    // Print the published example iteration, verbatim (Table VI).
+    println!("\n-- Table VI: one iteration of AlexNet on the K80 GPU (published data) --");
+    let golden = table6::table6_trace();
+    let mut t = Table::new(&["Id", "Name", "Forward", "Backward", "Comm.", "Size"]);
+    for r in &golden.iterations[0] {
+        t.row(&[
+            r.id.to_string(),
+            r.name.clone(),
+            format!("{}", r.forward_us),
+            format!("{}", r.backward_us),
+            format!("{}", r.comm_us),
+            r.size_bytes.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n-- regenerated dataset summary --");
+    let mut s = Table::new(&["file", "iters", "layers", "mean fwd(s)", "mean bwd(s)", "mean comm(s)"]);
+    for tr in &traces {
+        let (f_, b, c) = tr.mean_totals();
+        s.row(&[
+            dataset::file_name(tr),
+            tr.iterations.len().to_string(),
+            tr.iterations[0].len().to_string(),
+            format!("{f_:.4}"),
+            format!("{b:.4}"),
+            format!("{c:.4}"),
+        ]);
+    }
+    s.print();
+
+    bench.report();
+}

@@ -1,0 +1,173 @@
+//! Closed-form iteration-time model — Equations (1)–(5) of the paper.
+//!
+//! These are the *analytic* counterparts of the discrete-event simulator:
+//! given scalar phase times they predict the iteration time under each
+//! overlap strategy. Fig. 4 compares these predictions against
+//! measurements; our `benches/fig4_prediction.rs` compares them against
+//! both the simulator and the real runtime's measured traces.
+
+/// Scalar inputs of the equations (Table I notation).
+#[derive(Clone, Debug, Default)]
+pub struct IterInputs {
+    /// `t_io`: data-fetch time per iteration (including CPU decode).
+    pub t_io: f64,
+    /// `t_h2d`: host→device copy time.
+    pub t_h2d: f64,
+    /// `t_f^(l)`: forward time per layer.
+    pub fwd: Vec<f64>,
+    /// `t_b^(l)`: backward time per layer (same order as `fwd`).
+    pub bwd: Vec<f64>,
+    /// `t_c^(l)`: gradient all-reduce time per layer (0 ⇒ not learnable).
+    pub comm: Vec<f64>,
+    /// `t_u`: model-update time.
+    pub t_u: f64,
+}
+
+impl IterInputs {
+    pub fn t_f(&self) -> f64 {
+        self.fwd.iter().sum()
+    }
+    pub fn t_b(&self) -> f64 {
+        self.bwd.iter().sum()
+    }
+    pub fn t_c(&self) -> f64 {
+        self.comm.iter().sum()
+    }
+}
+
+/// Eq. (1): single-GPU SGD iteration,
+/// `t_iter = t_io + t_h2d + t_f + t_b + t_u`.
+pub fn eq1_sgd(i: &IterInputs) -> f64 {
+    i.t_io + i.t_h2d + i.t_f() + i.t_b() + i.t_u
+}
+
+/// Eq. (2): naive S-SGD — everything serial, including Σ t_c^(l).
+pub fn eq2_naive_ssgd(i: &IterInputs) -> f64 {
+    i.t_io + i.t_h2d + i.t_f() + i.t_b() + i.t_c() + i.t_u
+}
+
+/// Eq. (3): I/O (and H2D) overlapped with computing,
+/// `t̄ = max{t_io + t_h2d, t_f + t_b + t_c}`.
+pub fn eq3_overlap_io(i: &IterInputs) -> f64 {
+    (i.t_io + i.t_h2d).max(i.t_f() + i.t_b() + i.t_c())
+}
+
+/// The non-overlapped communication time `t_c^no` under wait-free
+/// back-propagation (§IV.C).
+///
+/// Backward runs layer L→1; layer l's all-reduce becomes ready when its
+/// backward finishes and the (serial) communication stream is free. The
+/// part of the final all-reduce that extends past the end of backprop is
+/// the non-hidden cost.
+pub fn tc_no(i: &IterInputs) -> f64 {
+    let total_compute = i.t_f() + i.t_b();
+    let l = i.bwd.len();
+    assert_eq!(i.comm.len(), l);
+    // Finish time of each layer's backward, measured from iteration start
+    // (compute starts after t_f of the whole net; backward order L→1).
+    let mut t = i.t_f();
+    let mut comm_end = 0.0f64;
+    for li in (0..l).rev() {
+        t += i.bwd[li];
+        if i.comm[li] > 0.0 {
+            let start = t.max(comm_end);
+            comm_end = start + i.comm[li];
+        }
+    }
+    (comm_end - total_compute).max(0.0)
+}
+
+/// Eq. (5): WFBP + I/O overlap,
+/// `t̄ = max{t_io + t_h2d, t_f + t_b + t_c^no}`.
+pub fn eq5_wfbp(i: &IterInputs) -> f64 {
+    (i.t_io + i.t_h2d).max(i.t_f() + i.t_b() + tc_no(i))
+}
+
+/// Iteration time under a strategy's overlap flags (dispatch helper).
+pub fn iter_time(i: &IterInputs, overlap_io: bool, wfbp: bool) -> f64 {
+    match (overlap_io, wfbp) {
+        (false, _) => eq2_naive_ssgd(i),
+        (true, false) => eq3_overlap_io(i),
+        (true, true) => eq5_wfbp(i),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> IterInputs {
+        IterInputs {
+            t_io: 0.2,
+            t_h2d: 0.1,
+            fwd: vec![0.1, 0.2, 0.3],
+            bwd: vec![0.2, 0.4, 0.6],
+            comm: vec![0.3, 0.2, 0.1],
+            t_u: 0.05,
+        }
+    }
+
+    #[test]
+    fn eq1_and_eq2_sum_phases() {
+        let i = inputs();
+        assert!((eq1_sgd(&i) - (0.2 + 0.1 + 0.6 + 1.2 + 0.05)).abs() < 1e-12);
+        assert!((eq2_naive_ssgd(&i) - (eq1_sgd(&i) + 0.6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_is_max_of_pipe_stages() {
+        let i = inputs();
+        assert!((eq3_overlap_io(&i) - (0.6 + 1.2 + 0.6)).abs() < 1e-12);
+        // I/O-bound case.
+        let mut io_bound = inputs();
+        io_bound.t_io = 10.0;
+        assert!((eq3_overlap_io(&io_bound) - 10.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tc_no_hand_computed() {
+        // fwd total 0.6. Backward: l3 (bwd 0.6) finishes at 1.2, comm3
+        // (0.1) runs 1.2–1.3; l2 (0.4) finishes 1.6, comm2 1.6–1.8;
+        // l1 (0.2) finishes 1.8, comm1 1.8–2.1. Compute ends at 1.8.
+        // t_c^no = 2.1 − 1.8 = 0.3.
+        let i = inputs();
+        assert!((tc_no(&i) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tc_no_bounds() {
+        // 0 ≤ t_c^no ≤ Σ t_c (paper: strict < for overlap-capable nets).
+        let i = inputs();
+        let v = tc_no(&i);
+        assert!(v >= 0.0 && v <= i.t_c());
+        // Huge last-layer comm: nothing can hide the layer-1 exchange.
+        let mut worst = inputs();
+        worst.comm = vec![100.0, 0.0, 0.0];
+        assert!((tc_no(&worst) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tc_no_zero_when_comm_fully_hidden() {
+        let mut i = inputs();
+        // Tiny communications, all hideable under later backward layers.
+        i.comm = vec![0.0, 0.01, 0.01];
+        assert!(tc_no(&i) < 0.011 + 1e-12);
+        // comm for layer 1 (index 0) is the only never-hideable one.
+        i.comm = vec![0.0, 0.0, 0.0];
+        assert_eq!(tc_no(&i), 0.0);
+    }
+
+    #[test]
+    fn eq5_leq_eq3() {
+        let i = inputs();
+        assert!(eq5_wfbp(&i) <= eq3_overlap_io(&i) + 1e-12);
+    }
+
+    #[test]
+    fn dispatch() {
+        let i = inputs();
+        assert_eq!(iter_time(&i, false, false), eq2_naive_ssgd(&i));
+        assert_eq!(iter_time(&i, true, false), eq3_overlap_io(&i));
+        assert_eq!(iter_time(&i, true, true), eq5_wfbp(&i));
+    }
+}

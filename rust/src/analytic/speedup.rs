@@ -1,0 +1,129 @@
+//! Eq. (6): speedup of S-SGD on `N_g` GPUs, plus the glue that produces
+//! [`super::eqs::IterInputs`] from the hardware + model profiles so the
+//! analytic predictor can be evaluated against the simulator (Fig. 4).
+
+use super::eqs::{self, IterInputs};
+use crate::cluster::topology::ClusterSpec;
+use crate::dag::builder::{durations, JobSpec};
+use crate::frameworks::strategy::Strategy;
+
+/// Build Eq.-inputs for a job. Contention is approximated analytically:
+/// GPUs sharing a disk (and decode CPUs) serialize their reads, so the
+/// per-iteration I/O term scales with the number of GPUs per storage
+/// device — this is the `t_io_y` of Eq. (6).
+pub fn iter_inputs(cluster: &ClusterSpec, job: &JobSpec, strategy: &Strategy) -> IterInputs {
+    let d = durations(cluster, job, strategy);
+    // Readers sharing one storage device: all GPUs of a node, or of the
+    // whole cluster when storage is NFS.
+    let sharing = if cluster.shared_storage {
+        job.ranks()
+    } else {
+        job.gpus_per_node
+    } as f64;
+    // Decode threads are per node.
+    let io = d.io * sharing + d.decode * job.gpus_per_node as f64;
+    IterInputs {
+        t_io: io,
+        t_h2d: d.h2d,
+        fwd: d.fwd.clone(),
+        bwd: d.bwd.clone(),
+        comm: d.comm.clone(),
+        t_u: d.update,
+    }
+}
+
+/// Analytic iteration time for a job under a strategy's overlap flags.
+pub fn predict_iter_time(cluster: &ClusterSpec, job: &JobSpec, strategy: &Strategy) -> f64 {
+    let i = iter_inputs(cluster, job, strategy);
+    eqs::iter_time(&i, strategy.prefetch_io, strategy.wfbp)
+}
+
+/// Eq. (6): `S = N_g · max{t_io_1 + t_h2d, t_f + t_b} /
+///                 max{t_io_Ng + t_h2d, t_f + t_b + t_c^no}`.
+pub fn predict_speedup(cluster: &ClusterSpec, job: &JobSpec, strategy: &Strategy) -> f64 {
+    let single = JobSpec {
+        nodes: 1,
+        gpus_per_node: 1,
+        ..job.clone()
+    };
+    let t1 = predict_iter_time(cluster, &single, strategy);
+    let tn = predict_iter_time(cluster, job, strategy);
+    job.ranks() as f64 * t1 / tn
+}
+
+/// Predicted throughput (samples/s) — comparable with
+/// [`crate::dag::builder::throughput`].
+pub fn predict_throughput(cluster: &ClusterSpec, job: &JobSpec, strategy: &Strategy) -> f64 {
+    (job.ranks() * job.batch_per_gpu) as f64 / predict_iter_time(cluster, job, strategy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::dag::builder;
+    use crate::frameworks::strategy as fw;
+    use crate::models::zoo;
+
+    fn job(net: crate::models::layer::NetSpec, nodes: usize, g: usize) -> JobSpec {
+        let b = net.default_batch;
+        JobSpec {
+            net,
+            batch_per_gpu: b,
+            nodes,
+            gpus_per_node: g,
+            iterations: 6,
+        }
+    }
+
+    #[test]
+    fn speedup_bounded_by_ng() {
+        for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+            for net in zoo::all() {
+                let s = fw::caffe_mpi();
+                let sp = predict_speedup(&cluster, &job(net.clone(), 4, 4), &s);
+                assert!(sp > 1.0 && sp <= 16.0 + 1e-9, "{} {}: {sp}", cluster.name, net.name);
+            }
+        }
+    }
+
+    /// The analytic model and the simulator must agree closely — this is
+    /// the internal-consistency version of the paper's Fig. 4 (their
+    /// average prediction error was 4.6–9.4 %).
+    #[test]
+    fn analytic_close_to_simulator() {
+        let cluster = presets::v100_cluster();
+        let s = fw::caffe_mpi();
+        let j = job(zoo::resnet50(), 2, 4);
+        let pred = predict_iter_time(&cluster, &j, &s);
+        let sim = builder::iteration_time(&cluster, &j, &s);
+        let err = ((pred - sim) / sim).abs();
+        assert!(err < 0.15, "pred={pred:.4} sim={sim:.4} err={:.1}%", err * 100.0);
+    }
+
+    #[test]
+    fn alexnet_on_v100_cannot_scale_linearly() {
+        // §V.D: "the speedup over multiple GPUs is hard to be linear on
+        // the fast V100 GPUs ... communication time of gradients cannot
+        // be hidden by the computation time".
+        let cluster = presets::v100_cluster();
+        let sp = predict_speedup(&cluster, &job(zoo::alexnet(), 4, 4), &fw::caffe_mpi());
+        assert!(sp < 12.0, "AlexNet V100 16-GPU speedup should be ≪16, got {sp}");
+    }
+
+    #[test]
+    fn k80_scales_better_than_v100() {
+        // §V.C.2 headline: all frameworks scale better on the slow
+        // cluster than the fast one.
+        let s = fw::caffe_mpi();
+        let net = zoo::resnet50;
+        let sp_k80 =
+            predict_speedup(&presets::k80_cluster(), &job(net(), 4, 4), &s);
+        let sp_v100 =
+            predict_speedup(&presets::v100_cluster(), &job(net(), 4, 4), &s);
+        assert!(
+            sp_k80 > sp_v100,
+            "k80 {sp_k80:.2} should beat v100 {sp_v100:.2}"
+        );
+    }
+}

@@ -1,0 +1,125 @@
+//! Minimal micro-benchmark harness (no `criterion` in the vendored crate
+//! set). `cargo bench` targets are plain binaries (`harness = false`) that
+//! call [`Bench::run`] per case and print a uniform table.
+
+use crate::util::stats::Summary;
+use crate::util::units::fmt_dur;
+use std::time::Instant;
+
+/// One benchmark group.
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    measure_iters: usize,
+    rows: Vec<(String, Summary, f64)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // Keep iteration counts low-but-meaningful: these run on 1 CPU.
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 2,
+            measure_iters: 5,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, measure: usize) -> Bench {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    /// Time `f` (whose return value is returned from the last run to keep
+    /// the optimizer honest) and record a row. `work` is an optional
+    /// "items per call" figure used to report a rate.
+    pub fn case<T, F: FnMut() -> T>(&mut self, label: &str, work: f64, mut f: F) -> T {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        let mut last = None;
+        for _ in 0..self.measure_iters {
+            let t = Instant::now();
+            last = Some(std::hint::black_box(f()));
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        self.rows
+            .push((label.to_string(), Summary::of(&samples), work));
+        last.unwrap()
+    }
+
+    /// Print the group as a table; called once at the end of the binary.
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.name);
+        let lw = self
+            .rows
+            .iter()
+            .map(|(l, _, _)| l.len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        println!(
+            "{:lw$}  {:>10}  {:>10}  {:>10}  {:>14}",
+            "case",
+            "mean",
+            "p50",
+            "p95",
+            "rate",
+            lw = lw
+        );
+        for (label, s, work) in &self.rows {
+            let rate = if *work > 0.0 && s.mean > 0.0 {
+                format!("{:.3e}/s", work / s.mean)
+            } else {
+                "-".to_string()
+            };
+            println!(
+                "{:lw$}  {:>10}  {:>10}  {:>10}  {:>14}",
+                label,
+                fmt_dur(s.mean),
+                fmt_dur(s.p50),
+                fmt_dur(s.p95),
+                rate,
+                lw = lw
+            );
+        }
+    }
+
+    /// Mean seconds of a recorded case (for cross-case assertions in
+    /// perf-regression checks).
+    pub fn mean_of(&self, label: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(l, _, _)| l == label)
+            .map(|(_, s, _)| s.mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut b = Bench::new("test").with_iters(1, 3);
+        let out = b.case("noop", 100.0, || 42);
+        assert_eq!(out, 42);
+        assert!(b.mean_of("noop").unwrap() >= 0.0);
+        assert!(b.mean_of("missing").is_none());
+        b.report(); // must not panic
+    }
+
+    #[test]
+    fn timing_scales_with_work() {
+        let mut b = Bench::new("scale").with_iters(1, 3);
+        b.case("small", 0.0, || {
+            (0..1_000).map(|i| i as f64).sum::<f64>()
+        });
+        b.case("big", 0.0, || {
+            (0..1_000_000).map(|i| i as f64).sum::<f64>()
+        });
+        assert!(b.mean_of("big").unwrap() > b.mean_of("small").unwrap());
+    }
+}

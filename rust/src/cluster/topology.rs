@@ -1,0 +1,176 @@
+//! Cluster hardware model: nodes × GPUs plus the four interconnect layers
+//! the paper studies — disk/NFS, PCIe (host↔device), intra-node GPU
+//! interconnect (PCIe or NVLink) and inter-node network (Ethernet or
+//! InfiniBand).
+//!
+//! A [`ClusterSpec`] is pure data; [`ClusterSpec::build_resources`] turns a
+//! `(cluster, active nodes, gpus/node)` selection into the simulator's
+//! [`ResourcePool`], which is where sharing shows up (e.g. Cluster 1's NFS
+//! is one shared disk for all nodes — §V.B).
+
+use crate::dag::node::ResourceId;
+use crate::sim::resources::{ResourceClass, ResourcePool};
+
+/// GPU device model.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak FLOP/s used for dense conv/GEMM work (the paper quotes 4.37 T
+    /// for K80 and 125 T with Tensor Cores for V100).
+    pub peak_flops: f64,
+    /// Device memory bandwidth (bytes/s) — bounds element-wise layers.
+    pub mem_bw: f64,
+}
+
+/// Full cluster description (paper Table II).
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+    /// Intra-node GPU↔GPU bandwidth, bytes/s (PCIe 15 GB/s or NVLink 95 GB/s).
+    pub intra_bw: f64,
+    /// Per-message launch latency of an intra-node transfer, seconds.
+    pub intra_lat: f64,
+    /// Host→device copy bandwidth per PCIe root, bytes/s.
+    pub h2d_bw: f64,
+    /// Number of PCIe roots per node sharing h2d traffic.
+    pub pcie_roots: usize,
+    /// Inter-node bandwidth per NIC, bytes/s (10 GbE = 1.25 GB/s,
+    /// 100 Gb IB = 12.5 GB/s).
+    pub net_bw: f64,
+    /// Per-message inter-node latency, seconds (software + fabric).
+    pub net_lat: f64,
+    /// Storage read bandwidth, bytes/s.
+    pub disk_bw: f64,
+    /// Whether storage is shared by all nodes (Cluster 1's NFS) or local
+    /// per node (Cluster 2's SSD).
+    pub shared_storage: bool,
+    /// CPU threads available for input decode per node.
+    pub decode_threads: usize,
+    /// JPEG decode throughput per CPU thread, images/s.
+    pub decode_imgs_per_s: f64,
+}
+
+impl ClusterSpec {
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Validate a `(nodes, gpus/node)` selection against the spec.
+    pub fn check_selection(&self, nodes: usize, gpus_per_node: usize) {
+        assert!(nodes >= 1 && nodes <= self.nodes, "nodes out of range");
+        assert!(
+            gpus_per_node >= 1 && gpus_per_node <= self.gpus_per_node,
+            "gpus/node out of range"
+        );
+    }
+}
+
+/// Resource handles for one simulated job on a cluster selection.
+#[derive(Clone, Debug)]
+pub struct ClusterResources {
+    pub pool: ResourcePool,
+    /// Disk resource for a node (may be the shared NFS resource).
+    pub disk: Vec<ResourceId>,
+    /// Decode CPU pool per node.
+    pub cpu: Vec<ResourceId>,
+    /// H2D link per node.
+    pub h2d: Vec<ResourceId>,
+    /// GPU stream per global rank (node-major: rank = node * g + i).
+    pub gpu: Vec<ResourceId>,
+    /// Single collective channel serializing gradient all-reduces.
+    pub collective: ResourceId,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl ClusterResources {
+    pub fn ranks(&self) -> usize {
+        self.gpu.len()
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+}
+
+impl ClusterSpec {
+    /// Build the resource pool for a job using `nodes × gpus_per_node` GPUs.
+    pub fn build_resources(&self, nodes: usize, gpus_per_node: usize) -> ClusterResources {
+        self.check_selection(nodes, gpus_per_node);
+        let mut pool = ResourcePool::new();
+
+        let shared_disk = if self.shared_storage {
+            Some(pool.add("nfs", ResourceClass::Disk, 1))
+        } else {
+            None
+        };
+
+        let mut disk = Vec::new();
+        let mut cpu = Vec::new();
+        let mut h2d = Vec::new();
+        let mut gpu = Vec::new();
+        for n in 0..nodes {
+            disk.push(match shared_disk {
+                Some(d) => d,
+                None => pool.add(format!("disk{n}"), ResourceClass::Disk, 1),
+            });
+            // One decode *pool* per node: a GPU's per-iteration decode task
+            // already uses all `decode_threads` threads (its duration is
+            // batch / (rate × threads)), so concurrent decode tasks must
+            // serialize — capacity 1.
+            cpu.push(pool.add(format!("cpu{n}"), ResourceClass::Cpu, 1));
+            h2d.push(pool.add(format!("h2d{n}"), ResourceClass::H2dLink, self.pcie_roots));
+            for g in 0..gpus_per_node {
+                gpu.push(pool.add(format!("gpu{n}.{g}"), ResourceClass::Gpu, 1));
+            }
+        }
+        let collective = pool.add("collective", ResourceClass::Collective, 1);
+        ClusterResources {
+            pool,
+            disk,
+            cpu,
+            h2d,
+            gpu,
+            collective,
+            nodes,
+            gpus_per_node,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn shared_nfs_is_one_resource() {
+        let c = presets::k80_cluster();
+        assert!(c.shared_storage);
+        let r = c.build_resources(4, 4);
+        // All four nodes point at the same disk resource.
+        assert!(r.disk.iter().all(|&d| d == r.disk[0]));
+        assert_eq!(r.gpu.len(), 16);
+    }
+
+    #[test]
+    fn local_ssd_is_per_node() {
+        let c = presets::v100_cluster();
+        assert!(!c.shared_storage);
+        let r = c.build_resources(4, 4);
+        assert_eq!(r.disk[0] != r.disk[1], true);
+        assert_eq!(r.ranks(), 16);
+        assert_eq!(r.node_of(0), 0);
+        assert_eq!(r.node_of(7), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn selection_validated() {
+        let c = presets::k80_cluster();
+        c.build_resources(5, 4);
+    }
+}

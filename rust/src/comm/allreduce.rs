@@ -1,0 +1,268 @@
+//! All-reduce cost models for the gradient-aggregation tasks (§II, §IV).
+//!
+//! The paper's frameworks exchange gradients through NCCL2 (ring /
+//! hierarchical), MPI reduction trees, or a gRPC parameter server
+//! (TensorFlow). These closed-form models produce the per-layer
+//! `t_c^(l)` durations that the DAG builder attaches to aggregation nodes.
+//!
+//! Calibration anchors from §V.C: on the V100/IB cluster a layer-wise
+//! ResNet-50 all-reduce totals ≈ 0.08 s (9.6 % of 12.5 GB/s line rate);
+//! on the K80/10GbE cluster ≈ 0.23 s. Both are reproduced by a
+//! hierarchical ring model plus a fixed per-collective launch overhead —
+//! see `tests::paper_anchor_*`.
+
+use super::alpha_beta::Link;
+
+/// Which collective algorithm aggregates gradients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Flat ring all-reduce across all ranks (NCCL default inside a node).
+    Ring,
+    /// Binomial reduction tree + broadcast (MPI-style).
+    Tree,
+    /// Intra-node ring reduce, inter-node ring among node roots, intra
+    /// broadcast — what NCCL2 effectively does across IB.
+    Hierarchical,
+    /// Centralized parameter server: push all gradients to one server,
+    /// pull updated values (gRPC-style; TensorFlow's distributed default).
+    ParameterServer,
+}
+
+impl Algorithm {
+    pub fn by_name(s: &str) -> Option<Algorithm> {
+        match s {
+            "ring" => Some(Algorithm::Ring),
+            "tree" => Some(Algorithm::Tree),
+            "hierarchical" | "hier" => Some(Algorithm::Hierarchical),
+            "ps" | "parameter-server" => Some(Algorithm::ParameterServer),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Ring => "ring",
+            Algorithm::Tree => "tree",
+            Algorithm::Hierarchical => "hierarchical",
+            Algorithm::ParameterServer => "ps",
+        }
+    }
+}
+
+/// Communication topology parameters for one job.
+#[derive(Clone, Copy, Debug)]
+pub struct CommTopo {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Intra-node GPU↔GPU link (PCIe or NVLink).
+    pub intra: Link,
+    /// Inter-node link per NIC (Ethernet or InfiniBand).
+    pub net: Link,
+    /// Fixed software overhead per collective call (NCCL kernel launch,
+    /// rendezvous, gRPC dispatch). This term is why layer-wise exchange
+    /// of many small tensors wastes bandwidth — paper finding #4.
+    pub launch_overhead: f64,
+}
+
+impl CommTopo {
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+/// Time of a ring all-reduce of `bytes` among `n` ranks on `link`:
+/// 2(n−1) steps, each moving `bytes/n` — the classic bandwidth-optimal ring.
+pub fn ring_time(n: usize, bytes: f64, link: Link) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    steps as f64 * link.xfer(bytes / n as f64)
+}
+
+/// Reduction tree + broadcast: 2·⌈log2 n⌉ rounds each moving the full buffer.
+pub fn tree_time(n: usize, bytes: f64, link: Link) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let rounds = 2 * (n as f64).log2().ceil() as usize;
+    rounds as f64 * link.xfer(bytes)
+}
+
+/// One all-reduce of `bytes` under `algo` on `topo`. Includes the fixed
+/// launch overhead (once per call).
+pub fn allreduce_time(algo: Algorithm, topo: &CommTopo, bytes: f64) -> f64 {
+    let n = topo.ranks();
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let t = match algo {
+        Algorithm::Ring => {
+            if topo.nodes == 1 {
+                ring_time(n, bytes, topo.intra)
+            } else {
+                // A flat ring crossing node boundaries is bottlenecked by
+                // the NIC hops; every one of the 2(n-1) steps is paced by
+                // the slowest link on the ring.
+                let slow = Link {
+                    alpha: topo.net.alpha,
+                    bw: topo.net.bw.min(topo.intra.bw),
+                };
+                ring_time(n, bytes, slow)
+            }
+        }
+        Algorithm::Tree => {
+            if topo.nodes == 1 {
+                tree_time(n, bytes, topo.intra)
+            } else {
+                // Intra trees + inter tree among node roots.
+                tree_time(topo.gpus_per_node, bytes, topo.intra)
+                    + tree_time(topo.nodes, bytes, topo.net)
+            }
+        }
+        Algorithm::Hierarchical => {
+            // Intra-node reduce to a local root + final broadcast:
+            // 2(g−1) transfers of bytes/g each, plus inter-node ring among
+            // the node roots over the NIC.
+            let g = topo.gpus_per_node;
+            let intra = if g > 1 {
+                ring_time(g, bytes, topo.intra)
+            } else {
+                0.0
+            };
+            let inter = if topo.nodes > 1 {
+                ring_time(topo.nodes, bytes, topo.net)
+            } else {
+                0.0
+            };
+            intra + inter
+        }
+        Algorithm::ParameterServer => {
+            // All n workers push `bytes` to the server and pull `bytes`
+            // back; the server NIC serializes 2·n transfers. Intra-node
+            // workers still cross the NIC (the PS is a separate process).
+            let link = if topo.nodes == 1 { topo.intra } else { topo.net };
+            2.0 * n as f64 * link.xfer(bytes)
+        }
+    };
+    t + topo.launch_overhead
+}
+
+/// Sum of layer-wise all-reduces (no overlap) — the naive S-SGD Eq. (2)
+/// communication term Σ t_c^(l).
+pub fn layerwise_total(algo: Algorithm, topo: &CommTopo, layer_bytes: &[f64]) -> f64 {
+    layer_bytes
+        .iter()
+        .filter(|&&b| b > 0.0)
+        .map(|&b| allreduce_time(algo, topo, b))
+        .sum()
+}
+
+/// The paper's "communication efficiency": model bytes transferred once,
+/// divided by time, relative to the NIC line rate (§V.C: 9.6 % for
+/// ResNet-50 on 100 Gb IB).
+pub fn comm_efficiency(topo: &CommTopo, model_bytes: f64, time: f64) -> f64 {
+    if time <= 0.0 {
+        return 0.0;
+    }
+    (model_bytes / time) / topo.net.bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::models::zoo;
+    use crate::util::units::us;
+
+    fn topo_of(cluster: &crate::cluster::topology::ClusterSpec, nodes: usize, g: usize) -> CommTopo {
+        CommTopo {
+            nodes,
+            gpus_per_node: g,
+            intra: Link::new(cluster.intra_lat, cluster.intra_bw),
+            net: Link::new(cluster.net_lat, cluster.net_bw),
+            launch_overhead: us(300.0),
+        }
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let c = presets::k80_cluster();
+        let topo = topo_of(&c, 1, 1);
+        assert_eq!(allreduce_time(Algorithm::Ring, &topo, 1e6), 0.0);
+    }
+
+    #[test]
+    fn ring_bandwidth_term_scales() {
+        let link = Link::new(0.0, 1e9);
+        // 2(n-1)/n * S / bw for large S.
+        let t4 = ring_time(4, 1e9, link);
+        assert!((t4 - 2.0 * 3.0 * (1e9 / 4.0) / 1e9).abs() < 1e-9);
+        // More ranks → asymptotically 2·S/bw.
+        let t64 = ring_time(64, 1e9, link);
+        assert!(t64 < 2.0 && t64 > 1.9);
+    }
+
+    #[test]
+    fn tree_is_latency_friendly_for_tiny_messages() {
+        let link = Link::new(1e-4, 1e9);
+        let n = 16;
+        let tiny = 1024.0;
+        assert!(tree_time(n, tiny, link) < ring_time(n, tiny, link));
+    }
+
+    #[test]
+    fn ps_worse_than_ring_at_scale() {
+        let c = presets::k80_cluster();
+        let topo = topo_of(&c, 4, 4);
+        let s = 100e6;
+        assert!(
+            allreduce_time(Algorithm::ParameterServer, &topo, s)
+                > allreduce_time(Algorithm::Hierarchical, &topo, s)
+        );
+    }
+
+    /// §V.C anchor: layer-wise ResNet-50 on the V100/100Gb-IB cluster
+    /// totals ≈ 0.08 s, i.e. ~10 % communication efficiency.
+    #[test]
+    fn paper_anchor_v100_ib_resnet() {
+        let c = presets::v100_cluster();
+        let topo = topo_of(&c, 4, 4);
+        let net = zoo::resnet50();
+        let sizes: Vec<f64> = net.layers.iter().map(|l| l.param_bytes() as f64).collect();
+        let total = layerwise_total(Algorithm::Hierarchical, &topo, &sizes);
+        assert!(
+            total > 0.05 && total < 0.12,
+            "expected ≈0.08s, got {total:.4}s"
+        );
+        let eff = comm_efficiency(&topo, net.param_bytes() as f64, total);
+        assert!(eff > 0.05 && eff < 0.20, "expected ≈9.6%, got {:.1}%", eff * 100.0);
+    }
+
+    /// §V.C anchor: same model on the K80/10GbE cluster ≈ 0.23 s.
+    #[test]
+    fn paper_anchor_k80_10gbe_resnet() {
+        let c = presets::k80_cluster();
+        let topo = topo_of(&c, 4, 4);
+        let net = zoo::resnet50();
+        let sizes: Vec<f64> = net.layers.iter().map(|l| l.param_bytes() as f64).collect();
+        let total = layerwise_total(Algorithm::Hierarchical, &topo, &sizes);
+        assert!(
+            total > 0.15 && total < 0.35,
+            "expected ≈0.23s, got {total:.4}s"
+        );
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in [
+            Algorithm::Ring,
+            Algorithm::Tree,
+            Algorithm::Hierarchical,
+            Algorithm::ParameterServer,
+        ] {
+            assert_eq!(Algorithm::by_name(a.name()), Some(a));
+        }
+        assert!(Algorithm::by_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,79 @@
+//! α–β (latency–bandwidth) point-to-point transfer model.
+//!
+//! Every interconnect in the paper (PCIe, NVLink, 10 GbE, InfiniBand) is
+//! characterized by a startup latency α (seconds) and a bandwidth β⁻¹
+//! (bytes/s). A message of S bytes costs `α + S / bw`. Collectives in
+//! [`super::allreduce`] are compositions of these.
+
+/// One direction of a link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// Startup latency per message, seconds.
+    pub alpha: f64,
+    /// Sustained bandwidth, bytes/second.
+    pub bw: f64,
+}
+
+impl Link {
+    pub fn new(alpha: f64, bw: f64) -> Link {
+        assert!(alpha >= 0.0 && bw > 0.0);
+        Link { alpha, bw }
+    }
+
+    /// Time to move `bytes` over this link.
+    pub fn xfer(&self, bytes: f64) -> f64 {
+        assert!(bytes >= 0.0);
+        self.alpha + bytes / self.bw
+    }
+
+    /// Effective bandwidth achieved for a message of `bytes`
+    /// (bytes / time) — the paper's "communication efficiency" numerator.
+    pub fn effective_bw(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.xfer(bytes)
+    }
+
+    /// Derate the link (protocol overhead), keeping latency.
+    pub fn with_efficiency(&self, eff: f64) -> Link {
+        assert!(eff > 0.0 && eff <= 1.0);
+        Link {
+            alpha: self.alpha,
+            bw: self.bw * eff,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xfer_is_affine() {
+        let l = Link::new(1e-5, 1e9);
+        assert!((l.xfer(0.0) - 1e-5).abs() < 1e-15);
+        assert!((l.xfer(1e9) - (1e-5 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_messages_are_latency_bound() {
+        let l = Link::new(40e-6, 12.5e9);
+        // 1 KB on 100Gb IB: effective bw a tiny fraction of line rate.
+        assert!(l.effective_bw(1024.0) / l.bw < 0.01);
+        // 1 GB: near line rate.
+        assert!(l.effective_bw(1e9) / l.bw > 0.99);
+    }
+
+    #[test]
+    fn efficiency_derating() {
+        let l = Link::new(0.0, 100.0).with_efficiency(0.5);
+        assert_eq!(l.bw, 50.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_bytes_rejected() {
+        Link::new(0.0, 1.0).xfer(-1.0);
+    }
+}

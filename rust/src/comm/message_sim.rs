@@ -1,0 +1,158 @@
+//! Message-level collective simulation — an independent check on the
+//! closed-form models of [`super::allreduce`].
+//!
+//! Instead of a formula, the ring all-reduce is executed step by step on
+//! the discrete-event engine: 2(n−1) rounds, each round moving one chunk
+//! per rank over its outbound link; a round completes when the slowest
+//! link finishes. This reproduces queueing/pacing effects the α-β formula
+//! abstracts away, and the property test pins the two against each other
+//! (they must agree to first order on homogeneous links, diverge on
+//! heterogeneous rings where the formula takes the bottleneck bound).
+
+use super::alpha_beta::Link;
+use crate::sim::engine::EventQueue;
+
+/// Per-hop links around the ring: `links[i]` carries rank i → i+1 mod n.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    pub links: Vec<Link>,
+}
+
+impl Ring {
+    pub fn homogeneous(n: usize, link: Link) -> Ring {
+        Ring {
+            links: vec![link; n],
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.links.len()
+    }
+}
+
+/// Simulate a ring all-reduce of `bytes` on the event engine; returns the
+/// completion time. Reduce-scatter (n−1 rounds) + all-gather (n−1 rounds),
+/// each round: every rank sends `bytes/n` over its outbound link; the
+/// round barrier is NCCL's synchronous chunk pipeline.
+pub fn simulate_ring_allreduce(ring: &Ring, bytes: f64) -> f64 {
+    let n = ring.ranks();
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    #[derive(Debug)]
+    enum Ev {
+        SendDone { round: usize },
+    }
+    let chunk = bytes / n as f64;
+    let rounds = 2 * (n - 1);
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    // Round 0: all ranks send concurrently.
+    for link in &ring.links {
+        q.schedule_at(link.xfer(chunk), Ev::SendDone { round: 0 });
+    }
+    let mut arrived = vec![0usize; rounds];
+    let mut finish = 0.0f64;
+    while let Some((now, Ev::SendDone { round })) = q.pop() {
+        arrived[round] += 1;
+        if arrived[round] == n {
+            // Round barrier reached; launch the next round.
+            if round + 1 < rounds {
+                for link in &ring.links {
+                    q.schedule_at(now + link.xfer(chunk), Ev::SendDone { round: round + 1 });
+                }
+            } else {
+                finish = now;
+            }
+        }
+    }
+    finish
+}
+
+/// Simulated layer-wise sequence (serial comm stream): all-reduce each
+/// message in order, returning per-message completion times.
+pub fn simulate_layerwise(ring: &Ring, message_bytes: &[f64]) -> Vec<f64> {
+    let mut t = 0.0;
+    message_bytes
+        .iter()
+        .map(|&b| {
+            t += simulate_ring_allreduce(ring, b);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::allreduce::ring_time;
+    use crate::util::units::us;
+
+    #[test]
+    fn matches_alpha_beta_formula_on_homogeneous_ring() {
+        // Homogeneous ring, synchronous rounds ⇒ identical to the formula.
+        for n in [2usize, 4, 8, 16] {
+            for bytes in [1e3, 1e6, 1e9] {
+                let link = Link::new(us(20.0), 12.5e9);
+                let ring = Ring::homogeneous(n, link);
+                let sim = simulate_ring_allreduce(&ring, bytes);
+                let formula = ring_time(n, bytes, link);
+                assert!(
+                    (sim - formula).abs() / formula < 1e-9,
+                    "n={n} bytes={bytes}: sim {sim} vs formula {formula}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slow_link_paces_the_whole_ring() {
+        // One 10x-slower hop: every round waits for it, so the total is
+        // what a homogeneous ring of the slow link would take.
+        let fast = Link::new(us(10.0), 10e9);
+        let slow = Link::new(us(10.0), 1e9);
+        let mut ring = Ring::homogeneous(4, fast);
+        ring.links[2] = slow;
+        let sim = simulate_ring_allreduce(&ring, 1e8);
+        let bound = ring_time(4, 1e8, slow);
+        assert!(
+            (sim - bound).abs() / bound < 1e-9,
+            "sim {sim} vs slow-bound {bound}"
+        );
+    }
+
+    #[test]
+    fn zero_and_single_rank_are_free() {
+        let ring = Ring::homogeneous(1, Link::new(0.0, 1e9));
+        assert_eq!(simulate_ring_allreduce(&ring, 1e6), 0.0);
+        let ring4 = Ring::homogeneous(4, Link::new(0.0, 1e9));
+        assert_eq!(simulate_ring_allreduce(&ring4, 0.0), 0.0);
+    }
+
+    #[test]
+    fn layerwise_sequence_accumulates() {
+        let ring = Ring::homogeneous(4, Link::new(us(10.0), 1e9));
+        let msgs = [1e6, 2e6, 4e6];
+        let ends = simulate_layerwise(&ring, &msgs);
+        assert_eq!(ends.len(), 3);
+        assert!(ends[0] < ends[1] && ends[1] < ends[2]);
+        let total: f64 = msgs
+            .iter()
+            .map(|&b| simulate_ring_allreduce(&ring, b))
+            .sum();
+        assert!((ends[2] - total).abs() < 1e-12);
+    }
+
+    /// The paper's finding #4 seen at message level: per-message latency
+    /// floors make the effective bandwidth of many small messages a small
+    /// fraction of one fused big message.
+    #[test]
+    fn small_messages_waste_bandwidth() {
+        let ring = Ring::homogeneous(16, Link::new(us(20.0), 12.5e9));
+        let total = 100e6;
+        let fused = simulate_ring_allreduce(&ring, total);
+        let split: f64 = (0..160)
+            .map(|_| simulate_ring_allreduce(&ring, total / 160.0))
+            .sum();
+        assert!(split > 2.0 * fused, "split {split} vs fused {fused}");
+    }
+}

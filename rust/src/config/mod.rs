@@ -1,0 +1,194 @@
+//! Config-file support: a TOML-subset (`key = value` lines, `[section]`
+//! headers, `#` comments) mapped onto the trainer and simulation options,
+//! so launches are reproducible from checked-in files:
+//!
+//! ```text
+//! # train.toml
+//! [train]
+//! workers = 4
+//! steps = 300
+//! bucket_mb = 1.0
+//! algo = "ring"
+//!
+//! [job]
+//! cluster = "v100"
+//! net = "resnet50"
+//! nodes = 4
+//! gpus = 4
+//! ```
+//!
+//! `dagsgd train --config train.toml` (CLI flags override file values).
+
+use crate::coordinator::allreduce::ReduceAlgo;
+use crate::coordinator::trainer::TrainOpts;
+use std::collections::BTreeMap;
+
+/// Parsed file: section → key → raw string value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigFile {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ConfigFile {
+    /// Parse the TOML subset. Errors carry line numbers.
+    pub fn parse(text: &str) -> Result<ConfigFile, String> {
+        let mut cfg = ConfigFile::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", ln + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let value = unquote(v.trim());
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        ConfigFile::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    /// Materialize `[train]` into trainer options on top of defaults.
+    pub fn train_opts(&self, mut base: TrainOpts) -> Result<TrainOpts, String> {
+        let s = "train";
+        if let Some(v) = self.usize(s, "workers") {
+            base.workers = v;
+        }
+        if let Some(v) = self.usize(s, "steps") {
+            base.steps = v;
+        }
+        if let Some(v) = self.f64(s, "bucket_mb") {
+            base.bucket_bytes = (v * 1024.0 * 1024.0) as usize;
+        }
+        if let Some(v) = self.get(s, "algo") {
+            base.algo =
+                ReduceAlgo::by_name(v).ok_or_else(|| format!("unknown algo '{v}'"))?;
+        }
+        if let Some(v) = self.u64(s, "seed") {
+            base.seed = v;
+        }
+        if let Some(v) = self.usize(s, "prefetch") {
+            base.prefetch_depth = v;
+        }
+        if let Some(v) = self.usize(s, "log_every") {
+            base.log_every = v;
+        }
+        if let Some(v) = self.usize(s, "checksum_every") {
+            base.checksum_every = v;
+        }
+        Ok(base)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+[train]
+workers = 4
+steps = 300          # trailing comment
+bucket_mb = 1.5
+algo = "flat"
+seed = 9
+
+[job]
+net = "resnet50"
+cluster = v100
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.usize("train", "workers"), Some(4));
+        assert_eq!(cfg.usize("train", "steps"), Some(300));
+        assert_eq!(cfg.f64("train", "bucket_mb"), Some(1.5));
+        assert_eq!(cfg.get("train", "algo"), Some("flat"));
+        assert_eq!(cfg.get("job", "net"), Some("resnet50"));
+        assert_eq!(cfg.get("job", "cluster"), Some("v100"));
+        assert_eq!(cfg.get("job", "missing"), None);
+        assert_eq!(cfg.get("nosection", "x"), None);
+    }
+
+    #[test]
+    fn builds_train_opts() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        let opts = cfg.train_opts(TrainOpts::default()).unwrap();
+        assert_eq!(opts.workers, 4);
+        assert_eq!(opts.steps, 300);
+        assert_eq!(opts.bucket_bytes, (1.5 * 1024.0 * 1024.0) as usize);
+        assert_eq!(opts.algo, crate::coordinator::allreduce::ReduceAlgo::Flat);
+        assert_eq!(opts.seed, 9);
+        // Unset keys keep defaults.
+        assert_eq!(opts.prefetch_depth, TrainOpts::default().prefetch_depth);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ConfigFile::parse("[unterminated").is_err());
+        assert!(ConfigFile::parse("keynovalue").is_err());
+        let bad_algo = ConfigFile::parse("[train]\nalgo = \"bogus\"").unwrap();
+        assert!(bad_algo.train_opts(TrainOpts::default()).is_err());
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let cfg = ConfigFile::parse("[s]\nname = \"a # not comment\" # real\n").unwrap();
+        assert_eq!(cfg.get("s", "name"), Some("a # not comment"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Real gradient all-reduce over in-process worker buffers.
+//!
+//! This is the runtime counterpart of the paper's NCCL2 aggregation (the
+//! transport is shared memory instead of PCIe/NVLink/IB — see DESIGN.md
+//! §substitutions). Two algorithms, matching `comm::allreduce`'s models:
+//!
+//! * [`ring_allreduce`] — chunked reduce-scatter + all-gather: every rank
+//!   owns a shard, data moves 2·S·(n−1)/n per rank, exactly the ring
+//!   schedule's traffic (here the "send" is a cache-friendly add/copy).
+//! * [`flat_allreduce`] — rank 0 reduces everything then broadcasts
+//!   (the parameter-server shape; the ablation baseline).
+//!
+//! Both divide by `n` at the end: S-SGD averages gradients (Algorithm 1,
+//! line 7). The hot loops are allocation-free.
+
+/// Chunk size in elements for the ring schedule (cache-blocking).
+pub const DEFAULT_CHUNK: usize = 8192;
+
+/// In-place ring all-reduce + average over `bufs` (all same length).
+/// After the call every buffer holds the element-wise mean.
+pub fn ring_allreduce(bufs: &mut [&mut [f32]], chunk: usize) {
+    let n = bufs.len();
+    if n == 0 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffer length mismatch");
+    if n == 1 {
+        return; // nothing to exchange, no averaging needed (mean of 1)
+    }
+    let chunk = chunk.max(1);
+    let inv = 1.0 / n as f32;
+
+    // Shard ownership: shard s covers [s·shard_len, ...); shard r is owned
+    // by rank r (the classic ring layout, generalized to chunked strides).
+    let shard_len = len.div_ceil(n);
+    for s in 0..n {
+        let lo = s * shard_len;
+        let hi = ((s + 1) * shard_len).min(len);
+        if lo >= hi {
+            continue;
+        }
+        // Reduce-scatter: accumulate all ranks' shard s into rank s's
+        // buffer, chunk by chunk (n−1 adds — the ring's n−1 steps).
+        let (owner, others) = split_one(bufs, s);
+        for start in (lo..hi).step_by(chunk) {
+            let end = (start + chunk).min(hi);
+            for other in others.iter() {
+                // Zip iterators: no bounds checks, auto-vectorizes.
+                let dst = &mut owner[start..end];
+                for (d, s) in dst.iter_mut().zip(&other[start..end]) {
+                    *d += *s;
+                }
+            }
+            // Average while the chunk is hot.
+            for v in &mut owner[start..end] {
+                *v *= inv;
+            }
+        }
+    }
+    // All-gather: broadcast each owner shard to every other rank
+    // (n−1 copies per shard — the ring's second phase).
+    for s in 0..n {
+        let lo = s * shard_len;
+        let hi = ((s + 1) * shard_len).min(len);
+        if lo >= hi {
+            continue;
+        }
+        let (owner, mut others) = split_one(bufs, s);
+        for other in others.iter_mut() {
+            other[lo..hi].copy_from_slice(&owner[lo..hi]);
+        }
+    }
+}
+
+/// Borrow rank `idx` mutably alongside all the others.
+fn split_one<'a, 'b>(
+    bufs: &'a mut [&'b mut [f32]],
+    idx: usize,
+) -> (&'a mut [f32], Vec<&'a mut [f32]>) {
+    // Safe disjoint split via split_at_mut.
+    let n = bufs.len();
+    let (left, right) = bufs.split_at_mut(idx);
+    let (owner, rest) = right.split_at_mut(1);
+    let mut others: Vec<&mut [f32]> = Vec::with_capacity(n - 1);
+    for b in left.iter_mut() {
+        others.push(&mut **b);
+    }
+    for b in rest.iter_mut() {
+        others.push(&mut **b);
+    }
+    (&mut *owner[0], others)
+}
+
+/// Rank-0 reduce + broadcast (+average) — the PS-shaped baseline.
+pub fn flat_allreduce(bufs: &mut [&mut [f32]]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    let inv = 1.0 / n as f32;
+    let (root, others) = split_one(bufs, 0);
+    for other in others.iter() {
+        for (d, s) in root.iter_mut().zip(other.iter()) {
+            *d += *s;
+        }
+    }
+    for v in root.iter_mut() {
+        *v *= inv;
+    }
+    let (root, mut others) = split_one(bufs, 0);
+    for other in others.iter_mut() {
+        other.copy_from_slice(root);
+    }
+}
+
+/// Which algorithm the trainer uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceAlgo {
+    Ring,
+    Flat,
+}
+
+impl ReduceAlgo {
+    pub fn by_name(s: &str) -> Option<ReduceAlgo> {
+        match s {
+            "ring" => Some(ReduceAlgo::Ring),
+            "flat" | "ps" => Some(ReduceAlgo::Flat),
+            _ => None,
+        }
+    }
+
+    pub fn run(self, bufs: &mut [&mut [f32]], chunk: usize) {
+        match self {
+            ReduceAlgo::Ring => ring_allreduce(bufs, chunk),
+            ReduceAlgo::Flat => flat_allreduce(bufs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; len];
+                rng.fill_f32(&mut v, -1.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn expected_mean(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let n = bufs.len() as f32;
+        let len = bufs[0].len();
+        (0..len)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / n)
+            .collect()
+    }
+
+    fn check(algo: ReduceAlgo, n: usize, len: usize, chunk: usize) {
+        let mut bufs = make_bufs(n, len, (n * 1000 + len) as u64);
+        let want = expected_mean(&bufs);
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        algo.run(&mut refs, chunk);
+        for (r, b) in bufs.iter().enumerate() {
+            for i in 0..len {
+                assert!(
+                    (b[i] - want[i]).abs() < 1e-5,
+                    "{algo:?} rank {r} elem {i}: {} vs {}",
+                    b[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_matches_mean_various_shapes() {
+        for n in [2, 3, 4, 7] {
+            for len in [1, 5, 100, 1000, 8192, 10_000] {
+                check(ReduceAlgo::Ring, n, len, 64);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_matches_mean() {
+        for n in [2, 4, 5] {
+            check(ReduceAlgo::Flat, n, 333, 0);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut bufs = make_bufs(1, 64, 9);
+        let orig = bufs[0].clone();
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        ring_allreduce(&mut refs, 16);
+        assert_eq!(bufs[0], orig);
+    }
+
+    #[test]
+    fn all_ranks_identical_after_reduce() {
+        let mut bufs = make_bufs(4, 5000, 3);
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        ring_allreduce(&mut refs, DEFAULT_CHUNK);
+        for r in 1..4 {
+            assert_eq!(bufs[0], bufs[r], "rank {r} diverged");
+        }
+    }
+
+    #[test]
+    fn len_smaller_than_ranks() {
+        // Degenerate shard layout: len < n.
+        check(ReduceAlgo::Ring, 4, 2, 8);
+        check(ReduceAlgo::Ring, 4, 3, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let mut a = vec![0f32; 4];
+        let mut b = vec![0f32; 5];
+        let mut refs: Vec<&mut [f32]> = vec![a.as_mut_slice(), b.as_mut_slice()];
+        ring_allreduce(&mut refs, 2);
+    }
+
+    #[test]
+    fn algo_lookup() {
+        assert_eq!(ReduceAlgo::by_name("ring"), Some(ReduceAlgo::Ring));
+        assert_eq!(ReduceAlgo::by_name("ps"), Some(ReduceAlgo::Flat));
+        assert_eq!(ReduceAlgo::by_name("x"), None);
+    }
+}

@@ -1,0 +1,97 @@
+//! Wait-free back-propagation bucketing (§IV.C / WFBP [30][27]).
+//!
+//! Gradient tensors are grouped into buckets in **reverse parameter
+//! order** — the order back-propagation produces them (layer L first) —
+//! capped at `max_bytes` per bucket. The trainer all-reduces bucket `i`
+//! while the update of bucket `i−1` is still running, pipelining
+//! communication with computation exactly like the paper's overlapped
+//! aggregation (the fused XLA step emits all gradients at once, so the
+//! overlap window is comm ∥ update rather than comm ∥ backprop; the
+//! backprop-side overlap is modeled in `dag::builder` — DESIGN.md).
+
+/// One WFBP bucket: tensor indices (into the parameter table) + size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bucket {
+    pub tensors: Vec<usize>,
+    pub bytes: usize,
+}
+
+/// Partition tensors (given per-tensor byte sizes, parameter order) into
+/// reverse-order buckets of at most `max_bytes` (a tensor larger than the
+/// cap gets its own bucket).
+pub fn make_buckets(tensor_bytes: &[usize], max_bytes: usize) -> Vec<Bucket> {
+    assert!(max_bytes > 0);
+    let mut buckets = Vec::new();
+    let mut cur = Bucket {
+        tensors: Vec::new(),
+        bytes: 0,
+    };
+    for idx in (0..tensor_bytes.len()).rev() {
+        let b = tensor_bytes[idx];
+        if !cur.tensors.is_empty() && cur.bytes + b > max_bytes {
+            buckets.push(std::mem::replace(
+                &mut cur,
+                Bucket {
+                    tensors: Vec::new(),
+                    bytes: 0,
+                },
+            ));
+        }
+        cur.tensors.push(idx);
+        cur.bytes += b;
+    }
+    if !cur.tensors.is_empty() {
+        buckets.push(cur);
+    }
+    buckets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reverse_order_and_cap() {
+        // Tensors of 4,4,4,4 bytes with an 8-byte cap → [[3,2],[1,0]].
+        let b = make_buckets(&[4, 4, 4, 4], 8);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].tensors, vec![3, 2]);
+        assert_eq!(b[1].tensors, vec![1, 0]);
+        assert_eq!(b[0].bytes, 8);
+    }
+
+    #[test]
+    fn oversized_tensor_gets_own_bucket() {
+        let b = make_buckets(&[100, 2, 2], 8);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].tensors, vec![2, 1]);
+        assert_eq!(b[1].tensors, vec![0]);
+        assert_eq!(b[1].bytes, 100);
+    }
+
+    #[test]
+    fn every_tensor_exactly_once() {
+        let sizes: Vec<usize> = (1..40).map(|i| i * 7 % 23 + 1).collect();
+        let buckets = make_buckets(&sizes, 50);
+        let mut seen: Vec<usize> = buckets.iter().flat_map(|b| b.tensors.clone()).collect();
+        seen.sort();
+        assert_eq!(seen, (0..sizes.len()).collect::<Vec<_>>());
+        // Bucket bytes are consistent.
+        for b in &buckets {
+            let total: usize = b.tensors.iter().map(|&t| sizes[t]).sum();
+            assert_eq!(total, b.bytes);
+        }
+    }
+
+    #[test]
+    fn single_bucket_when_cap_huge() {
+        let b = make_buckets(&[1, 2, 3], usize::MAX);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].tensors, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(make_buckets(&[], 8).is_empty());
+    }
+}

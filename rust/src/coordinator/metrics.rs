@@ -1,0 +1,119 @@
+//! Phase timing for the real runtime — the measured counterparts of the
+//! paper's `t_io`, `t_f + t_b`, `t_c`, `t_u` (Table I), accumulated per
+//! iteration and exportable as a Table-VI-style trace.
+
+use std::time::Instant;
+
+/// Accumulated seconds per S-SGD phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTotals {
+    /// Time the trainer waited on the input pipeline (I/O not hidden).
+    pub io_wait: f64,
+    /// Fwd+bwd execution (the XLA train step), max across workers.
+    pub execute: f64,
+    /// Gradient all-reduce.
+    pub comm: f64,
+    /// Parameter update (incl. pipeline drain).
+    pub update: f64,
+    /// Whole-iteration wall time.
+    pub iter: f64,
+}
+
+impl PhaseTotals {
+    pub fn add(&mut self, other: &PhaseTotals) {
+        self.io_wait += other.io_wait;
+        self.execute += other.execute;
+        self.comm += other.comm;
+        self.update += other.update;
+        self.iter += other.iter;
+    }
+
+    pub fn scale(&self, k: f64) -> PhaseTotals {
+        PhaseTotals {
+            io_wait: self.io_wait * k,
+            execute: self.execute * k,
+            comm: self.comm * k,
+            update: self.update * k,
+            iter: self.iter * k,
+        }
+    }
+
+    /// Runtime overhead = iteration − accounted phases (scheduling,
+    /// copies, channel hops). The §Perf target keeps this ≤ 10 %.
+    pub fn overhead(&self) -> f64 {
+        (self.iter - self.io_wait - self.execute - self.comm - self.update).max(0.0)
+    }
+}
+
+/// Stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Simple f64 checksum for parameter-synchronization asserts: sum and
+/// absolute sum, order-independent across tensors.
+pub fn checksum(tensors: &[Vec<f32>]) -> (f64, f64) {
+    let mut s = 0.0f64;
+    let mut a = 0.0f64;
+    for t in tensors {
+        for &v in t {
+            s += v as f64;
+            a += v.abs() as f64;
+        }
+    }
+    (s, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_and_scale() {
+        let mut a = PhaseTotals {
+            io_wait: 1.0,
+            execute: 2.0,
+            comm: 3.0,
+            update: 4.0,
+            iter: 11.0,
+        };
+        a.add(&a.clone());
+        assert_eq!(a.execute, 4.0);
+        let half = a.scale(0.5);
+        assert_eq!(half.comm, 3.0);
+        assert!((a.overhead() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhead_clamped() {
+        let t = PhaseTotals {
+            io_wait: 5.0,
+            iter: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(t.overhead(), 0.0);
+    }
+
+    #[test]
+    fn checksum_detects_divergence() {
+        let a = vec![vec![1.0f32, -2.0], vec![3.0]];
+        let b = vec![vec![1.0f32, -2.0], vec![3.0001]];
+        assert_ne!(checksum(&a), checksum(&b));
+        assert_eq!(checksum(&a), checksum(&a.clone()));
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed() >= 0.002);
+    }
+}

@@ -1,0 +1,226 @@
+//! Worker: one simulated "GPU" — a long-lived thread owning a PJRT CPU
+//! device, the compiled train-step executable, and a full replica of the
+//! model parameters (data parallelism, Algorithm 1).
+//!
+//! The xla handles are `!Send`, so everything XLA lives inside the thread;
+//! the coordinator talks to it through plain-data channels.
+
+use crate::coordinator::dataloader::Batch;
+use crate::coordinator::metrics;
+use crate::runtime::artifacts::{self, Meta};
+use crate::runtime::pjrt::{self, Device};
+use anyhow::{Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Coordinator → worker commands.
+pub enum Cmd {
+    /// Run the train step on a batch; reply with `StepDone`.
+    Step(Batch),
+    /// Apply `new -= lr · grad` for the given tensor (already averaged).
+    UpdateTensor {
+        tensor: usize,
+        grad: Arc<Vec<f32>>,
+    },
+    /// Reply `UpdatesDrained` once all queued updates are applied.
+    Fence,
+    /// Reply with a parameter checksum (sync verification).
+    Checksum,
+    Stop,
+}
+
+/// Worker → coordinator replies.
+pub enum Resp {
+    StepDone {
+        rank: usize,
+        loss: f32,
+        grads: Vec<Vec<f32>>,
+        exec_s: f64,
+    },
+    UpdatesDrained {
+        rank: usize,
+        update_s: f64,
+    },
+    Checksum {
+        rank: usize,
+        sum: f64,
+        abs: f64,
+    },
+    /// Startup complete (artifact compiled).
+    Ready {
+        rank: usize,
+    },
+    Fatal {
+        rank: usize,
+        message: String,
+    },
+}
+
+/// Handle owned by the coordinator.
+pub struct WorkerHandle {
+    pub rank: usize,
+    pub tx: Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    pub fn send(&self, cmd: Cmd) {
+        let _ = self.tx.send(cmd);
+    }
+
+    pub fn join(mut self) {
+        let _ = self.tx.send(Cmd::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn a worker. Replies (including `Ready`/`Fatal`) go to `resp_tx`.
+pub fn spawn(rank: usize, meta: Meta, lr: f32, resp_tx: Sender<Resp>) -> WorkerHandle {
+    let (tx, rx) = channel::<Cmd>();
+    let handle = std::thread::Builder::new()
+        .name(format!("worker{rank}"))
+        .spawn(move || match WorkerState::init(rank, &meta) {
+            Ok(mut w) => {
+                let _ = resp_tx.send(Resp::Ready { rank });
+                w.serve(rx, resp_tx, lr);
+            }
+            Err(e) => {
+                let _ = resp_tx.send(Resp::Fatal {
+                    rank,
+                    message: format!("{e:#}"),
+                });
+            }
+        })
+        .expect("spawn worker thread");
+    WorkerHandle {
+        rank,
+        tx,
+        handle: Some(handle),
+    }
+}
+
+struct WorkerState {
+    rank: usize,
+    meta: Meta,
+    #[allow(dead_code)]
+    device: Device,
+    train_step: pjrt::Executable,
+    /// This replica's parameters (tensor-major).
+    params: Vec<Vec<f32>>,
+    /// Pending update time accumulator (drained at `Fence`).
+    update_s: f64,
+}
+
+impl WorkerState {
+    fn init(rank: usize, meta: &Meta) -> Result<WorkerState> {
+        let device = Device::cpu().context("worker device")?;
+        let train_step = device
+            .load_hlo(&meta.train_step_path())
+            .context("compiling train_step artifact")?;
+        let params = artifacts::load_params(meta).context("loading initial parameters")?;
+        Ok(WorkerState {
+            rank,
+            meta: meta.clone(),
+            device,
+            train_step,
+            params,
+            update_s: 0.0,
+        })
+    }
+
+    fn serve(&mut self, rx: Receiver<Cmd>, tx: Sender<Resp>, lr: f32) {
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                Cmd::Step(batch) => match self.step(&batch) {
+                    Ok((loss, grads, exec_s)) => {
+                        let _ = tx.send(Resp::StepDone {
+                            rank: self.rank,
+                            loss,
+                            grads,
+                            exec_s,
+                        });
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Resp::Fatal {
+                            rank: self.rank,
+                            message: format!("{e:#}"),
+                        });
+                        return;
+                    }
+                },
+                Cmd::UpdateTensor { tensor, grad } => {
+                    let t = metrics::Timer::start();
+                    let p = &mut self.params[tensor];
+                    debug_assert_eq!(p.len(), grad.len());
+                    for (pv, gv) in p.iter_mut().zip(grad.iter()) {
+                        *pv -= lr * gv;
+                    }
+                    self.update_s += t.elapsed();
+                }
+                Cmd::Fence => {
+                    let _ = tx.send(Resp::UpdatesDrained {
+                        rank: self.rank,
+                        update_s: std::mem::take(&mut self.update_s),
+                    });
+                }
+                Cmd::Checksum => {
+                    let (sum, abs) = metrics::checksum(&self.params);
+                    let _ = tx.send(Resp::Checksum {
+                        rank: self.rank,
+                        sum,
+                        abs,
+                    });
+                }
+                Cmd::Stop => return,
+            }
+        }
+    }
+
+    /// Execute the train step: params + batch → (loss, per-tensor grads).
+    fn step(&mut self, batch: &Batch) -> Result<(f32, Vec<Vec<f32>>, f64)> {
+        let cfg = &self.meta.config;
+        anyhow::ensure!(
+            batch.batch == cfg.batch && batch.seq == cfg.seq,
+            "batch shape {}x{} != artifact {}x{}",
+            batch.batch,
+            batch.seq,
+            cfg.batch,
+            cfg.seq
+        );
+        let timer = metrics::Timer::start();
+        let mut inputs = Vec::with_capacity(self.params.len() + 2);
+        for (p, info) in self.params.iter().zip(&self.meta.params) {
+            inputs.push(pjrt::literal_f32(p, &info.shape)?);
+        }
+        inputs.push(pjrt::literal_i32(&batch.tokens, &[batch.batch, batch.seq])?);
+        inputs.push(pjrt::literal_i32(&batch.targets, &[batch.batch, batch.seq])?);
+
+        let outputs = self.train_step.run(&inputs)?;
+        anyhow::ensure!(
+            outputs.len() == 1 + self.params.len(),
+            "train_step returned {} outputs, expected {}",
+            outputs.len(),
+            1 + self.params.len()
+        );
+        let loss = pjrt::to_scalar_f32(&outputs[0])?;
+        let mut grads = Vec::with_capacity(self.params.len());
+        for (out, info) in outputs[1..].iter().zip(&self.meta.params) {
+            let g = pjrt::to_vec_f32(out)?;
+            anyhow::ensure!(g.len() == info.numel, "grad {} size mismatch", info.name);
+            grads.push(g);
+        }
+        Ok((loss, grads, timer.elapsed()))
+    }
+}

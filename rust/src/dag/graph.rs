@@ -1,0 +1,261 @@
+//! The DAG structure: `G = (V_c ∪ V_n, E)` from §IV.B.
+//!
+//! Nodes are [`Task`]s (computing or communication), a directed edge
+//! `e(x, y)` means task `y` may only begin after `x` finished. The graph is
+//! append-only; edges are validated to point between existing nodes, and
+//! acyclicity is checked by topological sort.
+
+use super::node::{Task, TaskId};
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    pub tasks: Vec<Task>,
+    /// `succs[x]` = tasks that depend on x.
+    pub succs: Vec<Vec<TaskId>>,
+    /// `preds[x]` = tasks x depends on.
+    pub preds: Vec<Vec<TaskId>>,
+}
+
+impl Dag {
+    pub fn new() -> Dag {
+        Dag::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Append a task, returning its id.
+    pub fn add(&mut self, task: Task) -> TaskId {
+        self.tasks.push(task);
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        self.tasks.len() - 1
+    }
+
+    /// Add precedence edge `from → to`. Duplicate edges are ignored.
+    pub fn edge(&mut self, from: TaskId, to: TaskId) {
+        assert!(from < self.len() && to < self.len(), "edge endpoints must exist");
+        assert_ne!(from, to, "self-edges are not allowed");
+        if !self.succs[from].contains(&to) {
+            self.succs[from].push(to);
+            self.preds[to].push(from);
+        }
+    }
+
+    /// Add edges from every task in `from` to `to`.
+    pub fn edges_from_all(&mut self, from: &[TaskId], to: TaskId) {
+        for &f in from {
+            self.edge(f, to);
+        }
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<TaskId>> {
+        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
+        let mut queue: VecDeque<TaskId> = (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(t) = queue.pop_front() {
+            order.push(t);
+            for &s in &self.succs[t] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        if order.len() == self.len() {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.succs.iter().map(|s| s.len()).sum()
+    }
+
+    /// Earliest start/finish ignoring resource contention (infinite
+    /// resources). This is the classic DAG lower bound; the simulator adds
+    /// queueing. Returns `(start, finish)` per task.
+    pub fn earliest_times(&self) -> Option<(Vec<f64>, Vec<f64>)> {
+        let order = self.topo_order()?;
+        let mut start = vec![0.0f64; self.len()];
+        let mut finish = vec![0.0f64; self.len()];
+        for &t in &order {
+            let s = self.preds[t]
+                .iter()
+                .map(|&p| finish[p])
+                .fold(0.0f64, f64::max);
+            start[t] = s;
+            finish[t] = s + self.tasks[t].duration;
+        }
+        Some((start, finish))
+    }
+
+    /// Critical-path length (makespan lower bound with infinite resources).
+    pub fn critical_path_length(&self) -> Option<f64> {
+        let (_, finish) = self.earliest_times()?;
+        Some(finish.iter().copied().fold(0.0, f64::max))
+    }
+
+    /// The tasks on one critical path, from source to sink.
+    pub fn critical_path(&self) -> Option<Vec<TaskId>> {
+        let (start, finish) = self.earliest_times()?;
+        let makespan = finish.iter().copied().fold(0.0, f64::max);
+        // Walk backwards from a sink whose finish == makespan.
+        let mut cur = (0..self.len())
+            .filter(|&t| (finish[t] - makespan).abs() < 1e-12)
+            .min_by(|a, b| a.cmp(b))?;
+        let mut path = vec![cur];
+        while !self.preds[cur].is_empty() {
+            // Pick the predecessor whose finish equals our start.
+            let prev = self.preds[cur]
+                .iter()
+                .copied()
+                .find(|&p| (finish[p] - start[cur]).abs() < 1e-12);
+            match prev {
+                Some(p) => {
+                    path.push(p);
+                    cur = p;
+                }
+                // Start was 0 because all preds finished earlier: path ends.
+                None => break,
+            }
+        }
+        path.reverse();
+        Some(path)
+    }
+
+    /// Graphviz DOT export (Fig. 1 rendering): computing tasks are yellow
+    /// circles, communication tasks are orange squares, like the paper.
+    pub fn to_dot(&self) -> String {
+        use super::node::TaskKind;
+        let mut out = String::from("digraph ssgd {\n  rankdir=TB;\n");
+        for (i, t) in self.tasks.iter().enumerate() {
+            let (shape, color) = match t.kind() {
+                TaskKind::Compute => ("ellipse", "#ffe066"),
+                TaskKind::Comm => ("box", "#ffa94d"),
+            };
+            out.push_str(&format!(
+                "  t{i} [label=\"T{i}\\n{}\" shape={shape} style=filled fillcolor=\"{color}\"];\n",
+                t.name
+            ));
+        }
+        for (from, succs) in self.succs.iter().enumerate() {
+            for &to in succs {
+                out.push_str(&format!("  t{from} -> t{to};\n"));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::node::Phase;
+
+    fn task(name: &str, dur: f64) -> Task {
+        Task {
+            name: name.into(),
+            phase: Phase::Forward,
+            resource: 0,
+            duration: dur,
+            iter: 0,
+            gpu: Some(0),
+            layer: None,
+        }
+    }
+
+    fn diamond() -> Dag {
+        // a -> b,c -> d
+        let mut g = Dag::new();
+        let a = g.add(task("a", 1.0));
+        let b = g.add(task("b", 2.0));
+        let c = g.add(task("c", 3.0));
+        let d = g.add(task("d", 1.0));
+        g.edge(a, b);
+        g.edge(a, c);
+        g.edge(b, d);
+        g.edge(c, d);
+        g
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, &t) in order.iter().enumerate() {
+                p[t] = i;
+            }
+            p
+        };
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = diamond();
+        g.edge(3, 0);
+        assert!(!g.is_acyclic());
+        assert!(g.critical_path_length().is_none());
+    }
+
+    #[test]
+    fn critical_path_of_diamond() {
+        let g = diamond();
+        // Longest path a(1) -> c(3) -> d(1) = 5.
+        assert!((g.critical_path_length().unwrap() - 5.0).abs() < 1e-12);
+        let path = g.critical_path().unwrap();
+        assert_eq!(path, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = diamond();
+        let e = g.edge_count();
+        g.edge(0, 1);
+        assert_eq!(g.edge_count(), e);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-edges")]
+    fn self_edge_panics() {
+        let mut g = diamond();
+        g.edge(1, 1);
+    }
+
+    #[test]
+    fn earliest_times_zero_source() {
+        let g = diamond();
+        let (start, finish) = g.earliest_times().unwrap();
+        assert_eq!(start[0], 0.0);
+        assert_eq!(finish[0], 1.0);
+        assert_eq!(start[3], 4.0);
+    }
+
+    #[test]
+    fn dot_contains_all_nodes() {
+        let g = diamond();
+        let dot = g.to_dot();
+        for i in 0..4 {
+            assert!(dot.contains(&format!("t{i} [")));
+        }
+        assert!(dot.contains("t0 -> t1"));
+    }
+}

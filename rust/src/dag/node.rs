@@ -1,0 +1,106 @@
+//! Task (node) definitions for the S-SGD DAG.
+//!
+//! The paper's §IV.A defines two task types: *computing* tasks (GPU/CPU
+//! bound) and *communication* tasks (disk, PCIe/NVLink, network bound).
+//! Every node carries the resource it occupies and a service time, which
+//! the DAG builder derives from the hardware + model profile; the
+//! discrete-event executor then adds queueing on contended resources.
+
+/// Index of a task within its [`super::graph::Dag`].
+pub type TaskId = usize;
+
+/// The two node classes of the paper's DAG model (§IV.A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Resource requirement mainly on computational units (GPU/CPU).
+    Compute,
+    /// Resource requirement on disk I/O or interconnect.
+    Comm,
+}
+
+/// What a task does — used for reporting, timeline colouring, and for the
+/// analytic model to identify phases. Mirrors the six S-SGD steps (§III.B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Step 1: fetch a mini-batch from disk / NFS (+ CPU decode if any).
+    Io,
+    /// Step 2: host-to-device transfer over PCIe.
+    H2d,
+    /// Step 3: layer-wise feed-forward.
+    Forward,
+    /// Step 4: layer-wise back-propagation.
+    Backward,
+    /// Step 5: layer-wise gradient aggregation (all-reduce).
+    Aggregate,
+    /// Step 6: model update.
+    Update,
+    /// Synthetic barrier / bookkeeping nodes (zero cost).
+    Control,
+}
+
+impl Phase {
+    pub fn kind(self) -> TaskKind {
+        match self {
+            Phase::Io | Phase::H2d | Phase::Aggregate => TaskKind::Comm,
+            Phase::Forward | Phase::Backward | Phase::Update | Phase::Control => {
+                TaskKind::Compute
+            }
+        }
+    }
+
+    pub fn short(self) -> &'static str {
+        match self {
+            Phase::Io => "io",
+            Phase::H2d => "h2d",
+            Phase::Forward => "fwd",
+            Phase::Backward => "bwd",
+            Phase::Aggregate => "agg",
+            Phase::Update => "upd",
+            Phase::Control => "ctl",
+        }
+    }
+}
+
+/// Identifier of a simulated resource (assigned by the cluster model).
+pub type ResourceId = usize;
+
+/// A node of the S-SGD DAG.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    pub phase: Phase,
+    /// Resource the task occupies while being served.
+    pub resource: ResourceId,
+    /// Service time in seconds (excluding queueing).
+    pub duration: f64,
+    /// Iteration index this task belongs to (for steady-state analysis).
+    pub iter: usize,
+    /// GPU rank the task belongs to, if any (aggregation tasks span all
+    /// ranks and use `None`).
+    pub gpu: Option<usize>,
+    /// Model layer, if the task is layer-wise.
+    pub layer: Option<usize>,
+}
+
+impl Task {
+    pub fn kind(&self) -> TaskKind {
+        self.phase.kind()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_kinds_match_paper_classification() {
+        // §IV.A: io, h2d and gradient aggregation are communication tasks;
+        // fwd/bwd/update are computing tasks.
+        assert_eq!(Phase::Io.kind(), TaskKind::Comm);
+        assert_eq!(Phase::H2d.kind(), TaskKind::Comm);
+        assert_eq!(Phase::Aggregate.kind(), TaskKind::Comm);
+        assert_eq!(Phase::Forward.kind(), TaskKind::Compute);
+        assert_eq!(Phase::Backward.kind(), TaskKind::Compute);
+        assert_eq!(Phase::Update.kind(), TaskKind::Compute);
+    }
+}

@@ -1,0 +1,146 @@
+//! Fig. 2 — single-node scaling: throughput speedup of 1/2/4 GPUs in one
+//! machine, for every framework × network, on both clusters.
+//! The baseline is one GPU of the same machine.
+
+use crate::cluster::topology::ClusterSpec;
+use crate::dag::builder::{throughput, JobSpec};
+use crate::frameworks::strategy::{self, Strategy};
+use crate::models::zoo;
+use crate::util::table::{f, Table};
+
+/// One measurement point.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub cluster: String,
+    pub net: String,
+    pub framework: String,
+    pub gpus: usize,
+    pub samples_per_s: f64,
+    pub speedup: f64,
+}
+
+/// Run the Fig. 2 sweep on one cluster.
+pub fn run(cluster: &ClusterSpec, gpu_counts: &[usize]) -> Vec<Point> {
+    let mut out = Vec::new();
+    for net in zoo::all() {
+        for fw in strategy::all() {
+            let base = measure(cluster, &net.name, &fw, 1, 1);
+            for &g in gpu_counts {
+                let tp = if g == 1 {
+                    base
+                } else {
+                    measure(cluster, &net.name, &fw, 1, g)
+                };
+                out.push(Point {
+                    cluster: cluster.name.clone(),
+                    net: net.name.clone(),
+                    framework: fw.name.clone(),
+                    gpus: g,
+                    samples_per_s: tp,
+                    speedup: tp / base,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Throughput of one configuration (samples/s).
+pub fn measure(
+    cluster: &ClusterSpec,
+    net_name: &str,
+    fw: &Strategy,
+    nodes: usize,
+    gpus_per_node: usize,
+) -> f64 {
+    let net = zoo::by_name(net_name).expect("unknown net");
+    let job = JobSpec {
+        batch_per_gpu: net.default_batch,
+        net,
+        nodes,
+        gpus_per_node,
+        iterations: 8,
+    };
+    throughput(cluster, &job, fw)
+}
+
+/// Render points as the paper's figure: speedup per GPU count.
+pub fn render(points: &[Point]) -> String {
+    let mut t = Table::new(&["cluster", "net", "framework", "gpus", "samples/s", "speedup"]);
+    for p in points {
+        t.row(&[
+            p.cluster.clone(),
+            p.net.clone(),
+            p.framework.clone(),
+            p.gpus.to_string(),
+            f(p.samples_per_s, 1),
+            f(p.speedup, 2),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn speedup_of(points: &[Point], net: &str, fw: &str, gpus: usize) -> f64 {
+        points
+            .iter()
+            .find(|p| p.net == net && p.framework == fw && p.gpus == gpus)
+            .unwrap()
+            .speedup
+    }
+
+    /// Fig. 2a shape: on the K80 server all frameworks scale well except
+    /// CNTK and TensorFlow on AlexNet (JPEG decode cost ∝ batch size).
+    #[test]
+    fn fig2a_shapes() {
+        let pts = run(&presets::k80_cluster(), &[1, 2, 4]);
+        // Caffe-MPI near-linear everywhere (≥ 3.4/4).
+        for net in ["alexnet", "googlenet", "resnet50"] {
+            let s = speedup_of(&pts, net, "caffe-mpi", 4);
+            assert!(s > 3.4, "caffe-mpi {net}: {s}");
+        }
+        // CNTK/TF poor on AlexNet with 4 GPUs.
+        for fw in ["cntk", "tensorflow"] {
+            let s = speedup_of(&pts, "alexnet", fw, 4);
+            assert!(s < 3.3, "{fw} alexnet should be decode-bound: {s}");
+        }
+        // ...but fine on ResNet (small batch, decode cheap).
+        let s = speedup_of(&pts, "resnet50", "cntk", 4);
+        assert!(s > 3.0, "cntk resnet: {s}");
+    }
+
+    /// Fig. 2b shape: "the speedup of every framework is worse than that
+    /// achieved on the K80 server" (§V.C.1) — asserted in aggregate
+    /// (geometric mean across nets × frameworks at 4 GPUs).
+    #[test]
+    fn fig2b_v100_scales_worse() {
+        let k80 = run(&presets::k80_cluster(), &[1, 4]);
+        let v100 = run(&presets::v100_cluster(), &[1, 4]);
+        let gm = |pts: &[Point]| {
+            let s: Vec<f64> = pts.iter().filter(|p| p.gpus == 4).map(|p| p.speedup).collect();
+            crate::util::stats::geomean(&s)
+        };
+        let (gk, gv) = (gm(&k80), gm(&v100));
+        assert!(gk > gv, "k80 geomean {gk:.2} should beat v100 {gv:.2}");
+    }
+
+    /// AlexNet on the V100 node is I/O-bound (slow SSD) — §V.C.1.
+    #[test]
+    fn fig2b_alexnet_io_bound() {
+        let v100 = run(&presets::v100_cluster(), &[1, 4]);
+        let s = speedup_of(&v100, "alexnet", "caffe-mpi", 4);
+        assert!(s < 3.2, "alexnet v100 4gpu: {s}");
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let pts = run(&presets::k80_cluster(), &[1, 2]);
+        let s = render(&pts);
+        // 3 nets × 4 fw × 2 gpu-counts + header + separator.
+        assert_eq!(s.lines().count(), 3 * 4 * 2 + 2);
+    }
+}

@@ -1,0 +1,136 @@
+//! Fig. 3 — multi-node scaling: speedup of 4/8/16 GPUs (1/2/4 machines
+//! with 4 GPUs each); the baseline is one 4-GPU machine.
+
+use super::fig2::measure;
+use crate::cluster::topology::ClusterSpec;
+use crate::frameworks::strategy;
+use crate::models::zoo;
+use crate::util::table::{f, Table};
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub cluster: String,
+    pub net: String,
+    pub framework: String,
+    pub nodes: usize,
+    pub gpus: usize,
+    pub samples_per_s: f64,
+    /// Speedup vs a single 4-GPU node (paper's Fig. 3 baseline).
+    pub speedup: f64,
+}
+
+pub fn run(cluster: &ClusterSpec, node_counts: &[usize]) -> Vec<Point> {
+    let mut out = Vec::new();
+    for net in zoo::all() {
+        for fw in strategy::all() {
+            let base = measure(cluster, &net.name, &fw, 1, cluster.gpus_per_node);
+            for &n in node_counts {
+                let tp = if n == 1 {
+                    base
+                } else {
+                    measure(cluster, &net.name, &fw, n, cluster.gpus_per_node)
+                };
+                out.push(Point {
+                    cluster: cluster.name.clone(),
+                    net: net.name.clone(),
+                    framework: fw.name.clone(),
+                    nodes: n,
+                    gpus: n * cluster.gpus_per_node,
+                    samples_per_s: tp,
+                    speedup: tp / base,
+                });
+            }
+        }
+    }
+    out
+}
+
+pub fn render(points: &[Point]) -> String {
+    let mut t = Table::new(&[
+        "cluster", "net", "framework", "nodes", "gpus", "samples/s", "speedup",
+    ]);
+    for p in points {
+        t.row(&[
+            p.cluster.clone(),
+            p.net.clone(),
+            p.framework.clone(),
+            p.nodes.to_string(),
+            p.gpus.to_string(),
+            f(p.samples_per_s, 1),
+            f(p.speedup, 2),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn speedup_of(points: &[Point], net: &str, fw: &str, nodes: usize) -> f64 {
+        points
+            .iter()
+            .find(|p| p.net == net && p.framework == fw && p.nodes == nodes)
+            .unwrap()
+            .speedup
+    }
+
+    /// Fig. 3a shapes (K80 + 10 GbE).
+    #[test]
+    fn fig3a_shapes() {
+        let pts = run(&presets::k80_cluster(), &[1, 2, 4]);
+        // Caffe-MPI and MXNet near-linear on GoogleNet/ResNet (§V.C.2).
+        for fw in ["caffe-mpi", "mxnet"] {
+            for net in ["googlenet", "resnet50"] {
+                let s = speedup_of(&pts, net, fw, 4);
+                assert!(s > 3.2, "{fw} {net}: {s}");
+            }
+        }
+        // TensorFlow worst on ResNet (gRPC latency, §V.C.2).
+        let tf = speedup_of(&pts, "resnet50", "tensorflow", 4);
+        for fw in ["caffe-mpi", "cntk", "mxnet"] {
+            let other = speedup_of(&pts, "resnet50", fw, 4);
+            assert!(tf < other, "tf {tf} should trail {fw} {other}");
+        }
+    }
+
+    /// Fig. 3b shape (V100 + 100 Gb IB): "all frameworks scale better on
+    /// the slow K80 cluster than on the fast V100 cluster" (§V.C.2) —
+    /// asserted in aggregate (geometric mean across nets × frameworks;
+    /// AlexNet's per-node-SSD case can buck the trend cell-by-cell).
+    #[test]
+    fn fig3b_v100_worse_than_k80() {
+        let k80 = run(&presets::k80_cluster(), &[1, 4]);
+        let v100 = run(&presets::v100_cluster(), &[1, 4]);
+        let gm = |pts: &[Point]| {
+            let s: Vec<f64> = pts.iter().filter(|p| p.nodes == 4).map(|p| p.speedup).collect();
+            crate::util::stats::geomean(&s)
+        };
+        let (gk, gv) = (gm(&k80), gm(&v100));
+        assert!(gk > gv, "k80 geomean {gk:.2} should beat v100 {gv:.2}");
+    }
+
+    /// §V.C.2: on V100+IB, ResNet training is communication-bound
+    /// (t_c ≈ 0.08 s > t_b ≈ 0.0625 s), capping multi-node speedup.
+    #[test]
+    fn fig3b_resnet_comm_bound() {
+        let pts = run(&presets::v100_cluster(), &[1, 4]);
+        let s = speedup_of(&pts, "resnet50", "caffe-mpi", 4);
+        assert!(s < 3.75, "resnet v100 4-node should be comm-bound: {s}");
+        // Caffe-MPI delivers the highest absolute throughput of the four
+        // (speedup curves are relative to each framework's own — possibly
+        // already crippled — 4-GPU baseline, so we compare samples/s).
+        let tput = |fw: &str| {
+            pts.iter()
+                .find(|p| p.net == "resnet50" && p.framework == fw && p.nodes == 4)
+                .unwrap()
+                .samples_per_s
+        };
+        let caffe = tput("caffe-mpi");
+        for fw in ["cntk", "mxnet", "tensorflow"] {
+            let other = tput(fw);
+            assert!(caffe >= other, "caffe {caffe:.0} vs {fw} {other:.0} samples/s");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Fig. 4 — accuracy of the DAG-model prediction.
+//!
+//! The paper predicts Caffe-MPI's iteration time from measured per-layer
+//! times (Table V) with the analytic DAG equations and compares against
+//! measurements, reporting average errors of 9.4 % (AlexNet), 4.7 %
+//! (GoogleNet) and 4.6 % (ResNet-50).
+//!
+//! Here the "measurement" is the discrete-event simulator executing the
+//! full DAG with resource contention, fed by jittered synthetic traces;
+//! the prediction is the closed-form Eq. (5)/(6) path computed from the
+//! *trace-averaged* layer times — i.e. exactly the paper's workflow with
+//! the testbed swapped for the simulator (see DESIGN.md).
+
+use crate::analytic::eqs;
+use crate::cluster::topology::ClusterSpec;
+use crate::dag::builder::{self, JobSpec};
+use crate::frameworks::strategy;
+use crate::models::zoo;
+use crate::trace::synth;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub cluster: String,
+    pub net: String,
+    pub gpus: usize,
+    /// Analytic DAG-model prediction of the iteration time (s).
+    pub predicted: f64,
+    /// Simulated ("measured") iteration time (s).
+    pub measured: f64,
+    pub error_pct: f64,
+}
+
+/// Configurations of the paper's Fig. 4: N_g ∈ {4, 8, 16} (and 1, 2 on a
+/// single node) for each net on each cluster, Caffe-MPI.
+pub fn run(cluster: &ClusterSpec, configs: &[(usize, usize)], seed: u64) -> Vec<Point> {
+    let fw = strategy::caffe_mpi();
+    let mut out = Vec::new();
+    for net in zoo::all() {
+        for &(nodes, gpus_per_node) in configs {
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net: net.clone(),
+                nodes,
+                gpus_per_node,
+                iterations: 8,
+            };
+            // "Measure": simulate the full DAG with contention.
+            let measured = builder::iteration_time(cluster, &job, &fw);
+            // Predict: layer times from a measured (synthetic) trace,
+            // then the closed-form WFBP equation — Table V's workflow.
+            let trace = synth::synth_trace(cluster, &job, &fw, 20, seed);
+            let d = builder::durations(cluster, &job, &fw);
+            let mut inputs = synth::iter_inputs_from_trace(&trace, d.h2d, d.update);
+            // The trace's data row is the uncontended per-GPU fetch; scale
+            // by the number of GPUs sharing the storage device (Eq. 6's
+            // t_io_y term).
+            let sharing = if cluster.shared_storage {
+                job.ranks()
+            } else {
+                job.gpus_per_node
+            } as f64;
+            inputs.t_io *= sharing;
+            let predicted = eqs::iter_time(&inputs, fw.prefetch_io, fw.wfbp);
+            out.push(Point {
+                cluster: cluster.name.clone(),
+                net: net.name.clone(),
+                gpus: nodes * gpus_per_node,
+                predicted,
+                measured,
+                error_pct: 100.0 * ((predicted - measured) / measured).abs(),
+            });
+        }
+    }
+    out
+}
+
+/// Per-net mean absolute prediction error (the paper's headline numbers).
+pub fn mean_errors(points: &[Point]) -> Vec<(String, f64)> {
+    let mut nets: Vec<String> = points.iter().map(|p| p.net.clone()).collect();
+    nets.sort();
+    nets.dedup();
+    nets.into_iter()
+        .map(|net| {
+            let errs: Vec<f64> = points
+                .iter()
+                .filter(|p| p.net == net)
+                .map(|p| p.error_pct)
+                .collect();
+            (net, stats::mean(&errs))
+        })
+        .collect()
+}
+
+pub fn render(points: &[Point]) -> String {
+    let mut t = Table::new(&["cluster", "net", "gpus", "predicted(s)", "measured(s)", "err%"]);
+    for p in points {
+        t.row(&[
+            p.cluster.clone(),
+            p.net.clone(),
+            p.gpus.to_string(),
+            f(p.predicted, 4),
+            f(p.measured, 4),
+            f(p.error_pct, 1),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    /// The reproduction of Fig. 4's result: mean prediction error per net
+    /// in the single-digit range the paper reports (9.4/4.7/4.6 %).
+    #[test]
+    fn prediction_errors_single_digit() {
+        let configs = [(1, 2), (1, 4), (2, 4), (4, 4)];
+        for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+            let pts = run(&cluster, &configs, 7);
+            for (net, err) in mean_errors(&pts) {
+                assert!(
+                    err < 12.0,
+                    "{}: {net} mean error {err:.1}% exceeds paper-like range",
+                    cluster.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predictions_positive_and_ordered() {
+        let pts = run(&presets::v100_cluster(), &[(1, 4), (4, 4)], 3);
+        for p in &pts {
+            assert!(p.predicted > 0.0 && p.measured > 0.0);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Tables I–V of the paper as printable reference output
+//! (`dagsgd info`): hardware (Table II), software strategies (Table III /
+//! §IV.C), networks (Table IV) and the measurement-input glossary (Table V).
+
+use crate::cluster::presets;
+use crate::frameworks::strategy;
+use crate::models::zoo;
+use crate::util::table::Table;
+use crate::util::units::{fmt_bytes, fmt_rate};
+
+/// Table II: the experimental hardware.
+pub fn hardware_table() -> String {
+    let mut t = Table::new(&["hardware", "cluster 1 (K80)", "cluster 2 (V100)"]);
+    let c1 = presets::k80_cluster();
+    let c2 = presets::v100_cluster();
+    t.row(&[
+        "GPU".into(),
+        format!("{} x{}", c1.gpu.name, c1.gpus_per_node),
+        format!("{} x{}", c2.gpu.name, c2.gpus_per_node),
+    ]);
+    t.row(&[
+        "intra connection".into(),
+        format!("PCIe ({})", fmt_rate(c1.intra_bw)),
+        format!("NVLink ({})", fmt_rate(c2.intra_bw)),
+    ]);
+    t.row(&[
+        "network".into(),
+        format!("10GbE ({})", fmt_rate(c1.net_bw)),
+        format!("100Gb IB ({})", fmt_rate(c2.net_bw)),
+    ]);
+    t.row(&[
+        "storage".into(),
+        format!("NFS shared ({})", fmt_rate(c1.disk_bw)),
+        format!("local SSD ({})", fmt_rate(c2.disk_bw)),
+    ]);
+    t.row(&[
+        "nodes".into(),
+        c1.nodes.to_string(),
+        c2.nodes.to_string(),
+    ]);
+    t.render()
+}
+
+/// Table III + §IV.C: frameworks and their optimization strategies.
+pub fn framework_table() -> String {
+    let mut t = Table::new(&["framework", "io prefetch", "h2d prestage", "wfbp", "decode", "backend"]);
+    for s in strategy::all() {
+        t.row(&[
+            s.name.clone(),
+            s.prefetch_io.to_string(),
+            s.prestage_h2d.to_string(),
+            s.wfbp.to_string(),
+            if s.decode_on_cpu { "jpeg-cpu" } else { "binary" }.into(),
+            format!("{:?}", s.backend),
+        ]);
+    }
+    t.render()
+}
+
+/// Table IV: the tested networks.
+pub fn network_table() -> String {
+    let mut t = Table::new(&["network", "layers", "grad messages", "parameters", "batch/GPU"]);
+    for n in zoo::all() {
+        t.row(&[
+            n.name.clone(),
+            n.layers.len().to_string(),
+            n.learnable_layers().to_string(),
+            fmt_bytes(n.param_bytes() as f64),
+            n.default_batch.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Everything, concatenated.
+pub fn full_report() -> String {
+    format!(
+        "== Table II: hardware ==\n{}\n== Table III/§IV.C: frameworks ==\n{}\n== Table IV: networks ==\n{}",
+        hardware_table(),
+        framework_table(),
+        network_table()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_mentions_all_subjects() {
+        let r = full_report();
+        for s in [
+            "Tesla K80",
+            "Tesla V100",
+            "NVLink",
+            "caffe-mpi",
+            "cntk",
+            "mxnet",
+            "tensorflow",
+            "alexnet",
+            "googlenet",
+            "resnet50",
+        ] {
+            assert!(r.contains(s), "missing {s}");
+        }
+    }
+
+    #[test]
+    fn framework_table_shows_cntk_gap() {
+        let t = framework_table();
+        let cntk_line = t.lines().find(|l| l.contains("cntk")).unwrap();
+        assert!(cntk_line.contains("false"), "CNTK must show wfbp=false");
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment drivers that regenerate the paper's figures and tables.
+//! Shared by `dagsgd` CLI subcommands, `examples/` and `rust/benches/`.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod info;

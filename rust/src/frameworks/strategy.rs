@@ -1,0 +1,196 @@
+//! Framework optimization strategies (§IV.C).
+//!
+//! The paper reduces Caffe-MPI, CNTK, MXNet and TensorFlow to three
+//! orthogonal choices plus a communication backend:
+//!
+//! | framework  | I/O prefetch | H2D pre-stage | WFBP overlap | backend  |
+//! |------------|--------------|---------------|--------------|----------|
+//! | Caffe-MPI  | yes          | yes           | yes          | NCCL hierarchical |
+//! | CNTK       | yes          | no            | **no**       | NCCL hierarchical |
+//! | MXNet      | yes          | no            | yes          | NCCL ring |
+//! | TensorFlow | yes          | no            | yes          | gRPC parameter server |
+//!
+//! All four read with multiple threads ("I/O prefetch"); only Caffe-MPI
+//! keeps spare GPU buffers so the next batch's host→device copy overlaps
+//! compute; CNTK is the one framework that waits for all of backprop
+//! before aggregating gradients; TensorFlow pays gRPC's per-tensor
+//! latency. CNTK and TensorFlow decode JPEGs on the CPU during input
+//! processing; Caffe-MPI and MXNet train from pre-converted binary data
+//! (§V.C.1).
+
+use crate::comm::allreduce::{allreduce_time, Algorithm, CommTopo};
+
+/// Gradient-exchange backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// NCCL-like collective with the given algorithm.
+    Nccl(Algorithm),
+    /// gRPC parameter-server (TensorFlow 1.x distributed default):
+    /// bandwidth-derated PS transfers plus a large per-tensor overhead.
+    Grpc,
+}
+
+/// gRPC protocol efficiency vs raw sockets and its per-call overhead.
+const GRPC_BW_EFFICIENCY: f64 = 0.5;
+const GRPC_CALL_OVERHEAD: f64 = 1500e-6;
+
+/// One framework's optimization strategy.
+#[derive(Clone, Debug)]
+pub struct Strategy {
+    pub name: String,
+    /// Read (and decode) the next mini-batch while the GPU computes.
+    pub prefetch_io: bool,
+    /// Copy the next mini-batch to the GPU while it computes (extra GPU
+    /// buffers — Fig. 1 note).
+    pub prestage_h2d: bool,
+    /// Wait-free back-propagation: all-reduce layer `l` as soon as its
+    /// gradients exist, overlapping the remaining backprop (§IV.C).
+    pub wfbp: bool,
+    /// Input pipeline decodes JPEG on CPU (vs pre-converted binary).
+    pub decode_on_cpu: bool,
+    pub backend: Backend,
+}
+
+impl Strategy {
+    /// Time for one gradient all-reduce of `bytes` under this backend.
+    pub fn comm_time(&self, topo: &CommTopo, bytes: f64) -> f64 {
+        if topo.ranks() <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        match self.backend {
+            Backend::Nccl(algo) => allreduce_time(algo, topo, bytes),
+            Backend::Grpc => {
+                // Sharded PS: every worker pushes + pulls the full tensor;
+                // traffic is spread over shards so the per-NIC cost is
+                // ≈ 2·bytes at derated bandwidth, plus RPC overhead.
+                let link = if topo.nodes == 1 { topo.intra } else { topo.net };
+                2.0 * (link.alpha + bytes / (link.bw * GRPC_BW_EFFICIENCY))
+                    + GRPC_CALL_OVERHEAD
+            }
+        }
+    }
+}
+
+/// Caffe-MPI 2.0: every optimization the paper identifies.
+pub fn caffe_mpi() -> Strategy {
+    Strategy {
+        name: "caffe-mpi".into(),
+        prefetch_io: true,
+        prestage_h2d: true,
+        wfbp: true,
+        decode_on_cpu: false,
+        backend: Backend::Nccl(Algorithm::Hierarchical),
+    }
+}
+
+/// CNTK 2.3/2.4: no gradient/compute overlap.
+pub fn cntk() -> Strategy {
+    Strategy {
+        name: "cntk".into(),
+        prefetch_io: true,
+        prestage_h2d: false,
+        wfbp: false,
+        decode_on_cpu: true,
+        backend: Backend::Nccl(Algorithm::Hierarchical),
+    }
+}
+
+/// MXNet 1.1.0.
+pub fn mxnet() -> Strategy {
+    Strategy {
+        name: "mxnet".into(),
+        prefetch_io: true,
+        prestage_h2d: false,
+        wfbp: true,
+        decode_on_cpu: false,
+        backend: Backend::Nccl(Algorithm::Ring),
+    }
+}
+
+/// TensorFlow 1.7 (distributed gRPC runtime).
+pub fn tensorflow() -> Strategy {
+    Strategy {
+        name: "tensorflow".into(),
+        prefetch_io: true,
+        prestage_h2d: false,
+        wfbp: true,
+        decode_on_cpu: true,
+        backend: Backend::Grpc,
+    }
+}
+
+/// All four, in the paper's order.
+pub fn all() -> Vec<Strategy> {
+    vec![caffe_mpi(), cntk(), mxnet(), tensorflow()]
+}
+
+pub fn by_name(name: &str) -> Option<Strategy> {
+    match name {
+        "caffe-mpi" | "caffempi" | "caffe" => Some(caffe_mpi()),
+        "cntk" => Some(cntk()),
+        "mxnet" => Some(mxnet()),
+        "tensorflow" | "tf" => Some(tensorflow()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::alpha_beta::Link;
+    use crate::util::units::us;
+
+    fn topo() -> CommTopo {
+        CommTopo {
+            nodes: 4,
+            gpus_per_node: 4,
+            intra: Link::new(us(12.0), 15e9),
+            net: Link::new(us(40.0), 1.25e9),
+            launch_overhead: us(200.0),
+        }
+    }
+
+    #[test]
+    fn paper_table_of_strategies() {
+        // §IV.C: only CNTK lacks WFBP; only Caffe-MPI pre-stages H2D.
+        assert!(caffe_mpi().wfbp && caffe_mpi().prestage_h2d);
+        assert!(!cntk().wfbp);
+        assert!(mxnet().wfbp && !mxnet().prestage_h2d);
+        assert!(tensorflow().wfbp && !tensorflow().prestage_h2d);
+        // CNTK + TF decode JPEG on CPU.
+        assert!(cntk().decode_on_cpu && tensorflow().decode_on_cpu);
+        assert!(!caffe_mpi().decode_on_cpu && !mxnet().decode_on_cpu);
+    }
+
+    #[test]
+    fn grpc_slower_than_nccl_for_big_tensors() {
+        let topo = topo();
+        let s = 10e6;
+        assert!(tensorflow().comm_time(&topo, s) > caffe_mpi().comm_time(&topo, s));
+    }
+
+    #[test]
+    fn grpc_overhead_dominates_small_tensors() {
+        let topo = topo();
+        let t = tensorflow().comm_time(&topo, 1024.0);
+        assert!(t >= GRPC_CALL_OVERHEAD);
+    }
+
+    #[test]
+    fn single_rank_free_for_all() {
+        let mut topo = topo();
+        topo.nodes = 1;
+        topo.gpus_per_node = 1;
+        for s in all() {
+            assert_eq!(s.comm_time(&topo, 1e6), 0.0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        for s in all() {
+            assert_eq!(by_name(&s.name).unwrap().name, s.name);
+        }
+        assert!(by_name("pytorch").is_none());
+    }
+}

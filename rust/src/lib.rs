@@ -1,0 +1,103 @@
+//! # dagsgd
+//!
+//! A DAG model and distributed runtime for synchronous stochastic gradient
+//! descent (S-SGD) — a full reproduction of Shi, Wang, Chu & Li, *“A DAG
+//! Model of Synchronous Stochastic Gradient Descent in Distributed Deep
+//! Learning”* (2018).
+//!
+//! The crate has two halves:
+//!
+//! * **Modeling** ([`dag`], [`sim`], [`cluster`], [`comm`], [`models`],
+//!   [`trace`], [`analytic`], [`frameworks`]) — the paper's DAG model of
+//!   S-SGD, a discrete-event cluster simulator that executes those DAGs
+//!   against hardware models of the paper's two clusters, closed-form
+//!   predictors (Eqs. 1–6), the four framework strategies, and the
+//!   layer-wise trace dataset toolchain (Table VI format).
+//! * **Runtime** ([`runtime`], [`coordinator`]) — a real data-parallel
+//!   S-SGD trainer: N workers execute an AOT-compiled XLA train step
+//!   (JAX/Pallas authored, loaded via PJRT), exchange gradients through a
+//!   chunked ring all-reduce with wait-free-backprop bucketing, and emit
+//!   layer-wise traces in the paper's format.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod util {
+    pub mod cli;
+    pub mod json;
+    pub mod quickcheck;
+    pub mod rng;
+    pub mod stats;
+    pub mod table;
+    pub mod units;
+}
+
+pub mod config;
+
+pub mod dag {
+    pub mod builder;
+    pub mod graph;
+    pub mod node;
+}
+
+pub mod sim {
+    pub mod engine;
+    pub mod executor;
+    pub mod failures;
+    pub mod resources;
+    pub mod timeline;
+}
+
+pub mod cluster {
+    pub mod presets;
+    pub mod topology;
+}
+
+pub mod comm {
+    pub mod alpha_beta;
+    pub mod allreduce;
+    pub mod message_sim;
+}
+
+pub mod models {
+    pub mod layer;
+    pub mod perf;
+    pub mod zoo;
+}
+
+pub mod frameworks {
+    pub mod strategy;
+}
+
+pub mod trace {
+    pub mod dataset;
+    pub mod format;
+    pub mod synth;
+    pub mod table6;
+}
+
+pub mod analytic {
+    pub mod eqs;
+    pub mod fusion;
+    pub mod speedup;
+}
+
+pub mod experiments;
+
+pub mod bench {
+    pub mod harness;
+}
+
+pub mod runtime {
+    pub mod artifacts;
+    pub mod pjrt;
+}
+
+pub mod coordinator {
+    pub mod allreduce;
+    pub mod bucket;
+    pub mod dataloader;
+    pub mod metrics;
+    pub mod trainer;
+    pub mod worker;
+}

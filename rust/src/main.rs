@@ -1,0 +1,387 @@
+//! `dagsgd` — launcher CLI.
+//!
+//! Subcommands:
+//!   info                         print Tables II–IV (hardware/frameworks/nets)
+//!   simulate  [flags]            simulate one S-SGD job on a cluster model
+//!   predict   [flags]            analytic Eq. 1–6 prediction for a job
+//!   sweep     [flags]            Fig. 2/3 scaling sweeps
+//!   fig4      [flags]            DAG prediction vs simulation accuracy
+//!   traces    [flags]            emit the §VI layer-wise trace dataset
+//!   train     [flags]            real S-SGD training via PJRT artifacts
+//!
+//! Per-command flags are documented in README.md.
+
+use dagsgd::analytic::speedup;
+use dagsgd::cluster::presets;
+use dagsgd::coordinator::allreduce::ReduceAlgo;
+use dagsgd::coordinator::trainer::{TrainOpts, Trainer};
+use dagsgd::dag::builder::{self, JobSpec};
+use dagsgd::experiments::{fig2, fig3, fig4, info};
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::runtime::artifacts;
+use dagsgd::sim::{executor, timeline};
+use dagsgd::trace::dataset;
+use dagsgd::util::cli::Args;
+use dagsgd::util::table::f;
+use dagsgd::util::units::fmt_dur;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "info" => cmd_info(),
+        "simulate" => cmd_simulate(&args),
+        "predict" => cmd_predict(&args),
+        "sweep" => cmd_sweep(&args),
+        "fig4" => cmd_fig4(&args),
+        "traces" => cmd_traces(&args),
+        "train" => cmd_train(&args),
+        "analyze" => cmd_analyze(&args),
+        other => {
+            eprintln!(
+                "usage: dagsgd <info|simulate|predict|sweep|fig4|traces|train|analyze> [--flags]\n\
+                 see README.md for per-command flags"
+            );
+            if other == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cluster_arg(args: &Args) -> dagsgd::cluster::topology::ClusterSpec {
+    let name = args.str_or("cluster", "k80");
+    presets::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown cluster '{name}' (try k80, v100, localhost)");
+        std::process::exit(2);
+    })
+}
+
+fn job_arg(args: &Args) -> JobSpec {
+    let net_name = args.str_or("net", "resnet50");
+    let net = zoo::by_name(&net_name).unwrap_or_else(|| {
+        eprintln!("unknown net '{net_name}' (try alexnet, googlenet, resnet50)");
+        std::process::exit(2);
+    });
+    JobSpec {
+        batch_per_gpu: args.usize_or("batch", net.default_batch),
+        net,
+        nodes: args.usize_or("nodes", 1),
+        gpus_per_node: args.usize_or("gpus", 4),
+        iterations: args.usize_or("iters", 8),
+    }
+}
+
+fn fw_arg(args: &Args) -> strategy::Strategy {
+    let name = args.str_or("framework", "caffe-mpi");
+    strategy::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown framework '{name}'");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_info() -> i32 {
+    println!("{}", info::full_report());
+    0
+}
+
+/// Parse `--fault straggler:RANK:FACTOR | congest:FACTOR | jitter:SIGMA`
+/// (repeatable via commas).
+fn faults_arg(args: &Args) -> Vec<dagsgd::sim::failures::Fault> {
+    use dagsgd::sim::failures::Fault;
+    let Some(spec) = args.get("fault") else {
+        return Vec::new();
+    };
+    spec.split(',')
+        .map(|one| {
+            let parts: Vec<&str> = one.split(':').collect();
+            match parts.as_slice() {
+                ["straggler", rank, factor] => Fault::StragglerGpu {
+                    rank: rank.parse().expect("straggler rank"),
+                    factor: factor.parse().expect("straggler factor"),
+                },
+                ["congest", factor] => Fault::CongestedCollective {
+                    factor: factor.parse().expect("congest factor"),
+                },
+                ["jitter", sigma] => Fault::Jitter {
+                    sigma: sigma.parse().expect("jitter sigma"),
+                    seed: 1,
+                },
+                _ => {
+                    eprintln!("bad --fault '{one}' (straggler:RANK:F | congest:F | jitter:S)");
+                    std::process::exit(2);
+                }
+            }
+        })
+        .collect()
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let cluster = cluster_arg(args);
+    let job = job_arg(args);
+    let fw = fw_arg(args);
+    let (mut dag, res) = builder::build_ssgd_dag(&cluster, &job, &fw);
+    let faults = faults_arg(args);
+    if !faults.is_empty() {
+        let healthy = executor::simulate(&dag, &res.pool).makespan;
+        dagsgd::sim::failures::inject(&mut dag, &res.pool, &faults);
+        let faulty = executor::simulate(&dag, &res.pool).makespan;
+        println!(
+            "fault injection: makespan {} -> {} (+{:.1}%)",
+            fmt_dur(healthy),
+            fmt_dur(faulty),
+            100.0 * (faulty - healthy) / healthy
+        );
+    }
+    let sim = executor::simulate(&dag, &res.pool);
+    // Steady state from the (possibly fault-injected) DAG itself.
+    let iter_time = if faults.is_empty() {
+        builder::iteration_time(&cluster, &job, &fw)
+    } else if job.iterations >= 3 {
+        executor::steady_state_iter_time(&dag, &res.pool, job.iterations, 1)
+    } else {
+        sim.makespan / job.iterations.max(1) as f64
+    };
+    println!(
+        "cluster={} net={} fw={} gpus={} batch/gpu={}",
+        cluster.name,
+        job.net.name,
+        fw.name,
+        job.ranks(),
+        job.batch_per_gpu
+    );
+    println!(
+        "dag: {} tasks, {} edges | makespan {} | steady-state iter {} | {:.1} samples/s",
+        dag.len(),
+        dag.edge_count(),
+        fmt_dur(sim.makespan),
+        fmt_dur(iter_time),
+        (job.ranks() * job.batch_per_gpu) as f64 / iter_time
+    );
+    if args.bool_or("gantt", false) {
+        print!("{}", timeline::ascii_gantt(&dag, &res.pool, &sim, 100));
+    }
+    if let Some(path) = args.get("trace-out") {
+        let json = timeline::chrome_trace(&dag, &res.pool, &sim);
+        std::fs::write(path, json.to_string()).expect("write trace");
+        println!("chrome trace written to {path}");
+    }
+    if let Some(path) = args.get("dot-out") {
+        std::fs::write(path, dag.to_dot()).expect("write dot");
+        println!("graphviz DAG written to {path}");
+    }
+    0
+}
+
+fn cmd_predict(args: &Args) -> i32 {
+    let cluster = cluster_arg(args);
+    let job = job_arg(args);
+    let fw = fw_arg(args);
+    let t = speedup::predict_iter_time(&cluster, &job, &fw);
+    let s = speedup::predict_speedup(&cluster, &job, &fw);
+    let sim = builder::iteration_time(&cluster, &job, &fw);
+    println!(
+        "analytic: iter {} | speedup(Eq.6) {} | simulator iter {} | err {}%",
+        fmt_dur(t),
+        f(s, 2),
+        fmt_dur(sim),
+        f(100.0 * ((t - sim) / sim).abs(), 1)
+    );
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let cluster = cluster_arg(args);
+    if args.str_or("mode", "single-node") == "multi-node" {
+        let nodes = args.usize_list_or("nodes-list", &[1, 2, 4]);
+        let pts = fig3::run(&cluster, &nodes);
+        print!("{}", fig3::render(&pts));
+    } else {
+        let gpus = args.usize_list_or("gpus-list", &[1, 2, 4]);
+        let pts = fig2::run(&cluster, &gpus);
+        print!("{}", fig2::render(&pts));
+    }
+    0
+}
+
+fn cmd_fig4(args: &Args) -> i32 {
+    let cluster = cluster_arg(args);
+    let configs = [(1, 2), (1, 4), (2, 4), (4, 4)];
+    let pts = fig4::run(&cluster, &configs, args.u64_or("seed", 7));
+    print!("{}", fig4::render(&pts));
+    for (net, err) in fig4::mean_errors(&pts) {
+        println!("mean |err| {net}: {}%", f(err, 1));
+    }
+    0
+}
+
+fn cmd_traces(args: &Args) -> i32 {
+    let dir = PathBuf::from(args.str_or("out", "traces"));
+    let iters = args.usize_or("iters", 100);
+    let paths = dataset::write_dataset(&dir, iters, args.u64_or("seed", 1)).expect("write dataset");
+    println!("wrote {} trace files to {}", paths.len(), dir.display());
+    for p in paths {
+        println!("  {p}");
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts::default_dir);
+    // Config file first, CLI flags override.
+    let mut base = TrainOpts {
+        log_every: 5,
+        checksum_every: 10,
+        ..TrainOpts::default()
+    };
+    if let Some(path) = args.get("config") {
+        match dagsgd::config::ConfigFile::load(std::path::Path::new(path))
+            .and_then(|c| c.train_opts(base.clone()))
+        {
+            Ok(o) => base = o,
+            Err(e) => {
+                eprintln!("bad config {path}: {e}");
+                return 2;
+            }
+        }
+    }
+    let workers = args.usize_or("workers", base.workers);
+    let opts = TrainOpts {
+        workers,
+        steps: args.usize_or("steps", base.steps),
+        bucket_bytes: args
+            .get("bucket-mb")
+            .map(|v| (v.parse::<f64>().expect("--bucket-mb") * 1024.0 * 1024.0) as usize)
+            .unwrap_or(base.bucket_bytes),
+        algo: args
+            .get("algo")
+            .map(|v| ReduceAlgo::by_name(v).expect("--algo ring|flat"))
+            .unwrap_or(base.algo),
+        seed: args.u64_or("seed", base.seed),
+        prefetch_depth: args.usize_or("prefetch", base.prefetch_depth),
+        log_every: args.usize_or("log-every", base.log_every),
+        checksum_every: args.usize_or("checksum-every", base.checksum_every),
+    };
+    let mut trainer = match Trainer::new(&dir, opts) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("failed to start trainer: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "training transformer ({} params, {} tensors, {} buckets) on {workers} workers",
+        trainer.meta().total_params,
+        trainer.meta().params.len(),
+        trainer.buckets().len(),
+    );
+    match trainer.run() {
+        Ok(report) => {
+            println!(
+                "done: loss {} -> {} over {} steps | {:.1} samples/s | iter {} (io {} exec {} comm {} upd {} ovh {})",
+                f(report.first_loss() as f64, 4),
+                f(report.last_loss() as f64, 4),
+                report.steps,
+                report.samples_per_s(),
+                fmt_dur(report.mean_iter_time()),
+                fmt_dur(report.totals.io_wait / report.steps as f64),
+                fmt_dur(report.totals.execute / report.steps as f64),
+                fmt_dur(report.totals.comm / report.steps as f64),
+                fmt_dur(report.totals.update / report.steps as f64),
+                fmt_dur(report.totals.overhead() / report.steps as f64),
+            );
+            if let Some(path) = args.get("trace-out") {
+                std::fs::write(path, report.trace.to_text()).expect("write trace");
+                println!("layer-wise trace written to {path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// `dagsgd analyze` — bottleneck + fusion report for one job: which
+/// resource bounds the iteration, how much communication WFBP hides, and
+/// the optimal gradient-fusion bucket size (the paper's future-work
+/// optimization, cf. analytic::fusion).
+fn cmd_analyze(args: &Args) -> i32 {
+    use dagsgd::analytic::{eqs, fusion};
+    use dagsgd::dag::builder::{comm_topo, durations};
+
+    let cluster = cluster_arg(args);
+    let job = job_arg(args);
+    let fw = fw_arg(args);
+
+    let _ = durations(&cluster, &job, &fw); // validates the job against the models
+    let inputs = speedup::iter_inputs(&cluster, &job, &fw);
+    let tc_no = eqs::tc_no(&inputs);
+    println!(
+        "job: {} on {} with {} ({} GPUs, batch {}/GPU)",
+        job.net.name,
+        cluster.name,
+        fw.name,
+        job.ranks(),
+        job.batch_per_gpu
+    );
+    println!("\nphase budget (per iteration):");
+    println!("  t_io   {:>10}   (contended fetch + decode)", fmt_dur(inputs.t_io));
+    println!("  t_h2d  {:>10}", fmt_dur(inputs.t_h2d));
+    println!("  t_f    {:>10}", fmt_dur(inputs.t_f()));
+    println!("  t_b    {:>10}", fmt_dur(inputs.t_b()));
+    println!("  Σt_c   {:>10}   (layer-wise all-reduce)", fmt_dur(inputs.t_c()));
+    println!(
+        "  t_c^no {:>10}   ({}% hidden by WFBP)",
+        fmt_dur(tc_no),
+        f(100.0 * (1.0 - tc_no / inputs.t_c().max(1e-12)), 0)
+    );
+    println!("  t_u    {:>10}", fmt_dur(inputs.t_u));
+
+    let compute = inputs.t_f() + inputs.t_b() + tc_no;
+    let pipe = inputs.t_io + inputs.t_h2d;
+    println!(
+        "\nbottleneck: {} (input pipe {} vs compute+comm {})",
+        if pipe > compute { "INPUT PIPELINE" } else if tc_no > 0.05 * inputs.t_b() { "COMMUNICATION" } else { "COMPUTE" },
+        fmt_dur(pipe),
+        fmt_dur(compute)
+    );
+
+    // Gradient fusion scan.
+    if job.ranks() > 1 {
+        let topo = comm_topo(&cluster, job.nodes, job.gpus_per_node);
+        let bytes: Vec<f64> = job
+            .net
+            .layers
+            .iter()
+            .map(|l| l.param_bytes() as f64)
+            .collect();
+        let (points, best) = fusion::optimal_bucket_bytes(&inputs, &bytes, &topo, &fw);
+        println!("\ngradient fusion scan (bucket cap -> iteration compute+comm time):");
+        for p in &points {
+            let marker = if (p.cap_bytes - best.cap_bytes).abs() < 1.0 { "  <-- best" } else { "" };
+            println!(
+                "  cap {:>9}  {:>4} buckets  {:>10}{}",
+                dagsgd::util::units::fmt_bytes(p.cap_bytes),
+                p.buckets,
+                fmt_dur(p.iter_time),
+                marker
+            );
+        }
+        let layerwise = points.first().unwrap().iter_time;
+        println!(
+            "fusion gain vs layer-wise: {}%",
+            f(100.0 * (layerwise - best.iter_time) / layerwise, 1)
+        );
+    }
+    0
+}

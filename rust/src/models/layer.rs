@@ -1,0 +1,141 @@
+//! Layer-wise network description.
+//!
+//! The DAG model, the trace dataset and the analytic equations all operate
+//! on a per-layer view of a network: every layer has a forward cost, a
+//! backward cost and (if learnable) a gradient tensor to all-reduce
+//! (paper §III, Table VI). [`LayerSpec`] carries the *architecture*
+//! numbers (MACs, parameter counts); turning them into seconds is the job
+//! of [`super::perf`].
+
+/// Layer category — drives the compute-efficiency model and trace naming.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Input/data layer (cost accounted to I/O, not GPU).
+    Data,
+    Conv,
+    Fc,
+    /// Element-wise activation (ReLU etc.) — memory bound.
+    Act,
+    Pool,
+    /// Batch-norm / LRN style normalization.
+    Norm,
+    Dropout,
+    Loss,
+}
+
+impl LayerKind {
+    pub fn learnable(self) -> bool {
+        matches!(self, LayerKind::Conv | LayerKind::Fc | LayerKind::Norm)
+    }
+}
+
+/// One layer (or fused layer group) of a CNN.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Learnable parameter elements (0 if none). Gradient bytes = 4×.
+    pub params: u64,
+    /// Multiply-accumulate operations per input sample (forward).
+    pub fwd_macs: f64,
+    /// Output activation elements per sample (sizes element-wise work and
+    /// memory-bound layers).
+    pub act_elems: f64,
+}
+
+impl LayerSpec {
+    pub fn new(
+        name: &str,
+        kind: LayerKind,
+        params: u64,
+        fwd_macs: f64,
+        act_elems: f64,
+    ) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            kind,
+            params,
+            fwd_macs,
+            act_elems,
+        }
+    }
+
+    /// Gradient message size for the aggregation task (fp32).
+    pub fn param_bytes(&self) -> u64 {
+        self.params * 4
+    }
+}
+
+/// A full network: an ordered layer list plus workload constants
+/// (paper Table IV).
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    /// Bytes of one decoded input sample (H×W×C, fp8 storage → bytes).
+    pub input_bytes: u64,
+    /// Per-GPU mini-batch size used throughout the paper's evaluation.
+    pub default_batch: usize,
+}
+
+impl NetSpec {
+    pub fn param_count(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.param_count() * 4
+    }
+
+    pub fn total_fwd_macs(&self) -> f64 {
+        self.layers.iter().map(|l| l.fwd_macs).sum()
+    }
+
+    /// Number of learnable layers (= number of gradient all-reduces per
+    /// iteration under layer-wise exchange).
+    pub fn learnable_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.params > 0).count()
+    }
+
+    /// Indices of learnable layers, in forward order.
+    pub fn learnable_indices(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.params > 0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learnable_kinds() {
+        assert!(LayerKind::Conv.learnable());
+        assert!(LayerKind::Fc.learnable());
+        assert!(!LayerKind::Act.learnable());
+        assert!(!LayerKind::Pool.learnable());
+    }
+
+    #[test]
+    fn net_totals() {
+        let net = NetSpec {
+            name: "toy".into(),
+            layers: vec![
+                LayerSpec::new("conv", LayerKind::Conv, 100, 1e6, 1e4),
+                LayerSpec::new("relu", LayerKind::Act, 0, 1e4, 1e4),
+                LayerSpec::new("fc", LayerKind::Fc, 50, 5e4, 10.0),
+            ],
+            input_bytes: 100,
+            default_batch: 8,
+        };
+        assert_eq!(net.param_count(), 150);
+        assert_eq!(net.param_bytes(), 600);
+        assert_eq!(net.learnable_layers(), 2);
+        assert_eq!(net.learnable_indices(), vec![0, 2]);
+        assert!((net.total_fwd_macs() - 1.06e6).abs() < 1.0);
+    }
+}

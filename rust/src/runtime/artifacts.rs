@@ -1,0 +1,220 @@
+//! Artifact bundle loader: `meta.json` + `params.bin` + `*.hlo.txt`
+//! written by `python/compile/aot.py` (`make artifacts`).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Transformer hyper-parameters (mirror of `model.Config`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub lr: f64,
+}
+
+/// One parameter tensor in the flat blob.
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    /// Offset into `params.bin`, in f32 elements.
+    pub offset: usize,
+}
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub params: Vec<ParamInfo>,
+    pub total_params: usize,
+}
+
+impl Meta {
+    pub fn train_step_path(&self) -> PathBuf {
+        self.dir.join("train_step.hlo.txt")
+    }
+
+    pub fn update_step_path(&self) -> PathBuf {
+        self.dir.join("update_step.hlo.txt")
+    }
+
+    pub fn params_path(&self) -> PathBuf {
+        self.dir.join("params.bin")
+    }
+
+    /// Gradient bytes per tensor, in parameter order — feeds WFBP
+    /// bucketing and the Table VI trace.
+    pub fn tensor_bytes(&self) -> Vec<usize> {
+        self.params.iter().map(|p| p.numel * 4).collect()
+    }
+}
+
+fn get_usize(obj: &Json, key: &str) -> Result<usize> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("meta.json: missing numeric field '{key}'"))
+}
+
+/// Load and validate `DIR/meta.json`.
+pub fn load_meta(dir: &Path) -> Result<Meta> {
+    let text = fs::read_to_string(dir.join("meta.json"))
+        .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
+    let root = json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+
+    let cfg = root
+        .get("config")
+        .ok_or_else(|| anyhow!("meta.json: missing config"))?;
+    let config = ModelConfig {
+        vocab: get_usize(cfg, "vocab")?,
+        d_model: get_usize(cfg, "d_model")?,
+        n_heads: get_usize(cfg, "n_heads")?,
+        n_layers: get_usize(cfg, "n_layers")?,
+        seq: get_usize(cfg, "seq")?,
+        batch: get_usize(cfg, "batch")?,
+        lr: cfg
+            .get("lr")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("meta.json: missing lr"))?,
+    };
+
+    let params_json = root
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("meta.json: missing params"))?;
+    let mut params = Vec::with_capacity(params_json.len());
+    for p in params_json {
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("param missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        params.push(ParamInfo {
+            name: p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param missing name"))?
+                .to_string(),
+            numel: get_usize(p, "numel")?,
+            offset: get_usize(p, "offset")?,
+            shape,
+        });
+    }
+    let total_params = get_usize(&root, "total_params")?;
+    // Validate the layout: contiguous, consistent.
+    let mut expect_offset = 0usize;
+    for p in &params {
+        anyhow::ensure!(
+            p.offset == expect_offset,
+            "param {} offset {} != expected {expect_offset}",
+            p.name,
+            p.offset
+        );
+        anyhow::ensure!(
+            p.shape.iter().product::<usize>() == p.numel,
+            "param {} shape/numel mismatch",
+            p.name
+        );
+        expect_offset += p.numel;
+    }
+    anyhow::ensure!(expect_offset == total_params, "total_params mismatch");
+
+    Ok(Meta {
+        dir: dir.to_path_buf(),
+        config,
+        params,
+        total_params,
+    })
+}
+
+/// Load the initial parameters as per-tensor f32 vectors.
+pub fn load_params(meta: &Meta) -> Result<Vec<Vec<f32>>> {
+    let bytes = fs::read(meta.params_path())
+        .with_context(|| format!("reading {}", meta.params_path().display()))?;
+    anyhow::ensure!(
+        bytes.len() == meta.total_params * 4,
+        "params.bin is {} bytes, expected {}",
+        bytes.len(),
+        meta.total_params * 4
+    );
+    let mut out = Vec::with_capacity(meta.params.len());
+    for p in &meta.params {
+        let start = p.offset * 4;
+        let end = start + p.numel * 4;
+        let mut v = vec![0f32; p.numel];
+        // Little-endian f32, as written by numpy '<f4'.
+        for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
+            v[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Locate the artifacts directory: `$DAGSGD_ARTIFACTS` or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("DAGSGD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts` to have run (they are the
+    /// contract between aot.py and the runtime).
+    fn meta_if_present() -> Option<Meta> {
+        let dir = default_dir();
+        if dir.join("meta.json").exists() {
+            Some(load_meta(&dir).expect("meta.json must parse"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let Some(meta) = meta_if_present() else { return };
+        assert!(meta.config.vocab > 0);
+        assert_eq!(
+            meta.params.len(),
+            2 + 12 * meta.config.n_layers + 3,
+            "param table must match model.param_spec"
+        );
+        assert_eq!(meta.params[0].name, "tok_emb");
+        assert_eq!(
+            meta.params[0].shape,
+            vec![meta.config.vocab, meta.config.d_model]
+        );
+    }
+
+    #[test]
+    fn params_blob_matches_meta() {
+        let Some(meta) = meta_if_present() else { return };
+        let params = load_params(&meta).unwrap();
+        assert_eq!(params.len(), meta.params.len());
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        assert_eq!(total, meta.total_params);
+        // Embeddings are random-normal-scaled: nonzero, small.
+        let emb = &params[0];
+        assert!(emb.iter().any(|&x| x != 0.0));
+        assert!(emb.iter().all(|&x| x.abs() < 1.0));
+        // LayerNorm gains are exactly 1.
+        let ln_g = meta
+            .params
+            .iter()
+            .position(|p| p.name.ends_with("ln1.g"))
+            .unwrap();
+        assert!(params[ln_g].iter().all(|&x| x == 1.0));
+    }
+}

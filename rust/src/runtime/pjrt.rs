@@ -1,0 +1,92 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile on the CPU client,
+//! execute with fp32/i32 host buffers.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1). HLO **text** is the
+//! interchange format — see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why serialized protos are rejected.
+//!
+//! The crate's handles wrap raw pointers and are `!Send`; each coordinator
+//! worker thread therefore owns its own [`Device`] (PJRT CPU clients are
+//! cheap on this backend and the paper's workers are share-nothing anyway).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One PJRT CPU device (per worker thread).
+pub struct Device {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable (one HLO artifact).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Device {
+    pub fn cpu() -> Result<Device> {
+        Ok(Device {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with host literals; the artifact was lowered with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into per-output literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Host-buffer ↔ literal helpers.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Scalar f32 output (e.g. the loss).
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,168 @@
+//! Failure / perturbation injection for the simulator.
+//!
+//! S-SGD is a bulk-synchronous computation: its iteration time is the
+//! *maximum* over workers of every phase, so stragglers and slow links
+//! hurt super-linearly with scale. This module perturbs a built DAG —
+//! slowing a GPU, derating a link class, adding log-normal jitter — so
+//! experiments can quantify that sensitivity (an analysis the paper's
+//! DAG model enables but the paper itself leaves implicit).
+
+use crate::dag::graph::Dag;
+use crate::dag::node::Phase;
+use crate::sim::resources::{ResourceClass, ResourcePool};
+use crate::util::rng::Rng;
+
+/// A perturbation applied to task durations.
+#[derive(Clone, Debug)]
+pub enum Fault {
+    /// Multiply the durations of every task on GPU rank `rank` by `factor`
+    /// (a thermally-throttled / contended straggler).
+    StragglerGpu { rank: usize, factor: f64 },
+    /// Multiply the durations of all tasks on resources of `class`.
+    SlowClass { class: ResourceClass, factor: f64 },
+    /// Log-normal jitter (multiplicative sigma) on every task.
+    Jitter { sigma: f64, seed: u64 },
+    /// Multiply gradient-aggregation tasks only (a congested fabric).
+    CongestedCollective { factor: f64 },
+}
+
+/// Apply faults to a DAG (durations only; structure is untouched).
+pub fn inject(dag: &mut Dag, pool: &ResourcePool, faults: &[Fault]) {
+    for fault in faults {
+        match fault {
+            Fault::StragglerGpu { rank, factor } => {
+                for t in dag.tasks.iter_mut() {
+                    if t.gpu == Some(*rank)
+                        && pool.class(t.resource) == ResourceClass::Gpu
+                    {
+                        t.duration *= factor;
+                    }
+                }
+            }
+            Fault::SlowClass { class, factor } => {
+                for t in dag.tasks.iter_mut() {
+                    if pool.class(t.resource) == *class {
+                        t.duration *= factor;
+                    }
+                }
+            }
+            Fault::Jitter { sigma, seed } => {
+                let mut rng = Rng::new(*seed);
+                for t in dag.tasks.iter_mut() {
+                    t.duration *= rng.jitter(*sigma);
+                }
+            }
+            Fault::CongestedCollective { factor } => {
+                for t in dag.tasks.iter_mut() {
+                    if t.phase == Phase::Aggregate {
+                        t.duration *= factor;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::dag::builder::{build_ssgd_dag, JobSpec};
+    use crate::frameworks::strategy;
+    use crate::models::zoo;
+    use crate::sim::executor::simulate;
+
+    fn build() -> (Dag, crate::cluster::topology::ClusterResources, f64) {
+        let cluster = presets::v100_cluster();
+        let job = JobSpec {
+            net: zoo::googlenet(),
+            batch_per_gpu: 64,
+            nodes: 1,
+            gpus_per_node: 4,
+            iterations: 4,
+        };
+        let (dag, res) = build_ssgd_dag(&cluster, &job, &strategy::caffe_mpi());
+        let base = simulate(&dag, &res.pool).makespan;
+        (dag, res, base)
+    }
+
+    /// A single 2× straggler among 4 GPUs stalls the whole job by ~2× in
+    /// compute-bound regimes — the bulk-synchronous amplification.
+    #[test]
+    fn one_straggler_slows_everyone() {
+        let (mut dag, res, base) = build();
+        inject(
+            &mut dag,
+            &res.pool,
+            &[Fault::StragglerGpu {
+                rank: 2,
+                factor: 2.0,
+            }],
+        );
+        let slowed = simulate(&dag, &res.pool).makespan;
+        assert!(
+            slowed > 1.5 * base,
+            "straggler should dominate: {slowed} vs base {base}"
+        );
+        // And it is bounded by exactly 2x the original work.
+        assert!(slowed < 2.2 * base);
+    }
+
+    #[test]
+    fn congested_collective_only_hits_comm() {
+        let (mut dag, res, base) = build();
+        inject(&mut dag, &res.pool, &[Fault::CongestedCollective { factor: 50.0 }]);
+        let slowed = simulate(&dag, &res.pool).makespan;
+        // GoogleNet single-node comm is tiny; even 50x congestion must
+        // cost less than a 2x compute straggler would.
+        assert!(slowed > base);
+        assert!(slowed < 1.9 * base, "{slowed} vs {base}");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let (dag0, res, base) = build();
+        let mut a = dag0.clone();
+        let mut b = dag0.clone();
+        inject(&mut a, &res.pool, &[Fault::Jitter { sigma: 0.05, seed: 9 }]);
+        inject(&mut b, &res.pool, &[Fault::Jitter { sigma: 0.05, seed: 9 }]);
+        let ta = simulate(&a, &res.pool).makespan;
+        let tb = simulate(&b, &res.pool).makespan;
+        assert_eq!(ta, tb, "same seed must give same jitter");
+        assert!((ta / base - 1.0).abs() < 0.25, "5% jitter moved makespan {ta} vs {base}");
+    }
+
+    #[test]
+    fn slow_disk_class_hits_io_bound_jobs_hardest() {
+        // AlexNet on the V100 node (slow SSD) is I/O-bound: a 4x slower
+        // disk stretches the iteration heavily. GoogleNet on the K80
+        // cluster (fast NFS, tiny batch) barely notices.
+        let fw = strategy::caffe_mpi();
+        let mk = |cluster: &crate::cluster::topology::ClusterSpec,
+                  net: crate::models::layer::NetSpec| {
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net,
+                nodes: 1,
+                gpus_per_node: 4,
+                iterations: 4,
+            };
+            let (mut dag, res) = build_ssgd_dag(cluster, &job, &fw);
+            let base = simulate(&dag, &res.pool).makespan;
+            inject(
+                &mut dag,
+                &res.pool,
+                &[Fault::SlowClass {
+                    class: ResourceClass::Disk,
+                    factor: 4.0,
+                }],
+            );
+            simulate(&dag, &res.pool).makespan / base
+        };
+        let alex = mk(&presets::v100_cluster(), zoo::alexnet());
+        let goog = mk(&presets::k80_cluster(), zoo::googlenet());
+        assert!(alex > 2.0, "alexnet io-bound ratio {alex}");
+        assert!(goog < 1.3, "googlenet should not care: {goog}");
+        assert!(alex > goog);
+    }
+}

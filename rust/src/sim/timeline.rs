@@ -1,0 +1,159 @@
+//! Timeline exports: chrome://tracing JSON and plain-text Gantt views of a
+//! simulation, plus per-resource utilization reports. Used by
+//! `examples/quickstart.rs` and by `dagsgd simulate --trace-out`.
+
+use super::executor::SimResult;
+use super::resources::ResourcePool;
+use crate::dag::graph::Dag;
+use crate::util::json::Json;
+
+/// Chrome trace-event format ("X" complete events, µs units). Open in
+/// chrome://tracing or Perfetto.
+pub fn chrome_trace(dag: &Dag, pool: &ResourcePool, res: &SimResult) -> Json {
+    let mut events = Vec::with_capacity(dag.len());
+    for (i, task) in dag.tasks.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("name", Json::str(task.name.clone())),
+            ("cat", Json::str(task.phase.short())),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(res.start[i] * 1e6)),
+            ("dur", Json::num(task.duration * 1e6)),
+            // pid = resource, tid = gpu rank (or 0).
+            ("pid", Json::num(task.resource as f64)),
+            ("tid", Json::num(task.gpu.unwrap_or(0) as f64)),
+        ]));
+    }
+    // Resource-name metadata.
+    for (rid, spec) in pool.specs.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(rid as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(spec.name.clone()))]),
+            ),
+        ]));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// Plain-text Gantt chart: one row per resource, `width` columns spanning
+/// the makespan, each task drawn with the first letter of its phase.
+pub fn ascii_gantt(dag: &Dag, pool: &ResourcePool, res: &SimResult, width: usize) -> String {
+    let mut out = String::new();
+    let span = res.makespan.max(1e-12);
+    let name_w = pool
+        .specs
+        .iter()
+        .map(|s| s.name.len())
+        .max()
+        .unwrap_or(4)
+        .max(4);
+    for (rid, spec) in pool.specs.iter().enumerate() {
+        let mut row = vec![b'.'; width];
+        for (i, task) in dag.tasks.iter().enumerate() {
+            if task.resource != rid {
+                continue;
+            }
+            let a = ((res.start[i] / span) * width as f64).floor() as usize;
+            let b = ((res.finish[i] / span) * width as f64).ceil() as usize;
+            let ch = task.phase.short().as_bytes()[0];
+            for c in row.iter_mut().take(b.min(width)).skip(a.min(width)) {
+                *c = ch;
+            }
+        }
+        out.push_str(&format!(
+            "{:name_w$} |{}| {:5.1}%\n",
+            spec.name,
+            String::from_utf8(row).unwrap(),
+            100.0 * res.utilization(rid),
+            name_w = name_w
+        ));
+    }
+    out
+}
+
+/// Per-resource utilization summary rows: (name, class, busy_s, util).
+pub fn utilization_rows(pool: &ResourcePool, res: &SimResult) -> Vec<(String, &'static str, f64, f64)> {
+    pool.specs
+        .iter()
+        .enumerate()
+        .map(|(rid, spec)| {
+            (
+                spec.name.clone(),
+                spec.class.short(),
+                res.busy[rid],
+                res.utilization(rid),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::node::{Phase, Task};
+    use crate::sim::executor::simulate;
+    use crate::sim::resources::ResourceClass;
+    use crate::util::json;
+
+    fn tiny() -> (Dag, ResourcePool) {
+        let mut pool = ResourcePool::new();
+        let disk = pool.add("disk0", ResourceClass::Disk, 1);
+        let gpu = pool.add("gpu0", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        let a = dag.add(Task {
+            name: "io".into(),
+            phase: Phase::Io,
+            resource: disk,
+            duration: 1.0,
+            iter: 0,
+            gpu: Some(0),
+            layer: None,
+        });
+        let b = dag.add(Task {
+            name: "fwd".into(),
+            phase: Phase::Forward,
+            resource: gpu,
+            duration: 2.0,
+            iter: 0,
+            gpu: Some(0),
+            layer: Some(0),
+        });
+        dag.edge(a, b);
+        (dag, pool)
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_all_tasks() {
+        let (dag, pool) = tiny();
+        let res = simulate(&dag, &pool);
+        let trace = chrome_trace(&dag, &pool, &res);
+        let parsed = json::parse(&trace.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 tasks + 2 metadata.
+        assert_eq!(events.len(), 4);
+    }
+
+    #[test]
+    fn gantt_has_one_row_per_resource() {
+        let (dag, pool) = tiny();
+        let res = simulate(&dag, &pool);
+        let g = ascii_gantt(&dag, &pool, &res, 30);
+        assert_eq!(g.lines().count(), 2);
+        assert!(g.contains("disk0"));
+        assert!(g.contains('i')); // io phase drawn
+        assert!(g.contains('f')); // fwd phase drawn
+    }
+
+    #[test]
+    fn utilization_rows_match() {
+        let (dag, pool) = tiny();
+        let res = simulate(&dag, &pool);
+        let rows = utilization_rows(&pool, &res);
+        assert_eq!(rows.len(), 2);
+        // disk busy 1s of 3s makespan.
+        assert!((rows[0].3 - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

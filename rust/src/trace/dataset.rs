@@ -1,0 +1,85 @@
+//! The full trace dataset of paper §VI: layer-wise traces of the three
+//! CNNs on both clusters, 100 iterations each — regenerated synthetically
+//! (calibrated models) instead of measured on the long-gone testbeds.
+//!
+//! `dagsgd traces --out DIR` writes the same directory layout the paper
+//! published (one file per net × cluster), plus the Table VI golden file.
+
+use super::format::Trace;
+use super::synth::synth_trace;
+use crate::cluster::presets;
+use crate::dag::builder::JobSpec;
+use crate::frameworks::strategy;
+use crate::models::zoo;
+use std::fs;
+use std::path::Path;
+
+/// Default shape of the published dataset: Caffe-MPI traces on both
+/// clusters, full 4×4 GPU configuration, 100 iterations.
+pub fn generate_all(iters: usize, seed: u64) -> Vec<Trace> {
+    let mut out = Vec::new();
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net,
+                nodes: 4,
+                gpus_per_node: 4,
+                iterations: 1,
+            };
+            out.push(synth_trace(&cluster, &job, &strategy::caffe_mpi(), iters, seed));
+        }
+    }
+    out
+}
+
+/// File name convention: `<net>_<cluster>_g<gpus>.trace`.
+pub fn file_name(t: &Trace) -> String {
+    format!("{}_{}_g{}.trace", t.net, t.cluster, t.gpus)
+}
+
+/// Write the dataset to `dir`. Returns the written paths.
+pub fn write_dataset(dir: &Path, iters: usize, seed: u64) -> std::io::Result<Vec<String>> {
+    fs::create_dir_all(dir)?;
+    let mut paths = Vec::new();
+    for t in generate_all(iters, seed) {
+        let p = dir.join(file_name(&t));
+        fs::write(&p, t.to_text())?;
+        paths.push(p.display().to_string());
+    }
+    // The published example iteration, verbatim.
+    let golden = super::table6::table6_trace();
+    let p = dir.join("table6_alexnet_k80_example.trace");
+    fs::write(&p, golden.to_text())?;
+    paths.push(p.display().to_string());
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_covers_3_nets_x_2_clusters() {
+        let all = generate_all(2, 1);
+        assert_eq!(all.len(), 6);
+        let mut names: Vec<String> = all.iter().map(file_name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 6, "file names must be unique");
+    }
+
+    #[test]
+    fn writes_and_reparses() {
+        let dir = std::env::temp_dir().join("dagsgd_dataset_test");
+        let _ = fs::remove_dir_all(&dir);
+        let paths = write_dataset(&dir, 2, 42).unwrap();
+        assert_eq!(paths.len(), 7); // 6 synth + table6 golden
+        for p in &paths {
+            let text = fs::read_to_string(p).unwrap();
+            let t = Trace::parse(&text).unwrap();
+            assert!(!t.iterations.is_empty(), "{p}");
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,281 @@
+//! The layer-wise trace format of paper §VI / Table VI.
+//!
+//! Each iteration is a table of rows
+//! `Id  Name  Forward(µs)  Backward(µs)  Comm(µs)  Size(bytes)`;
+//! a trace file holds (typically 100) iterations. We serialize as
+//! tab-separated text with `# iter N` separators and a `#!` header line
+//! carrying job metadata, and can parse files with or without the header
+//! (the paper's published files have none).
+
+use std::fmt::Write as _;
+
+/// One layer row of one iteration (times in **microseconds**, sizes in
+/// bytes — exactly the published units).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerRecord {
+    pub id: usize,
+    pub name: String,
+    pub forward_us: f64,
+    pub backward_us: f64,
+    pub comm_us: f64,
+    pub size_bytes: u64,
+}
+
+/// A full trace: metadata + per-iteration layer tables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub net: String,
+    pub cluster: String,
+    pub gpus: usize,
+    pub batch: usize,
+    pub iterations: Vec<Vec<LayerRecord>>,
+}
+
+impl Trace {
+    /// Mean over iterations of a field, per layer (§VI: "One can use the
+    /// average time for more accurate measurements").
+    pub fn mean_rows(&self) -> Vec<LayerRecord> {
+        if self.iterations.is_empty() {
+            return Vec::new();
+        }
+        let nlayers = self.iterations[0].len();
+        let n = self.iterations.len() as f64;
+        (0..nlayers)
+            .map(|l| {
+                let first = &self.iterations[0][l];
+                let mut rec = LayerRecord {
+                    id: first.id,
+                    name: first.name.clone(),
+                    forward_us: 0.0,
+                    backward_us: 0.0,
+                    comm_us: 0.0,
+                    size_bytes: first.size_bytes,
+                };
+                for it in &self.iterations {
+                    rec.forward_us += it[l].forward_us;
+                    rec.backward_us += it[l].backward_us;
+                    rec.comm_us += it[l].comm_us;
+                }
+                rec.forward_us /= n;
+                rec.backward_us /= n;
+                rec.comm_us /= n;
+                rec
+            })
+            .collect()
+    }
+
+    /// Totals of the mean iteration: (fwd, bwd, comm) in seconds.
+    pub fn mean_totals(&self) -> (f64, f64, f64) {
+        let rows = self.mean_rows();
+        let f: f64 = rows.iter().map(|r| r.forward_us).sum();
+        let b: f64 = rows.iter().map(|r| r.backward_us).sum();
+        let c: f64 = rows.iter().map(|r| r.comm_us).sum();
+        (f * 1e-6, b * 1e-6, c * 1e-6)
+    }
+
+    /// Serialize to the text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        writeln!(
+            out,
+            "#! net={} cluster={} gpus={} batch={}",
+            self.net, self.cluster, self.gpus, self.batch
+        )
+        .unwrap();
+        writeln!(out, "# Id\tName\tForward\tBackward\tComm\tSize").unwrap();
+        for (i, iter) in self.iterations.iter().enumerate() {
+            writeln!(out, "# iter {i}").unwrap();
+            for r in iter {
+                writeln!(
+                    out,
+                    "{}\t{}\t{}\t{}\t{}\t{}",
+                    r.id,
+                    r.name,
+                    fmt_us(r.forward_us),
+                    fmt_us(r.backward_us),
+                    fmt_us(r.comm_us),
+                    r.size_bytes
+                )
+                .unwrap();
+            }
+        }
+        out
+    }
+
+    /// Parse the text format (tolerates missing `#!` header: metadata
+    /// defaults to empty/zero, like the paper's raw files).
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut trace = Trace::default();
+        let mut current: Vec<LayerRecord> = Vec::new();
+        let mut any_iter_marker = false;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("#!") {
+                for kv in rest.split_whitespace() {
+                    if let Some((k, v)) = kv.split_once('=') {
+                        match k {
+                            "net" => trace.net = v.to_string(),
+                            "cluster" => trace.cluster = v.to_string(),
+                            "gpus" => trace.gpus = v.parse().map_err(|e| format!("{e}"))?,
+                            "batch" => trace.batch = v.parse().map_err(|e| format!("{e}"))?,
+                            _ => {}
+                        }
+                    }
+                }
+                continue;
+            }
+            if line.starts_with("# iter") {
+                any_iter_marker = true;
+                if !current.is_empty() {
+                    trace.iterations.push(std::mem::take(&mut current));
+                }
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 6 {
+                return Err(format!(
+                    "line {}: expected 6 fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                ));
+            }
+            let parse_f = |s: &str, what: &str| -> Result<f64, String> {
+                s.parse::<f64>()
+                    .map_err(|e| format!("line {}: bad {what} '{s}': {e}", lineno + 1))
+            };
+            current.push(LayerRecord {
+                id: fields[0]
+                    .parse()
+                    .map_err(|e| format!("line {}: bad id: {e}", lineno + 1))?,
+                name: fields[1].to_string(),
+                forward_us: parse_f(fields[2], "forward")?,
+                backward_us: parse_f(fields[3], "backward")?,
+                comm_us: parse_f(fields[4], "comm")?,
+                size_bytes: parse_f(fields[5], "size")? as u64,
+            });
+        }
+        if !current.is_empty() {
+            trace.iterations.push(current);
+        }
+        if trace.iterations.is_empty() && !any_iter_marker {
+            return Err("no records found".into());
+        }
+        Ok(trace)
+    }
+}
+
+/// µs values are printed like the paper's files: scientific notation for
+/// large values, plain otherwise.
+fn fmt_us(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.5e}", v)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            net: "alexnet".into(),
+            cluster: "k80".into(),
+            gpus: 2,
+            batch: 1024,
+            iterations: vec![
+                vec![
+                    LayerRecord {
+                        id: 0,
+                        name: "data".into(),
+                        forward_us: 1.2e6,
+                        backward_us: 0.0,
+                        comm_us: 0.0,
+                        size_bytes: 0,
+                    },
+                    LayerRecord {
+                        id: 1,
+                        name: "conv1".into(),
+                        forward_us: 3.27e6,
+                        backward_us: 288_202.0,
+                        comm_us: 123.424,
+                        size_bytes: 139_776,
+                    },
+                ],
+                vec![
+                    LayerRecord {
+                        id: 0,
+                        name: "data".into(),
+                        forward_us: 1.0e6,
+                        backward_us: 0.0,
+                        comm_us: 0.0,
+                        size_bytes: 0,
+                    },
+                    LayerRecord {
+                        id: 1,
+                        name: "conv1".into(),
+                        forward_us: 3.0e6,
+                        backward_us: 300_000.0,
+                        comm_us: 130.0,
+                        size_bytes: 139_776,
+                    },
+                ],
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = sample();
+        let text = t.to_text();
+        let parsed = Trace::parse(&text).unwrap();
+        assert_eq!(parsed.net, "alexnet");
+        assert_eq!(parsed.gpus, 2);
+        assert_eq!(parsed.iterations.len(), 2);
+        assert_eq!(parsed.iterations[0][1].name, "conv1");
+        assert_eq!(parsed.iterations[0][1].size_bytes, 139_776);
+        assert!((parsed.iterations[0][1].forward_us - 3.27e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn mean_rows_average() {
+        let t = sample();
+        let rows = t.mean_rows();
+        assert_eq!(rows.len(), 2);
+        assert!((rows[1].backward_us - 294_101.0).abs() < 1.0);
+        assert!((rows[0].forward_us - 1.1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn mean_totals_in_seconds() {
+        let t = sample();
+        let (f, b, c) = t.mean_totals();
+        assert!((f - (1.1 + 3.135)).abs() < 1e-9);
+        assert!(b > 0.29 && b < 0.30);
+        assert!(c < 0.001);
+    }
+
+    #[test]
+    fn parses_headerless_paper_style_table() {
+        // Verbatim shape of Table VI rows (whitespace separated).
+        let text = "0 data 1.20e+06 0 0 0\n1 conv1 3.27e+06 288202 123.424 139776\n";
+        let t = Trace::parse(text).unwrap();
+        assert_eq!(t.iterations.len(), 1);
+        assert_eq!(t.iterations[0].len(), 2);
+        assert_eq!(t.iterations[0][1].size_bytes, 139_776);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Trace::parse("1 conv1 3.0\n").is_err());
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse("x conv1 1 2 3 4\n").is_err());
+    }
+}

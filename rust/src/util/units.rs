@@ -1,0 +1,96 @@
+//! Unit helpers: the simulator's clock is `f64` seconds, sizes are bytes,
+//! rates are bytes/second and FLOP/s. These helpers keep constants readable
+//! (`gib_s(95.0)` instead of `95.0 * 1024.0 * ...`) and format outputs.
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+pub const KB: f64 = 1e3;
+pub const MB: f64 = 1e6;
+pub const GB: f64 = 1e9;
+
+/// GiB/s → bytes/s (link bandwidths in the paper are GB/s ≈ GiB/s scale;
+/// we follow the paper and treat them as decimal-ish device specs).
+pub fn gb_s(x: f64) -> f64 {
+    x * GB
+}
+
+pub fn mb_s(x: f64) -> f64 {
+    x * MB
+}
+
+/// Gbps (network spec sheets) → bytes/s.
+pub fn gbit_s(x: f64) -> f64 {
+    x * 1e9 / 8.0
+}
+
+/// TFLOP/s → FLOP/s.
+pub fn tflops(x: f64) -> f64 {
+    x * 1e12
+}
+
+pub fn us(x: f64) -> f64 {
+    x * 1e-6
+}
+
+pub fn ms(x: f64) -> f64 {
+    x * 1e-3
+}
+
+/// Human format for a duration in seconds.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", fmt_dur(-secs));
+    }
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.3}s", secs)
+    } else {
+        format!("{:.1}min", secs / 60.0)
+    }
+}
+
+/// Human format for a byte count.
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes < KIB {
+        format!("{bytes:.0}B")
+    } else if bytes < MIB {
+        format!("{:.1}KiB", bytes / KIB)
+    } else if bytes < GIB {
+        format!("{:.1}MiB", bytes / MIB)
+    } else {
+        format!("{:.2}GiB", bytes / GIB)
+    }
+}
+
+/// Human format for a rate in bytes/s.
+pub fn fmt_rate(bps: f64) -> String {
+    format!("{}/s", fmt_bytes(bps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(gbit_s(10.0), 1.25e9);
+        assert_eq!(tflops(4.37), 4.37e12);
+        assert_eq!(us(1.0), 1e-6);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_dur(0.0000005), "500.0ns");
+        assert_eq!(fmt_dur(0.0025), "2.50ms");
+        assert_eq!(fmt_dur(1.5), "1.500s");
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(2.0 * MIB), "2.0MiB");
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-module integration tests: DAG builder → simulator → analytic
+//! model → trace toolchain, over the paper's full configuration grid.
+
+use dagsgd::analytic::{eqs, speedup};
+use dagsgd::cluster::presets;
+use dagsgd::dag::builder::{self, JobSpec};
+use dagsgd::dag::node::Phase;
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::sim::executor;
+use dagsgd::trace::{dataset, format::Trace, synth, table6};
+use dagsgd::util::stats;
+
+fn job(net: dagsgd::models::layer::NetSpec, nodes: usize, g: usize) -> JobSpec {
+    JobSpec {
+        batch_per_gpu: net.default_batch,
+        net,
+        nodes,
+        gpus_per_node: g,
+        iterations: 6,
+    }
+}
+
+/// Every (cluster × net × framework × topology) combination simulates
+/// cleanly, is acyclic, completes, and yields a sane iteration time.
+#[test]
+fn full_grid_simulates() {
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            for fw in strategy::all() {
+                for (nodes, g) in [(1, 1), (1, 4), (4, 4)] {
+                    let j = job(net.clone(), nodes, g);
+                    let t = builder::iteration_time(&cluster, &j, &fw);
+                    assert!(
+                        t > 1e-4 && t < 100.0,
+                        "{} {} {} {}x{}: iter={t}",
+                        cluster.name,
+                        j.net.name,
+                        fw.name,
+                        nodes,
+                        g
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The simulator can never beat the infinite-resource critical path.
+#[test]
+fn sim_lower_bounded_by_critical_path() {
+    let cluster = presets::v100_cluster();
+    for fw in strategy::all() {
+        let j = job(zoo::resnet50(), 2, 2);
+        let (dag, res) = builder::build_ssgd_dag(&cluster, &j, &fw);
+        let sim = executor::simulate(&dag, &res.pool);
+        let cp = dag.critical_path_length().unwrap();
+        assert!(
+            sim.makespan >= cp - 1e-9,
+            "{}: makespan {} < critical path {}",
+            fw.name,
+            sim.makespan,
+            cp
+        );
+    }
+}
+
+/// Simulated behaviour is deterministic: same configuration → identical
+/// schedule, twice.
+#[test]
+fn simulation_deterministic() {
+    let cluster = presets::k80_cluster();
+    let j = job(zoo::googlenet(), 2, 4);
+    let fw = strategy::mxnet();
+    let (dag1, res1) = builder::build_ssgd_dag(&cluster, &j, &fw);
+    let (dag2, res2) = builder::build_ssgd_dag(&cluster, &j, &fw);
+    let s1 = executor::simulate(&dag1, &res1.pool);
+    let s2 = executor::simulate(&dag2, &res2.pool);
+    assert_eq!(s1.start, s2.start);
+    assert_eq!(s1.finish, s2.finish);
+}
+
+/// Naive (Eq. 2) ≥ I/O-overlap (Eq. 3) ≥ WFBP (Eq. 5) on real durations.
+#[test]
+fn overlap_strategy_ordering() {
+    let cluster = presets::k80_cluster();
+    let j = job(zoo::resnet50(), 4, 4);
+    let fw = strategy::caffe_mpi();
+    let inputs = speedup::iter_inputs(&cluster, &j, &fw);
+    let naive = eqs::eq2_naive_ssgd(&inputs);
+    let io = eqs::eq3_overlap_io(&inputs);
+    let wfbp = eqs::eq5_wfbp(&inputs);
+    assert!(naive >= io && io >= wfbp, "{naive} {io} {wfbp}");
+}
+
+/// The WFBP-hidden communication claim (§IV.C): with overlap the
+/// effective comm cost `t_c^no` is strictly less than Σ t_c^(l) whenever
+/// there is backward compute to hide behind.
+#[test]
+fn wfbp_hides_communication() {
+    let cluster = presets::k80_cluster();
+    let j = job(zoo::resnet50(), 4, 4);
+    let inputs = speedup::iter_inputs(&cluster, &j, &strategy::caffe_mpi());
+    let tc_no = eqs::tc_no(&inputs);
+    assert!(tc_no < inputs.t_c(), "tc_no={tc_no} total={}", inputs.t_c());
+}
+
+/// Analytic prediction tracks the simulator within paper-like error
+/// (Fig. 4 reported 4.6–9.4 % mean) across the whole grid.
+#[test]
+fn analytic_tracks_simulator_across_grid() {
+    let mut errs = Vec::new();
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            for (nodes, g) in [(1, 2), (1, 4), (2, 4), (4, 4)] {
+                let j = job(net.clone(), nodes, g);
+                let fw = strategy::caffe_mpi();
+                let pred = speedup::predict_iter_time(&cluster, &j, &fw);
+                let sim = builder::iteration_time(&cluster, &j, &fw);
+                errs.push(100.0 * ((pred - sim) / sim).abs());
+            }
+        }
+    }
+    let mean = stats::mean(&errs);
+    let max = stats::max(&errs);
+    assert!(mean < 10.0, "mean err {mean:.1}% (paper: 4.6–9.4%)");
+    assert!(max < 30.0, "max err {max:.1}%");
+}
+
+/// The DAG of Fig. 1 contains exactly the phase structure of the paper.
+#[test]
+fn dag_phases_complete_and_ordered() {
+    let cluster = presets::v100_cluster();
+    let j = job(zoo::alexnet(), 1, 4);
+    let (dag, res) = builder::build_ssgd_dag(&cluster, &j, &strategy::caffe_mpi());
+    let sim = executor::simulate(&dag, &res.pool);
+    // For iteration 0: io < h2d < first fwd < last bwd, agg ≤ update.
+    let t_of = |phase: Phase, pick_min: bool| -> f64 {
+        let v: Vec<f64> = dag
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.iter == 0 && t.phase == phase)
+            .map(|(i, _)| if pick_min { sim.start[i] } else { sim.finish[i] })
+            .collect();
+        if pick_min {
+            v.into_iter().fold(f64::INFINITY, f64::min)
+        } else {
+            v.into_iter().fold(0.0, f64::max)
+        }
+    };
+    assert!(t_of(Phase::Io, true) <= t_of(Phase::H2d, true));
+    assert!(t_of(Phase::H2d, true) <= t_of(Phase::Forward, true));
+    assert!(t_of(Phase::Forward, true) < t_of(Phase::Backward, false));
+    assert!(t_of(Phase::Aggregate, false) <= t_of(Phase::Update, false));
+}
+
+/// Trace dataset: generate → write → parse → drive the analytic model.
+#[test]
+fn trace_dataset_end_to_end() {
+    let dir = std::env::temp_dir().join("dagsgd_integration_traces");
+    let _ = std::fs::remove_dir_all(&dir);
+    let paths = dataset::write_dataset(&dir, 5, 99).unwrap();
+    assert_eq!(paths.len(), 7);
+    for p in &paths {
+        let trace = Trace::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        let inputs = synth::iter_inputs_from_trace(&trace, 0.01, 0.001);
+        // Every trace yields usable Eq-inputs.
+        assert!(inputs.t_f() > 0.0, "{p}");
+        assert!(eqs::eq5_wfbp(&inputs) > 0.0, "{p}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Table VI golden data drives the analytic model to paper-scale numbers.
+#[test]
+fn table6_drives_prediction() {
+    let t = table6::table6_trace();
+    let inputs = synth::iter_inputs_from_trace(&t, 0.05, 0.01);
+    // The published iteration (AlexNet, batch 1024, K80): forward ≈ 12.3 s
+    // excluding the data row, backward ≈ 3.36 s.
+    assert!((inputs.t_f() - 12.3).abs() < 1.5, "t_f={}", inputs.t_f());
+    assert!((inputs.t_b() - 3.36).abs() < 0.5, "t_b={}", inputs.t_b());
+    let wfbp = eqs::eq5_wfbp(&inputs);
+    let naive = eqs::eq2_naive_ssgd(&inputs);
+    assert!(wfbp < naive);
+}
+
+/// CNTK (no WFBP) must lose to Caffe-MPI whenever communication is
+/// non-trivial — on every cluster and network.
+#[test]
+fn cntk_never_beats_caffe_mpi_multinode() {
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            let j = job(net.clone(), 4, 4);
+            let t_caffe = builder::iteration_time(&cluster, &j, &strategy::caffe_mpi());
+            let t_cntk = builder::iteration_time(&cluster, &j, &strategy::cntk());
+            assert!(
+                t_caffe <= t_cntk * 1.001,
+                "{} {}: caffe {t_caffe} vs cntk {t_cntk}",
+                cluster.name,
+                j.net.name
+            );
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Runtime integration tests: the real PJRT training path.
+//!
+//! These need `make artifacts` to have produced `artifacts/`; they skip
+//! (pass trivially) when the bundle is missing so `cargo test` stays
+//! green on a fresh checkout — CI runs `make test` which builds artifacts
+//! first.
+
+use dagsgd::coordinator::allreduce::ReduceAlgo;
+use dagsgd::coordinator::trainer::{TrainOpts, Trainer};
+use dagsgd::runtime::artifacts;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = artifacts::default_dir();
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn opts(workers: usize, steps: usize) -> TrainOpts {
+    TrainOpts {
+        workers,
+        steps,
+        bucket_bytes: 1 << 20,
+        algo: ReduceAlgo::Ring,
+        seed: 42,
+        prefetch_depth: 2,
+        log_every: 0,
+        checksum_every: 0,
+    }
+}
+
+#[test]
+fn two_worker_training_descends_and_stays_synced() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut t = Trainer::new(&dir, opts(2, 8)).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.losses.len(), 8);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    // Loss must descend on the learnable synthetic corpus.
+    assert!(
+        report.last_loss() < report.first_loss(),
+        "loss {} -> {}",
+        report.first_loss(),
+        report.last_loss()
+    );
+    // S-SGD invariant: replicas identical after training.
+    t.verify_sync().unwrap();
+}
+
+#[test]
+fn trace_emission_matches_schema() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut t = Trainer::new(&dir, opts(2, 3)).unwrap();
+    let report = t.run().unwrap();
+    let trace = &report.trace;
+    assert_eq!(trace.iterations.len(), 3);
+    assert_eq!(trace.gpus, 2);
+    let rows = &trace.iterations[0];
+    assert_eq!(rows[0].name, "data");
+    assert_eq!(rows[1].name, "execute");
+    // Tensor rows carry gradient sizes; learnable bytes sum to the model.
+    let meta = artifacts::load_meta(&dir).unwrap();
+    let total: u64 = rows.iter().map(|r| r.size_bytes).sum();
+    assert_eq!(total as usize, meta.total_params * 4);
+    // Round-trips through the Table VI text format.
+    let parsed = dagsgd::trace::format::Trace::parse(&trace.to_text()).unwrap();
+    assert_eq!(parsed.iterations.len(), 3);
+}
+
+#[test]
+fn ring_and_flat_allreduce_agree_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Same seed, same workers — only the reduce algorithm differs; the
+    // training trajectory must match to fp tolerance.
+    let mut ring = Trainer::new(&dir, opts(2, 4)).unwrap();
+    let ring_losses = ring.run().unwrap().losses;
+    drop(ring);
+    let mut o = opts(2, 4);
+    o.algo = ReduceAlgo::Flat;
+    let mut flat = Trainer::new(&dir, o).unwrap();
+    let flat_losses = flat.run().unwrap().losses;
+    for (a, b) in ring_losses.iter().zip(&flat_losses) {
+        assert!((a - b).abs() < 1e-3, "ring {a} vs flat {b}");
+    }
+}
+
+#[test]
+fn single_worker_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut t = Trainer::new(&dir, opts(1, 3)).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.workers, 1);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = || {
+        let mut t = Trainer::new(&dir, opts(2, 3)).unwrap();
+        t.run().unwrap().losses
+    };
+    let a = run();
+    let b = run();
+    // Same data stream + same init ⇒ identical losses (XLA CPU is
+    // deterministic; ring reduction order is fixed).
+    assert_eq!(a, b);
+}
+
+#[test]
+fn bucket_size_does_not_change_semantics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut small = opts(2, 3);
+    small.bucket_bytes = 64 << 10; // many buckets
+    let mut big = opts(2, 3);
+    big.bucket_bytes = 64 << 20; // one bucket
+    let la = Trainer::new(&dir, small).unwrap().run().unwrap().losses;
+    let lb = Trainer::new(&dir, big).unwrap().run().unwrap().losses;
+    for (a, b) in la.iter().zip(&lb) {
+        assert!((a - b).abs() < 1e-3, "bucketing changed training: {a} vs {b}");
+    }
+}
+
+#[test]
+fn artifact_validation_rejects_garbage() {
+    // Meta loader must fail cleanly on a malformed bundle.
+    let dir = std::env::temp_dir().join("dagsgd_bad_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("meta.json"), "{not json").unwrap();
+    assert!(artifacts::load_meta(&dir).is_err());
+    std::fs::write(dir.join("meta.json"), r#"{"config": {}}"#).unwrap();
+    assert!(artifacts::load_meta(&dir).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
