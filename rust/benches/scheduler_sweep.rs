@@ -1,0 +1,92 @@
+//! Bench: scheduler-policy sweep over the comm-bound headline job
+//! (ResNet-50, 4x4 GPUs, 10 GbE, layer-wise updates).
+//!
+//! Measures (a) engine throughput under each policy — pluggability must
+//! not cost the hot path — and (b) the model-level outcome (makespan /
+//! steady-state iteration) per policy. Writes both to
+//! `BENCH_scheduler.json` at the repository root (override with
+//! `BENCH_SCHEDULER_OUT`) so later PRs have a perf trajectory.
+//!
+//!     cargo bench --bench scheduler_sweep
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::cluster::presets;
+use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::sim::executor::{simulate_with, steady_state_from};
+use dagsgd::sim::scheduler::SchedulerKind;
+use dagsgd::util::json::Json;
+use std::path::PathBuf;
+
+fn main() {
+    let mut bench = Bench::new("scheduler_sweep").with_iters(2, 7);
+
+    let cluster = presets::k80_cluster();
+    let net = zoo::resnet50();
+    let job = JobSpec {
+        batch_per_gpu: net.default_batch,
+        net,
+        nodes: 4,
+        gpus_per_node: 4,
+        iterations: 10,
+    };
+    let mut fw = strategy::caffe_mpi();
+    fw.layerwise_update = true;
+    let (dag, res) = build_ssgd_dag(&cluster, &job, &fw);
+    let ntasks = dag.len() as f64;
+    println!(
+        "resnet50 4x4 x{}it layerwise DAG: {} tasks, {} edges",
+        job.iterations,
+        dag.len(),
+        dag.edge_count()
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for kind in SchedulerKind::all() {
+        let mut sched = kind.build(&job.net);
+        let label = format!("sim_{} (tasks/s)", kind.name());
+        let sim = bench.case(&label, ntasks, || {
+            simulate_with(&dag, &res.pool, sched.as_mut())
+        });
+        let steady = steady_state_from(&sim, &dag, job.iterations, 2);
+        let mean = bench.mean_of(&label).unwrap();
+        rows.push(Json::obj(vec![
+            ("scheduler", Json::str(kind.name())),
+            ("mean_wall_s", Json::num(mean)),
+            ("tasks_per_s", Json::num(ntasks / mean)),
+            ("makespan_s", Json::num(sim.makespan)),
+            ("steady_iter_s", Json::num(steady)),
+            ("events", Json::num(sim.events as f64)),
+        ]));
+    }
+
+    bench.report();
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("scheduler_sweep")),
+        ("generated", Json::num(1.0)),
+        (
+            "job",
+            Json::obj(vec![
+                ("cluster", Json::str(cluster.name.clone())),
+                ("net", Json::str(job.net.name.clone())),
+                ("nodes", Json::num(job.nodes as f64)),
+                ("gpus_per_node", Json::num(job.gpus_per_node as f64)),
+                ("iterations", Json::num(job.iterations as f64)),
+                ("layerwise_update", Json::num(1.0)),
+            ]),
+        ),
+        ("tasks", Json::num(ntasks)),
+        ("cases", Json::arr(rows)),
+    ]);
+
+    let out = std::env::var("BENCH_SCHEDULER_OUT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("manifest dir has a parent")
+            .join("BENCH_scheduler.json")
+    });
+    std::fs::write(&out, report.to_string()).expect("write BENCH_scheduler.json");
+    println!("\nwrote {}", out.display());
+}

@@ -1,0 +1,83 @@
+//! Collective-channel launch planning.
+//!
+//! The simulator models the gradient-exchange path as one serialized
+//! `Collective` resource (a NCCL-stream-like channel). Historically the
+//! launch *order* on that channel was whatever order the DAG builder
+//! inserted aggregation tasks — this module makes ordering a first-class
+//! input instead: it derives the per-layer gradient stream of a network
+//! and maps it onto fusion buckets, which the scheduling policies in
+//! [`crate::sim::scheduler`] consume to reorder or gang-launch
+//! collectives on the channel.
+
+use crate::analytic::fusion::bucketing_by_cap;
+use crate::models::layer::NetSpec;
+
+/// Gradient message bytes per layer (0 for parameterless layers) — the
+/// stream of collectives one iteration pushes through the channel.
+pub fn layer_comm_bytes(net: &NetSpec) -> Vec<f64> {
+    net.layers.iter().map(|l| l.param_bytes() as f64).collect()
+}
+
+/// Map each layer index to its fusion-bucket index under a size cap.
+/// Buckets are numbered in backward (gradient-arrival) order, matching
+/// [`crate::analytic::fusion::bucketing_by_cap`]; parameterless layers
+/// map to `None`.
+pub fn fusion_bucket_of(net: &NetSpec, cap_bytes: f64) -> Vec<Option<usize>> {
+    let bytes = layer_comm_bytes(net);
+    let buckets = bucketing_by_cap(&bytes, cap_bytes);
+    let mut of = vec![None; bytes.len()];
+    for (bi, bucket) in buckets.iter().enumerate() {
+        for &l in bucket {
+            of[l] = Some(bi);
+        }
+    }
+    of
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn bytes_match_layer_params() {
+        let net = zoo::resnet50();
+        let bytes = layer_comm_bytes(&net);
+        assert_eq!(bytes.len(), net.layers.len());
+        for (b, l) in bytes.iter().zip(&net.layers) {
+            assert_eq!(*b, l.param_bytes() as f64);
+        }
+    }
+
+    #[test]
+    fn buckets_cover_exactly_the_learnable_layers() {
+        let net = zoo::resnet50();
+        let of = fusion_bucket_of(&net, 8.0 * 1024.0 * 1024.0);
+        for (l, bucket) in of.iter().enumerate() {
+            assert_eq!(
+                bucket.is_some(),
+                net.layers[l].params > 0,
+                "layer {l} bucket mapping"
+            );
+        }
+        // Bucket indices increase in backward order: a later (higher)
+        // layer never has a larger bucket index than an earlier one.
+        let mut last = usize::MAX;
+        let mut seen = 0usize;
+        for l in (0..of.len()).rev() {
+            if let Some(b) = of[l] {
+                assert!(last == usize::MAX || b >= last, "layer {l}: {b} < {last}");
+                last = b;
+                seen += 1;
+            }
+        }
+        assert!(seen > 0);
+    }
+
+    #[test]
+    fn giant_cap_yields_single_bucket() {
+        let net = zoo::alexnet();
+        let of = fusion_bucket_of(&net, 1e12);
+        assert!(of.iter().flatten().all(|&b| b == 0));
+    }
+}

@@ -22,7 +22,8 @@ use super::metrics::{PhaseTotals, Timer};
 use super::worker::{self, Cmd, Resp, WorkerHandle};
 use crate::runtime::artifacts::{self, Meta};
 use crate::trace::format::{LayerRecord, Trace};
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
+use crate::{anyhow, ensure};
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
@@ -101,7 +102,7 @@ pub struct Trainer {
 impl Trainer {
     /// Spawn workers (each compiles the artifact) and loaders.
     pub fn new(artifacts_dir: &Path, opts: TrainOpts) -> Result<Trainer> {
-        anyhow::ensure!(opts.workers >= 1, "need at least one worker");
+        ensure!(opts.workers >= 1, "need at least one worker");
         let meta = artifacts::load_meta(artifacts_dir)?;
         let (resp_tx, resp_rx) = channel::<Resp>();
         let mut workers = Vec::with_capacity(opts.workers);
@@ -308,7 +309,7 @@ impl Trainer {
         }
         let (_, s0, a0) = sums[0];
         for &(rank, s, a) in &sums[1..] {
-            anyhow::ensure!(
+            ensure!(
                 (s - s0).abs() < 1e-6 * a0.max(1.0) && (a - a0).abs() < 1e-6 * a0.max(1.0),
                 "replica divergence: rank {rank} checksum ({s}, {a}) vs rank 0 ({s0}, {a0})"
             );

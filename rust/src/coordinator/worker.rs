@@ -9,7 +9,8 @@ use crate::coordinator::dataloader::Batch;
 use crate::coordinator::metrics;
 use crate::runtime::artifacts::{self, Meta};
 use crate::runtime::pjrt::{self, Device};
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::util::error::{Context, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -191,7 +192,7 @@ impl WorkerState {
     /// Execute the train step: params + batch → (loss, per-tensor grads).
     fn step(&mut self, batch: &Batch) -> Result<(f32, Vec<Vec<f32>>, f64)> {
         let cfg = &self.meta.config;
-        anyhow::ensure!(
+        ensure!(
             batch.batch == cfg.batch && batch.seq == cfg.seq,
             "batch shape {}x{} != artifact {}x{}",
             batch.batch,
@@ -208,7 +209,7 @@ impl WorkerState {
         inputs.push(pjrt::literal_i32(&batch.targets, &[batch.batch, batch.seq])?);
 
         let outputs = self.train_step.run(&inputs)?;
-        anyhow::ensure!(
+        ensure!(
             outputs.len() == 1 + self.params.len(),
             "train_step returned {} outputs, expected {}",
             outputs.len(),
@@ -218,7 +219,7 @@ impl WorkerState {
         let mut grads = Vec::with_capacity(self.params.len());
         for (out, info) in outputs[1..].iter().zip(&self.meta.params) {
             let g = pjrt::to_vec_f32(out)?;
-            anyhow::ensure!(g.len() == info.numel, "grad {} size mismatch", info.name);
+            ensure!(g.len() == info.numel, "grad {} size mismatch", info.name);
             grads.push(g);
         }
         Ok((loss, grads, timer.elapsed()))

@@ -158,9 +158,20 @@ pub fn build_with(
     let ranks = res.ranks();
     let layers = gpu_layers(&job.net);
     let learnable = job.net.learnable_indices();
+    // Layer-wise optimizer steps (see `Strategy::layerwise_update`): one
+    // update task per learnable layer, durations split by parameter
+    // count, and the *next* iteration's forward pass depends layer-by-
+    // layer instead of on one fused update.
+    let total_params: f64 = learnable
+        .iter()
+        .map(|&l| job.net.layers[l].params as f64)
+        .sum();
+    let layerwise = strategy.layerwise_update && total_params > 0.0;
 
-    // Per-rank state carried across iterations.
-    let mut prev_update: Vec<Option<TaskId>> = vec![None; ranks];
+    // Per-rank state carried across iterations: every update task of the
+    // previous iteration (one fused task, or one per learnable layer),
+    // plus, in layer-wise mode, the layer each update belongs to.
+    let mut prev_update: Vec<Vec<(Option<usize>, TaskId)>> = vec![Vec::new(); ranks];
     let mut prev_io: Vec<Option<TaskId>> = vec![None; ranks];
 
     for it in 0..job.iterations {
@@ -185,13 +196,15 @@ pub fn build_with(
             });
             // Prefetch: next read only waits for the previous read
             // (bounded buffer of depth 1); otherwise it waits for the
-            // previous iteration's update.
-            if let Some(p) = if strategy.prefetch_io {
-                prev_io[r]
+            // previous iteration's update(s).
+            if strategy.prefetch_io {
+                if let Some(p) = prev_io[r] {
+                    dag.edge(p, io);
+                }
             } else {
-                prev_update[r]
-            } {
-                dag.edge(p, io);
+                for &(_, u) in &prev_update[r] {
+                    dag.edge(u, io);
+                }
             }
             prev_io[r] = Some(io);
 
@@ -222,9 +235,9 @@ pub fn build_with(
             });
             dag.edge(staged, h2d);
             // Without pre-staging, the copy additionally waits for the
-            // previous update to free the single GPU input buffer.
+            // previous update(s) to free the single GPU input buffer.
             if !strategy.prestage_h2d {
-                if let Some(u) = prev_update[r] {
+                for &(_, u) in &prev_update[r] {
                     dag.edge(u, h2d);
                 }
             }
@@ -243,9 +256,18 @@ pub fn build_with(
                     layer: Some(l),
                 });
                 dag.edge(prev, f);
-                if first_fwd {
+                if layerwise {
+                    // Wait only for this layer's own parameter update —
+                    // earlier layers' forward can start while later
+                    // layers are still aggregating.
+                    if let Some(&(_, u)) =
+                        prev_update[r].iter().find(|(li, _)| *li == Some(l))
+                    {
+                        dag.edge(u, f);
+                    }
+                } else if first_fwd {
                     // New iteration's compute also waits for the update.
-                    if let Some(u) = prev_update[r] {
+                    if let Some(&(_, u)) = prev_update[r].first() {
                         dag.edge(u, f);
                     }
                     first_fwd = false;
@@ -275,6 +297,8 @@ pub fn build_with(
 
         // --- gradient aggregation ---
         let mut aggs = Vec::new();
+        // Layer → aggregate task, for layer-wise update wiring.
+        let mut agg_of: Vec<(usize, TaskId)> = Vec::new();
         if ranks > 1 {
             // Aggregate in backward order (layer L → 1), matching the
             // arrival order of gradients on the collective stream.
@@ -303,40 +327,85 @@ pub fn build_with(
                     }
                 }
                 aggs.push(a);
+                agg_of.push((l, a));
             }
         }
 
-        // --- model update, one per rank ---
-        for r in 0..ranks {
-            let u = dag.add(Task {
-                name: format!("upd.i{it}.g{r}"),
-                phase: Phase::Update,
-                resource: res.gpu[r],
-                duration: dur.update,
-                iter: it,
-                gpu: Some(r),
-                layer: None,
-            });
-            if aggs.is_empty() {
-                dag.edge(last_bwd[r], u);
-            } else {
-                dag.edges_from_all(&aggs, u);
+        // --- model update ---
+        if layerwise {
+            // One optimizer step per (rank, learnable layer), sized by
+            // the layer's share of the parameters; ready as soon as that
+            // layer's aggregated gradient (or local gradient) exists.
+            for r in 0..ranks {
+                let mut ups: Vec<(Option<usize>, TaskId)> = Vec::new();
+                for &l in &learnable {
+                    let frac = job.net.layers[l].params as f64 / total_params;
+                    let u = dag.add(Task {
+                        name: format!("upd.{}.i{it}.g{r}", job.net.layers[l].name),
+                        phase: Phase::Update,
+                        resource: res.gpu[r],
+                        duration: dur.update * frac,
+                        iter: it,
+                        gpu: Some(r),
+                        layer: Some(l),
+                    });
+                    if let Some(&(_, a)) = agg_of.iter().find(|(li, _)| *li == l) {
+                        dag.edge(a, u);
+                    } else {
+                        // Single-rank (or zero-cost comm): update from
+                        // the local gradient directly.
+                        let (_, b) = *bwd_of[r].iter().find(|(li, _)| *li == l).unwrap();
+                        dag.edge(b, u);
+                    }
+                    ups.push((Some(l), u));
+                }
+                prev_update[r] = ups;
             }
-            prev_update[r] = Some(u);
+        } else {
+            // One fused update per rank, gated on every aggregate.
+            for r in 0..ranks {
+                let u = dag.add(Task {
+                    name: format!("upd.i{it}.g{r}"),
+                    phase: Phase::Update,
+                    resource: res.gpu[r],
+                    duration: dur.update,
+                    iter: it,
+                    gpu: Some(r),
+                    layer: None,
+                });
+                if aggs.is_empty() {
+                    dag.edge(last_bwd[r], u);
+                } else {
+                    dag.edges_from_all(&aggs, u);
+                }
+                prev_update[r] = vec![(None, u)];
+            }
         }
     }
     dag
 }
 
-/// Simulate a job and return the steady-state iteration time (seconds).
+/// Simulate a job and return the steady-state iteration time (seconds),
+/// under the strategy's default scheduling policy.
 pub fn iteration_time(cluster: &ClusterSpec, job: &JobSpec, strategy: &Strategy) -> f64 {
+    let mut sched = strategy.default_scheduler.build(&job.net);
+    iteration_time_with(cluster, job, strategy, sched.as_mut())
+}
+
+/// [`iteration_time`] under an explicit scheduling policy.
+pub fn iteration_time_with(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    strategy: &Strategy,
+    sched: &mut dyn crate::sim::scheduler::Scheduler,
+) -> f64 {
     let mut job = job.clone();
     // Enough iterations for the prefetch pipeline to fill + measure.
     if job.iterations < 6 {
         job.iterations = 6;
     }
     let (dag, res) = build_ssgd_dag(cluster, &job, strategy);
-    crate::sim::executor::steady_state_iter_time(&dag, &res.pool, job.iterations, 2)
+    crate::sim::executor::steady_state_iter_time_with(&dag, &res.pool, job.iterations, 2, sched)
 }
 
 /// System throughput in samples/second (the paper's Fig. 2/3 metric).
@@ -415,6 +484,31 @@ mod tests {
             .tasks
             .iter()
             .all(|t| t.phase != crate::dag::node::Phase::Aggregate));
+    }
+
+    #[test]
+    fn layerwise_update_builds_per_layer_update_tasks() {
+        let cluster = presets::k80_cluster();
+        let mut fw = fw::caffe_mpi();
+        fw.layerwise_update = true;
+        let j = job(zoo::resnet50(), 2, 2);
+        let (dag, res) = build_ssgd_dag(&cluster, &j, &fw);
+        assert!(dag.is_acyclic());
+        let upds_iter0 = dag
+            .tasks
+            .iter()
+            .filter(|t| t.phase == crate::dag::node::Phase::Update && t.iter == 0)
+            .count();
+        assert_eq!(upds_iter0, 4 * j.net.learnable_indices().len());
+        // Every layer-wise update knows its layer (scheduler metadata).
+        assert!(dag
+            .tasks
+            .iter()
+            .filter(|t| t.phase == crate::dag::node::Phase::Update)
+            .all(|t| t.layer.is_some()));
+        // And the DAG still executes to completion.
+        let sim = crate::sim::executor::simulate(&dag, &res.pool);
+        assert!(sim.makespan > 0.0 && sim.makespan.is_finite());
     }
 
     #[test]

@@ -103,6 +103,25 @@ impl Dag {
         Some((start, finish))
     }
 
+    /// HEFT-style *upward rank* per task: the task's own duration plus
+    /// the longest duration-weighted path from it to any sink. This is
+    /// the scheduling metadata behind
+    /// [`crate::sim::scheduler::CriticalPathScheduler`] — a task's upward
+    /// rank is how much work the makespan still owes once it starts.
+    /// `None` if the graph has a cycle.
+    pub fn upward_ranks(&self) -> Option<Vec<f64>> {
+        let order = self.topo_order()?;
+        let mut rank = vec![0.0f64; self.len()];
+        for &t in order.iter().rev() {
+            let downstream = self.succs[t]
+                .iter()
+                .map(|&s| rank[s])
+                .fold(0.0f64, f64::max);
+            rank[t] = self.tasks[t].duration + downstream;
+        }
+        Some(rank)
+    }
+
     /// Critical-path length (makespan lower bound with infinite resources).
     pub fn critical_path_length(&self) -> Option<f64> {
         let (_, finish) = self.earliest_times()?;
@@ -238,6 +257,19 @@ mod tests {
     fn self_edge_panics() {
         let mut g = diamond();
         g.edge(1, 1);
+    }
+
+    #[test]
+    fn upward_ranks_of_diamond() {
+        let g = diamond();
+        let ur = g.upward_ranks().unwrap();
+        // a: 1 + max(b-path 3, c-path 4) = 5; b: 2+1; c: 3+1; d: 1.
+        assert_eq!(ur, vec![5.0, 3.0, 4.0, 1.0]);
+        // Source's upward rank equals the critical-path length.
+        assert_eq!(ur[0], g.critical_path_length().unwrap());
+        let mut cyclic = diamond();
+        cyclic.edge(3, 0);
+        assert!(cyclic.upward_ranks().is_none());
     }
 
     #[test]

@@ -5,3 +5,4 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod info;
+pub mod sched;

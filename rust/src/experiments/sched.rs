@@ -1,0 +1,163 @@
+//! Scheduler-comparison experiment: one S-SGD job, every launch-ordering
+//! policy, one table of makespans.
+//!
+//! The DAG model makes collective *ordering* a measurable quantity: on a
+//! comm-bound configuration (the paper's Cluster 1 — 10 GbE — running
+//! multi-node ResNet-50) the serialized gradient channel backs up during
+//! backprop, and which all-reduce the channel serves first decides when
+//! the next iteration's forward pass can start. The job runs with
+//! layer-wise updates (wait-free backprop through the optimizer step, cf.
+//! arXiv:1802.06949) so that early-layer collectives are actually on the
+//! critical path; `FifoScheduler` then reproduces insertion-order
+//! frameworks, while `PriorityScheduler` overlaps the tail of the
+//! gradient exchange with the next forward pass.
+
+use crate::cluster::topology::ClusterSpec;
+use crate::dag::builder::{build_ssgd_dag, JobSpec};
+use crate::frameworks::strategy::Strategy;
+use crate::sim::executor::{simulate_with, steady_state_from};
+use crate::sim::scheduler::SchedulerKind;
+use crate::util::table::{f, Table};
+use crate::util::units::fmt_dur;
+
+/// One (policy, job) measurement.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub scheduler: &'static str,
+    pub makespan: f64,
+    pub steady_iter: f64,
+    /// Steady-state speedup over the FIFO baseline (>1 = faster).
+    pub speedup_vs_fifo: f64,
+    pub events: u64,
+}
+
+/// Measured warmup iterations before steady-state timing.
+const WARMUP: usize = 2;
+
+/// Simulate `job` under each policy in `kinds` (FIFO is always measured
+/// first as the baseline, whether or not it is requested).
+pub fn run(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    strategy: &Strategy,
+    kinds: &[SchedulerKind],
+) -> Vec<Point> {
+    let mut job = job.clone();
+    if job.iterations < WARMUP + 4 {
+        job.iterations = WARMUP + 4;
+    }
+    let (dag, res) = build_ssgd_dag(cluster, &job, strategy);
+
+    let measure = |kind: SchedulerKind| -> Point {
+        let mut sched = kind.build(&job.net);
+        let sim = simulate_with(&dag, &res.pool, sched.as_mut());
+        Point {
+            scheduler: kind.name(),
+            makespan: sim.makespan,
+            steady_iter: steady_state_from(&sim, &dag, job.iterations, WARMUP),
+            speedup_vs_fifo: 1.0,
+            events: sim.events,
+        }
+    };
+
+    let baseline = measure(SchedulerKind::Fifo);
+    let base_iter = baseline.steady_iter;
+    let mut points = vec![baseline];
+    for &kind in kinds {
+        if kind == SchedulerKind::Fifo {
+            continue;
+        }
+        let mut p = measure(kind);
+        p.speedup_vs_fifo = base_iter / p.steady_iter;
+        points.push(p);
+    }
+    points
+}
+
+/// Render the comparison as the experiment's table.
+pub fn render(job: &JobSpec, cluster: &ClusterSpec, fw: &Strategy, points: &[Point]) -> String {
+    let mut out = format!(
+        "scheduler comparison: {} on {} with {} ({} nodes x {} GPUs, batch {}/GPU, layerwise-update={})\n",
+        job.net.name,
+        cluster.name,
+        fw.name,
+        job.nodes,
+        job.gpus_per_node,
+        job.batch_per_gpu,
+        fw.layerwise_update,
+    );
+    let mut t = Table::new(&["scheduler", "makespan", "steady iter", "vs fifo", "events"]);
+    for p in points {
+        t.row(&[
+            p.scheduler.to_string(),
+            fmt_dur(p.makespan),
+            fmt_dur(p.steady_iter),
+            format!("{}x", f(p.speedup_vs_fifo, 3)),
+            p.events.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// The headline configuration: multi-node ResNet-50 on the 10 GbE
+/// cluster with wait-free layer-wise updates.
+pub fn default_job(cluster: &ClusterSpec) -> JobSpec {
+    let net = crate::models::zoo::resnet50();
+    JobSpec {
+        batch_per_gpu: net.default_batch,
+        net,
+        nodes: cluster.nodes.min(4),
+        gpus_per_node: cluster.gpus_per_node.min(4),
+        iterations: 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::frameworks::strategy;
+
+    fn setup() -> (ClusterSpec, JobSpec, Strategy) {
+        let cluster = presets::k80_cluster();
+        let job = default_job(&cluster);
+        let mut fw = strategy::caffe_mpi();
+        fw.layerwise_update = true;
+        (cluster, job, fw)
+    }
+
+    /// The acceptance scenario: priority scheduling strictly beats FIFO
+    /// on multi-node ResNet-50 over 10 GbE.
+    #[test]
+    fn priority_beats_fifo_on_resnet50_10gbe() {
+        let (cluster, job, fw) = setup();
+        let pts = run(&cluster, &job, &fw, &SchedulerKind::all());
+        let by = |name: &str| pts.iter().find(|p| p.scheduler == name).unwrap().steady_iter;
+        let (fifo, prio) = (by("fifo"), by("priority"));
+        assert!(
+            prio < fifo * 0.999,
+            "priority {prio:.4}s should beat fifo {fifo:.4}s"
+        );
+    }
+
+    #[test]
+    fn fifo_baseline_always_first_with_unit_speedup() {
+        let (cluster, job, fw) = setup();
+        let pts = run(&cluster, &job, &fw, &[SchedulerKind::Priority]);
+        assert_eq!(pts[0].scheduler, "fifo");
+        assert_eq!(pts[0].speedup_vs_fifo, 1.0);
+        assert_eq!(pts.len(), 2);
+    }
+
+    #[test]
+    fn render_lists_every_policy() {
+        let (cluster, job, fw) = setup();
+        let pts = run(&cluster, &job, &fw, &SchedulerKind::all());
+        assert_eq!(pts.len(), 4);
+        let s = render(&job, &cluster, &fw, &pts);
+        for kind in SchedulerKind::all() {
+            assert!(s.contains(kind.name()), "missing {}", kind.name());
+        }
+    }
+}

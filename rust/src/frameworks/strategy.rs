@@ -19,6 +19,7 @@
 //! (§V.C.1).
 
 use crate::comm::allreduce::{allreduce_time, Algorithm, CommTopo};
+use crate::sim::scheduler::SchedulerKind;
 
 /// Gradient-exchange backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,6 +50,18 @@ pub struct Strategy {
     /// Input pipeline decodes JPEG on CPU (vs pre-converted binary).
     pub decode_on_cpu: bool,
     pub backend: Backend,
+    /// Layer-wise optimizer step: update layer `l` as soon as its
+    /// aggregated gradient arrives, so the next iteration's forward pass
+    /// can start layer-by-layer instead of waiting for the whole model
+    /// update. Off for all four paper frameworks (they apply one fused
+    /// update); the scheduler-comparison experiment enables it to study
+    /// priority-ordered collectives (arXiv:1802.06949).
+    pub layerwise_update: bool,
+    /// Launch-ordering policy on the serialized collective channel. All
+    /// four paper frameworks issue collectives in insertion order
+    /// ([`SchedulerKind::Fifo`]); `--scheduler` and the `sched`
+    /// experiment override it.
+    pub default_scheduler: SchedulerKind,
 }
 
 impl Strategy {
@@ -80,6 +93,8 @@ pub fn caffe_mpi() -> Strategy {
         wfbp: true,
         decode_on_cpu: false,
         backend: Backend::Nccl(Algorithm::Hierarchical),
+        layerwise_update: false,
+        default_scheduler: SchedulerKind::Fifo,
     }
 }
 
@@ -92,6 +107,8 @@ pub fn cntk() -> Strategy {
         wfbp: false,
         decode_on_cpu: true,
         backend: Backend::Nccl(Algorithm::Hierarchical),
+        layerwise_update: false,
+        default_scheduler: SchedulerKind::Fifo,
     }
 }
 
@@ -104,6 +121,8 @@ pub fn mxnet() -> Strategy {
         wfbp: true,
         decode_on_cpu: false,
         backend: Backend::Nccl(Algorithm::Ring),
+        layerwise_update: false,
+        default_scheduler: SchedulerKind::Fifo,
     }
 }
 
@@ -116,6 +135,8 @@ pub fn tensorflow() -> Strategy {
         wfbp: true,
         decode_on_cpu: true,
         backend: Backend::Grpc,
+        layerwise_update: false,
+        default_scheduler: SchedulerKind::Fifo,
     }
 }
 
@@ -160,6 +181,12 @@ mod tests {
         // CNTK + TF decode JPEG on CPU.
         assert!(cntk().decode_on_cpu && tensorflow().decode_on_cpu);
         assert!(!caffe_mpi().decode_on_cpu && !mxnet().decode_on_cpu);
+        // All four issue collectives in insertion order with one fused
+        // model update — alternative policies are opt-in overrides.
+        for s in all() {
+            assert_eq!(s.default_scheduler, SchedulerKind::Fifo, "{}", s.name);
+            assert!(!s.layerwise_update, "{}", s.name);
+        }
     }
 
     #[test]

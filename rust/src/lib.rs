@@ -24,6 +24,7 @@
 
 pub mod util {
     pub mod cli;
+    pub mod error;
     pub mod json;
     pub mod quickcheck;
     pub mod rng;
@@ -41,10 +42,12 @@ pub mod dag {
 }
 
 pub mod sim {
+    pub mod context;
     pub mod engine;
     pub mod executor;
     pub mod failures;
     pub mod resources;
+    pub mod scheduler;
     pub mod timeline;
 }
 
@@ -57,6 +60,7 @@ pub mod comm {
     pub mod alpha_beta;
     pub mod allreduce;
     pub mod message_sim;
+    pub mod schedule;
 }
 
 pub mod models {
@@ -91,6 +95,7 @@ pub mod bench {
 pub mod runtime {
     pub mod artifacts;
     pub mod pjrt;
+    pub mod xla_stub;
 }
 
 pub mod coordinator {

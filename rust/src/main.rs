@@ -6,6 +6,7 @@
 //!   predict   [flags]            analytic Eq. 1–6 prediction for a job
 //!   sweep     [flags]            Fig. 2/3 scaling sweeps
 //!   fig4      [flags]            DAG prediction vs simulation accuracy
+//!   sched     [flags]            scheduler-policy comparison on one job
 //!   traces    [flags]            emit the §VI layer-wise trace dataset
 //!   train     [flags]            real S-SGD training via PJRT artifacts
 //!
@@ -16,10 +17,11 @@ use dagsgd::cluster::presets;
 use dagsgd::coordinator::allreduce::ReduceAlgo;
 use dagsgd::coordinator::trainer::{TrainOpts, Trainer};
 use dagsgd::dag::builder::{self, JobSpec};
-use dagsgd::experiments::{fig2, fig3, fig4, info};
+use dagsgd::experiments::{fig2, fig3, fig4, info, sched};
 use dagsgd::frameworks::strategy;
 use dagsgd::models::zoo;
 use dagsgd::runtime::artifacts;
+use dagsgd::sim::scheduler::SchedulerKind;
 use dagsgd::sim::{executor, timeline};
 use dagsgd::trace::dataset;
 use dagsgd::util::cli::Args;
@@ -36,12 +38,13 @@ fn main() {
         "predict" => cmd_predict(&args),
         "sweep" => cmd_sweep(&args),
         "fig4" => cmd_fig4(&args),
+        "sched" | "schedulers" => cmd_sched(&args),
         "traces" => cmd_traces(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),
         other => {
             eprintln!(
-                "usage: dagsgd <info|simulate|predict|sweep|fig4|traces|train|analyze> [--flags]\n\
+                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|traces|train|analyze> [--flags]\n\
                  see README.md for per-command flags"
             );
             if other == "help" {
@@ -90,6 +93,53 @@ fn cmd_info() -> i32 {
     0
 }
 
+fn parse_scheduler(name: &str) -> SchedulerKind {
+    SchedulerKind::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown scheduler '{name}' (try fifo, priority, critical-path, fusion)");
+        std::process::exit(2);
+    })
+}
+
+/// Parse `--scheduler fifo|priority|critical-path|fusion` (single value).
+fn scheduler_arg(args: &Args) -> SchedulerKind {
+    parse_scheduler(&args.str_or("scheduler", "fifo"))
+}
+
+/// Parse `--scheduler` as a comma list; default: every policy.
+fn scheduler_list_arg(args: &Args) -> Vec<SchedulerKind> {
+    args.str_list_or("scheduler", &["fifo", "priority", "critical-path", "fusion"])
+        .iter()
+        .map(|n| parse_scheduler(n))
+        .collect()
+}
+
+/// `dagsgd sched` — the scheduler-policy comparison experiment: one
+/// comm-bound S-SGD job, a makespan/steady-iteration table per policy.
+/// Defaults to multi-node ResNet-50 with layer-wise (wait-free) updates;
+/// `--layerwise false` reproduces the fused-update DAG where ordering is
+/// barrier-limited.
+fn cmd_sched(args: &Args) -> i32 {
+    let cluster = cluster_arg(args);
+    let mut job = sched::default_job(&cluster);
+    if let Some(net_name) = args.get("net") {
+        job.net = zoo::by_name(net_name).unwrap_or_else(|| {
+            eprintln!("unknown net '{net_name}' (try alexnet, googlenet, resnet50)");
+            std::process::exit(2);
+        });
+        job.batch_per_gpu = job.net.default_batch;
+    }
+    job.nodes = args.usize_or("nodes", job.nodes);
+    job.gpus_per_node = args.usize_or("gpus", job.gpus_per_node);
+    job.batch_per_gpu = args.usize_or("batch", job.batch_per_gpu);
+    job.iterations = args.usize_or("iters", job.iterations);
+    let mut fw = fw_arg(args);
+    fw.layerwise_update = args.bool_or("layerwise", true);
+    let kinds = scheduler_list_arg(args);
+    let pts = sched::run(&cluster, &job, &fw, &kinds);
+    print!("{}", sched::render(&job, &cluster, &fw, &pts));
+    0
+}
+
 /// Parse `--fault straggler:RANK:FACTOR | congest:FACTOR | jitter:SIGMA`
 /// (repeatable via commas).
 fn faults_arg(args: &Args) -> Vec<dagsgd::sim::failures::Fault> {
@@ -125,12 +175,14 @@ fn cmd_simulate(args: &Args) -> i32 {
     let cluster = cluster_arg(args);
     let job = job_arg(args);
     let fw = fw_arg(args);
+    let kind = scheduler_arg(args);
+    let mut sched = kind.build(&job.net);
     let (mut dag, res) = builder::build_ssgd_dag(&cluster, &job, &fw);
     let faults = faults_arg(args);
     if !faults.is_empty() {
-        let healthy = executor::simulate(&dag, &res.pool).makespan;
+        let healthy = executor::simulate_with(&dag, &res.pool, sched.as_mut()).makespan;
         dagsgd::sim::failures::inject(&mut dag, &res.pool, &faults);
-        let faulty = executor::simulate(&dag, &res.pool).makespan;
+        let faulty = executor::simulate_with(&dag, &res.pool, sched.as_mut()).makespan;
         println!(
             "fault injection: makespan {} -> {} (+{:.1}%)",
             fmt_dur(healthy),
@@ -138,20 +190,21 @@ fn cmd_simulate(args: &Args) -> i32 {
             100.0 * (faulty - healthy) / healthy
         );
     }
-    let sim = executor::simulate(&dag, &res.pool);
+    let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
     // Steady state from the (possibly fault-injected) DAG itself.
     let iter_time = if faults.is_empty() {
-        builder::iteration_time(&cluster, &job, &fw)
+        builder::iteration_time_with(&cluster, &job, &fw, sched.as_mut())
     } else if job.iterations >= 3 {
-        executor::steady_state_iter_time(&dag, &res.pool, job.iterations, 1)
+        executor::steady_state_iter_time_with(&dag, &res.pool, job.iterations, 1, sched.as_mut())
     } else {
         sim.makespan / job.iterations.max(1) as f64
     };
     println!(
-        "cluster={} net={} fw={} gpus={} batch/gpu={}",
+        "cluster={} net={} fw={} scheduler={} gpus={} batch/gpu={}",
         cluster.name,
         job.net.name,
         fw.name,
+        kind.name(),
         job.ranks(),
         job.batch_per_gpu
     );
@@ -197,7 +250,8 @@ fn cmd_predict(args: &Args) -> i32 {
 
 fn cmd_sweep(args: &Args) -> i32 {
     let cluster = cluster_arg(args);
-    if args.str_or("mode", "single-node") == "multi-node" {
+    // `choice_or` rejects typos instead of silently falling back.
+    if args.choice_or("mode", &["single-node", "multi-node"], "single-node") == "multi-node" {
         let nodes = args.usize_list_or("nodes-list", &[1, 2, 4]);
         let pts = fig3::run(&cluster, &nodes);
         print!("{}", fig3::render(&pts));

@@ -2,7 +2,8 @@
 //! written by `python/compile/aot.py` (`make artifacts`).
 
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, ensure};
 use std::fs;
 use std::path::{Path, PathBuf};
 
@@ -113,20 +114,20 @@ pub fn load_meta(dir: &Path) -> Result<Meta> {
     // Validate the layout: contiguous, consistent.
     let mut expect_offset = 0usize;
     for p in &params {
-        anyhow::ensure!(
+        ensure!(
             p.offset == expect_offset,
             "param {} offset {} != expected {expect_offset}",
             p.name,
             p.offset
         );
-        anyhow::ensure!(
+        ensure!(
             p.shape.iter().product::<usize>() == p.numel,
             "param {} shape/numel mismatch",
             p.name
         );
         expect_offset += p.numel;
     }
-    anyhow::ensure!(expect_offset == total_params, "total_params mismatch");
+    ensure!(expect_offset == total_params, "total_params mismatch");
 
     Ok(Meta {
         dir: dir.to_path_buf(),
@@ -140,7 +141,7 @@ pub fn load_meta(dir: &Path) -> Result<Meta> {
 pub fn load_params(meta: &Meta) -> Result<Vec<Vec<f32>>> {
     let bytes = fs::read(meta.params_path())
         .with_context(|| format!("reading {}", meta.params_path().display()))?;
-    anyhow::ensure!(
+    ensure!(
         bytes.len() == meta.total_params * 4,
         "params.bin is {} bytes, expected {}",
         bytes.len(),

@@ -1,15 +1,20 @@
 //! PJRT runtime: load AOT-compiled HLO text, compile on the CPU client,
 //! execute with fp32/i32 host buffers.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1). HLO **text** is the
-//! interchange format — see `python/compile/aot.py` and
-//! /opt/xla-example/README.md for why serialized protos are rejected.
+//! Wraps the `xla` crate surface (xla_extension 0.5.1). In this
+//! dependency-free build the bindings resolve to
+//! [`crate::runtime::xla_stub`], which fails fast at `Device::cpu()`;
+//! swap the `use ... as xla` line below for the real crate to get a live
+//! PJRT backend. HLO **text** is the interchange format — see
+//! `python/compile/aot.py` for why serialized protos are rejected.
 //!
 //! The crate's handles wrap raw pointers and are `!Send`; each coordinator
 //! worker thread therefore owns its own [`Device`] (PJRT CPU clients are
 //! cheap on this backend and the paper's workers are share-nothing anyway).
 
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::runtime::xla_stub as xla;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// One PJRT CPU device (per worker thread).
@@ -60,7 +65,7 @@ impl Executable {
 /// Host-buffer ↔ literal helpers.
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
+    ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(xla::Literal::create_from_shape_and_untyped_data(
@@ -72,7 +77,7 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 
 pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
+    ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(xla::Literal::create_from_shape_and_untyped_data(

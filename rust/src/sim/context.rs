@@ -1,0 +1,85 @@
+//! Read-only simulation context handed to [`crate::sim::scheduler::Scheduler`]
+//! callbacks.
+//!
+//! A scheduler sees the world through this window: the task DAG (structure
+//! and per-task metadata), the virtual clock, and the momentary resource
+//! occupancy. It deliberately exposes *no* mutation — schedulers influence
+//! the simulation only through the values they return from
+//! `pick_next`, which keeps every policy replayable and keeps the engine
+//! the single owner of simulation state.
+
+use crate::dag::graph::Dag;
+use crate::dag::node::{ResourceId, TaskId};
+use crate::sim::resources::ResourcePool;
+
+/// Snapshot of the simulation visible to a scheduler callback.
+pub struct SimContext<'a> {
+    /// The DAG being executed (tasks, durations, precedence, metadata).
+    pub dag: &'a Dag,
+    /// Static resource descriptions (names, classes, capacities).
+    pub pool: &'a ResourcePool,
+    /// Current virtual time in seconds.
+    pub now: f64,
+    /// Number of tasks currently in service, per resource.
+    pub in_service: &'a [usize],
+    /// Start time per task (`NaN` until the task starts).
+    pub start: &'a [f64],
+    /// Finish time per task (`NaN` until the task finishes).
+    pub finish: &'a [f64],
+}
+
+impl<'a> SimContext<'a> {
+    /// Free service slots on `resource` right now.
+    pub fn free_capacity(&self, resource: ResourceId) -> usize {
+        self.pool.specs[resource]
+            .capacity
+            .saturating_sub(self.in_service[resource])
+    }
+
+    /// Whether `task` has finished service.
+    pub fn is_finished(&self, task: TaskId) -> bool {
+        !self.finish[task].is_nan()
+    }
+
+    /// Whether `task` has started service.
+    pub fn is_started(&self, task: TaskId) -> bool {
+        !self.start[task].is_nan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::node::{Phase, Task};
+    use crate::sim::resources::ResourceClass;
+
+    #[test]
+    fn capacity_and_progress_queries() {
+        let mut pool = ResourcePool::new();
+        let gpu = pool.add("gpu", ResourceClass::Gpu, 2);
+        let mut dag = Dag::new();
+        dag.add(Task {
+            name: "t".into(),
+            phase: Phase::Forward,
+            resource: gpu,
+            duration: 1.0,
+            iter: 0,
+            gpu: Some(0),
+            layer: None,
+        });
+        let in_service = vec![1usize];
+        let start = vec![0.0f64];
+        let finish = vec![f64::NAN];
+        let ctx = SimContext {
+            dag: &dag,
+            pool: &pool,
+            now: 0.5,
+            in_service: &in_service,
+            start: &start,
+            finish: &finish,
+        };
+        assert_eq!(ctx.free_capacity(gpu), 1);
+        assert!(ctx.is_started(0));
+        assert!(!ctx.is_finished(0));
+    }
+}

@@ -28,13 +28,14 @@ impl<E> PartialOrd for Entry<E> {
 }
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first.
-        // (An integer to_bits comparison was tried here and measured
-        // slightly slower — see EXPERIMENTS.md §Perf-iterations.)
+        // BinaryHeap is a max-heap; invert for earliest-first. Timestamps
+        // are asserted finite on push, so `total_cmp` agrees with the
+        // numeric order everywhere the heap can observe — a NaN slipping
+        // in can no longer silently corrupt the heap invariant the way
+        // `partial_cmp(..).unwrap_or(Equal)` did.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -78,8 +79,13 @@ impl<E> EventQueue<E> {
         self.processed
     }
 
-    /// Schedule `event` at absolute time `at` (must be ≥ now).
+    /// Schedule `event` at absolute time `at` (must be finite and ≥ now).
     pub fn schedule_at(&mut self, at: f64, event: E) {
+        debug_assert!(
+            at.is_finite(),
+            "event timestamps must be finite, got {at} (NaN/inf durations \
+             would corrupt the heap order)"
+        );
         debug_assert!(
             at >= self.now - 1e-12,
             "cannot schedule in the past: at={at} now={}",
@@ -169,6 +175,14 @@ mod tests {
         q.pop();
         q.schedule_in(2.5, "y");
         assert_eq!(q.pop().unwrap(), (12.5, "y"));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "finite")]
+    fn nan_timestamp_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, ());
     }
 
     #[test]

@@ -1,18 +1,27 @@
-//! DAG executor: discrete-event simulation of a task DAG on a resource pool.
+//! Discrete-event engine: executes a task DAG on a resource pool under a
+//! pluggable [`Scheduler`] policy.
 //!
-//! Semantics: a task becomes *ready* when all its predecessors finished; it
-//! then queues FIFO on its resource; the resource serves up to `capacity`
-//! tasks concurrently; service takes the task's precomputed `duration`.
-//! Ready-ties are broken by task id, making schedules deterministic.
+//! Semantics: a task becomes *ready* when all its predecessors finished;
+//! the engine reports it to the scheduler, and whenever a resource has
+//! free capacity the scheduler picks which ready task starts next; the
+//! resource serves up to `capacity` tasks concurrently; service takes the
+//! task's precomputed `duration`. The engine owns mechanism (readiness,
+//! capacity, the event queue); the scheduler owns policy (ordering) — see
+//! [`crate::sim::scheduler`] for the shipped policies.
+//!
+//! [`simulate`] runs the default [`FifoScheduler`], which reproduces the
+//! original monolithic executor exactly (ready-order FIFO, ties by task
+//! id; golden-tested in `tests/golden_scheduler.rs`).
 //!
 //! The output is a full timeline (start/finish per task) from which we
 //! derive iteration times, per-resource utilization and Gantt exports.
 
+use super::context::SimContext;
 use super::engine::EventQueue;
 use super::resources::ResourcePool;
+use super::scheduler::{FifoScheduler, Scheduler};
 use crate::dag::graph::Dag;
 use crate::dag::node::TaskId;
-use std::collections::VecDeque;
 
 /// Simulation result for one DAG run.
 #[derive(Clone, Debug)]
@@ -53,15 +62,22 @@ enum Ev {
     Done(TaskId),
 }
 
-/// Run the DAG to completion on the pool. Panics if the DAG has a cycle.
+/// Run the DAG to completion on the pool under FIFO scheduling (the
+/// paper frameworks' insertion-order behavior). Panics on cyclic DAGs.
 pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
+    simulate_with(dag, pool, &mut FifoScheduler::new())
+}
+
+/// Run the DAG to completion on the pool under `sched`'s policy. Panics
+/// if the DAG has a cycle or the scheduler deadlocks (holds ready tasks
+/// forever).
+pub fn simulate_with(dag: &Dag, pool: &ResourcePool, sched: &mut dyn Scheduler) -> SimResult {
     assert!(dag.is_acyclic(), "simulate() requires an acyclic graph");
     let n = dag.len();
     let mut indeg: Vec<usize> = dag.preds.iter().map(|p| p.len()).collect();
 
-    // Per-resource FIFO queue and in-service count.
+    // Per-resource occupancy and accounting.
     let nres = pool.len();
-    let mut queue: Vec<VecDeque<TaskId>> = vec![VecDeque::new(); nres];
     let mut in_service: Vec<usize> = vec![0; nres];
     let mut busy = vec![0.0f64; nres];
 
@@ -72,14 +88,36 @@ pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
     let cap: usize = pool.specs.iter().map(|s| s.capacity).sum();
     let mut ev: EventQueue<Ev> = EventQueue::with_capacity(cap.min(n));
 
-    // Helper: try to start queued tasks on resource r at time `now`.
-    // Written as a macro to borrow locals mutably without a closure fight.
+    // Callback helper: every scheduler call sees a fresh read-only
+    // snapshot; the engine mutates its state only between calls.
+    macro_rules! ctx {
+        ($now:expr) => {
+            SimContext {
+                dag,
+                pool,
+                now: $now,
+                in_service: &in_service,
+                start: &start,
+                finish: &finish,
+            }
+        };
+    }
+
+    // Helper: let the scheduler fill free capacity on resource r at
+    // time `now`. Written as a macro to borrow locals mutably without a
+    // closure fight.
     macro_rules! drain_resource {
         ($r:expr, $now:expr) => {{
             let r = $r;
             while in_service[r] < pool.specs[r].capacity {
-                match queue[r].pop_front() {
+                let picked = { sched.pick_next(r, &ctx!($now)) };
+                match picked {
                     Some(t) => {
+                        debug_assert_eq!(
+                            dag.tasks[t].resource, r,
+                            "scheduler returned a task for the wrong resource"
+                        );
+                        debug_assert!(start[t].is_nan(), "task started twice");
                         in_service[r] += 1;
                         start[t] = $now;
                         let d = dag.tasks[t].duration;
@@ -92,10 +130,12 @@ pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
         }};
     }
 
+    sched.on_start(&ctx!(0.0));
+
     // Seed: all tasks with no predecessors are ready at t=0, in id order.
     for t in 0..n {
         if indeg[t] == 0 {
-            queue[dag.tasks[t].resource].push_back(t);
+            sched.on_task_ready(t, &ctx!(0.0));
         }
     }
     for r in 0..nres {
@@ -111,6 +151,7 @@ pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
         done += 1;
         let r = dag.tasks[t].resource;
         in_service[r] -= 1;
+        sched.on_task_finished(t, &ctx!(now));
 
         // Release successors; collect which become ready (in id order for
         // determinism — succs are already appended in construction order,
@@ -124,16 +165,18 @@ pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
         }
         newly_ready.sort_unstable();
 
-        // Only the freed resource and resources that received new work can
-        // start tasks — drain exactly those (O(touched), not O(resources)).
+        // Only the freed resource and resources that received new work
+        // can start tasks — drain exactly those (O(touched)).
         touched.clear();
         touched.push(r);
         for &s in &newly_ready {
             let sr = dag.tasks[s].resource;
-            queue[sr].push_back(s);
             if !touched.contains(&sr) {
                 touched.push(sr);
             }
+        }
+        for &s in &newly_ready {
+            sched.on_task_ready(s, &ctx!(now));
         }
         // Deterministic drain order: resource id ascending.
         touched.sort_unstable();
@@ -142,7 +185,13 @@ pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
         }
     }
 
-    assert_eq!(done, n, "deadlock: {} of {} tasks completed", done, n);
+    assert_eq!(
+        done, n,
+        "deadlock: {} of {} tasks completed (scheduler '{}' held ready tasks or the DAG starved)",
+        done,
+        n,
+        sched.name()
+    );
     let makespan = finish.iter().copied().fold(0.0, f64::max);
     SimResult {
         start,
@@ -158,8 +207,26 @@ pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
 /// the last `iters - warmup` iterations. The first iterations are warmup
 /// (pipelines fill: prefetch buffers, overlapped comm).
 pub fn steady_state_iter_time(dag: &Dag, pool: &ResourcePool, iters: usize, warmup: usize) -> f64 {
+    steady_state_iter_time_with(dag, pool, iters, warmup, &mut FifoScheduler::new())
+}
+
+/// [`steady_state_iter_time`] under an explicit scheduling policy.
+pub fn steady_state_iter_time_with(
+    dag: &Dag,
+    pool: &ResourcePool,
+    iters: usize,
+    warmup: usize,
+    sched: &mut dyn Scheduler,
+) -> f64 {
     assert!(iters > warmup, "need at least one measured iteration");
-    let res = simulate(dag, pool);
+    let res = simulate_with(dag, pool, sched);
+    steady_state_from(&res, dag, iters, warmup)
+}
+
+/// Extract the steady-state iteration time from an existing simulation of
+/// an `iters`-iteration chained DAG.
+pub fn steady_state_from(res: &SimResult, dag: &Dag, iters: usize, warmup: usize) -> f64 {
+    assert!(iters > warmup, "need at least one measured iteration");
     let f0 = res.iter_finish(dag, warmup);
     let f1 = res.iter_finish(dag, iters - 1);
     (f1 - f0) / (iters - 1 - warmup) as f64

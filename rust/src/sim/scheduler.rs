@@ -1,0 +1,560 @@
+//! Pluggable DAG scheduling policies.
+//!
+//! The discrete-event engine ([`crate::sim::executor`]) owns *mechanism*:
+//! readiness tracking, capacity accounting, the event queue. A
+//! [`Scheduler`] owns *policy*: given the set of ready tasks on a
+//! resource, which one starts next? The split is the extension point this
+//! crate uses to study the comm/compute-overlap questions the paper
+//! raises in §IV–V — reordering the serialized collective channel is a
+//! one-file policy here, not an executor rewrite (cf. DSLab-DAG's
+//! `Scheduler` trait and the MPI-collective reordering of
+//! arXiv:1802.06949).
+//!
+//! Shipped policies:
+//!
+//! * [`FifoScheduler`] — ready-order service, ties by task id. Reproduces
+//!   the pre-refactor monolithic executor bit-for-bit (golden-tested).
+//! * [`PriorityScheduler`] — layer-index priority on the collective
+//!   channel: the all-reduce of the layer the *next* forward pass needs
+//!   first (lowest layer index) jumps the queue, wait-free-backprop
+//!   style.
+//! * [`CriticalPathScheduler`] — HEFT-style upward rank: the ready task
+//!   with the longest remaining path to a sink starts first.
+//! * [`FusionAwareScheduler`] — consults the gradient-fusion bucketing
+//!   ([`crate::analytic::fusion`]) and launches each bucket's collectives
+//!   as one consecutive burst, modeling fused launch semantics.
+//!
+//! To add a policy: implement [`Scheduler`], register a name in
+//! [`SchedulerKind`], and it is reachable from the CLI (`--scheduler`),
+//! the `sched` experiment, and the scheduler-sweep bench. See DESIGN.md.
+
+use super::context::SimContext;
+use crate::comm::schedule;
+use crate::dag::node::{Phase, ResourceId, TaskId};
+use crate::models::layer::NetSpec;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// A task-ordering policy driven by the discrete-event engine.
+///
+/// Contract:
+/// * `on_start` is called once per simulation and must (re)initialize all
+///   internal state — a scheduler instance may be reused across runs.
+/// * `on_task_ready(t)` is called exactly once per task, when its last
+///   predecessor finishes. Within one event, tasks are delivered in
+///   ascending id order (deterministic).
+/// * `pick_next(r)` is called whenever resource `r` has free capacity; it
+///   must return a task previously delivered via `on_task_ready` whose
+///   resource is `r` (removing it from the scheduler's ready set), or
+///   `None` to leave the capacity idle. A held task must eventually be
+///   released on a later `pick_next` — the engine re-polls `r` whenever a
+///   new task becomes ready on it or its capacity is freed, and panics on
+///   deadlock (tasks held forever).
+pub trait Scheduler {
+    /// Display name (used by experiment tables and the CLI).
+    fn name(&self) -> &'static str;
+
+    /// Reset state for a fresh simulation of `ctx.dag` on `ctx.pool`.
+    fn on_start(&mut self, ctx: &SimContext);
+
+    /// `task`'s predecessors have all finished; it may now be scheduled.
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext);
+
+    /// `task` finished service (informational; default no-op).
+    fn on_task_finished(&mut self, _task: TaskId, _ctx: &SimContext) {}
+
+    /// Choose the next ready task to start on `resource`, or `None`.
+    fn pick_next(&mut self, resource: ResourceId, ctx: &SimContext) -> Option<TaskId>;
+}
+
+// ---------------------------------------------------------------------------
+// FIFO
+// ---------------------------------------------------------------------------
+
+/// Ready-order FIFO with ties broken by task id — the paper frameworks'
+/// insertion-order collective streams, and the pre-refactor executor's
+/// exact behavior.
+#[derive(Default)]
+pub struct FifoScheduler {
+    queues: Vec<VecDeque<TaskId>>,
+}
+
+impl FifoScheduler {
+    pub fn new() -> FifoScheduler {
+        FifoScheduler::default()
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn on_start(&mut self, ctx: &SimContext) {
+        self.queues = vec![VecDeque::new(); ctx.pool.len()];
+    }
+
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext) {
+        self.queues[ctx.dag.tasks[task].resource].push_back(task);
+    }
+
+    fn pick_next(&mut self, resource: ResourceId, _ctx: &SimContext) -> Option<TaskId> {
+        self.queues[resource].pop_front()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared ready-set for ranked policies
+// ---------------------------------------------------------------------------
+
+/// Per-resource unordered ready sets with deterministic min-by-rank
+/// extraction (ties by task id). Ready sets are small in practice — a few
+/// tasks per resource — so a linear scan beats heap bookkeeping.
+#[derive(Default)]
+struct ReadySet {
+    ready: Vec<Vec<TaskId>>,
+}
+
+impl ReadySet {
+    fn reset(&mut self, resources: usize) {
+        self.ready.clear();
+        self.ready.resize(resources, Vec::new());
+    }
+
+    fn push(&mut self, resource: ResourceId, task: TaskId) {
+        self.ready[resource].push(task);
+    }
+
+    /// Remove and return the ready task on `resource` minimizing
+    /// `(rank(task), task)`; `None` when empty. Ranks must be finite.
+    fn take_min<F: Fn(TaskId) -> f64>(&mut self, resource: ResourceId, rank: F) -> Option<TaskId> {
+        let v = &mut self.ready[resource];
+        if v.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        let mut best_rank = rank(v[0]);
+        for i in 1..v.len() {
+            let r = rank(v[i]);
+            if r < best_rank || (r == best_rank && v[i] < v[best]) {
+                best = i;
+                best_rank = r;
+            }
+        }
+        Some(v.swap_remove(best))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer-index priority
+// ---------------------------------------------------------------------------
+
+/// Layer-index priority for the gradient-exchange stream.
+///
+/// Backward propagation produces gradients from the output layer down,
+/// but the *next* iteration's forward pass consumes updated parameters
+/// from the input layer up. When the collective channel has a backlog,
+/// serving the **lowest-index** layer first unblocks the next forward
+/// pass soonest and hides the remaining collectives behind it
+/// (arXiv:1802.06949's DAG-embedded collective reordering). Compute
+/// tasks keep oldest-first (min-id) service.
+#[derive(Default)]
+pub struct PriorityScheduler {
+    ready: ReadySet,
+}
+
+impl PriorityScheduler {
+    pub fn new() -> PriorityScheduler {
+        PriorityScheduler::default()
+    }
+}
+
+impl Scheduler for PriorityScheduler {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn on_start(&mut self, ctx: &SimContext) {
+        self.ready.reset(ctx.pool.len());
+    }
+
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext) {
+        self.ready.push(ctx.dag.tasks[task].resource, task);
+    }
+
+    fn pick_next(&mut self, resource: ResourceId, ctx: &SimContext) -> Option<TaskId> {
+        let dag = ctx.dag;
+        self.ready.take_min(resource, |t| {
+            let task = &dag.tasks[t];
+            match task.phase {
+                // Gradient exchange and optimizer steps: forward-pass
+                // order (layer 0 first) so the next iteration starts.
+                Phase::Aggregate | Phase::Update => {
+                    task.layer.map(|l| l as f64).unwrap_or(-1.0)
+                }
+                // Everything else ahead of queued agg/update work.
+                _ => -1.0,
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Critical path (upward rank)
+// ---------------------------------------------------------------------------
+
+/// HEFT-style longest-path-to-sink priority: among ready tasks, start the
+/// one with the largest upward rank (its own duration plus the longest
+/// downstream chain). Classic list scheduling for makespan.
+#[derive(Default)]
+pub struct CriticalPathScheduler {
+    ready: ReadySet,
+    /// Negated upward rank per task (we minimize).
+    neg_rank: Vec<f64>,
+}
+
+impl CriticalPathScheduler {
+    pub fn new() -> CriticalPathScheduler {
+        CriticalPathScheduler::default()
+    }
+}
+
+impl Scheduler for CriticalPathScheduler {
+    fn name(&self) -> &'static str {
+        "critical-path"
+    }
+
+    fn on_start(&mut self, ctx: &SimContext) {
+        self.ready.reset(ctx.pool.len());
+        let ranks = ctx
+            .dag
+            .upward_ranks()
+            .expect("CriticalPathScheduler requires an acyclic DAG");
+        self.neg_rank = ranks.into_iter().map(|r| -r).collect();
+    }
+
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext) {
+        self.ready.push(ctx.dag.tasks[task].resource, task);
+    }
+
+    fn pick_next(&mut self, resource: ResourceId, _ctx: &SimContext) -> Option<TaskId> {
+        let neg_rank = &self.neg_rank;
+        self.ready.take_min(resource, |t| neg_rank[t])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fusion-aware gang launch
+// ---------------------------------------------------------------------------
+
+/// Fusion-aware collective launch: gradient all-reduces are grouped into
+/// the buckets computed by [`crate::analytic::fusion`] (backward-ordered,
+/// size-capped) and each bucket launches as one consecutive burst once
+/// *all* of its members are ready — a fused collective can only start
+/// when its latest-produced tensor exists. Buckets launch in
+/// (iteration, bucket-index) order; non-collective tasks are served
+/// min-id like FIFO.
+///
+/// Requires S-SGD-shaped DAGs: a bucket's members must not depend on each
+/// other through held tasks (true for the builder's DAGs, where aggregate
+/// tasks only depend on backward compute).
+pub struct FusionAwareScheduler {
+    ready: ReadySet,
+    /// Fusion bucket per layer index (`None`: launch immediately).
+    bucket_of: Vec<Option<usize>>,
+    /// Member count per (iteration, bucket), derived from the DAG being
+    /// simulated (NOT from the bucket map — a layer may legitimately
+    /// have no aggregate task, e.g. zero measured comm in trace-driven
+    /// builds, and must not keep its bucket from ever arming).
+    expected: HashMap<(usize, usize), usize>,
+    /// Ready-member counts per (iteration, bucket).
+    counts: HashMap<(usize, usize), usize>,
+    /// Buckets whose members are all ready (launchable), per iteration.
+    armed: HashSet<(usize, usize)>,
+}
+
+impl FusionAwareScheduler {
+    /// Build from an explicit layer→bucket map.
+    pub fn new(bucket_of: Vec<Option<usize>>) -> FusionAwareScheduler {
+        FusionAwareScheduler {
+            ready: ReadySet::default(),
+            bucket_of,
+            expected: HashMap::new(),
+            counts: HashMap::new(),
+            armed: HashSet::new(),
+        }
+    }
+
+    /// Bucket a network's gradient stream with the given size cap.
+    pub fn for_net(net: &NetSpec, cap_bytes: f64) -> FusionAwareScheduler {
+        FusionAwareScheduler::new(schedule::fusion_bucket_of(net, cap_bytes))
+    }
+
+    /// The (iteration, bucket) of a task, if it is a bucketed collective.
+    fn bucket_key(&self, task: TaskId, ctx: &SimContext) -> Option<(usize, usize)> {
+        let t = &ctx.dag.tasks[task];
+        if t.phase != Phase::Aggregate {
+            return None;
+        }
+        let layer = t.layer?;
+        let bucket = *self.bucket_of.get(layer)?;
+        bucket.map(|b| (t.iter, b))
+    }
+}
+
+impl Scheduler for FusionAwareScheduler {
+    fn name(&self) -> &'static str {
+        "fusion"
+    }
+
+    fn on_start(&mut self, ctx: &SimContext) {
+        self.ready.reset(ctx.pool.len());
+        self.counts.clear();
+        self.armed.clear();
+        // Count the bucket members actually present in this DAG, so a
+        // bucket arms exactly when its last *existing* aggregate is
+        // ready — never waiting on a layer the builder skipped.
+        self.expected.clear();
+        for t in 0..ctx.dag.len() {
+            if let Some(key) = self.bucket_key(t, ctx) {
+                *self.expected.entry(key).or_insert(0) += 1;
+            }
+        }
+    }
+
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext) {
+        self.ready.push(ctx.dag.tasks[task].resource, task);
+        if let Some(key) = self.bucket_key(task, ctx) {
+            let n = self.counts.entry(key).or_insert(0);
+            *n += 1;
+            if *n == self.expected.get(&key).copied().unwrap_or(0) {
+                self.armed.insert(key);
+            }
+        }
+    }
+
+    fn pick_next(&mut self, resource: ResourceId, ctx: &SimContext) -> Option<TaskId> {
+        // Linear scan with a hold-back filter: bucketed collectives are
+        // eligible only once their bucket is armed.
+        let v = &self.ready.ready[resource];
+        let mut best: Option<(f64, TaskId, usize)> = None;
+        for (i, &t) in v.iter().enumerate() {
+            let rank = match self.bucket_key(t, ctx) {
+                Some(key) => {
+                    if !self.armed.contains(&key) {
+                        continue; // hold until the fused bucket is complete
+                    }
+                    // (iteration, bucket) order; iterations are small.
+                    key.0 as f64 * 1e6 + key.1 as f64
+                }
+                None => -1.0,
+            };
+            let better = match best {
+                None => true,
+                Some((brank, btask, _)) => rank < brank || (rank == brank && t < btask),
+            };
+            if better {
+                best = Some((rank, t, i));
+            }
+        }
+        let (_, task, idx) = best?;
+        self.ready.ready[resource].swap_remove(idx);
+        Some(task)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Default fusion-bucket size cap for [`SchedulerKind::Fusion`]
+/// (25 MiB, the bucket size modern DDP implementations converged on).
+pub const DEFAULT_FUSION_CAP_BYTES: f64 = 25.0 * 1024.0 * 1024.0;
+
+/// Named scheduler policies, addressable from the CLI, the framework
+/// strategies, experiments and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Fifo,
+    Priority,
+    CriticalPath,
+    Fusion,
+}
+
+impl SchedulerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::Priority => "priority",
+            SchedulerKind::CriticalPath => "critical-path",
+            SchedulerKind::Fusion => "fusion",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SchedulerKind> {
+        match name {
+            "fifo" => Some(SchedulerKind::Fifo),
+            "priority" | "prio" => Some(SchedulerKind::Priority),
+            "critical-path" | "cp" | "heft" => Some(SchedulerKind::CriticalPath),
+            "fusion" => Some(SchedulerKind::Fusion),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [SchedulerKind; 4] {
+        [
+            SchedulerKind::Fifo,
+            SchedulerKind::Priority,
+            SchedulerKind::CriticalPath,
+            SchedulerKind::Fusion,
+        ]
+    }
+
+    /// Instantiate the policy for a job on `net` (the fusion policy needs
+    /// the network's gradient sizes; the rest ignore it).
+    pub fn build(self, net: &NetSpec) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
+            SchedulerKind::Priority => Box::new(PriorityScheduler::new()),
+            SchedulerKind::CriticalPath => Box::new(CriticalPathScheduler::new()),
+            SchedulerKind::Fusion => {
+                Box::new(FusionAwareScheduler::for_net(net, DEFAULT_FUSION_CAP_BYTES))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::graph::Dag;
+    use crate::dag::node::Task;
+    use crate::sim::executor::{simulate, simulate_with};
+    use crate::sim::resources::{ResourceClass, ResourcePool};
+
+    fn task(name: &str, phase: Phase, res: usize, dur: f64, layer: Option<usize>) -> Task {
+        Task {
+            name: name.into(),
+            phase,
+            resource: res,
+            duration: dur,
+            iter: 0,
+            gpu: Some(0),
+            layer,
+        }
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        for kind in SchedulerKind::all() {
+            assert_eq!(SchedulerKind::by_name(kind.name()), Some(kind));
+        }
+        assert!(SchedulerKind::by_name("random").is_none());
+    }
+
+    #[test]
+    fn fifo_matches_default_simulate() {
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        for i in 0..4 {
+            dag.add(task(&format!("t{i}"), Phase::Forward, r, 1.0 + i as f64, None));
+        }
+        let a = simulate(&dag, &pool);
+        let b = simulate_with(&dag, &pool, &mut FifoScheduler::new());
+        assert_eq!(a.start, b.start);
+        assert_eq!(a.finish, b.finish);
+    }
+
+    #[test]
+    fn critical_path_beats_fifo_on_adversarial_ids() {
+        // Resource R holds a short dead-end task (id 0) and the head of a
+        // long chain (id 1 → big task on another resource). FIFO's id
+        // tie-break runs the dead-end first; upward rank runs the chain.
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 1);
+        let other = pool.add("other", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        let _dead = dag.add(task("dead", Phase::Forward, r, 1.0, None));
+        let head = dag.add(task("head", Phase::Forward, r, 1.0, None));
+        let big = dag.add(task("big", Phase::Forward, other, 10.0, None));
+        dag.edge(head, big);
+
+        let fifo = simulate_with(&dag, &pool, &mut FifoScheduler::new());
+        let cp = simulate_with(&dag, &pool, &mut CriticalPathScheduler::new());
+        assert!((fifo.makespan - 12.0).abs() < 1e-12, "fifo {}", fifo.makespan);
+        assert!((cp.makespan - 11.0).abs() < 1e-12, "cp {}", cp.makespan);
+    }
+
+    #[test]
+    fn priority_orders_collective_by_layer() {
+        // Two aggregates ready simultaneously; ids favor the high layer,
+        // priority must pick the low layer first.
+        let mut pool = ResourcePool::new();
+        let coll = pool.add("coll", ResourceClass::Collective, 1);
+        let mut dag = Dag::new();
+        let hi = dag.add(task("agg.hi", Phase::Aggregate, coll, 1.0, Some(5)));
+        let lo = dag.add(task("agg.lo", Phase::Aggregate, coll, 1.0, Some(0)));
+
+        let fifo = simulate_with(&dag, &pool, &mut FifoScheduler::new());
+        assert!(fifo.start[hi] < fifo.start[lo]);
+        let prio = simulate_with(&dag, &pool, &mut PriorityScheduler::new());
+        assert!(prio.start[lo] < prio.start[hi]);
+    }
+
+    #[test]
+    fn fusion_holds_bucket_until_complete() {
+        // Layers 0 and 1 share bucket 0. agg0 is ready at t=0, agg1 only
+        // after a 5s backward task: the fused launch waits, then fires
+        // both back-to-back.
+        let mut pool = ResourcePool::new();
+        let gpu = pool.add("gpu", ResourceClass::Gpu, 1);
+        let coll = pool.add("coll", ResourceClass::Collective, 1);
+        let mut dag = Dag::new();
+        let agg0 = dag.add(task("agg0", Phase::Aggregate, coll, 1.0, Some(0)));
+        let bwd = dag.add(task("bwd", Phase::Backward, gpu, 5.0, Some(1)));
+        let agg1 = dag.add(task("agg1", Phase::Aggregate, coll, 1.0, Some(1)));
+        dag.edge(bwd, agg1);
+
+        let mut fusion = FusionAwareScheduler::new(vec![Some(0), Some(0)]);
+        let res = simulate_with(&dag, &pool, &mut fusion);
+        assert!(res.start[agg0] >= 5.0, "held until bucket complete");
+        // Burst: consecutive service.
+        let first = res.start[agg0].min(res.start[agg1]);
+        let last_end = res.finish[agg0].max(res.finish[agg1]);
+        assert!((last_end - first - 2.0).abs() < 1e-12);
+
+        // FIFO by contrast starts agg0 immediately.
+        let fifo = simulate_with(&dag, &pool, &mut FifoScheduler::new());
+        assert_eq!(fifo.start[agg0], 0.0);
+    }
+
+    #[test]
+    fn fusion_tolerates_bucket_members_missing_from_dag() {
+        // Layers 0 and 1 share bucket 0, but the DAG only contains layer
+        // 0's aggregate (a trace-driven build can measure zero comm for
+        // a layer and skip its task). The bucket must arm off the
+        // members that exist instead of deadlocking.
+        let mut pool = ResourcePool::new();
+        let coll = pool.add("coll", ResourceClass::Collective, 1);
+        let mut dag = Dag::new();
+        let agg0 = dag.add(task("agg0", Phase::Aggregate, coll, 1.0, Some(0)));
+        let mut fusion = FusionAwareScheduler::new(vec![Some(0), Some(0)]);
+        let res = simulate_with(&dag, &pool, &mut fusion);
+        assert_eq!(res.start[agg0], 0.0);
+        assert!((res.makespan - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedulers_are_reusable_across_runs() {
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        let a = dag.add(task("a", Phase::Forward, r, 1.0, None));
+        let b = dag.add(task("b", Phase::Forward, r, 2.0, None));
+        dag.edge(a, b);
+        let mut sched = PriorityScheduler::new();
+        let r1 = simulate_with(&dag, &pool, &mut sched);
+        let r2 = simulate_with(&dag, &pool, &mut sched);
+        assert_eq!(r1.finish, r2.finish);
+    }
+}

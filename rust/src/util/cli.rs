@@ -85,6 +85,19 @@ impl Args {
         }
     }
 
+    /// Value of `--key` validated against a closed set of choices
+    /// (e.g. `--scheduler fifo|priority|critical-path|fusion`). Panics
+    /// with the allowed values on a bad choice, like the numeric parsers.
+    pub fn choice_or(&self, key: &str, allowed: &[&str], default: &str) -> String {
+        debug_assert!(allowed.contains(&default), "default must be an allowed choice");
+        let v = self.str_or(key, default);
+        if allowed.contains(&v.as_str()) {
+            v
+        } else {
+            panic!("--{key} expects one of {allowed:?}, got '{v}'");
+        }
+    }
+
     /// Comma-separated list of integers, e.g. `--gpus 1,2,4`.
     pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
         match self.get(key) {
@@ -144,6 +157,23 @@ mod tests {
             a.str_list_or("nets", &[]),
             vec!["alexnet".to_string(), "resnet50".to_string()]
         );
+    }
+
+    #[test]
+    fn choices_validated() {
+        let a = parse("--scheduler priority");
+        assert_eq!(
+            a.choice_or("scheduler", &["fifo", "priority"], "fifo"),
+            "priority"
+        );
+        assert_eq!(a.choice_or("missing", &["x", "y"], "y"), "y");
+    }
+
+    #[test]
+    #[should_panic(expected = "expects one of")]
+    fn bad_choice_panics() {
+        let a = parse("--scheduler yolo");
+        a.choice_or("scheduler", &["fifo", "priority"], "fifo");
     }
 
     #[test]

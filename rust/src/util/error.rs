@@ -1,0 +1,146 @@
+//! Minimal in-tree error type replacing the `anyhow` crate.
+//!
+//! The vendored crate set has no third-party dependencies (see DESIGN.md
+//! §Build), so the runtime/coordinator layers use this drop-in subset of
+//! anyhow's API instead: an opaque [`Error`], the [`Context`] extension
+//! trait, and the [`crate::anyhow!`] / [`crate::ensure!`] macros. Like
+//! anyhow's, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what allows the blanket `From` impl for
+//! every std error type without colliding with the reflexive
+//! `From<T> for T`.
+
+use std::fmt;
+
+/// Opaque error: a message plus the context frames wrapped around it
+/// (outermost first), rendered as `"outer: inner"`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a message (used by [`crate::anyhow!`]).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both render the full context chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Render the source chain eagerly; we only carry a String.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` defaulting to [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to any
+/// `Result` whose error renders with `Display`.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (anyhow-compatible).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error unless `cond` holds (anyhow-compatible).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing_io() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/3141592")?;
+        Ok(())
+    }
+
+    #[test]
+    fn io_errors_convert_via_question_mark() {
+        let e = failing_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r2: std::result::Result<(), &str> = Err("inner");
+        let e2 = r2.with_context(|| format!("outer {}", 2)).unwrap_err();
+        assert_eq!(e2.to_string(), "outer 2: inner");
+    }
+
+    #[test]
+    fn macros_build_and_guard() {
+        fn guarded(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(guarded(3).unwrap(), 3);
+        let e = guarded(11).unwrap_err();
+        assert_eq!(e.to_string(), "x too big: 11");
+        let direct = anyhow!("code {}", 7);
+        assert_eq!(direct.to_string(), "code 7");
+    }
+
+    #[test]
+    fn alternate_format_matches_plain() {
+        let e = Error::msg("a").context("b");
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+        assert_eq!(format!("{e:#}"), "b: a");
+    }
+}

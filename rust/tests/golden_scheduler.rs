@@ -1,0 +1,188 @@
+//! Golden test: the refactored scheduler-driven engine with
+//! [`FifoScheduler`] must reproduce the pre-refactor monolithic
+//! executor's timelines **bit-for-bit**.
+//!
+//! `reference_simulate` below is the original executor loop (per-resource
+//! FIFO queues drained inline, ready-ties broken by task id), kept
+//! verbatim as an executable specification. Every start/finish timestamp,
+//! the busy accounting and the event count must match exactly — same
+//! floating-point operations in the same order — across the paper's
+//! configuration grid.
+
+use dagsgd::cluster::presets;
+use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+use dagsgd::dag::graph::Dag;
+use dagsgd::dag::node::TaskId;
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::sim::engine::EventQueue;
+use dagsgd::sim::executor::{simulate, simulate_with};
+use dagsgd::sim::resources::ResourcePool;
+use dagsgd::sim::scheduler::FifoScheduler;
+use std::collections::VecDeque;
+
+/// The pre-refactor executor, verbatim (hard-coded FIFO ready queues).
+fn reference_simulate(dag: &Dag, pool: &ResourcePool) -> (Vec<f64>, Vec<f64>, Vec<f64>, u64) {
+    assert!(dag.is_acyclic());
+    let n = dag.len();
+    let mut indeg: Vec<usize> = dag.preds.iter().map(|p| p.len()).collect();
+
+    let nres = pool.len();
+    let mut queue: Vec<VecDeque<TaskId>> = vec![VecDeque::new(); nres];
+    let mut in_service: Vec<usize> = vec![0; nres];
+    let mut busy = vec![0.0f64; nres];
+
+    let mut start = vec![f64::NAN; n];
+    let mut finish = vec![f64::NAN; n];
+
+    let cap: usize = pool.specs.iter().map(|s| s.capacity).sum();
+    let mut ev: EventQueue<TaskId> = EventQueue::with_capacity(cap.min(n));
+
+    macro_rules! drain_resource {
+        ($r:expr, $now:expr) => {{
+            let r = $r;
+            while in_service[r] < pool.specs[r].capacity {
+                match queue[r].pop_front() {
+                    Some(t) => {
+                        in_service[r] += 1;
+                        start[t] = $now;
+                        let d = dag.tasks[t].duration;
+                        busy[r] += d;
+                        ev.schedule_at($now + d, t);
+                    }
+                    None => break,
+                }
+            }
+        }};
+    }
+
+    for t in 0..n {
+        if indeg[t] == 0 {
+            queue[dag.tasks[t].resource].push_back(t);
+        }
+    }
+    for r in 0..nres {
+        drain_resource!(r, 0.0);
+    }
+
+    let mut newly_ready: Vec<TaskId> = Vec::with_capacity(16);
+    let mut touched: Vec<usize> = Vec::with_capacity(8);
+    let mut done = 0usize;
+    while let Some((now, t)) = ev.pop() {
+        finish[t] = now;
+        done += 1;
+        let r = dag.tasks[t].resource;
+        in_service[r] -= 1;
+
+        newly_ready.clear();
+        for &s in &dag.succs[t] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                newly_ready.push(s);
+            }
+        }
+        newly_ready.sort_unstable();
+
+        touched.clear();
+        touched.push(r);
+        for &s in &newly_ready {
+            let sr = dag.tasks[s].resource;
+            queue[sr].push_back(s);
+            if !touched.contains(&sr) {
+                touched.push(sr);
+            }
+        }
+        touched.sort_unstable();
+        for &tr in &touched {
+            drain_resource!(tr, now);
+        }
+    }
+    assert_eq!(done, n);
+    (start, finish, busy, ev.processed())
+}
+
+fn assert_bit_identical(dag: &Dag, pool: &ResourcePool, what: &str) {
+    let (start, finish, busy, events) = reference_simulate(dag, pool);
+    for res in [
+        simulate(dag, pool),
+        simulate_with(dag, pool, &mut FifoScheduler::new()),
+    ] {
+        // Exact f64 equality: identical arithmetic in identical order.
+        // (Vec<f64> == compares NaN != NaN, and no task may be left NaN,
+        // so compare bit patterns.)
+        let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+        assert_eq!(bits(&res.start), bits(&start), "{what}: start timelines differ");
+        assert_eq!(bits(&res.finish), bits(&finish), "{what}: finish timelines differ");
+        assert_eq!(bits(&res.busy), bits(&busy), "{what}: busy accounting differs");
+        assert_eq!(res.events, events, "{what}: event counts differ");
+        assert!(res.finish.iter().all(|f| !f.is_nan()), "{what}: unfinished task");
+    }
+}
+
+/// The issue's pinned scenario: a 2-node ResNet-50 DAG.
+#[test]
+fn golden_fifo_resnet50_two_nodes() {
+    let cluster = presets::k80_cluster();
+    let net = zoo::resnet50();
+    let job = JobSpec {
+        batch_per_gpu: net.default_batch,
+        net,
+        nodes: 2,
+        gpus_per_node: 4,
+        iterations: 6,
+    };
+    let (dag, res) = build_ssgd_dag(&cluster, &job, &strategy::caffe_mpi());
+    assert_bit_identical(&dag, &res.pool, "resnet50 2x4 caffe-mpi k80");
+}
+
+/// The whole configuration grid stays pinned, including the CNTK
+/// (no-WFBP) and TensorFlow (gRPC) strategy shapes and both clusters.
+#[test]
+fn golden_fifo_full_grid() {
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            for fw in strategy::all() {
+                let job = JobSpec {
+                    batch_per_gpu: net.default_batch,
+                    net: net.clone(),
+                    nodes: 2,
+                    gpus_per_node: 2,
+                    iterations: 4,
+                };
+                let (dag, res) = build_ssgd_dag(&cluster, &job, &fw);
+                let what = format!("{} {} {}", cluster.name, net.name, fw.name);
+                assert_bit_identical(&dag, &res.pool, &what);
+            }
+        }
+    }
+}
+
+/// Single-GPU (no aggregation path) and the layer-wise-update DAG are
+/// pinned too: FIFO semantics must be schedule-equivalent regardless of
+/// DAG shape.
+#[test]
+fn golden_fifo_degenerate_shapes() {
+    let cluster = presets::v100_cluster();
+    let net = zoo::alexnet();
+    let single = JobSpec {
+        batch_per_gpu: net.default_batch,
+        net: net.clone(),
+        nodes: 1,
+        gpus_per_node: 1,
+        iterations: 5,
+    };
+    let (dag, res) = build_ssgd_dag(&cluster, &single, &strategy::mxnet());
+    assert_bit_identical(&dag, &res.pool, "alexnet 1x1 mxnet v100");
+
+    let mut fw = strategy::caffe_mpi();
+    fw.layerwise_update = true;
+    let multi = JobSpec {
+        batch_per_gpu: single.batch_per_gpu,
+        net,
+        nodes: 2,
+        gpus_per_node: 2,
+        iterations: 4,
+    };
+    let (dag, res) = build_ssgd_dag(&cluster, &multi, &fw);
+    assert_bit_identical(&dag, &res.pool, "alexnet 2x2 layerwise v100");
+}

@@ -8,8 +8,12 @@ use dagsgd::coordinator::allreduce::{flat_allreduce, ring_allreduce};
 use dagsgd::coordinator::bucket::make_buckets;
 use dagsgd::dag::graph::Dag;
 use dagsgd::dag::node::{Phase, Task};
-use dagsgd::sim::executor::simulate;
+use dagsgd::sim::executor::{simulate, simulate_with, SimResult};
 use dagsgd::sim::resources::{ResourceClass, ResourcePool};
+use dagsgd::sim::scheduler::{
+    CriticalPathScheduler, FifoScheduler, FusionAwareScheduler, PriorityScheduler, Scheduler,
+    SchedulerKind,
+};
 use dagsgd::trace::format::{LayerRecord, Trace};
 use dagsgd::util::quickcheck::{approx_eq, check, Gen};
 use dagsgd::{prop_assert, prop_assert_eq};
@@ -262,6 +266,176 @@ fn prop_trace_roundtrip() {
         }
         Ok(())
     });
+}
+
+/// Feasibility of one schedule: every task ran, after its predecessors,
+/// and no resource ever served more tasks than its capacity.
+fn assert_feasible(dag: &Dag, pool: &ResourcePool, res: &SimResult) -> Result<(), String> {
+    for t in 0..dag.len() {
+        prop_assert!(
+            !res.start[t].is_nan() && !res.finish[t].is_nan(),
+            "task {t} never ran"
+        );
+        prop_assert!(res.finish[t] >= res.start[t], "task {t} negative service");
+        for &p in &dag.preds[t] {
+            prop_assert!(
+                res.start[t] >= res.finish[p] - 1e-9,
+                "task {t} started at {} before pred {p} finished at {}",
+                res.start[t],
+                res.finish[p]
+            );
+        }
+    }
+    // Capacity: sweep start/finish events per resource; finishes process
+    // before starts at equal timestamps (a slot frees exactly then).
+    for (r, spec) in pool.specs.iter().enumerate() {
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for (t, task) in dag.tasks.iter().enumerate() {
+            if task.resource == r {
+                events.push((res.start[t], 1));
+                events.push((res.finish[t], 0));
+            }
+        }
+        events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut in_service = 0i64;
+        for (time, kind) in events {
+            if kind == 0 {
+                in_service -= 1;
+            } else {
+                in_service += 1;
+                prop_assert!(
+                    in_service <= spec.capacity as i64,
+                    "resource {r} over capacity ({in_service} > {}) at t={time}",
+                    spec.capacity
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_every_scheduler_feasible_on_random_dags() {
+    check(60, |g| {
+        let (dag, pool) = random_dag(g);
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(FifoScheduler::new()),
+            Box::new(PriorityScheduler::new()),
+            Box::new(CriticalPathScheduler::new()),
+            // No bucket map: the fusion policy degenerates to immediate
+            // launch, which must still be feasible on arbitrary DAGs.
+            Box::new(FusionAwareScheduler::new(Vec::new())),
+        ];
+        let serial_work: Vec<f64> = (0..pool.len())
+            .map(|r| {
+                dag.tasks
+                    .iter()
+                    .filter(|t| t.resource == r)
+                    .map(|t| t.duration)
+                    .sum()
+            })
+            .collect();
+        for sched in scheds.iter_mut() {
+            let res = simulate_with(&dag, &pool, sched.as_mut());
+            assert_feasible(&dag, &pool, &res)?;
+            // Work conservation bounds regardless of policy.
+            let cp = dag.critical_path_length().unwrap();
+            prop_assert!(
+                res.makespan >= cp - 1e-9,
+                "{}: makespan {} < critical path {cp}",
+                sched.name(),
+                res.makespan
+            );
+            for (r, w) in serial_work.iter().enumerate() {
+                prop_assert!(
+                    res.makespan >= w / pool.specs[r].capacity as f64 - 1e-9,
+                    "{}: makespan below resource {r} load",
+                    sched.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every policy yields a feasible schedule on the real S-SGD DAGs too —
+/// including the fusion policy's hold-back gang launches, which must
+/// never deadlock or over-subscribe the collective channel.
+#[test]
+fn prop_every_scheduler_feasible_on_ssgd_dags() {
+    use dagsgd::cluster::presets;
+    use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+    use dagsgd::frameworks::strategy;
+    use dagsgd::models::zoo;
+
+    for layerwise in [false, true] {
+        for (nodes, gpus) in [(1, 2), (2, 2), (4, 4)] {
+            let cluster = presets::k80_cluster();
+            let net = zoo::resnet50();
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net,
+                nodes,
+                gpus_per_node: gpus,
+                iterations: 4,
+            };
+            let mut fw = strategy::caffe_mpi();
+            fw.layerwise_update = layerwise;
+            let (dag, res) = build_ssgd_dag(&cluster, &job, &fw);
+            for kind in SchedulerKind::all() {
+                let mut sched = kind.build(&job.net);
+                let sim = simulate_with(&dag, &res.pool, sched.as_mut());
+                if let Err(msg) = assert_feasible(&dag, &res.pool, &sim) {
+                    panic!(
+                        "{} on {nodes}x{gpus} layerwise={layerwise}: {msg}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// On wait-free-backprop DAGs (layer-wise updates), serving the
+/// collective channel in forward-layer order can only help: the next
+/// iteration's forward pass is unblocked no later than under FIFO, so
+/// the priority policy never increases the makespan.
+#[test]
+fn prop_priority_never_worse_on_wfbp_dags() {
+    use dagsgd::cluster::presets;
+    use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+    use dagsgd::frameworks::strategy;
+    use dagsgd::models::zoo;
+
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in [zoo::resnet50(), zoo::googlenet()] {
+            for (nodes, gpus) in [(2, 2), (4, 4)] {
+                let job = JobSpec {
+                    batch_per_gpu: net.default_batch,
+                    net: net.clone(),
+                    nodes,
+                    gpus_per_node: gpus,
+                    iterations: 6,
+                };
+                let mut fw = strategy::caffe_mpi();
+                fw.layerwise_update = true;
+                let (dag, res) = build_ssgd_dag(&cluster, &job, &fw);
+                let fifo = simulate_with(&dag, &res.pool, &mut FifoScheduler::new());
+                let prio = simulate_with(&dag, &res.pool, &mut PriorityScheduler::new());
+                // Tolerance: 0.1% absorbs non-preemptive wiggle (a long
+                // task admitted an instant before a more urgent one
+                // became ready); the policy must never lose more.
+                assert!(
+                    prio.makespan <= fifo.makespan * 1.001,
+                    "{} {} {nodes}x{gpus}: priority {} > fifo {}",
+                    cluster.name,
+                    net.name,
+                    prio.makespan,
+                    fifo.makespan
+                );
+            }
+        }
+    }
 }
 
 #[test]
