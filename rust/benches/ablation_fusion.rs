@@ -49,7 +49,10 @@ fn main() {
     let mut bench = Bench::new("ablation_fusion");
 
     // --- fusion scans on the comm-bound configurations ---
-    for (cname, cluster) in [("k80-10gbe", presets::k80_cluster()), ("v100-ib", presets::v100_cluster())] {
+    for (cname, cluster) in [
+        ("k80-10gbe", presets::k80_cluster()),
+        ("v100-ib", presets::v100_cluster()),
+    ] {
         let net = zoo::resnet50();
         let job = JobSpec {
             batch_per_gpu: net.default_batch,

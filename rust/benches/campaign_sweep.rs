@@ -1,0 +1,70 @@
+//! Bench: campaign sweep over the paper grid.
+//!
+//! Measures (a) worker-pool scaling — one worker vs every core, which
+//! must change wall-clock but not a single result bit — and (b) the
+//! hit-only cost of a fully cached sweep. Writes the sweep's
+//! schema-versioned report plus the harness timings to
+//! `BENCH_campaign.json` at the repository root (override with
+//! `BENCH_CAMPAIGN_OUT`) so later PRs have a perf trajectory.
+//!
+//!     cargo bench --bench campaign_sweep
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::campaign::cache::Cache;
+use dagsgd::campaign::{grid, report, runner};
+use dagsgd::util::json::Json;
+use std::path::PathBuf;
+
+fn main() {
+    let mut bench = Bench::new("campaign_sweep").with_iters(1, 2);
+    let g = grid::by_name("paper", 7).expect("paper grid");
+    let cells = g.expand();
+    let ncells = cells.len() as f64;
+    println!("paper grid: {} cells", cells.len());
+
+    let serial_label = "sweep_jobs1 (cells/s)";
+    let serial = bench.case(serial_label, ncells, || {
+        runner::run(&cells, 1, None).expect("serial sweep")
+    });
+    let auto = runner::auto_jobs();
+    let parallel_label = format!("sweep_jobs{auto} (cells/s)");
+    let parallel = bench.case(&parallel_label, ncells, || {
+        runner::run(&cells, auto, None).expect("parallel sweep")
+    });
+
+    // Worker count must not change a single bit of any cell.
+    for ((sa, ra), (sb, rb)) in serial.cells.iter().zip(parallel.cells.iter()) {
+        assert_eq!(sa.key(), sb.key(), "cell order must be deterministic");
+        assert_eq!(ra, rb, "worker count changed results for {}", sa.key());
+    }
+
+    // Cache: populate once, then measure hit-only sweeps.
+    let dir = std::env::temp_dir().join(format!("dagsgd-campaign-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = Cache::open(&dir).expect("cache dir");
+    let warm = runner::run(&cells, auto, Some(&cache)).expect("populate cache");
+    assert_eq!(warm.stats.simulated, cells.len());
+    let cached = bench.case("sweep_cached (cells/s)", ncells, || {
+        runner::run(&cells, auto, Some(&cache)).expect("cached sweep")
+    });
+    assert_eq!(cached.stats.simulated, 0, "cached sweep must not simulate");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    bench.report();
+    let speedup = bench.mean_of(serial_label).unwrap() / bench.mean_of(&parallel_label).unwrap();
+    println!("\npool speedup at {auto} workers: {speedup:.2}x");
+
+    let mut top = report::to_json("paper", &parallel);
+    if let Json::Obj(m) = &mut top {
+        m.insert("bench_cases".to_string(), bench.rows_json());
+    }
+    report::validate(&top).expect("campaign bench report must be schema-valid");
+    let out = std::env::var("BENCH_CAMPAIGN_OUT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("manifest dir has a parent")
+            .join("BENCH_campaign.json")
+    });
+    std::fs::write(&out, top.to_string()).expect("write BENCH_campaign.json");
+    println!("wrote {}", out.display());
+}

@@ -48,7 +48,8 @@ fn main() {
     t.print();
 
     println!("\n-- regenerated dataset summary --");
-    let mut s = Table::new(&["file", "iters", "layers", "mean fwd(s)", "mean bwd(s)", "mean comm(s)"]);
+    let mut s =
+        Table::new(&["file", "iters", "layers", "mean fwd(s)", "mean bwd(s)", "mean comm(s)"]);
     for tr in &traces {
         let (f_, b, c) = tr.mean_totals();
         s.row(&[

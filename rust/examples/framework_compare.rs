@@ -14,7 +14,13 @@ use dagsgd::models::zoo;
 use dagsgd::util::cli::Args;
 use dagsgd::util::table::{f, Table};
 
-fn speedup(cluster: &dagsgd::cluster::topology::ClusterSpec, net: &str, fw: &Strategy, nodes: usize, g: usize) -> (f64, f64) {
+fn speedup(
+    cluster: &dagsgd::cluster::topology::ClusterSpec,
+    net: &str,
+    fw: &Strategy,
+    nodes: usize,
+    g: usize,
+) -> (f64, f64) {
     let netspec = zoo::by_name(net).unwrap();
     let base_job = JobSpec {
         batch_per_gpu: netspec.default_batch,
@@ -45,7 +51,8 @@ fn main() {
     // ---- Part 1: the four frameworks (Figs. 2 + 3 condensed) ----
     for cluster in &clusters {
         println!("\n== {} : speedup of 4 GPUs (1 node) and 16 GPUs (4 nodes) ==", cluster.name);
-        let mut t = Table::new(&["net", "framework", "4gpu tput", "4gpu S", "16gpu tput", "16gpu S"]);
+        let mut t =
+            Table::new(&["net", "framework", "4gpu tput", "4gpu S", "16gpu tput", "16gpu S"]);
         for net in nets {
             for fw in strategy::all() {
                 let (tp4, s4) = speedup(cluster, net, &fw, 1, 4);

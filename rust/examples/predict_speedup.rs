@@ -99,7 +99,8 @@ fn main() {
             let iter = eqs::iter_time(&inputs, fw.prefetch_io, fw.wfbp);
             let t1v = *t1.get_or_insert(iter);
             let speedup = ranks as f64 * t1v / iter;
-            let bound = if inputs.t_io + inputs.t_h2d > inputs.t_f() + inputs.t_b() + eqs::tc_no(&inputs)
+            let bound = if inputs.t_io + inputs.t_h2d
+                > inputs.t_f() + inputs.t_b() + eqs::tc_no(&inputs)
             {
                 "I/O"
             } else if eqs::tc_no(&inputs) > 0.1 * inputs.t_b() {

@@ -51,7 +51,9 @@ fn main() {
         t.row(&row);
     }
     t.print();
-    println!("(speedup vs 1 GPU; where a column stops improving, the bottleneck has moved off the network)");
+    println!(
+        "(speedup vs 1 GPU; where a column stops improving, the bottleneck has moved off the network)"
+    );
 
     // ---- Part 2: all-reduce algorithm comparison per message size ----
     println!("\n== all-reduce algorithm cost on the V100/IB cluster (16 GPUs) ==");
@@ -74,7 +76,9 @@ fn main() {
         ]);
     }
     t2.print();
-    println!("(milliseconds per all-reduce; the latency floor on small messages is\n the paper's finding #4 — layer-wise exchange wastes fast networks)");
+    println!(
+        "(milliseconds per all-reduce; the latency floor on small messages is\n the paper's finding #4 — layer-wise exchange wastes fast networks)"
+    );
 
     // ---- Part 3: compute-growth thought experiment ----
     println!("\n== how much faster can GPUs get before 100Gb IB is the wall? ==");

@@ -2,6 +2,7 @@
 //! set). `cargo bench` targets are plain binaries (`harness = false`) that
 //! call [`Bench::run`] per case and print a uniform table.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::units::fmt_dur;
 use std::time::Instant;
@@ -87,6 +88,33 @@ impl Bench {
         }
     }
 
+    /// Recorded cases as a JSON array (label, mean/p50/p95 wall seconds,
+    /// rate per second) — the shared shape bench binaries embed in their
+    /// persisted `BENCH_*.json` trajectories.
+    pub fn rows_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|(label, s, work)| {
+                    Json::obj(vec![
+                        ("case", Json::str(label.clone())),
+                        ("mean_s", Json::num(s.mean)),
+                        ("p50_s", Json::num(s.p50)),
+                        ("p95_s", Json::num(s.p95)),
+                        (
+                            "rate_per_s",
+                            Json::num(if *work > 0.0 && s.mean > 0.0 {
+                                work / s.mean
+                            } else {
+                                0.0
+                            }),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     /// Mean seconds of a recorded case (for cross-case assertions in
     /// perf-regression checks).
     pub fn mean_of(&self, label: &str) -> Option<f64> {
@@ -109,6 +137,19 @@ mod tests {
         assert!(b.mean_of("noop").unwrap() >= 0.0);
         assert!(b.mean_of("missing").is_none());
         b.report(); // must not panic
+    }
+
+    #[test]
+    fn rows_json_shape() {
+        let mut b = Bench::new("json").with_iters(1, 2);
+        b.case("x", 10.0, || 1);
+        b.case("y", 0.0, || 2);
+        let rows = b.rows_json();
+        let arr = rows.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("case").unwrap().as_str(), Some("x"));
+        assert!(arr[0].get("rate_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(arr[1].get("rate_per_s").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

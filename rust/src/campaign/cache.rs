@@ -1,0 +1,180 @@
+//! Content-hash result cache for campaign cells.
+//!
+//! The key is an FNV-1a 64-bit hash over the schema version and the
+//! cell's canonical [`Scenario::key`](super::grid::Scenario::key) — the
+//! *configuration* is the content; two scenarios that canonicalize
+//! identically are the same cell no matter which grid produced them.
+//! One JSON file per cell under the cache directory, written
+//! atomically (temp file + rename) so concurrent workers — or
+//! concurrent campaign processes sharing a cache dir — never observe a
+//! torn entry.
+//!
+//! Hits are *verified*: the stored preimage key and schema version must
+//! match exactly, so a hash collision, a schema bump or a truncated
+//! file degrades to a miss (re-simulation), never to wrong numbers.
+
+use super::grid::{CellResult, Scenario};
+use super::report::{self, SCHEMA_VERSION};
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+use std::process;
+
+/// FNV-1a 64-bit (the classic offset basis / prime).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash preimage for a cell: schema version prefix + canonical key.
+fn preimage(scenario: &Scenario) -> String {
+    format!("v{SCHEMA_VERSION}|{}", scenario.key())
+}
+
+/// The content hash a cell is filed under.
+pub fn cell_hash(scenario: &Scenario) -> u64 {
+    fnv1a64(preimage(scenario).as_bytes())
+}
+
+/// A directory of cached cell results.
+#[derive(Debug)]
+pub struct Cache {
+    dir: PathBuf,
+}
+
+impl Cache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<Cache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Cache { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The file a cell is stored at.
+    pub fn path_of(&self, scenario: &Scenario) -> PathBuf {
+        self.dir.join(format!("{:016x}.json", cell_hash(scenario)))
+    }
+
+    /// Verified lookup: `Some` only when the entry parses, its schema
+    /// version matches, and its stored key equals this scenario's key.
+    pub fn get(&self, scenario: &Scenario) -> Option<CellResult> {
+        let text = std::fs::read_to_string(self.path_of(scenario)).ok()?;
+        let j = json::parse(&text).ok()?;
+        if j.get("schema_version")?.as_f64()? != SCHEMA_VERSION as f64 {
+            return None;
+        }
+        if j.get("key")?.as_str()? != scenario.key() {
+            return None;
+        }
+        report::metrics_from_json(j.get("metrics")?).ok()
+    }
+
+    /// Store a cell result (atomic temp-file + rename; last writer of
+    /// identical content wins, so concurrent writers are harmless).
+    pub fn put(&self, scenario: &Scenario, result: &CellResult) -> std::io::Result<()> {
+        let entry = Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("key", Json::str(scenario.key())),
+            ("metrics", report::metrics_to_json(result)),
+        ]);
+        let path = self.path_of(scenario);
+        let tmp = path.with_extension(format!("tmp.{}", process::id()));
+        std::fs::write(&tmp, entry.to_string())?;
+        std::fs::rename(&tmp, &path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::grid;
+
+    fn scenario() -> Scenario {
+        grid::by_name("smoke", 7).unwrap().expand().remove(0)
+    }
+
+    fn tmp_cache(tag: &str) -> Cache {
+        let dir = std::env::temp_dir().join(format!("dagsgd-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Cache::open(dir).unwrap()
+    }
+
+    fn result() -> CellResult {
+        let mut r = CellResult::new();
+        r.set("iter_time_s", 0.123456789).set("samples_per_s", 1036.5);
+        r
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let c = tmp_cache("roundtrip");
+        let s = scenario();
+        assert!(c.get(&s).is_none(), "empty cache must miss");
+        let r = result();
+        c.put(&s, &r).unwrap();
+        let back = c.get(&s).expect("hit after put");
+        for (k, v) in &r.metrics {
+            assert_eq!(
+                back.get(k).unwrap().to_bits(),
+                v.to_bits(),
+                "metric {k} must round-trip bit-identically"
+            );
+        }
+    }
+
+    #[test]
+    fn different_scenarios_use_different_files() {
+        let c = tmp_cache("files");
+        let cells = grid::by_name("smoke", 7).unwrap().expand();
+        let paths: std::collections::BTreeSet<PathBuf> =
+            cells.iter().map(|s| c.path_of(s)).collect();
+        assert_eq!(paths.len(), cells.len());
+        // Seed is part of the key, so a different seed is a different cell.
+        let reseeded = grid::by_name("smoke", 8).unwrap().expand().remove(0);
+        assert_ne!(c.path_of(&cells[0]), c.path_of(&reseeded));
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_entries_degrade_to_miss() {
+        let c = tmp_cache("corrupt");
+        let s = scenario();
+        c.put(&s, &result()).unwrap();
+
+        // Truncated file: miss.
+        std::fs::write(c.path_of(&s), "{\"schema_ver").unwrap();
+        assert!(c.get(&s).is_none());
+
+        // Wrong stored key (hash collision stand-in): miss.
+        let other_key = Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("key", Json::str("cluster=other")),
+            ("metrics", report::metrics_to_json(&result())),
+        ]);
+        std::fs::write(c.path_of(&s), other_key.to_string()).unwrap();
+        assert!(c.get(&s).is_none());
+
+        // Old schema version: miss.
+        let old = Json::obj(vec![
+            ("schema_version", Json::num(0.0)),
+            ("key", Json::str(s.key())),
+            ("metrics", report::metrics_to_json(&result())),
+        ]);
+        std::fs::write(c.path_of(&s), old.to_string()).unwrap();
+        assert!(c.get(&s).is_none());
+    }
+}

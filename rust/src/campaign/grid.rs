@@ -1,0 +1,466 @@
+//! Declarative scenario grids: the cartesian product of every axis the
+//! paper's empirical study varies — cluster preset, interconnect,
+//! network, framework strategy, node/GPU topology, scheduler policy and
+//! layer-wise-update mode — expanded into concrete [`Scenario`] cells.
+//!
+//! A [`Scenario`] is *pure data addressed by name*: every field is a
+//! string or scalar that round-trips through the canonical [`Scenario::key`]
+//! used for result caching ([`super::cache`]) and for `--filter`
+//! narrowing. [`Scenario::resolve`] turns the names back into the specs
+//! the simulator consumes; [`measure_cell`] is the standard per-cell
+//! measurement (steady-state iteration time + the analytic Eq. 5/6
+//! predictions) shared by the `campaign` CLI, the Fig. 2/3 experiments
+//! and the campaign bench. Experiments with bespoke per-cell pipelines
+//! (Fig. 4's trace-driven prediction, the scheduler comparison) reuse
+//! the same grid/runner machinery with their own cell functions — see
+//! [`super::runner::run_with`].
+
+use crate::analytic::{eqs, speedup};
+use crate::cluster::presets;
+use crate::cluster::topology::ClusterSpec;
+use crate::dag::builder::{self, JobSpec};
+use crate::frameworks::strategy::{self, Strategy};
+use crate::models::zoo;
+use crate::sim::scheduler::SchedulerKind;
+use crate::util::units::{gbit_s, us};
+use std::collections::BTreeMap;
+
+/// Inter-node fabric override: `Stock` keeps the cluster preset's
+/// network; the others swap in the paper's two fabrics (Table II) for
+/// what-if sweeps — e.g. "Cluster 2's GPUs behind Cluster 1's 10 GbE".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interconnect {
+    Stock,
+    TenGbE,
+    Ib100,
+}
+
+impl Interconnect {
+    pub fn name(self) -> &'static str {
+        match self {
+            Interconnect::Stock => "stock",
+            Interconnect::TenGbE => "10gbe",
+            Interconnect::Ib100 => "100gb-ib",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Interconnect> {
+        match name {
+            "stock" => Some(Interconnect::Stock),
+            "10gbe" | "ethernet" => Some(Interconnect::TenGbE),
+            "100gb-ib" | "ib" | "infiniband" => Some(Interconnect::Ib100),
+            _ => None,
+        }
+    }
+
+    /// Override the cluster's inter-node link (bandwidth + per-message
+    /// latency, matching the presets' §V.C calibration).
+    pub fn apply(self, cluster: &mut ClusterSpec) {
+        match self {
+            Interconnect::Stock => {}
+            Interconnect::TenGbE => {
+                cluster.net_bw = gbit_s(10.0);
+                cluster.net_lat = us(40.0);
+            }
+            Interconnect::Ib100 => {
+                cluster.net_bw = gbit_s(100.0);
+                cluster.net_lat = us(20.0);
+            }
+        }
+    }
+}
+
+/// One fully specified grid cell, addressed entirely by names/scalars so
+/// it can be hashed, cached, filtered and serialized.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Cluster preset name ([`presets::by_name`]).
+    pub cluster: String,
+    pub interconnect: Interconnect,
+    /// Network name ([`zoo::by_name`]).
+    pub net: String,
+    /// Framework strategy name ([`strategy::by_name`]).
+    pub framework: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// `None`: the network's paper-default batch size.
+    pub batch_per_gpu: Option<usize>,
+    pub iterations: usize,
+    pub scheduler: SchedulerKind,
+    pub layerwise_update: bool,
+    /// Seed for cells with stochastic inputs (Fig. 4's jittered traces);
+    /// the standard cell is deterministic and ignores it.
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Canonical single-line form: the cache key preimage and the string
+    /// `--filter` matches against. Field order is fixed; changing it (or
+    /// any field's rendering) invalidates every cache entry by design.
+    pub fn key(&self) -> String {
+        format!(
+            "cluster={} interconnect={} net={} fw={} nodes={} gpus={} batch={} iters={} scheduler={} layerwise={} seed={}",
+            self.cluster,
+            self.interconnect.name(),
+            self.net,
+            self.framework,
+            self.nodes,
+            self.gpus_per_node,
+            self.batch_per_gpu
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "default".to_string()),
+            self.iterations,
+            self.scheduler.name(),
+            self.layerwise_update,
+            self.seed,
+        )
+    }
+
+    /// Resolve names into the specs the simulator consumes. Errors (not
+    /// panics) on unknown names or an infeasible topology so the CLI can
+    /// reject a bad grid before spawning workers.
+    pub fn resolve(&self) -> Result<(ClusterSpec, JobSpec, Strategy), String> {
+        let mut cluster = presets::by_name(&self.cluster)
+            .ok_or_else(|| format!("unknown cluster '{}'", self.cluster))?;
+        self.interconnect.apply(&mut cluster);
+        let net = zoo::by_name(&self.net).ok_or_else(|| format!("unknown net '{}'", self.net))?;
+        let mut fw = strategy::by_name(&self.framework)
+            .ok_or_else(|| format!("unknown framework '{}'", self.framework))?;
+        fw.layerwise_update = self.layerwise_update;
+        if self.nodes < 1 || self.nodes > cluster.nodes {
+            return Err(format!(
+                "nodes={} out of range 1..={} for cluster '{}'",
+                self.nodes, cluster.nodes, self.cluster
+            ));
+        }
+        if self.gpus_per_node < 1 || self.gpus_per_node > cluster.gpus_per_node {
+            return Err(format!(
+                "gpus={} out of range 1..={} for cluster '{}'",
+                self.gpus_per_node, cluster.gpus_per_node, self.cluster
+            ));
+        }
+        let job = JobSpec {
+            batch_per_gpu: self.batch_per_gpu.unwrap_or(net.default_batch),
+            net,
+            nodes: self.nodes,
+            gpus_per_node: self.gpus_per_node,
+            iterations: self.iterations,
+        };
+        Ok((cluster, job, fw))
+    }
+
+    /// Resolve and run the standard measurement for this cell.
+    pub fn run(&self) -> Result<CellResult, String> {
+        let (cluster, job, fw) = self.resolve()?;
+        Ok(measure_cell(&cluster, &job, &fw, self.scheduler))
+    }
+}
+
+/// One cell's results: a flat, deterministic metric map. A map (rather
+/// than a fixed struct) lets bespoke cells (Fig. 4, sched) flow through
+/// the same runner/cache/report plumbing as the standard cell.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CellResult {
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl CellResult {
+    pub fn new() -> CellResult {
+        CellResult::default()
+    }
+
+    pub fn set(&mut self, name: &str, value: f64) -> &mut Self {
+        self.metrics.insert(name.to_string(), value);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.metrics.get(name).copied()
+    }
+}
+
+/// The standard cell measurement: simulate the job's steady-state
+/// iteration under `kind`'s scheduling policy and attach the analytic
+/// predictions (Eq. 5 iteration time, Eq. 6 speedup) plus the WFBP
+/// comm/compute-overlap breakdown.
+///
+/// Bit-compatibility contract (property-tested): `iter_time_s` and
+/// `samples_per_s` are exactly [`builder::iteration_time_with`] /
+/// [`builder::throughput`] for the same inputs — the Fig. 2/3
+/// experiments route through this function and must keep producing the
+/// numbers they produced as bespoke loops.
+pub fn measure_cell(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    fw: &Strategy,
+    kind: SchedulerKind,
+) -> CellResult {
+    let mut sched = kind.build(&job.net);
+    let iter = builder::iteration_time_with(cluster, job, fw, sched.as_mut());
+    let samples_per_s = (job.ranks() * job.batch_per_gpu) as f64 / iter;
+
+    let inputs = speedup::iter_inputs(cluster, job, fw);
+    let t_c = inputs.t_c();
+    let tc_no = eqs::tc_no(&inputs);
+    let comm_hidden_pct = if t_c > 0.0 {
+        100.0 * (1.0 - tc_no / t_c)
+    } else {
+        0.0
+    };
+
+    let mut r = CellResult::new();
+    r.set("iter_time_s", iter)
+        .set("samples_per_s", samples_per_s)
+        .set("predicted_iter_s", speedup::predict_iter_time(cluster, job, fw))
+        .set("predicted_speedup", speedup::predict_speedup(cluster, job, fw))
+        .set("comm_s", t_c)
+        .set("comm_hidden_pct", comm_hidden_pct);
+    r
+}
+
+/// A declarative scenario grid: one `Vec` per axis, expanded as the full
+/// cartesian product in fixed axis order (clusters → interconnects →
+/// nets → frameworks → topologies → schedulers → layerwise).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub name: String,
+    pub clusters: Vec<String>,
+    pub interconnects: Vec<Interconnect>,
+    pub nets: Vec<String>,
+    pub frameworks: Vec<String>,
+    /// `(nodes, gpus_per_node)` selections.
+    pub topologies: Vec<(usize, usize)>,
+    pub schedulers: Vec<SchedulerKind>,
+    pub layerwise: Vec<bool>,
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl Grid {
+    /// Number of cells the full cartesian product expands to.
+    pub fn len(&self) -> usize {
+        self.clusters.len()
+            * self.interconnects.len()
+            * self.nets.len()
+            * self.frameworks.len()
+            * self.topologies.len()
+            * self.schedulers.len()
+            * self.layerwise.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand to concrete cells, in deterministic axis order.
+    pub fn expand(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for cluster in &self.clusters {
+            for &interconnect in &self.interconnects {
+                for net in &self.nets {
+                    for framework in &self.frameworks {
+                        for &(nodes, gpus_per_node) in &self.topologies {
+                            for &scheduler in &self.schedulers {
+                                for &layerwise_update in &self.layerwise {
+                                    out.push(Scenario {
+                                        cluster: cluster.clone(),
+                                        interconnect,
+                                        net: net.clone(),
+                                        framework: framework.clone(),
+                                        nodes,
+                                        gpus_per_node,
+                                        batch_per_gpu: None,
+                                        iterations: self.iterations,
+                                        scheduler,
+                                        layerwise_update,
+                                        seed: self.seed,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Expand, keeping only cells whose canonical key contains `filter`
+    /// (substring match; `None` keeps everything).
+    pub fn expand_filtered(&self, filter: Option<&str>) -> Vec<Scenario> {
+        let mut cells = self.expand();
+        if let Some(pat) = filter {
+            cells.retain(|s| s.key().contains(pat));
+        }
+        cells
+    }
+}
+
+/// Names of the built-in grids ([`by_name`]).
+pub fn names() -> &'static [&'static str] {
+    &["paper", "smoke", "sched", "interconnect"]
+}
+
+/// Look up a built-in grid. `seed` parameterizes cells with stochastic
+/// inputs (and is part of every cell's cache key).
+pub fn by_name(name: &str, seed: u64) -> Option<Grid> {
+    let s = |xs: &[&str]| xs.iter().map(|x| x.to_string()).collect::<Vec<String>>();
+    match name {
+        // The paper's full evaluation surface: both clusters, all three
+        // networks, all four frameworks, single-node vs whole-cluster.
+        // 2 × 3 × 4 × 2 = 48 cells.
+        "paper" => Some(Grid {
+            name: "paper".into(),
+            clusters: s(&["k80", "v100"]),
+            interconnects: vec![Interconnect::Stock],
+            nets: s(&["alexnet", "googlenet", "resnet50"]),
+            frameworks: s(&["caffe-mpi", "cntk", "mxnet", "tensorflow"]),
+            topologies: vec![(1, 4), (4, 4)],
+            schedulers: vec![SchedulerKind::Fifo],
+            layerwise: vec![false],
+            iterations: 8,
+            seed,
+        }),
+        // CI's 2×2: two nets × two frameworks on one small topology.
+        "smoke" => Some(Grid {
+            name: "smoke".into(),
+            clusters: s(&["k80"]),
+            interconnects: vec![Interconnect::Stock],
+            nets: s(&["googlenet", "resnet50"]),
+            frameworks: s(&["caffe-mpi", "cntk"]),
+            topologies: vec![(1, 2)],
+            schedulers: vec![SchedulerKind::Fifo],
+            layerwise: vec![false],
+            iterations: 8,
+            seed,
+        }),
+        // Scheduler-policy comparison on the comm-bound headline job.
+        "sched" => Some(Grid {
+            name: "sched".into(),
+            clusters: s(&["k80"]),
+            interconnects: vec![Interconnect::Stock],
+            nets: s(&["resnet50"]),
+            frameworks: s(&["caffe-mpi"]),
+            topologies: vec![(4, 4)],
+            schedulers: vec![
+                SchedulerKind::Fifo,
+                SchedulerKind::Priority,
+                SchedulerKind::CriticalPath,
+                SchedulerKind::Fusion,
+            ],
+            layerwise: vec![true],
+            iterations: 8,
+            seed,
+        }),
+        // What-if fabric swap: each cluster's GPUs behind each fabric.
+        "interconnect" => Some(Grid {
+            name: "interconnect".into(),
+            clusters: s(&["k80", "v100"]),
+            interconnects: vec![Interconnect::TenGbE, Interconnect::Ib100],
+            nets: s(&["resnet50"]),
+            frameworks: s(&["caffe-mpi"]),
+            topologies: vec![(2, 4), (4, 4)],
+            schedulers: vec![SchedulerKind::Fifo],
+            layerwise: vec![false],
+            iterations: 8,
+            seed,
+        }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Grid {
+        Grid {
+            name: "tiny".into(),
+            clusters: vec!["k80".into()],
+            interconnects: vec![Interconnect::Stock],
+            nets: vec!["googlenet".into(), "resnet50".into()],
+            frameworks: vec!["caffe-mpi".into(), "cntk".into()],
+            topologies: vec![(1, 2)],
+            schedulers: vec![SchedulerKind::Fifo],
+            layerwise: vec![false],
+            iterations: 8,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn expansion_is_full_cartesian_product() {
+        let g = tiny();
+        let cells = g.expand();
+        assert_eq!(cells.len(), g.len());
+        assert_eq!(cells.len(), 4);
+        // Axis order: nets outer, frameworks inner.
+        assert_eq!(cells[0].net, "googlenet");
+        assert_eq!(cells[0].framework, "caffe-mpi");
+        assert_eq!(cells[1].framework, "cntk");
+        assert_eq!(cells[2].net, "resnet50");
+    }
+
+    #[test]
+    fn keys_are_unique_and_filterable() {
+        let cells = tiny().expand();
+        let mut keys: Vec<String> = cells.iter().map(|s| s.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len());
+        assert_eq!(tiny().expand_filtered(Some("net=resnet50")).len(), 2);
+        assert_eq!(tiny().expand_filtered(Some("fw=cntk")).len(), 2);
+        assert_eq!(tiny().expand_filtered(Some("no-such-axis")).len(), 0);
+        assert_eq!(tiny().expand_filtered(None).len(), 4);
+    }
+
+    #[test]
+    fn named_grids_resolve_and_meet_scale_floor() {
+        for name in names() {
+            let g = by_name(name, 7).unwrap();
+            let cells = g.expand();
+            assert_eq!(cells.len(), g.len(), "{name}");
+            for s in &cells {
+                s.resolve().unwrap_or_else(|e| panic!("{name}: {e}"));
+            }
+        }
+        // The acceptance grid sweeps ≥ 24 cells.
+        assert!(by_name("paper", 7).unwrap().len() >= 24);
+        assert_eq!(by_name("smoke", 7).unwrap().len(), 4);
+        assert!(by_name("nope", 7).is_none());
+    }
+
+    #[test]
+    fn resolve_rejects_bad_names_and_topologies() {
+        let mut s = tiny().expand().remove(0);
+        assert!(s.resolve().is_ok());
+        s.nodes = 99;
+        assert!(s.resolve().unwrap_err().contains("out of range"));
+        s.nodes = 1;
+        s.net = "vgg".into();
+        assert!(s.resolve().unwrap_err().contains("unknown net"));
+    }
+
+    #[test]
+    fn interconnect_override_changes_fabric() {
+        let mut base = crate::cluster::presets::v100_cluster();
+        let stock_bw = base.net_bw;
+        Interconnect::TenGbE.apply(&mut base);
+        assert!(base.net_bw < stock_bw);
+        assert_eq!(base.net_bw, gbit_s(10.0));
+        let mut k80 = crate::cluster::presets::k80_cluster();
+        Interconnect::Ib100.apply(&mut k80);
+        assert_eq!(k80.net_bw, gbit_s(100.0));
+        for n in ["stock", "10gbe", "100gb-ib"] {
+            assert_eq!(Interconnect::by_name(n).unwrap().name(), n);
+        }
+    }
+
+    #[test]
+    fn layerwise_flag_reaches_strategy() {
+        let mut s = tiny().expand().remove(0);
+        s.layerwise_update = true;
+        let (_, _, fw) = s.resolve().unwrap();
+        assert!(fw.layerwise_update);
+    }
+}

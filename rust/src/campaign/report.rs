@@ -1,0 +1,379 @@
+//! Campaign reporting: the schema-versioned `BENCH_campaign.json`
+//! machine format, its in-tree validator (`campaign --check-bench`),
+//! the canonical deterministic form (`campaign --canon`, diffed by CI's
+//! replay job) and the human table.
+//!
+//! Schema v1 (top-level object):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "bench": "campaign",
+//!   "grid": "paper",
+//!   "cells": [
+//!     { "key": "cluster=k80 ...", "cluster": "k80", "interconnect":
+//!       "stock", "net": "resnet50", "framework": "caffe-mpi",
+//!       "nodes": 4, "gpus_per_node": 4, "batch_per_gpu": null,
+//!       "iterations": 8, "scheduler": "fifo",
+//!       "layerwise_update": false, "seed": 7,
+//!       "metrics": { "iter_time_s": 0.31, "samples_per_s": 1652.0,
+//!                    "predicted_iter_s": 0.30, "predicted_speedup": 13.1,
+//!                    "comm_s": 0.21, "comm_hidden_pct": 87.0 } }
+//!   ],
+//!   "sweep": { "jobs": 4, "simulated": 48, "cached": 0, "wall_s": 2.1 }
+//! }
+//! ```
+//!
+//! Everything under `cells` is a pure function of the grid + seed and
+//! therefore byte-stable across runs, machines and worker counts;
+//! `sweep` is run bookkeeping (wall clock, cache hits) and is the one
+//! section [`canonical`] strips before CI diffs two replays.
+
+use super::grid::CellResult;
+use super::runner::Outcome;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+use crate::util::units::fmt_dur;
+
+/// Version of both the report schema and the cache-entry schema; bump
+/// on any change to cell layout, metric semantics or key canonical form.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Metrics every campaign cell must carry (the standard cell writes
+/// more; bespoke cells at least these).
+const REQUIRED_METRICS: [&str; 2] = ["iter_time_s", "samples_per_s"];
+
+/// Serialize a cell's metric map.
+pub fn metrics_to_json(result: &CellResult) -> Json {
+    Json::Obj(
+        result
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect(),
+    )
+}
+
+/// Parse a metric map (inverse of [`metrics_to_json`]; used by the
+/// cache, whose hits must be bit-identical to fresh results — Rust's
+/// shortest-roundtrip float formatting guarantees that).
+pub fn metrics_from_json(j: &Json) -> Result<CellResult, String> {
+    let Json::Obj(map) = j else {
+        return Err("metrics must be an object".into());
+    };
+    let mut r = CellResult::new();
+    for (k, v) in map {
+        let x = v
+            .as_f64()
+            .ok_or_else(|| format!("metric '{k}' must be a number"))?;
+        r.set(k, x);
+    }
+    Ok(r)
+}
+
+/// Build the full report for a finished sweep.
+pub fn to_json(grid_name: &str, outcome: &Outcome) -> Json {
+    let cells: Vec<Json> = outcome
+        .cells
+        .iter()
+        .map(|(s, r)| {
+            Json::obj(vec![
+                ("key", Json::str(s.key())),
+                ("cluster", Json::str(s.cluster.clone())),
+                ("interconnect", Json::str(s.interconnect.name())),
+                ("net", Json::str(s.net.clone())),
+                ("framework", Json::str(s.framework.clone())),
+                ("nodes", Json::num(s.nodes as f64)),
+                ("gpus_per_node", Json::num(s.gpus_per_node as f64)),
+                (
+                    "batch_per_gpu",
+                    s.batch_per_gpu.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+                ),
+                ("iterations", Json::num(s.iterations as f64)),
+                ("scheduler", Json::str(s.scheduler.name())),
+                ("layerwise_update", Json::Bool(s.layerwise_update)),
+                ("seed", Json::num(s.seed as f64)),
+                ("metrics", metrics_to_json(r)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+        ("bench", Json::str("campaign")),
+        ("grid", Json::str(grid_name)),
+        ("cells", Json::Arr(cells)),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("jobs", Json::num(outcome.stats.jobs as f64)),
+                ("simulated", Json::num(outcome.stats.simulated as f64)),
+                ("cached", Json::num(outcome.stats.cached as f64)),
+                ("wall_s", Json::num(outcome.stats.wall_s)),
+            ]),
+        ),
+    ])
+}
+
+fn require_str<'a>(cell: &'a Json, field: &str, at: &str) -> Result<&'a str, String> {
+    cell.get(field)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("{at}: missing string field '{field}'"))
+}
+
+fn require_num(cell: &Json, field: &str, at: &str) -> Result<f64, String> {
+    let v = cell
+        .get(field)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("{at}: missing numeric field '{field}'"))?;
+    if !v.is_finite() {
+        return Err(format!("{at}: field '{field}' is not finite"));
+    }
+    Ok(v)
+}
+
+/// Validate a report against schema v1. Returns the number of cells.
+pub fn validate(report: &Json) -> Result<usize, String> {
+    let version = report
+        .get("schema_version")
+        .and_then(|v| v.as_f64())
+        .ok_or("missing schema_version")?;
+    if version != SCHEMA_VERSION as f64 {
+        return Err(format!(
+            "schema_version {version} != supported {SCHEMA_VERSION}"
+        ));
+    }
+    if report.get("bench").and_then(|v| v.as_str()) != Some("campaign") {
+        return Err("bench field must be \"campaign\"".into());
+    }
+    report
+        .get("grid")
+        .and_then(|v| v.as_str())
+        .ok_or("missing grid name")?;
+    let cells = report
+        .get("cells")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing cells array")?;
+    if cells.is_empty() {
+        return Err("cells array is empty".into());
+    }
+    for (i, cell) in cells.iter().enumerate() {
+        let at = format!("cells[{i}]");
+        for field in ["key", "cluster", "interconnect", "net", "framework", "scheduler"] {
+            require_str(cell, field, &at)?;
+        }
+        for field in ["nodes", "gpus_per_node", "iterations", "seed"] {
+            require_num(cell, field, &at)?;
+        }
+        match cell.get("layerwise_update") {
+            Some(Json::Bool(_)) => {}
+            _ => return Err(format!("{at}: missing bool field 'layerwise_update'")),
+        }
+        match cell.get("batch_per_gpu") {
+            Some(Json::Null) | Some(Json::Num(_)) => {}
+            _ => return Err(format!("{at}: 'batch_per_gpu' must be null or a number")),
+        }
+        let metrics = cell
+            .get("metrics")
+            .ok_or_else(|| format!("{at}: missing metrics object"))?;
+        let Json::Obj(map) = metrics else {
+            return Err(format!("{at}: metrics must be an object"));
+        };
+        for (k, v) in map {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| format!("{at}: metric '{k}' must be a number"))?;
+            if !x.is_finite() {
+                return Err(format!("{at}: metric '{k}' is not finite"));
+            }
+        }
+        for required in REQUIRED_METRICS {
+            let x = metrics
+                .get(required)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("{at}: missing metric '{required}'"))?;
+            if x <= 0.0 {
+                return Err(format!("{at}: metric '{required}' must be positive"));
+            }
+        }
+    }
+    Ok(cells.len())
+}
+
+/// The deterministic form: validated, with the `sweep` bookkeeping
+/// section removed. Two replays of the same grid + seed must produce
+/// byte-identical canonical serializations (CI diffs exactly this).
+pub fn canonical(report: &Json) -> Result<Json, String> {
+    validate(report)?;
+    let Json::Obj(map) = report else {
+        return Err("report must be an object".into());
+    };
+    let mut out = map.clone();
+    out.remove("sweep");
+    Ok(Json::Obj(out))
+}
+
+/// Render the sweep as the experiments' aligned table format.
+pub fn render_table(outcome: &Outcome) -> String {
+    let mut t = Table::new(&[
+        "cluster",
+        "fabric",
+        "net",
+        "framework",
+        "topo",
+        "scheduler",
+        "iter",
+        "samples/s",
+        "pred iter",
+        "pred speedup",
+        "comm hidden",
+    ]);
+    for (s, r) in &outcome.cells {
+        let num = |k: &str, digits: usize| {
+            r.get(k).map(|v| f(v, digits)).unwrap_or_else(|| "-".into())
+        };
+        let dur = |k: &str| r.get(k).map(fmt_dur).unwrap_or_else(|| "-".into());
+        t.row(&[
+            s.cluster.clone(),
+            s.interconnect.name().to_string(),
+            s.net.clone(),
+            s.framework.clone(),
+            format!("{}x{}", s.nodes, s.gpus_per_node),
+            s.scheduler.name().to_string(),
+            dur("iter_time_s"),
+            num("samples_per_s", 1),
+            dur("predicted_iter_s"),
+            num("predicted_speedup", 2),
+            r.get("comm_hidden_pct")
+                .map(|v| format!("{}%", f(v, 0)))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.render()
+}
+
+/// One-line sweep summary for the CLI.
+pub fn summary(outcome: &Outcome) -> String {
+    format!(
+        "{} cells | {} simulated, {} cached | {} jobs | {:.2}s wall",
+        outcome.cells.len(),
+        outcome.stats.simulated,
+        outcome.stats.cached,
+        outcome.stats.jobs,
+        outcome.stats.wall_s,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::grid::{self, CellResult};
+    use crate::campaign::runner::{Outcome, RunStats};
+    use crate::util::json;
+
+    fn fake_outcome() -> Outcome {
+        let cells = grid::by_name("smoke", 7)
+            .unwrap()
+            .expand()
+            .into_iter()
+            .map(|s| {
+                let mut r = CellResult::new();
+                r.set("iter_time_s", 0.25)
+                    .set("samples_per_s", 512.0)
+                    .set("predicted_iter_s", 0.24)
+                    .set("predicted_speedup", 1.9)
+                    .set("comm_s", 0.05)
+                    .set("comm_hidden_pct", 80.0);
+                (s, r)
+            })
+            .collect();
+        Outcome {
+            cells,
+            stats: RunStats {
+                simulated: 4,
+                cached: 0,
+                jobs: 2,
+                wall_s: 1.5,
+            },
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let out = fake_outcome();
+        let j = to_json("smoke", &out);
+        let text = j.to_string();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(validate(&back).unwrap(), 4);
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn canonical_strips_sweep_only() {
+        let j = to_json("smoke", &fake_outcome());
+        let canon = canonical(&j).unwrap();
+        assert!(canon.get("sweep").is_none());
+        assert_eq!(canon.get("cells"), j.get("cells"));
+        assert_eq!(canon.get("grid"), j.get("grid"));
+        // Canonicalizing is idempotent and wall-clock independent.
+        let mut later = fake_outcome();
+        later.stats.wall_s = 99.0;
+        later.stats.cached = 4;
+        later.stats.simulated = 0;
+        let j2 = to_json("smoke", &later);
+        assert_ne!(j2, j);
+        assert_eq!(canonical(&j2).unwrap().to_string(), canon.to_string());
+    }
+
+    #[test]
+    fn validator_rejects_bad_reports() {
+        let good = to_json("smoke", &fake_outcome());
+
+        let reject = |mutate: &dyn Fn(&mut std::collections::BTreeMap<String, Json>), why: &str| {
+            let Json::Obj(mut m) = good.clone() else { unreachable!() };
+            mutate(&mut m);
+            assert!(validate(&Json::Obj(m)).is_err(), "should reject: {why}");
+        };
+        reject(
+            &|m| {
+                m.insert("schema_version".into(), Json::num(2.0));
+            },
+            "future schema version",
+        );
+        reject(
+            &|m| {
+                m.remove("cells");
+            },
+            "missing cells",
+        );
+        reject(
+            &|m| {
+                m.insert("cells".into(), Json::Arr(vec![]));
+            },
+            "empty cells",
+        );
+        reject(
+            &|m| {
+                m.insert("bench".into(), Json::str("other"));
+            },
+            "wrong bench tag",
+        );
+
+        // A cell missing a required metric.
+        let Json::Obj(mut m) = good.clone() else { unreachable!() };
+        let Some(Json::Arr(cells)) = m.get_mut("cells") else { unreachable!() };
+        if let Json::Obj(cell) = &mut cells[0] {
+            cell.insert("metrics".into(), Json::obj(vec![("iter_time_s", Json::num(0.1))]));
+        }
+        assert!(validate(&Json::Obj(m)).is_err(), "missing samples_per_s");
+    }
+
+    #[test]
+    fn table_and_summary_cover_all_cells() {
+        let out = fake_outcome();
+        let table = render_table(&out);
+        assert_eq!(table.lines().count(), out.cells.len() + 2);
+        assert!(table.contains("googlenet") && table.contains("cntk"));
+        let s = summary(&out);
+        assert!(s.contains("4 cells") && s.contains("4 simulated"));
+    }
+}

@@ -1,0 +1,192 @@
+//! Parallel campaign execution: a small in-tree worker pool (threads +
+//! channels, dependency-free like the rest of the crate) that sweeps a
+//! scenario list, consulting the result cache before simulating.
+//!
+//! Determinism contract: cells are independent and each cell function is
+//! deterministic, so the outcome is *identical for any worker count* —
+//! workers claim cells from a shared atomic cursor and send `(index,
+//! result)` pairs down an `mpsc` channel; the collector files them back
+//! into scenario order. CI's deterministic-replay job relies on this:
+//! two sweeps of the same grid with the same seed must serialize to the
+//! same canonical bytes.
+
+use super::cache::Cache;
+use super::grid::{CellResult, Scenario};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Sweep accounting (reported in `BENCH_campaign.json`'s `sweep`
+/// section, which is *excluded* from the canonical/deterministic form).
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    /// Cells actually simulated this run.
+    pub simulated: usize,
+    /// Cells served from the result cache.
+    pub cached: usize,
+    /// Worker threads used.
+    pub jobs: usize,
+    /// Wall-clock of the whole sweep, seconds.
+    pub wall_s: f64,
+}
+
+/// A completed sweep: per-cell results in scenario order, plus stats.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub cells: Vec<(Scenario, CellResult)>,
+    pub stats: RunStats,
+}
+
+/// The host's available parallelism (≥ 1); see
+/// [`crate::util::cli::host_parallelism`] — one definition, two names.
+pub fn auto_jobs() -> usize {
+    crate::util::cli::host_parallelism()
+}
+
+/// Sweep `scenarios` with the standard cell measurement
+/// ([`Scenario::run`]). Every scenario is validated up front so an
+/// unknown name or infeasible topology is an error, not a worker panic.
+pub fn run(scenarios: &[Scenario], jobs: usize, cache: Option<&Cache>) -> Result<Outcome, String> {
+    for s in scenarios {
+        s.resolve().map_err(|e| format!("{}: {e}", s.key()))?;
+    }
+    Ok(run_with(scenarios, jobs, cache, |s| {
+        s.run().expect("scenario validated before sweep")
+    }))
+}
+
+/// Sweep `scenarios` through an arbitrary cell function on `jobs`
+/// workers. Cached cells skip `cell` entirely; fresh results are written
+/// back to the cache. The experiments (Fig. 2/3/4, sched) use this with
+/// closures over their own specs; the `campaign` CLI uses [`run`].
+pub fn run_with<F>(scenarios: &[Scenario], jobs: usize, cache: Option<&Cache>, cell: F) -> Outcome
+where
+    F: Fn(&Scenario) -> CellResult + Sync,
+{
+    let t0 = Instant::now();
+    let jobs = jobs.clamp(1, scenarios.len().max(1));
+    let cursor = AtomicUsize::new(0);
+    let simulated = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
+
+    let mut slots: Vec<Option<CellResult>> = std::iter::repeat_with(|| None)
+        .take(scenarios.len())
+        .collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let simulated = &simulated;
+            let cell = &cell;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= scenarios.len() {
+                    break;
+                }
+                let s = &scenarios[i];
+                let result = match cache.and_then(|c| c.get(s)) {
+                    Some(hit) => hit,
+                    None => {
+                        let fresh = cell(s);
+                        simulated.fetch_add(1, Ordering::Relaxed);
+                        if let Some(c) = cache {
+                            // Best-effort: an unwritable cache degrades
+                            // to recomputation, never to failure.
+                            let _ = c.put(s, &fresh);
+                        }
+                        fresh
+                    }
+                };
+                tx.send((i, result)).expect("collector outlives workers");
+            });
+        }
+        drop(tx); // the collector's loop ends when every worker is done
+        for (i, result) in rx {
+            slots[i] = Some(result);
+        }
+    });
+
+    let mut cells: Vec<(Scenario, CellResult)> = Vec::with_capacity(scenarios.len());
+    for (s, slot) in scenarios.iter().zip(slots.into_iter()) {
+        let result = slot.expect("every cell completed (a worker panicked mid-sweep?)");
+        cells.push((s.clone(), result));
+    }
+    let simulated = simulated.load(Ordering::Relaxed);
+    Outcome {
+        stats: RunStats {
+            simulated,
+            cached: cells.len() - simulated,
+            jobs,
+            wall_s: t0.elapsed().as_secs_f64(),
+        },
+        cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::grid;
+
+    fn smoke_cells() -> Vec<Scenario> {
+        grid::by_name("smoke", 7).unwrap().expand()
+    }
+
+    /// Synthetic cell function: cheap, deterministic, scenario-dependent.
+    fn fake_cell(s: &Scenario) -> CellResult {
+        let mut r = CellResult::new();
+        r.set("iter_time_s", (s.net.len() + s.framework.len()) as f64 / 100.0)
+            .set("samples_per_s", s.gpus_per_node as f64);
+        r
+    }
+
+    #[test]
+    fn results_keep_scenario_order_regardless_of_jobs() {
+        let cells = smoke_cells();
+        let serial = run_with(&cells, 1, None, fake_cell);
+        for jobs in [2, 4, 8] {
+            let parallel = run_with(&cells, jobs, None, fake_cell);
+            assert_eq!(parallel.cells.len(), cells.len());
+            for (i, ((sa, ra), (sb, rb))) in
+                serial.cells.iter().zip(parallel.cells.iter()).enumerate()
+            {
+                assert_eq!(sa.key(), sb.key(), "cell {i} order");
+                assert_eq!(ra, rb, "cell {i} result");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_count_simulated_vs_cached() {
+        let dir = std::env::temp_dir().join(format!("dagsgd-runner-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = Cache::open(&dir).unwrap();
+        let cells = smoke_cells();
+
+        let first = run_with(&cells, 2, Some(&cache), fake_cell);
+        assert_eq!(first.stats.simulated, cells.len());
+        assert_eq!(first.stats.cached, 0);
+
+        let second = run_with(&cells, 2, Some(&cache), fake_cell);
+        assert_eq!(second.stats.simulated, 0, "second sweep must be all hits");
+        assert_eq!(second.stats.cached, cells.len());
+        for ((_, a), (_, b)) in first.cells.iter().zip(second.cells.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn run_validates_scenarios_up_front() {
+        let mut cells = smoke_cells();
+        cells[1].framework = "pytorch".into();
+        let err = run(&cells, 2, None).unwrap_err();
+        assert!(err.contains("unknown framework"), "{err}");
+    }
+
+    #[test]
+    fn empty_scenario_list_is_fine() {
+        let out = run_with(&[], 4, None, fake_cell);
+        assert!(out.cells.is_empty());
+        assert_eq!(out.stats.simulated + out.stats.cached, 0);
+    }
+}

@@ -175,7 +175,11 @@ mod tests {
     use crate::models::zoo;
     use crate::util::units::us;
 
-    fn topo_of(cluster: &crate::cluster::topology::ClusterSpec, nodes: usize, g: usize) -> CommTopo {
+    fn topo_of(
+        cluster: &crate::cluster::topology::ClusterSpec,
+        nodes: usize,
+        g: usize,
+    ) -> CommTopo {
         CommTopo {
             nodes,
             gpus_per_node: g,

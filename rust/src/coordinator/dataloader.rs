@@ -97,7 +97,8 @@ impl Loader {
         let handle = std::thread::Builder::new()
             .name(format!("loader{shard}"))
             .spawn(move || {
-                let mut rng = Rng::new(seed ^ (0x9E37_79B9_97F4_A7C5u64.wrapping_mul(shard as u64 + 1)));
+                let mut rng =
+                    Rng::new(seed ^ (0x9E37_79B9_97F4_A7C5u64.wrapping_mul(shard as u64 + 1)));
                 loop {
                     let b = spec.generate(batch, seq, &mut rng);
                     if tx.send(b).is_err() {

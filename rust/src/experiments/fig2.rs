@@ -1,11 +1,21 @@
 //! Fig. 2 — single-node scaling: throughput speedup of 1/2/4 GPUs in one
 //! machine, for every framework × network, on both clusters.
 //! The baseline is one GPU of the same machine.
+//!
+//! The experiment is a thin campaign definition: [`scenarios`] declares
+//! the grid (every net × framework at one node, a 1-GPU baseline cell
+//! plus one cell per requested GPU count) and the shared campaign
+//! runner sweeps it in parallel; [`run`] only derives the speedup
+//! points from the cell results. The numbers are identical to the
+//! pre-campaign bespoke loop (property-tested in `tests/campaign.rs`).
 
+use crate::campaign::grid::{measure_cell, CellResult, Grid, Interconnect, Scenario};
+use crate::campaign::runner;
 use crate::cluster::topology::ClusterSpec;
-use crate::dag::builder::{throughput, JobSpec};
+use crate::dag::builder::JobSpec;
 use crate::frameworks::strategy::{self, Strategy};
 use crate::models::zoo;
+use crate::sim::scheduler::SchedulerKind;
 use crate::util::table::{f, Table};
 
 /// One measurement point.
@@ -19,17 +29,70 @@ pub struct Point {
     pub speedup: f64,
 }
 
+/// The Fig. 2 scenario grid for one cluster.
+pub fn scenarios(cluster: &ClusterSpec, gpu_counts: &[usize]) -> Vec<Scenario> {
+    let mut topologies = vec![(1, 1)];
+    for &g in gpu_counts {
+        if g != 1 {
+            topologies.push((1, g));
+        }
+    }
+    Grid {
+        name: "fig2".into(),
+        clusters: vec![cluster.name.clone()],
+        interconnects: vec![Interconnect::Stock],
+        nets: zoo::all().iter().map(|n| n.name.clone()).collect(),
+        frameworks: strategy::all().iter().map(|s| s.name.clone()).collect(),
+        topologies,
+        schedulers: vec![SchedulerKind::Fifo],
+        layerwise: vec![false],
+        iterations: 8,
+        seed: 0,
+    }
+    .expand()
+}
+
+/// Standard cell measurement against an explicit `ClusterSpec` (the
+/// scenario's cluster name is a label here, so Fig. 2/3 work for any
+/// spec, not just the named presets).
+pub fn measure_scenario_on(cluster: &ClusterSpec, s: &Scenario) -> CellResult {
+    let net = zoo::by_name(&s.net).expect("fig scenario net");
+    let fw = strategy::by_name(&s.framework).expect("fig scenario framework");
+    let job = JobSpec {
+        batch_per_gpu: s.batch_per_gpu.unwrap_or(net.default_batch),
+        net,
+        nodes: s.nodes,
+        gpus_per_node: s.gpus_per_node,
+        iterations: s.iterations,
+    };
+    measure_cell(cluster, &job, &fw, s.scheduler)
+}
+
 /// Run the Fig. 2 sweep on one cluster.
 pub fn run(cluster: &ClusterSpec, gpu_counts: &[usize]) -> Vec<Point> {
+    let cells = scenarios(cluster, gpu_counts);
+    let outcome = runner::run_with(&cells, runner::auto_jobs(), None, |s| {
+        measure_scenario_on(cluster, s)
+    });
+    let tput = |net: &str, fw: &str, gpus: usize| -> f64 {
+        outcome
+            .cells
+            .iter()
+            .find(|(s, _)| {
+                s.net == net && s.framework == fw && s.nodes == 1 && s.gpus_per_node == gpus
+            })
+            .and_then(|(_, r)| r.get("samples_per_s"))
+            .expect("cell present in fig2 campaign")
+    };
     let mut out = Vec::new();
     for net in zoo::all() {
         for fw in strategy::all() {
-            let base = measure(cluster, &net.name, &fw, 1, 1);
+            let base = tput(&net.name, &fw.name, 1);
             for &g in gpu_counts {
                 let tp = if g == 1 {
                     base
                 } else {
-                    measure(cluster, &net.name, &fw, 1, g)
+                    tput(&net.name, &fw.name, g)
                 };
                 out.push(Point {
                     cluster: cluster.name.clone(),
@@ -61,7 +124,9 @@ pub fn measure(
         gpus_per_node,
         iterations: 8,
     };
-    throughput(cluster, &job, fw)
+    measure_cell(cluster, &job, fw, fw.default_scheduler)
+        .get("samples_per_s")
+        .expect("standard cell reports samples_per_s")
 }
 
 /// Render points as the paper's figure: speedup per GPU count.
@@ -142,5 +207,14 @@ mod tests {
         let s = render(&pts);
         // 3 nets × 4 fw × 2 gpu-counts + header + separator.
         assert_eq!(s.lines().count(), 3 * 4 * 2 + 2);
+    }
+
+    /// The campaign grid holds exactly the cells the figure needs: one
+    /// baseline plus one per non-baseline GPU count, per net × fw.
+    #[test]
+    fn scenario_grid_shape() {
+        let cells = scenarios(&presets::k80_cluster(), &[1, 2, 4]);
+        assert_eq!(cells.len(), 3 * 4 * 3);
+        assert!(cells.iter().all(|s| s.nodes == 1));
     }
 }

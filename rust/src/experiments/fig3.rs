@@ -1,10 +1,18 @@
 //! Fig. 3 — multi-node scaling: speedup of 4/8/16 GPUs (1/2/4 machines
 //! with 4 GPUs each); the baseline is one 4-GPU machine.
+//!
+//! Like Fig. 2, a thin campaign definition: [`scenarios`] declares the
+//! node-count axis (baseline single node plus each requested count at
+//! the cluster's full GPUs/node) and [`run`] derives speedups from the
+//! campaign runner's cells.
 
-use super::fig2::measure;
+use super::fig2::measure_scenario_on;
+use crate::campaign::grid::{Grid, Interconnect, Scenario};
+use crate::campaign::runner;
 use crate::cluster::topology::ClusterSpec;
 use crate::frameworks::strategy;
 use crate::models::zoo;
+use crate::sim::scheduler::SchedulerKind;
 use crate::util::table::{f, Table};
 
 #[derive(Clone, Debug)]
@@ -19,16 +27,52 @@ pub struct Point {
     pub speedup: f64,
 }
 
+/// The Fig. 3 scenario grid for one cluster.
+pub fn scenarios(cluster: &ClusterSpec, node_counts: &[usize]) -> Vec<Scenario> {
+    let g = cluster.gpus_per_node;
+    let mut topologies = vec![(1, g)];
+    for &n in node_counts {
+        if n != 1 {
+            topologies.push((n, g));
+        }
+    }
+    Grid {
+        name: "fig3".into(),
+        clusters: vec![cluster.name.clone()],
+        interconnects: vec![Interconnect::Stock],
+        nets: zoo::all().iter().map(|n| n.name.clone()).collect(),
+        frameworks: strategy::all().iter().map(|s| s.name.clone()).collect(),
+        topologies,
+        schedulers: vec![SchedulerKind::Fifo],
+        layerwise: vec![false],
+        iterations: 8,
+        seed: 0,
+    }
+    .expand()
+}
+
 pub fn run(cluster: &ClusterSpec, node_counts: &[usize]) -> Vec<Point> {
+    let cells = scenarios(cluster, node_counts);
+    let outcome = runner::run_with(&cells, runner::auto_jobs(), None, |s| {
+        measure_scenario_on(cluster, s)
+    });
+    let tput = |net: &str, fw: &str, nodes: usize| -> f64 {
+        outcome
+            .cells
+            .iter()
+            .find(|(s, _)| s.net == net && s.framework == fw && s.nodes == nodes)
+            .and_then(|(_, r)| r.get("samples_per_s"))
+            .expect("cell present in fig3 campaign")
+    };
     let mut out = Vec::new();
     for net in zoo::all() {
         for fw in strategy::all() {
-            let base = measure(cluster, &net.name, &fw, 1, cluster.gpus_per_node);
+            let base = tput(&net.name, &fw.name, 1);
             for &n in node_counts {
                 let tp = if n == 1 {
                     base
                 } else {
-                    measure(cluster, &net.name, &fw, n, cluster.gpus_per_node)
+                    tput(&net.name, &fw.name, n)
                 };
                 out.push(Point {
                     cluster: cluster.name.clone(),
@@ -132,5 +176,22 @@ mod tests {
             let other = tput(fw);
             assert!(caffe >= other, "caffe {caffe:.0} vs {fw} {other:.0} samples/s");
         }
+    }
+
+    /// The campaign path and the direct single-cell `measure` agree
+    /// bit-for-bit (the refactor must not move any number).
+    #[test]
+    fn campaign_cells_match_direct_measure() {
+        let cluster = presets::k80_cluster();
+        let pts = run(&cluster, &[1, 2]);
+        let fw = crate::frameworks::strategy::mxnet();
+        let direct =
+            crate::experiments::fig2::measure(&cluster, "googlenet", &fw, 2, cluster.gpus_per_node);
+        let via_campaign = pts
+            .iter()
+            .find(|p| p.net == "googlenet" && p.framework == "mxnet" && p.nodes == 2)
+            .unwrap()
+            .samples_per_s;
+        assert_eq!(direct.to_bits(), via_campaign.to_bits());
     }
 }

@@ -43,7 +43,8 @@ pub fn hardware_table() -> String {
 
 /// Table III + §IV.C: frameworks and their optimization strategies.
 pub fn framework_table() -> String {
-    let mut t = Table::new(&["framework", "io prefetch", "h2d prestage", "wfbp", "decode", "backend"]);
+    let mut t =
+        Table::new(&["framework", "io prefetch", "h2d prestage", "wfbp", "decode", "backend"]);
     for s in strategy::all() {
         t.row(&[
             s.name.clone(),

@@ -11,7 +11,14 @@
 //! critical path; `FifoScheduler` then reproduces insertion-order
 //! frameworks, while `PriorityScheduler` overlaps the tail of the
 //! gradient exchange with the next forward pass.
+//!
+//! The experiment is a campaign over the scheduler axis: [`scenarios`]
+//! declares one cell per policy (FIFO baseline first), [`policy_cell`]
+//! is the per-cell measurement, and the shared runner sweeps the cells
+//! in parallel.
 
+use crate::campaign::grid::{CellResult, Interconnect, Scenario};
+use crate::campaign::runner;
 use crate::cluster::topology::ClusterSpec;
 use crate::dag::builder::{build_ssgd_dag, JobSpec};
 use crate::frameworks::strategy::Strategy;
@@ -34,6 +41,58 @@ pub struct Point {
 /// Measured warmup iterations before steady-state timing.
 const WARMUP: usize = 2;
 
+/// One scenario per policy; the FIFO baseline is always the first cell,
+/// whether or not it was requested.
+pub fn scenarios(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    strategy: &Strategy,
+    kinds: &[SchedulerKind],
+) -> Vec<Scenario> {
+    let mut order = vec![SchedulerKind::Fifo];
+    order.extend(kinds.iter().copied().filter(|&k| k != SchedulerKind::Fifo));
+    order
+        .into_iter()
+        .map(|scheduler| Scenario {
+            cluster: cluster.name.clone(),
+            interconnect: Interconnect::Stock,
+            net: job.net.name.clone(),
+            framework: strategy.name.clone(),
+            nodes: job.nodes,
+            gpus_per_node: job.gpus_per_node,
+            batch_per_gpu: Some(job.batch_per_gpu),
+            iterations: job.iterations,
+            scheduler,
+            layerwise_update: strategy.layerwise_update,
+            seed: 0,
+        })
+        .collect()
+}
+
+/// Per-policy cell: build the job's DAG, simulate it under `kind`, and
+/// report makespan, steady-state iteration time and engine events. The
+/// steady-state iteration doubles as the schema's required
+/// `iter_time_s`/`samples_per_s` pair so sched cells flow through the
+/// shared report/cache plumbing like every other campaign cell.
+pub fn policy_cell(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    strategy: &Strategy,
+    kind: SchedulerKind,
+) -> CellResult {
+    let (dag, res) = build_ssgd_dag(cluster, job, strategy);
+    let mut sched = kind.build(&job.net);
+    let sim = simulate_with(&dag, &res.pool, sched.as_mut());
+    let steady = steady_state_from(&sim, &dag, job.iterations, WARMUP);
+    let mut r = CellResult::new();
+    r.set("makespan_s", sim.makespan)
+        .set("steady_iter_s", steady)
+        .set("iter_time_s", steady)
+        .set("samples_per_s", (job.ranks() * job.batch_per_gpu) as f64 / steady)
+        .set("events", sim.events as f64);
+    r
+}
+
 /// Simulate `job` under each policy in `kinds` (FIFO is always measured
 /// first as the baseline, whether or not it is requested).
 pub fn run(
@@ -46,32 +105,29 @@ pub fn run(
     if job.iterations < WARMUP + 4 {
         job.iterations = WARMUP + 4;
     }
-    let (dag, res) = build_ssgd_dag(cluster, &job, strategy);
-
-    let measure = |kind: SchedulerKind| -> Point {
-        let mut sched = kind.build(&job.net);
-        let sim = simulate_with(&dag, &res.pool, sched.as_mut());
-        Point {
-            scheduler: kind.name(),
-            makespan: sim.makespan,
-            steady_iter: steady_state_from(&sim, &dag, job.iterations, WARMUP),
-            speedup_vs_fifo: 1.0,
-            events: sim.events,
-        }
-    };
-
-    let baseline = measure(SchedulerKind::Fifo);
-    let base_iter = baseline.steady_iter;
-    let mut points = vec![baseline];
-    for &kind in kinds {
-        if kind == SchedulerKind::Fifo {
-            continue;
-        }
-        let mut p = measure(kind);
-        p.speedup_vs_fifo = base_iter / p.steady_iter;
-        points.push(p);
-    }
-    points
+    let cells = scenarios(cluster, &job, strategy, kinds);
+    let outcome = runner::run_with(&cells, runner::auto_jobs(), None, |s| {
+        policy_cell(cluster, &job, strategy, s.scheduler)
+    });
+    let base_iter = outcome.cells[0].1.get("steady_iter_s").expect("fifo baseline cell");
+    outcome
+        .cells
+        .iter()
+        .map(|(s, r)| {
+            let steady = r.get("steady_iter_s").expect("sched cell metric");
+            Point {
+                scheduler: s.scheduler.name(),
+                makespan: r.get("makespan_s").expect("sched cell metric"),
+                steady_iter: steady,
+                speedup_vs_fifo: if s.scheduler == SchedulerKind::Fifo {
+                    1.0
+                } else {
+                    base_iter / steady
+                },
+                events: r.get("events").expect("sched cell metric") as u64,
+            }
+        })
+        .collect()
 }
 
 /// Render the comparison as the experiment's table.
@@ -159,5 +215,23 @@ mod tests {
         for kind in SchedulerKind::all() {
             assert!(s.contains(kind.name()), "missing {}", kind.name());
         }
+    }
+
+    /// The scenario list carries the job's exact batch/topology and pins
+    /// FIFO first, deduplicating repeated requests.
+    #[test]
+    fn scenario_axis_shape() {
+        let (cluster, job, fw) = setup();
+        let cells = scenarios(
+            &cluster,
+            &job,
+            &fw,
+            &[SchedulerKind::Fifo, SchedulerKind::Priority, SchedulerKind::Fifo],
+        );
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].scheduler, SchedulerKind::Fifo);
+        assert_eq!(cells[1].scheduler, SchedulerKind::Priority);
+        assert_eq!(cells[0].batch_per_gpu, Some(job.batch_per_gpu));
+        assert!(cells[0].layerwise_update);
     }
 }

@@ -86,6 +86,13 @@ pub mod analytic {
     pub mod speedup;
 }
 
+pub mod campaign {
+    pub mod cache;
+    pub mod grid;
+    pub mod report;
+    pub mod runner;
+}
+
 pub mod experiments;
 
 pub mod bench {

@@ -7,6 +7,7 @@
 //!   sweep     [flags]            Fig. 2/3 scaling sweeps
 //!   fig4      [flags]            DAG prediction vs simulation accuracy
 //!   sched     [flags]            scheduler-policy comparison on one job
+//!   campaign  [flags]            parallel scenario sweep with cached results
 //!   traces    [flags]            emit the §VI layer-wise trace dataset
 //!   train     [flags]            real S-SGD training via PJRT artifacts
 //!
@@ -39,12 +40,13 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "fig4" => cmd_fig4(&args),
         "sched" | "schedulers" => cmd_sched(&args),
+        "campaign" => cmd_campaign(&args),
         "traces" => cmd_traces(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),
         other => {
             eprintln!(
-                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|traces|train|analyze> [--flags]\n\
+                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|train|analyze> [--flags]\n\
                  see README.md for per-command flags"
             );
             if other == "help" {
@@ -105,12 +107,12 @@ fn scheduler_arg(args: &Args) -> SchedulerKind {
     parse_scheduler(&args.str_or("scheduler", "fifo"))
 }
 
-/// Parse `--scheduler` as a comma list; default: every policy.
+/// Parse `--scheduler` as a comma list; default: every registered policy.
 fn scheduler_list_arg(args: &Args) -> Vec<SchedulerKind> {
-    args.str_list_or("scheduler", &["fifo", "priority", "critical-path", "fusion"])
-        .iter()
-        .map(|n| parse_scheduler(n))
-        .collect()
+    match args.get("scheduler") {
+        None => SchedulerKind::all().to_vec(),
+        Some(v) => v.split(',').map(|n| parse_scheduler(n.trim())).collect(),
+    }
 }
 
 /// `dagsgd sched` — the scheduler-policy comparison experiment: one
@@ -137,6 +139,105 @@ fn cmd_sched(args: &Args) -> i32 {
     let kinds = scheduler_list_arg(args);
     let pts = sched::run(&cluster, &job, &fw, &kinds);
     print!("{}", sched::render(&job, &cluster, &fw, &pts));
+    0
+}
+
+/// `dagsgd campaign` — expand a named scenario grid (framework × net ×
+/// cluster × interconnect × topology × scheduler), sweep it on a worker
+/// pool with a content-hash result cache, print the cell table, and
+/// write the schema-versioned `BENCH_campaign.json`.
+///
+/// Flags: `--grid paper|smoke|sched|interconnect`, `--jobs N|auto`,
+/// `--cache-dir DIR|none`, `--filter SUBSTR`, `--seed N`, `--iters N`,
+/// `--out PATH`. Tooling modes (no sweep): `--check-bench FILE`
+/// validates a report against the schema; `--canon FILE` prints its
+/// deterministic canonical form (CI's replay job diffs two of these).
+fn cmd_campaign(args: &Args) -> i32 {
+    use dagsgd::campaign::{cache::Cache, grid, report, runner};
+    use dagsgd::util::json;
+
+    // Tooling modes: validate / canonicalize an existing report file
+    // (each reads its own flag's path; --canon wins if both are given).
+    let tooling = args
+        .get("canon")
+        .map(|p| (p, true))
+        .or_else(|| args.get("check-bench").map(|p| (p, false)));
+    if let Some((path, canon_mode)) = tooling {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 1;
+            }
+        };
+        let parsed = match json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("{path}: invalid JSON: {e}");
+                return 1;
+            }
+        };
+        return match report::canonical(&parsed) {
+            Ok(canon) => {
+                if canon_mode {
+                    println!("{canon}");
+                } else {
+                    let cells = canon
+                        .get("cells")
+                        .and_then(|c| c.as_arr())
+                        .map(|c| c.len())
+                        .unwrap_or(0);
+                    println!("{path}: ok (schema v{}, {cells} cells)", report::SCHEMA_VERSION);
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("{path}: schema check failed: {e}");
+                1
+            }
+        };
+    }
+
+    let seed = args.u64_or("seed", 7);
+    let grid_name = args.str_or("grid", "paper");
+    let Some(mut grid) = grid::by_name(&grid_name, seed) else {
+        eprintln!("unknown grid '{grid_name}' (try {})", grid::names().join(", "));
+        return 2;
+    };
+    grid.iterations = args.usize_or("iters", grid.iterations);
+    let scenarios = grid.expand_filtered(args.get("filter"));
+    if scenarios.is_empty() {
+        eprintln!("--filter matched none of the {} cells", grid.len());
+        return 2;
+    }
+    let jobs = args.parallelism_or("jobs", 4);
+    let cache_dir = args.str_or("cache-dir", ".campaign-cache");
+    let cache = if cache_dir == "none" {
+        None
+    } else {
+        match Cache::open(&cache_dir) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("cannot open cache dir {cache_dir}: {e}");
+                return 1;
+            }
+        }
+    };
+    let outcome = match runner::run(&scenarios, jobs, cache.as_ref()) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("invalid scenario: {e}");
+            return 2;
+        }
+    };
+    print!("{}", report::render_table(&outcome));
+    println!("{grid_name}: {}", report::summary(&outcome));
+    let out = args.str_or("out", "BENCH_campaign.json");
+    if let Err(e) = std::fs::write(&out, report::to_json(&grid_name, &outcome).to_string()) {
+        eprintln!("cannot write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {out}");
     0
 }
 
@@ -179,18 +280,22 @@ fn cmd_simulate(args: &Args) -> i32 {
     let mut sched = kind.build(&job.net);
     let (mut dag, res) = builder::build_ssgd_dag(&cluster, &job, &fw);
     let faults = faults_arg(args);
-    if !faults.is_empty() {
-        let healthy = executor::simulate_with(&dag, &res.pool, sched.as_mut()).makespan;
+    let healthy = if faults.is_empty() {
+        None
+    } else {
+        let h = executor::simulate_with(&dag, &res.pool, sched.as_mut()).makespan;
         dagsgd::sim::failures::inject(&mut dag, &res.pool, &faults);
-        let faulty = executor::simulate_with(&dag, &res.pool, sched.as_mut()).makespan;
+        Some(h)
+    };
+    let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
+    if let Some(healthy) = healthy {
         println!(
             "fault injection: makespan {} -> {} (+{:.1}%)",
             fmt_dur(healthy),
-            fmt_dur(faulty),
-            100.0 * (faulty - healthy) / healthy
+            fmt_dur(sim.makespan),
+            100.0 * (sim.makespan - healthy) / healthy
         );
     }
-    let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
     // Steady state from the (possibly fault-injected) DAG itself.
     let iter_time = if faults.is_empty() {
         builder::iteration_time_with(&cluster, &job, &fw, sched.as_mut())
@@ -403,9 +508,15 @@ fn cmd_analyze(args: &Args) -> i32 {
 
     let compute = inputs.t_f() + inputs.t_b() + tc_no;
     let pipe = inputs.t_io + inputs.t_h2d;
+    let bottleneck = if pipe > compute {
+        "INPUT PIPELINE"
+    } else if tc_no > 0.05 * inputs.t_b() {
+        "COMMUNICATION"
+    } else {
+        "COMPUTE"
+    };
     println!(
-        "\nbottleneck: {} (input pipe {} vs compute+comm {})",
-        if pipe > compute { "INPUT PIPELINE" } else if tc_no > 0.05 * inputs.t_b() { "COMMUNICATION" } else { "COMPUTE" },
+        "\nbottleneck: {bottleneck} (input pipe {} vs compute+comm {})",
         fmt_dur(pipe),
         fmt_dur(compute)
     );

@@ -144,6 +144,8 @@ mod tests {
         let e = PjRtClient::cpu().unwrap_err();
         assert!(e.to_string().contains("not available"));
         assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
-        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4]).is_err());
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4]).is_err()
+        );
     }
 }

@@ -53,7 +53,12 @@ impl ResourcePool {
         Self::default()
     }
 
-    pub fn add(&mut self, name: impl Into<String>, class: ResourceClass, capacity: usize) -> ResourceId {
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        class: ResourceClass,
+        capacity: usize,
+    ) -> ResourceId {
         assert!(capacity >= 1);
         self.specs.push(ResourceSpec {
             name: name.into(),

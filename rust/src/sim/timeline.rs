@@ -75,7 +75,10 @@ pub fn ascii_gantt(dag: &Dag, pool: &ResourcePool, res: &SimResult, width: usize
 }
 
 /// Per-resource utilization summary rows: (name, class, busy_s, util).
-pub fn utilization_rows(pool: &ResourcePool, res: &SimResult) -> Vec<(String, &'static str, f64, f64)> {
+pub fn utilization_rows(
+    pool: &ResourcePool,
+    res: &SimResult,
+) -> Vec<(String, &'static str, f64, f64)> {
     pool.specs
         .iter()
         .enumerate()

@@ -5,6 +5,14 @@
 
 use std::collections::BTreeMap;
 
+/// The host's available parallelism (≥ 1) — the single definition
+/// behind `--jobs auto` and the campaign runner's default worker count.
+pub fn host_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
@@ -98,6 +106,23 @@ impl Args {
         }
     }
 
+    /// Worker-count flag: a positive integer, or `0`/`auto` for the
+    /// host's available parallelism (used by `campaign --jobs`).
+    pub fn parallelism_or(&self, key: &str, default: usize) -> usize {
+        let n = match self.get(key) {
+            None => default,
+            Some("auto") => 0,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects an integer or 'auto', got '{v}'")
+            }),
+        };
+        if n == 0 {
+            host_parallelism()
+        } else {
+            n
+        }
+    }
+
     /// Comma-separated list of integers, e.g. `--gpus 1,2,4`.
     pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
         match self.get(key) {
@@ -174,6 +199,21 @@ mod tests {
     fn bad_choice_panics() {
         let a = parse("--scheduler yolo");
         a.choice_or("scheduler", &["fifo", "priority"], "fifo");
+    }
+
+    #[test]
+    fn parallelism_values() {
+        assert_eq!(parse("--jobs 3").parallelism_or("jobs", 4), 3);
+        assert_eq!(parse("").parallelism_or("jobs", 4), 4);
+        // 0 and 'auto' resolve to the host parallelism (≥ 1).
+        assert!(parse("--jobs 0").parallelism_or("jobs", 4) >= 1);
+        assert!(parse("--jobs auto").parallelism_or("jobs", 4) >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer or 'auto'")]
+    fn parallelism_rejects_garbage() {
+        parse("--jobs many").parallelism_or("jobs", 4);
     }
 
     #[test]

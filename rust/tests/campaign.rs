@@ -1,0 +1,214 @@
+//! Integration tests for the campaign subsystem: grid expansion, cache
+//! semantics, report schema, replay determinism, and the bit-identity
+//! contract between campaign cells and the underlying experiments.
+
+use dagsgd::campaign::cache::Cache;
+use dagsgd::campaign::grid::{self, Grid, Interconnect, Scenario};
+use dagsgd::campaign::{report, runner};
+use dagsgd::cluster::presets;
+use dagsgd::dag::builder::{self, JobSpec};
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::prop_assert;
+use dagsgd::sim::scheduler::SchedulerKind;
+use dagsgd::util::json;
+use dagsgd::util::quickcheck::{check, Gen};
+use std::path::PathBuf;
+
+/// A fresh per-test cache directory under the system temp dir.
+fn tmp_cache(tag: &str) -> (PathBuf, Cache) {
+    let dir = std::env::temp_dir().join(format!("dagsgd-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = Cache::open(&dir).unwrap();
+    (dir, cache)
+}
+
+#[test]
+fn paper_grid_meets_acceptance_scale() {
+    let g = grid::by_name("paper", 7).unwrap();
+    let cells = g.expand();
+    // ≥ 24 cells, full cartesian product, unique keys, all resolvable.
+    assert!(cells.len() >= 24, "paper grid has {} cells", cells.len());
+    assert_eq!(cells.len(), g.len());
+    let mut keys: Vec<String> = cells.iter().map(|s| s.key()).collect();
+    keys.sort();
+    keys.dedup();
+    assert_eq!(keys.len(), g.len(), "cell keys must be unique");
+    for s in &cells {
+        s.resolve().unwrap();
+    }
+}
+
+#[test]
+fn filter_narrows_expansion() {
+    let g = grid::by_name("paper", 7).unwrap();
+    let all = g.expand_filtered(None).len();
+    let resnet = g.expand_filtered(Some("net=resnet50"));
+    assert_eq!(resnet.len(), all / 3, "one of three nets");
+    assert!(resnet.iter().all(|s| s.net == "resnet50"));
+    let one_cell = g.expand_filtered(Some(
+        "cluster=v100 interconnect=stock net=alexnet fw=mxnet nodes=4",
+    ));
+    assert_eq!(one_cell.len(), 1);
+    assert!(g.expand_filtered(Some("fw=pytorch")).is_empty());
+}
+
+/// Second run of an identical grid does zero simulation and returns
+/// bit-identical cells.
+#[test]
+fn cache_hit_does_zero_simulation() {
+    let scenarios = grid::by_name("smoke", 7).unwrap().expand();
+    let (dir, cache) = tmp_cache("hit");
+
+    let first = runner::run(&scenarios, 2, Some(&cache)).unwrap();
+    assert_eq!(first.stats.simulated, scenarios.len());
+    assert_eq!(first.stats.cached, 0);
+
+    let second = runner::run(&scenarios, 2, Some(&cache)).unwrap();
+    assert_eq!(second.stats.simulated, 0, "second run must be all cache hits");
+    assert_eq!(second.stats.cached, scenarios.len());
+
+    for ((sa, ra), (sb, rb)) in first.cells.iter().zip(second.cells.iter()) {
+        assert_eq!(sa.key(), sb.key());
+        assert_eq!(ra.metrics.len(), rb.metrics.len());
+        for (k, v) in &ra.metrics {
+            assert_eq!(
+                rb.get(k).unwrap().to_bits(),
+                v.to_bits(),
+                "{}: metric {k} must survive the cache bit-identically",
+                sa.key()
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A changed seed is a different cell: nothing is served from the old
+/// entries.
+#[test]
+fn cache_misses_on_different_seed() {
+    let (dir, cache) = tmp_cache("seed");
+    let a = grid::by_name("smoke", 1).unwrap().expand();
+    let b = grid::by_name("smoke", 2).unwrap().expand();
+    let first = runner::run(&a, 2, Some(&cache)).unwrap();
+    assert_eq!(first.stats.simulated, a.len());
+    let second = runner::run(&b, 2, Some(&cache)).unwrap();
+    assert_eq!(second.stats.simulated, b.len(), "new seed must re-simulate");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The refactored experiments route through campaign cells; a campaign
+/// cell must therefore be bit-identical to calling the simulator
+/// directly, for random scenarios.
+#[test]
+fn property_campaign_cell_matches_direct_experiment() {
+    let cluster = presets::k80_cluster();
+    check(8, |g: &mut Gen| {
+        let net = *g.choice(&["googlenet", "resnet50"]);
+        let fw_name = *g.choice(&["caffe-mpi", "cntk", "mxnet", "tensorflow"]);
+        let (nodes, gpus) = *g.choice(&[(1usize, 1usize), (1, 2), (2, 2)]);
+        let s = Scenario {
+            cluster: "k80".into(),
+            interconnect: Interconnect::Stock,
+            net: net.into(),
+            framework: fw_name.into(),
+            nodes,
+            gpus_per_node: gpus,
+            batch_per_gpu: None,
+            iterations: 8,
+            scheduler: SchedulerKind::Fifo,
+            layerwise_update: false,
+            seed: 0,
+        };
+        let cell = s.run().map_err(|e| e.to_string())?;
+
+        let net_spec = zoo::by_name(net).unwrap();
+        let job = JobSpec {
+            batch_per_gpu: net_spec.default_batch,
+            net: net_spec,
+            nodes,
+            gpus_per_node: gpus,
+            iterations: 8,
+        };
+        let fw = strategy::by_name(fw_name).unwrap();
+        let direct_iter = builder::iteration_time(&cluster, &job, &fw);
+        let direct_tput = builder::throughput(&cluster, &job, &fw);
+
+        let cell_iter = cell.get("iter_time_s").unwrap();
+        let cell_tput = cell.get("samples_per_s").unwrap();
+        prop_assert!(
+            cell_iter.to_bits() == direct_iter.to_bits(),
+            "iter_time {cell_iter} != direct {direct_iter} for {}",
+            s.key()
+        );
+        prop_assert!(
+            cell_tput.to_bits() == direct_tput.to_bits(),
+            "samples_per_s {cell_tput} != direct {direct_tput} for {}",
+            s.key()
+        );
+        Ok(())
+    });
+}
+
+/// End-to-end report pipeline: sweep → JSON → parse → validate →
+/// canonical form stable across a replay *and* across cache-served runs.
+#[test]
+fn replay_and_cache_produce_identical_canonical_reports() {
+    let scenarios = grid::by_name("smoke", 7).unwrap().expand();
+
+    // Two independent sweeps (fresh simulation each).
+    let run1 = runner::run(&scenarios, 1, None).unwrap();
+    let run2 = runner::run(&scenarios, 4, None).unwrap();
+    // One sweep served entirely from a pre-populated cache.
+    let (dir, cache) = tmp_cache("replay");
+    let _warm = runner::run(&scenarios, 2, Some(&cache)).unwrap();
+    let run3 = runner::run(&scenarios, 2, Some(&cache)).unwrap();
+    assert_eq!(run3.stats.simulated, 0);
+
+    let canon = |outcome: &runner::Outcome| -> String {
+        let j = report::to_json("smoke", outcome);
+        let text = j.to_string();
+        let parsed = json::parse(&text).unwrap();
+        assert!(report::validate(&parsed).is_ok());
+        report::canonical(&parsed).unwrap().to_string()
+    };
+    let (c1, c2, c3) = (canon(&run1), canon(&run2), canon(&run3));
+    assert_eq!(c1, c2, "replay with different worker counts must match");
+    assert_eq!(c1, c3, "cache-served sweep must serialize identically");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checker_rejects_tampered_reports() {
+    let scenarios = grid::by_name("smoke", 7).unwrap().expand();
+    let outcome = runner::run(&scenarios, 2, None).unwrap();
+    let good = report::to_json("smoke", &outcome).to_string();
+    assert!(report::validate(&json::parse(&good).unwrap()).is_ok());
+
+    // Version bump without a migration: rejected.
+    let bumped = good.replace("\"schema_version\":1", "\"schema_version\":99");
+    assert!(report::validate(&json::parse(&bumped).unwrap()).is_err());
+    // Wrong bench tag: rejected.
+    let tampered = good.replace("\"bench\":\"campaign\"", "\"bench\":\"other\"");
+    assert!(report::validate(&json::parse(&tampered).unwrap()).is_err());
+}
+
+/// `Grid::len` stays truthful for ad-hoc grids (the CLI prints it before
+/// sweeping).
+#[test]
+fn adhoc_grid_len_matches_expansion() {
+    let g = Grid {
+        name: "adhoc".into(),
+        clusters: vec!["k80".into(), "v100".into()],
+        interconnects: vec![Interconnect::Stock, Interconnect::TenGbE],
+        nets: vec!["googlenet".into()],
+        frameworks: vec!["caffe-mpi".into(), "mxnet".into()],
+        topologies: vec![(1, 2), (2, 2), (4, 4)],
+        schedulers: vec![SchedulerKind::Fifo, SchedulerKind::Priority],
+        layerwise: vec![false, true],
+        iterations: 8,
+        seed: 0,
+    };
+    assert_eq!(g.len(), 2 * 2 * 2 * 3 * 2 * 2);
+    assert_eq!(g.expand().len(), g.len());
+}
