@@ -1,0 +1,66 @@
+//! Bench: throughput of the calibration loop — trace-text parsing
+//! (ingest's hot path), parameter fitting, DAG replay, and the full
+//! text → profile → replay round trip over the §VI dataset shape
+//! (3 nets × 2 clusters, 16 GPUs, 50 iterations per trace).
+//!
+//!     cargo bench --bench calib_roundtrip
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::calib::{fit, replay};
+use dagsgd::frameworks::strategy;
+use dagsgd::sim::scheduler::SchedulerKind;
+use dagsgd::trace::dataset;
+use dagsgd::trace::format::Trace;
+
+fn main() {
+    let mut bench = Bench::new("calib_roundtrip").with_iters(1, 5);
+
+    let iters = 50;
+    let traces = dataset::generate_all(iters, 7);
+    let texts: Vec<String> = traces.iter().map(|t| t.to_text()).collect();
+    let total_mb: f64 = texts.iter().map(|t| t.len() as f64).sum::<f64>() / 1e6;
+    println!(
+        "dataset: {} traces x {iters} iterations, {:.2} MB of trace text",
+        texts.len(),
+        total_mb
+    );
+
+    let parsed = bench.case("ingest_parse (MB/s)", total_mb, || {
+        texts
+            .iter()
+            .map(|t| Trace::parse(t).expect("dataset text parses"))
+            .collect::<Vec<Trace>>()
+    });
+
+    let fw = strategy::caffe_mpi();
+    let profile = bench.case("fit (traces/s)", parsed.len() as f64, || {
+        fit::calibrate(&parsed, &fw).expect("dataset calibrates")
+    });
+
+    bench.case("replay_fifo (entries/s)", profile.entries.len() as f64, || {
+        profile
+            .entries
+            .iter()
+            .map(|e| {
+                replay::replay_entry(e, SchedulerKind::Fifo, &fw)
+                    .expect("profile entry resolvable")
+                    .iter_time_s
+            })
+            .sum::<f64>()
+    });
+
+    bench.case("roundtrip_e2e (traces/s)", texts.len() as f64, || {
+        let parsed: Vec<Trace> = texts.iter().map(|t| Trace::parse(t).unwrap()).collect();
+        let p = fit::calibrate(&parsed, &fw).unwrap();
+        p.entries
+            .iter()
+            .map(|e| {
+                replay::replay_entry(e, SchedulerKind::Fifo, &fw)
+                    .unwrap()
+                    .iter_time_s
+            })
+            .sum::<f64>()
+    });
+
+    bench.report();
+}

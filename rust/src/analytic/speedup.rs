@@ -15,11 +15,7 @@ pub fn iter_inputs(cluster: &ClusterSpec, job: &JobSpec, strategy: &Strategy) ->
     let d = durations(cluster, job, strategy);
     // Readers sharing one storage device: all GPUs of a node, or of the
     // whole cluster when storage is NFS.
-    let sharing = if cluster.shared_storage {
-        job.ranks()
-    } else {
-        job.gpus_per_node
-    } as f64;
+    let sharing = cluster.io_sharing(job.nodes, job.gpus_per_node);
     // Decode threads are per node.
     let io = d.io * sharing + d.decode * job.gpus_per_node as f64;
     IterInputs {

@@ -1,0 +1,626 @@
+//! Parameter fitting: turn ingested traces into calibrated simulator
+//! inputs — the workflow of "Performance Modeling and Evaluation of
+//! Distributed Deep Learning Frameworks on GPUs" (arXiv:1711.05979)
+//! applied to our models.
+//!
+//! Three fits per trace, each landing in the subsystem that consumes it:
+//!
+//! * **per-layer compute** → [`crate::models::perf`]: layer-kind
+//!   efficiency factors recovered by least squares over the measured
+//!   forward times of compute-bound Conv/Fc layers
+//!   ([`perf::fit_efficiency`]);
+//! * **communication** → [`crate::comm::alpha_beta`]: an effective α–β
+//!   channel fitted over (gradient size, all-reduce time) pairs
+//!   ([`Link::fit`]);
+//! * **framework overhead** → [`crate::frameworks::strategy`]: the
+//!   fitted intercept's excess over the backend model's per-collective
+//!   latency, installed as [`CalibratedComm`] on a [`Strategy`].
+//!
+//! The result is a serializable [`CalibratedProfile`]; `calib::replay`
+//! drives the DAG simulator from it and `calib::validate` scores the
+//! predictions against the trace.
+
+use crate::campaign::cache::fnv1a64;
+use crate::cluster::presets;
+use crate::cluster::topology::ClusterSpec;
+use crate::comm::alpha_beta::Link;
+use crate::dag::builder::comm_topo;
+use crate::frameworks::strategy::{CalibratedComm, Strategy};
+use crate::models::layer::{LayerKind, NetSpec};
+use crate::models::perf::{self, KERNEL_LAUNCH};
+use crate::models::zoo;
+use crate::trace::format::Trace;
+use crate::util::json::Json;
+
+/// Version of the profile file format; bump on any layout change.
+pub const PROFILE_SCHEMA_VERSION: u64 = 1;
+
+/// Mean measured costs of one layer, in seconds (the trace stores µs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerCal {
+    pub id: usize,
+    pub name: String,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub comm_s: f64,
+    pub size_bytes: u64,
+}
+
+/// The fitted α–β + overhead decomposition of the gradient channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommFit {
+    /// Hardware-attributable per-collective latency, seconds.
+    pub alpha_s: f64,
+    /// Achieved all-reduce bandwidth over message size, bytes/s.
+    pub bw_bps: f64,
+    /// Framework overhead beyond the backend model, seconds.
+    pub overhead_s: f64,
+    /// Number of (size, time) measurements the fit used.
+    pub samples: usize,
+}
+
+/// Everything calibrated from one trace (one net × cluster × GPUs ×
+/// batch job).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetCalibration {
+    pub net: String,
+    /// Cluster preset name (resolvable via [`presets::by_name`]).
+    pub cluster: String,
+    pub gpus: usize,
+    pub batch: usize,
+    /// Iterations the source trace averaged over.
+    pub iterations: usize,
+    /// Mean data-layer fetch time (the Table VI `data` row), seconds.
+    pub t_io_s: f64,
+    /// Fitted Conv/Fc efficiencies (`None`: no compute-bound sample).
+    pub eff_conv: Option<f64>,
+    pub eff_fc: Option<f64>,
+    /// Fitted gradient channel (`None`: single-GPU trace, or fewer than
+    /// two distinct gradient sizes).
+    pub comm: Option<CommFit>,
+    /// Mean per-layer costs, forward order (row 0 is the data layer).
+    pub layers: Vec<LayerCal>,
+}
+
+impl NetCalibration {
+    /// Human-readable entry key (report rows, CLI tables).
+    pub fn key(&self) -> String {
+        format!("{} @ {} g{} b{}", self.net, self.cluster, self.gpus, self.batch)
+    }
+
+    /// The fitted comm model as a strategy override.
+    pub fn calibrated_comm(&self) -> Option<CalibratedComm> {
+        self.comm.map(|c| CalibratedComm {
+            link: Link::new(c.alpha_s, c.bw_bps),
+            overhead_s: c.overhead_s,
+        })
+    }
+
+    /// Install the fitted comm model on a framework strategy, returning
+    /// the calibrated strategy (the campaign `calib` axis runs these).
+    pub fn apply_to(&self, fw: &Strategy) -> Strategy {
+        let mut out = fw.clone();
+        out.calibrated_comm = self.calibrated_comm().or(out.calibrated_comm);
+        out
+    }
+}
+
+/// A set of calibrations plus the framework they were measured under —
+/// the serializable artifact `dagsgd calibrate --out` writes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibratedProfile {
+    pub framework: String,
+    pub entries: Vec<NetCalibration>,
+}
+
+/// Factor a flat GPU count into `(nodes, gpus_per_node)` on a cluster:
+/// counts up to one node stay single-node; larger counts must fill
+/// whole nodes (the paper's configurations all do).
+pub fn split_ranks(cluster: &ClusterSpec, gpus: usize) -> Result<(usize, usize), String> {
+    if gpus == 0 {
+        return Err("trace reports 0 GPUs".into());
+    }
+    if gpus <= cluster.gpus_per_node {
+        return Ok((1, gpus));
+    }
+    if gpus % cluster.gpus_per_node != 0 {
+        return Err(format!(
+            "{gpus} GPUs is not a whole number of {}-GPU nodes",
+            cluster.gpus_per_node
+        ));
+    }
+    let nodes = gpus / cluster.gpus_per_node;
+    if nodes > cluster.nodes {
+        return Err(format!(
+            "{gpus} GPUs needs {nodes} nodes but cluster '{}' has {}",
+            cluster.name, cluster.nodes
+        ));
+    }
+    Ok((nodes, cluster.gpus_per_node))
+}
+
+/// Compute-bound filter: a layer's forward time carries efficiency
+/// information only when neither the memory floor nor the kernel-launch
+/// floor explains it.
+fn compute_bound(t: f64, mem_floor: f64) -> bool {
+    t > 1.3 * mem_floor && t > 2.0 * KERNEL_LAUNCH
+}
+
+/// Efficiency-fit samples for one layer kind: `(flops, seconds)` over
+/// the compute-bound layers of that kind.
+fn efficiency_samples(
+    net: &NetSpec,
+    layers: &[LayerCal],
+    batch: usize,
+    mem_bw: f64,
+    kind: LayerKind,
+) -> Vec<(f64, f64)> {
+    net.layers
+        .iter()
+        .zip(layers)
+        .filter(|(spec, _)| spec.kind == kind)
+        .filter_map(|(spec, cal)| {
+            let flops = 2.0 * spec.fwd_macs * batch as f64;
+            let mem_floor = 2.0 * 4.0 * spec.act_elems * batch as f64 / mem_bw;
+            if flops > 0.0 && compute_bound(cal.fwd_s, mem_floor) {
+                Some((flops, cal.fwd_s))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Calibrate one trace against the framework it was measured under.
+/// Errors when the trace names an unknown net or cluster, or its rows
+/// don't line up with the net's layer list — calibration needs the
+/// architecture numbers (MACs, activation sizes) behind each row.
+pub fn calibrate_one(trace: &Trace, fw: &Strategy) -> Result<NetCalibration, String> {
+    let net = zoo::by_name(&trace.net)
+        .ok_or_else(|| format!("unknown net '{}' in trace", trace.net))?;
+    let cluster = presets::by_name(&trace.cluster)
+        .ok_or_else(|| format!("unknown cluster '{}' in trace", trace.cluster))?;
+    let batch = if trace.batch > 0 { trace.batch } else { net.default_batch };
+    let rows = trace.mean_rows();
+    if rows.is_empty() {
+        return Err("trace has no iterations".into());
+    }
+    if rows.len() != net.layers.len() {
+        return Err(format!(
+            "trace has {} rows but {} has {} layers",
+            rows.len(),
+            net.name,
+            net.layers.len()
+        ));
+    }
+    for (spec, row) in net.layers.iter().zip(&rows) {
+        if spec.name != row.name {
+            return Err(format!(
+                "row {} is '{}' but {} expects '{}'",
+                row.id, row.name, net.name, spec.name
+            ));
+        }
+    }
+
+    let layers: Vec<LayerCal> = rows
+        .iter()
+        .map(|r| LayerCal {
+            id: r.id,
+            name: r.name.clone(),
+            fwd_s: r.forward_us * 1e-6,
+            bwd_s: r.backward_us * 1e-6,
+            comm_s: r.comm_us * 1e-6,
+            size_bytes: r.size_bytes,
+        })
+        .collect();
+    let t_io_s = net
+        .layers
+        .iter()
+        .zip(&layers)
+        .find(|(spec, _)| spec.kind == LayerKind::Data)
+        .map(|(_, cal)| cal.fwd_s)
+        .unwrap_or(0.0);
+
+    let eff_conv = perf::fit_efficiency(
+        &efficiency_samples(&net, &layers, batch, cluster.gpu.mem_bw, LayerKind::Conv),
+        cluster.gpu.peak_flops,
+    );
+    let eff_fc = perf::fit_efficiency(
+        &efficiency_samples(&net, &layers, batch, cluster.gpu.mem_bw, LayerKind::Fc),
+        cluster.gpu.peak_flops,
+    );
+
+    // The GPU count must map onto the cluster whether or not a comm fit
+    // succeeds — a comm-less trace with an infeasible count is just as
+    // unreplayable as one with comm data.
+    let (nodes, gpus_per_node) = split_ranks(&cluster, trace.gpus)?;
+
+    // α–β over the measured all-reduces; the intercept's excess over the
+    // backend model's per-collective latency is the framework overhead.
+    let comm_points: Vec<(f64, f64)> = layers
+        .iter()
+        .filter(|l| l.comm_s > 0.0 && l.size_bytes > 0)
+        .map(|l| (l.size_bytes as f64, l.comm_s))
+        .collect();
+    let comm = match Link::fit(&comm_points) {
+        Err(_) => None,
+        Ok(line) => {
+            let topo = comm_topo(&cluster, nodes, gpus_per_node);
+            let mut base = fw.clone();
+            base.calibrated_comm = None;
+            let hw_latency = base.comm_time(&topo, 1.0);
+            let overhead_s = (line.alpha - hw_latency).max(0.0);
+            Some(CommFit {
+                alpha_s: line.alpha - overhead_s,
+                bw_bps: line.bw,
+                overhead_s,
+                samples: comm_points.len(),
+            })
+        }
+    };
+
+    Ok(NetCalibration {
+        net: net.name,
+        cluster: cluster.name,
+        gpus: trace.gpus,
+        batch,
+        iterations: trace.iterations.len(),
+        t_io_s,
+        eff_conv,
+        eff_fc,
+        comm,
+        layers,
+    })
+}
+
+/// Calibrate a whole trace set (strict: the first bad trace is an
+/// error — the CLI loops [`calibrate_one`] itself to skip-and-report).
+pub fn calibrate(traces: &[Trace], fw: &Strategy) -> Result<CalibratedProfile, String> {
+    let entries = traces
+        .iter()
+        .map(|t| calibrate_one(t, fw).map_err(|e| format!("{} on {}: {e}", t.net, t.cluster)))
+        .collect::<Result<Vec<_>, String>>()?;
+    if entries.is_empty() {
+        return Err("no traces to calibrate".into());
+    }
+    Ok(CalibratedProfile {
+        framework: fw.name.clone(),
+        entries,
+    })
+}
+
+impl CalibratedProfile {
+    /// FNV-1a over the serialized profile — campaign cache keys for
+    /// profile-driven cells embed this, so editing a profile file is a
+    /// new cell, never a stale hit.
+    pub fn content_hash(&self) -> u64 {
+        fnv1a64(self.to_json().to_string().as_bytes())
+    }
+
+    /// Short content-addressed tag for cell keys and reports.
+    pub fn tag(&self) -> String {
+        format!("{}#{:016x}", self.framework, self.content_hash())
+    }
+
+    /// Serialize (schema v`PROFILE_SCHEMA_VERSION`).
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let layers: Vec<Json> = e
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("id", Json::num(l.id as f64)),
+                            ("name", Json::str(l.name.clone())),
+                            ("fwd_s", Json::num(l.fwd_s)),
+                            ("bwd_s", Json::num(l.bwd_s)),
+                            ("comm_s", Json::num(l.comm_s)),
+                            ("size_bytes", Json::num(l.size_bytes as f64)),
+                        ])
+                    })
+                    .collect();
+                let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+                Json::obj(vec![
+                    ("net", Json::str(e.net.clone())),
+                    ("cluster", Json::str(e.cluster.clone())),
+                    ("gpus", Json::num(e.gpus as f64)),
+                    ("batch", Json::num(e.batch as f64)),
+                    ("iterations", Json::num(e.iterations as f64)),
+                    ("t_io_s", Json::num(e.t_io_s)),
+                    ("eff_conv", opt(e.eff_conv)),
+                    ("eff_fc", opt(e.eff_fc)),
+                    (
+                        "comm",
+                        match e.comm {
+                            None => Json::Null,
+                            Some(c) => Json::obj(vec![
+                                ("alpha_s", Json::num(c.alpha_s)),
+                                ("bw_bps", Json::num(c.bw_bps)),
+                                ("overhead_s", Json::num(c.overhead_s)),
+                                ("samples", Json::num(c.samples as f64)),
+                            ]),
+                        },
+                    ),
+                    ("layers", Json::Arr(layers)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema_version", Json::num(PROFILE_SCHEMA_VERSION as f64)),
+            ("bench", Json::str("calibration-profile")),
+            ("framework", Json::str(self.framework.clone())),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Parse + validate a serialized profile.
+    pub fn from_json(j: &Json) -> Result<CalibratedProfile, String> {
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_f64())
+            .ok_or("missing schema_version")?;
+        if version != PROFILE_SCHEMA_VERSION as f64 {
+            return Err(format!(
+                "profile schema {version} != supported {PROFILE_SCHEMA_VERSION}"
+            ));
+        }
+        if j.get("bench").and_then(|v| v.as_str()) != Some("calibration-profile") {
+            return Err("bench tag must be \"calibration-profile\"".into());
+        }
+        let framework = j
+            .get("framework")
+            .and_then(|v| v.as_str())
+            .ok_or("missing framework")?
+            .to_string();
+        let entries_json = j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing entries array")?;
+        if entries_json.is_empty() {
+            return Err("entries array is empty".into());
+        }
+        let req_num = |cell: &Json, field: &str, at: &str| -> Result<f64, String> {
+            let v = cell
+                .get(field)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("{at}: missing numeric '{field}'"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{at}: '{field}' must be finite and ≥ 0"));
+            }
+            Ok(v)
+        };
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for (i, e) in entries_json.iter().enumerate() {
+            let at = format!("entries[{i}]");
+            let str_field = |field: &str| -> Result<String, String> {
+                e.get(field)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| format!("{at}: missing string '{field}'"))
+            };
+            let opt_eff = |field: &str| -> Result<Option<f64>, String> {
+                match e.get(field) {
+                    None | Some(Json::Null) => Ok(None),
+                    Some(Json::Num(x)) if x.is_finite() && *x > 0.0 && *x <= 1.0 => Ok(Some(*x)),
+                    _ => Err(format!("{at}: '{field}' must be null or in (0, 1]")),
+                }
+            };
+            let comm = match e.get("comm") {
+                None | Some(Json::Null) => None,
+                Some(c) => {
+                    let bw = req_num(c, "bw_bps", &at)?;
+                    if bw <= 0.0 {
+                        return Err(format!("{at}: comm bw_bps must be positive"));
+                    }
+                    Some(CommFit {
+                        alpha_s: req_num(c, "alpha_s", &at)?,
+                        bw_bps: bw,
+                        overhead_s: req_num(c, "overhead_s", &at)?,
+                        samples: req_num(c, "samples", &at)? as usize,
+                    })
+                }
+            };
+            let layers_json = e
+                .get("layers")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| format!("{at}: missing layers array"))?;
+            if layers_json.is_empty() {
+                return Err(format!("{at}: layers array is empty"));
+            }
+            let mut layers = Vec::with_capacity(layers_json.len());
+            for (li, l) in layers_json.iter().enumerate() {
+                let lat = format!("{at}.layers[{li}]");
+                layers.push(LayerCal {
+                    id: req_num(l, "id", &lat)? as usize,
+                    name: l
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| format!("{lat}: missing name"))?
+                        .to_string(),
+                    fwd_s: req_num(l, "fwd_s", &lat)?,
+                    bwd_s: req_num(l, "bwd_s", &lat)?,
+                    comm_s: req_num(l, "comm_s", &lat)?,
+                    size_bytes: req_num(l, "size_bytes", &lat)? as u64,
+                });
+            }
+            let gpus = req_num(e, "gpus", &at)? as usize;
+            if gpus == 0 {
+                return Err(format!("{at}: gpus must be ≥ 1"));
+            }
+            entries.push(NetCalibration {
+                net: str_field("net")?,
+                cluster: str_field("cluster")?,
+                gpus,
+                batch: req_num(e, "batch", &at)? as usize,
+                iterations: req_num(e, "iterations", &at)? as usize,
+                t_io_s: req_num(e, "t_io_s", &at)?,
+                eff_conv: opt_eff("eff_conv")?,
+                eff_fc: opt_eff("eff_fc")?,
+                comm,
+                layers,
+            });
+        }
+        Ok(CalibratedProfile { framework, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::builder::JobSpec;
+    use crate::frameworks::strategy as fw;
+    use crate::trace::synth::synth_trace;
+    use crate::util::json;
+
+    fn trace_for(cluster: &ClusterSpec, net: NetSpec, gpus: (usize, usize), iters: usize) -> Trace {
+        let job = JobSpec {
+            batch_per_gpu: net.default_batch,
+            net,
+            nodes: gpus.0,
+            gpus_per_node: gpus.1,
+            iterations: 1,
+        };
+        synth_trace(cluster, &job, &fw::caffe_mpi(), iters, 11)
+    }
+
+    #[test]
+    fn recovers_efficiency_within_tolerance() {
+        for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+            let truth = perf::efficiency_for(&cluster.gpu.name);
+            for net in zoo::all() {
+                let t = trace_for(&cluster, net.clone(), (4, 4), 30);
+                let cal = calibrate_one(&t, &fw::caffe_mpi()).unwrap();
+                let conv = cal.eff_conv.expect("conv layers are compute bound");
+                assert!(
+                    (conv / truth.conv - 1.0).abs() < 0.1,
+                    "{} {}: conv eff {conv} vs {}",
+                    cluster.name,
+                    net.name,
+                    truth.conv
+                );
+                if let Some(fc) = cal.eff_fc {
+                    assert!(
+                        (fc / truth.fc - 1.0).abs() < 0.1,
+                        "{} {}: fc eff {fc} vs {}",
+                        cluster.name,
+                        net.name,
+                        truth.fc
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn comm_fit_reproduces_measured_allreduce_times() {
+        let cluster = presets::k80_cluster();
+        let t = trace_for(&cluster, zoo::alexnet(), (4, 4), 30);
+        let cal = calibrate_one(&t, &fw::caffe_mpi()).unwrap();
+        let c = cal.comm.expect("multi-GPU trace has comm");
+        assert!(c.samples >= 5, "AlexNet has 8 learnable layers");
+        assert!(c.bw_bps > 0.0 && c.alpha_s >= 0.0 && c.overhead_s >= 0.0);
+        let model = cal.calibrated_comm().unwrap();
+        // The fitted line must reproduce the big (bandwidth-bound)
+        // messages closely; fc6 is 151 MB.
+        let fc6 = cal.layers.iter().find(|l| l.name == "fc6").unwrap();
+        let predicted = model.comm_time(fc6.size_bytes as f64);
+        assert!(
+            (predicted / fc6.comm_s - 1.0).abs() < 0.2,
+            "fc6: fitted {predicted:.4}s vs measured {:.4}s",
+            fc6.comm_s
+        );
+    }
+
+    #[test]
+    fn single_gpu_trace_has_no_comm_fit() {
+        let cluster = presets::v100_cluster();
+        let t = trace_for(&cluster, zoo::googlenet(), (1, 1), 4);
+        let cal = calibrate_one(&t, &fw::caffe_mpi()).unwrap();
+        assert!(cal.comm.is_none());
+        assert!(cal.t_io_s > 0.0);
+        assert_eq!(cal.gpus, 1);
+        // Applying a comm-less calibration leaves the strategy stock.
+        let applied = cal.apply_to(&fw::caffe_mpi());
+        assert!(applied.calibrated_comm.is_none());
+    }
+
+    #[test]
+    fn profile_json_roundtrip_is_exact() {
+        let cluster = presets::k80_cluster();
+        let traces = vec![
+            trace_for(&cluster, zoo::alexnet(), (2, 4), 3),
+            trace_for(&cluster, zoo::resnet50(), (1, 2), 3),
+        ];
+        let profile = calibrate(&traces, &fw::caffe_mpi()).unwrap();
+        let text = profile.to_json().to_string();
+        let back = CalibratedProfile::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, profile, "shortest-roundtrip floats preserve bits");
+        assert_eq!(back.content_hash(), profile.content_hash());
+        assert!(profile.tag().starts_with("caffe-mpi#"));
+    }
+
+    #[test]
+    fn rejects_unknown_names_and_mismatched_rows() {
+        let cluster = presets::k80_cluster();
+        let mut t = trace_for(&cluster, zoo::alexnet(), (1, 2), 2);
+        t.net = "vgg".into();
+        assert!(calibrate_one(&t, &fw::caffe_mpi()).unwrap_err().contains("unknown net"));
+        let mut t = trace_for(&cluster, zoo::alexnet(), (1, 2), 2);
+        t.cluster = "mars".into();
+        assert!(calibrate_one(&t, &fw::caffe_mpi())
+            .unwrap_err()
+            .contains("unknown cluster"));
+        let mut t = trace_for(&cluster, zoo::alexnet(), (1, 2), 2);
+        for it in &mut t.iterations {
+            it.truncate(5);
+        }
+        assert!(calibrate_one(&t, &fw::caffe_mpi()).unwrap_err().contains("rows"));
+        let mut t = trace_for(&cluster, zoo::alexnet(), (1, 2), 2);
+        for it in &mut t.iterations {
+            it[1].name = "convX".into();
+        }
+        assert!(calibrate_one(&t, &fw::caffe_mpi()).unwrap_err().contains("convX"));
+    }
+
+    /// The GPU-count check must not hide behind a successful comm fit:
+    /// a comm-less (single-GPU-style) trace claiming an infeasible
+    /// count is rejected at calibrate time, not at replay time.
+    #[test]
+    fn infeasible_gpu_counts_rejected_even_without_comm() {
+        let cluster = presets::k80_cluster();
+        let mut t = trace_for(&cluster, zoo::alexnet(), (1, 1), 2);
+        assert!(t.iterations[0].iter().all(|r| r.comm_us == 0.0));
+        t.gpus = 6;
+        let err = calibrate_one(&t, &fw::caffe_mpi()).unwrap_err();
+        assert!(err.contains("whole number"), "{err}");
+    }
+
+    #[test]
+    fn split_ranks_covers_paper_topologies() {
+        let k80 = presets::k80_cluster();
+        assert_eq!(split_ranks(&k80, 1).unwrap(), (1, 1));
+        assert_eq!(split_ranks(&k80, 4).unwrap(), (1, 4));
+        assert_eq!(split_ranks(&k80, 8).unwrap(), (2, 4));
+        assert_eq!(split_ranks(&k80, 16).unwrap(), (4, 4));
+        assert!(split_ranks(&k80, 0).is_err());
+        assert!(split_ranks(&k80, 6).is_err(), "partial nodes rejected");
+        assert!(split_ranks(&k80, 64).is_err(), "more nodes than exist");
+    }
+
+    #[test]
+    fn profile_validator_rejects_tampering() {
+        let cluster = presets::v100_cluster();
+        let profile =
+            calibrate(&[trace_for(&cluster, zoo::googlenet(), (2, 4), 2)], &fw::mxnet()).unwrap();
+        let good = profile.to_json().to_string();
+        let parse = |s: &str| CalibratedProfile::from_json(&json::parse(s).unwrap());
+        assert!(parse(&good).is_ok());
+        assert!(parse(&good.replace("\"schema_version\":1", "\"schema_version\":9")).is_err());
+        assert!(parse(&good.replace("calibration-profile", "something-else")).is_err());
+        assert!(parse(&good.replace("\"gpus\":8", "\"gpus\":0")).is_err());
+        assert!(parse("{\"schema_version\":1}").is_err());
+    }
+}

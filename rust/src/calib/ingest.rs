@@ -1,0 +1,204 @@
+//! Trace-directory ingestion: the entry point of the calibration loop.
+//!
+//! The paper closes by releasing its experimental traces "to support
+//! simulation-based studies"; this module reads a directory in that
+//! published layout back into [`Trace`]s. Files may carry the `#!`
+//! metadata header our writer emits, or be headerless like the paper's
+//! raw files — in the headerless case the job metadata is recovered from
+//! the `<net>_<cluster>_g<G>_b<B>.trace` file-name convention
+//! ([`dataset::parse_file_name`]). Unparseable or metadata-less files
+//! are *skipped with a reason*, not fatal: a published directory often
+//! carries READMEs, goldens and partial files next to the data.
+
+use crate::trace::dataset;
+use crate::trace::format::Trace;
+use std::path::Path;
+
+/// One ingested trace and where it came from.
+#[derive(Clone, Debug)]
+pub struct LoadedTrace {
+    pub path: String,
+    pub trace: Trace,
+}
+
+/// The result of scanning a trace directory.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSet {
+    /// Successfully parsed traces, in deterministic (sorted-path) order.
+    pub traces: Vec<LoadedTrace>,
+    /// `(path, reason)` for every `.trace` file that was not ingested.
+    pub skipped: Vec<(String, String)>,
+}
+
+impl TraceSet {
+    pub fn len(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.traces.is_empty()
+    }
+
+    /// One-line ingest summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} trace(s) ingested, {} file(s) skipped",
+            self.traces.len(),
+            self.skipped.len()
+        )
+    }
+}
+
+/// Fill metadata holes in a parsed trace from its file stem. Header
+/// values win; the file name only supplies what the header left at its
+/// defaults (the paper's raw files have no header at all).
+fn apply_file_name_meta(trace: &mut Trace, stem: &str) {
+    let Some((net, cluster, gpus, batch)) = dataset::parse_file_name(stem) else {
+        return;
+    };
+    if trace.net.is_empty() {
+        trace.net = net;
+    }
+    if trace.cluster.is_empty() {
+        trace.cluster = cluster;
+    }
+    if trace.gpus == 0 {
+        trace.gpus = gpus;
+    }
+    if trace.batch == 0 {
+        trace.batch = batch;
+    }
+}
+
+/// Minimum metadata calibration needs: a net name and a GPU count.
+/// (A zero batch falls back to the net's paper-default downstream.)
+fn meta_complete(trace: &Trace) -> Result<(), String> {
+    if trace.net.is_empty() {
+        return Err("no net name in header or file name".into());
+    }
+    if trace.cluster.is_empty() {
+        return Err("no cluster name in header or file name".into());
+    }
+    if trace.gpus == 0 {
+        return Err("no GPU count in header or file name".into());
+    }
+    Ok(())
+}
+
+/// Parse one trace file (text + its path for metadata recovery).
+pub fn parse_trace_file(path: &Path, text: &str) -> Result<Trace, String> {
+    let mut trace = Trace::parse(text)?;
+    if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+        apply_file_name_meta(&mut trace, stem);
+    }
+    meta_complete(&trace)?;
+    Ok(trace)
+}
+
+/// Scan `dir` for `*.trace` files and parse them. Errors only when the
+/// directory itself is unreadable or yields zero usable traces; bad
+/// individual files land in [`TraceSet::skipped`].
+pub fn load_dir(dir: &Path) -> Result<TraceSet, String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+    let mut paths: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("trace"))
+        .collect();
+    paths.sort();
+    let mut set = TraceSet::default();
+    for path in paths {
+        let shown = path.display().to_string();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                set.skipped.push((shown, format!("unreadable: {e}")));
+                continue;
+            }
+        };
+        match parse_trace_file(&path, &text) {
+            Ok(trace) => set.traces.push(LoadedTrace { path: shown, trace }),
+            Err(why) => set.skipped.push((shown, why)),
+        }
+    }
+    if set.traces.is_empty() {
+        return Err(format!(
+            "no usable .trace files in {} ({} skipped)",
+            dir.display(),
+            set.skipped.len()
+        ));
+    }
+    Ok(set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::dataset::write_dataset;
+    use std::fs;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("dagsgd-ingest-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_the_published_dataset_layout() {
+        let dir = tmp_dir("dataset");
+        write_dataset(&dir, 2, 9).unwrap();
+        let set = load_dir(&dir).unwrap();
+        // 6 synthetic files + the Table VI golden (whose header carries
+        // full metadata even though its stem doesn't parse).
+        assert_eq!(set.len(), 7, "{:?}", set.skipped);
+        assert!(set.skipped.is_empty(), "{:?}", set.skipped);
+        for t in &set.traces {
+            assert!(!t.trace.net.is_empty());
+            assert!(t.trace.gpus > 0, "{}", t.path);
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn headerless_file_recovers_metadata_from_its_name() {
+        let dir = tmp_dir("headerless");
+        let body = "0 data 1.2e6 0 0 0\n1 conv1 3.27e6 288202 123.424 139776\n";
+        fs::write(dir.join("alexnet_k80-pcie-10gbe_g16_b1024.trace"), body).unwrap();
+        let set = load_dir(&dir).unwrap();
+        assert_eq!(set.len(), 1);
+        let t = &set.traces[0].trace;
+        assert_eq!(t.net, "alexnet");
+        assert_eq!(t.cluster, "k80-pcie-10gbe");
+        assert_eq!(t.gpus, 16);
+        assert_eq!(t.batch, 1024);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_files_are_skipped_not_fatal() {
+        let dir = tmp_dir("skipped");
+        let body = "0 data 1.2e6 0 0 0\n";
+        fs::write(dir.join("alexnet_k80_g4_b64.trace"), body).unwrap();
+        // Malformed rows.
+        fs::write(dir.join("googlenet_k80_g4_b64.trace"), "not a trace\n").unwrap();
+        // Headerless AND un-inferable name.
+        fs::write(dir.join("mystery.trace"), body).unwrap();
+        // Ignored entirely: wrong extension.
+        fs::write(dir.join("README.md"), "docs\n").unwrap();
+        let set = load_dir(&dir).unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.skipped.len(), 2, "{:?}", set.skipped);
+        assert!(set.summary().contains("1 trace(s)"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_or_missing_dir_is_an_error() {
+        let dir = tmp_dir("empty");
+        assert!(load_dir(&dir).unwrap_err().contains("no usable"));
+        assert!(load_dir(&dir.join("nope")).unwrap_err().contains("cannot read"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,260 @@
+//! The prediction-error report — paper Table V, regenerated from the
+//! calibration loop.
+//!
+//! For every calibrated entry (net × cluster × GPU count × batch) the
+//! report pairs the DAG simulator's replayed iteration time (`predicted`)
+//! with the closed-form estimate of the trace's own iteration time
+//! (`traced`, the measurement stand-in) and their percent error. The
+//! machine format (`BENCH_calibration.json`, schema v1) carries a
+//! validator like `campaign::report` so CI can schema-check the artifact
+//! it uploads.
+
+use super::fit::CalibratedProfile;
+use super::replay;
+use crate::frameworks::strategy;
+use crate::sim::scheduler::SchedulerKind;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+use crate::util::units::fmt_dur;
+
+/// Version of the report format; bump on any layout change.
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// One Table-V row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictionRow {
+    pub net: String,
+    pub cluster: String,
+    pub gpus: usize,
+    pub batch: usize,
+    /// Closed-form iteration time of the trace (the "measured" column).
+    pub traced_iter_s: f64,
+    /// DAG-simulator replay of the calibrated job (the prediction).
+    pub predicted_iter_s: f64,
+    pub error_pct: f64,
+}
+
+/// Build the report rows for a profile: replay every entry under `kind`
+/// and score it against the closed-form traced estimate
+/// ([`replay::score_entry`]).
+pub fn prediction_rows(
+    profile: &CalibratedProfile,
+    kind: SchedulerKind,
+) -> Result<Vec<PredictionRow>, String> {
+    let fw = strategy::by_name(&profile.framework)
+        .ok_or_else(|| format!("unknown framework '{}' in profile", profile.framework))?;
+    profile
+        .entries
+        .iter()
+        .map(|entry| {
+            let scored = replay::score_entry(entry, kind, &fw)
+                .map_err(|e| format!("{}: {e}", entry.key()))?;
+            Ok(PredictionRow {
+                net: entry.net.clone(),
+                cluster: entry.cluster.clone(),
+                gpus: entry.gpus,
+                batch: entry.batch,
+                traced_iter_s: scored.traced_iter_s,
+                predicted_iter_s: scored.replayed.iter_time_s,
+                error_pct: scored.error_pct,
+            })
+        })
+        .collect()
+}
+
+/// Per-net mean absolute error — the paper's headline numbers
+/// (9.4 / 4.7 / 4.6 % in Table V's summary).
+pub fn mean_errors(rows: &[PredictionRow]) -> Vec<(String, f64)> {
+    let mut nets: Vec<String> = rows.iter().map(|r| r.net.clone()).collect();
+    nets.sort();
+    nets.dedup();
+    nets.into_iter()
+        .map(|net| {
+            let errs: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.net == net)
+                .map(|r| r.error_pct)
+                .collect();
+            (net, stats::mean(&errs))
+        })
+        .collect()
+}
+
+/// Render the Table-V-style human table.
+pub fn render(rows: &[PredictionRow]) -> String {
+    let mut t = Table::new(&["net", "cluster", "gpus", "batch", "traced", "predicted", "err%"]);
+    for r in rows {
+        t.row(&[
+            r.net.clone(),
+            r.cluster.clone(),
+            r.gpus.to_string(),
+            r.batch.to_string(),
+            fmt_dur(r.traced_iter_s),
+            fmt_dur(r.predicted_iter_s),
+            f(r.error_pct, 1),
+        ]);
+    }
+    t.render()
+}
+
+/// Serialize the report (schema v`REPORT_SCHEMA_VERSION`).
+pub fn report_to_json(
+    rows: &[PredictionRow],
+    framework: &str,
+    scheduler: SchedulerKind,
+    profile_tag: &str,
+) -> Json {
+    let row_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("net", Json::str(r.net.clone())),
+                ("cluster", Json::str(r.cluster.clone())),
+                ("gpus", Json::num(r.gpus as f64)),
+                ("batch", Json::num(r.batch as f64)),
+                ("traced_iter_s", Json::num(r.traced_iter_s)),
+                ("predicted_iter_s", Json::num(r.predicted_iter_s)),
+                ("error_pct", Json::num(r.error_pct)),
+            ])
+        })
+        .collect();
+    let per_net: Vec<Json> = mean_errors(rows)
+        .into_iter()
+        .map(|(net, err)| {
+            Json::obj(vec![("net", Json::str(net)), ("mean_abs_error_pct", Json::num(err))])
+        })
+        .collect();
+    let all_errs: Vec<f64> = rows.iter().map(|r| r.error_pct).collect();
+    Json::obj(vec![
+        ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
+        ("bench", Json::str("calibration-report")),
+        ("framework", Json::str(framework)),
+        ("scheduler", Json::str(scheduler.name())),
+        ("profile", Json::str(profile_tag)),
+        ("rows", Json::Arr(row_json)),
+        ("per_net", Json::Arr(per_net)),
+        ("mean_abs_error_pct", Json::num(stats::mean(&all_errs))),
+    ])
+}
+
+/// Validate a report against schema v1. Returns the number of rows.
+pub fn validate_report(report: &Json) -> Result<usize, String> {
+    let version = report
+        .get("schema_version")
+        .and_then(|v| v.as_f64())
+        .ok_or("missing schema_version")?;
+    if version != REPORT_SCHEMA_VERSION as f64 {
+        return Err(format!(
+            "schema_version {version} != supported {REPORT_SCHEMA_VERSION}"
+        ));
+    }
+    if report.get("bench").and_then(|v| v.as_str()) != Some("calibration-report") {
+        return Err("bench field must be \"calibration-report\"".into());
+    }
+    for field in ["framework", "scheduler", "profile"] {
+        report
+            .get(field)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("missing string field '{field}'"))?;
+    }
+    let rows = report
+        .get("rows")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing rows array")?;
+    if rows.is_empty() {
+        return Err("rows array is empty".into());
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let at = format!("rows[{i}]");
+        for field in ["net", "cluster"] {
+            row.get(field)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("{at}: missing string field '{field}'"))?;
+        }
+        for field in ["gpus", "batch", "traced_iter_s", "predicted_iter_s", "error_pct"] {
+            let v = row
+                .get(field)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("{at}: missing numeric field '{field}'"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{at}: field '{field}' must be finite and ≥ 0"));
+            }
+        }
+        for field in ["gpus", "traced_iter_s", "predicted_iter_s"] {
+            if row.get(field).and_then(|v| v.as_f64()) == Some(0.0) {
+                return Err(format!("{at}: field '{field}' must be positive"));
+            }
+        }
+    }
+    let mean = report
+        .get("mean_abs_error_pct")
+        .and_then(|v| v.as_f64())
+        .ok_or("missing mean_abs_error_pct")?;
+    if !mean.is_finite() || mean < 0.0 {
+        return Err("mean_abs_error_pct must be finite and ≥ 0".into());
+    }
+    Ok(rows.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::fit::calibrate;
+    use crate::cluster::presets;
+    use crate::dag::builder::JobSpec;
+    use crate::frameworks::strategy as fw;
+    use crate::models::zoo;
+    use crate::trace::synth::synth_trace;
+    use crate::util::json;
+
+    fn profile() -> CalibratedProfile {
+        let cluster = presets::k80_cluster();
+        let traces: Vec<_> = [zoo::alexnet(), zoo::googlenet()]
+            .into_iter()
+            .map(|net| {
+                let job = JobSpec {
+                    batch_per_gpu: net.default_batch,
+                    net,
+                    nodes: 2,
+                    gpus_per_node: 4,
+                    iterations: 1,
+                };
+                synth_trace(&cluster, &job, &fw::caffe_mpi(), 8, 5)
+            })
+            .collect();
+        calibrate(&traces, &fw::caffe_mpi()).unwrap()
+    }
+
+    #[test]
+    fn report_pipeline_validates_end_to_end() {
+        let p = profile();
+        let rows = prediction_rows(&p, SchedulerKind::Fifo).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.traced_iter_s > 0.0 && r.predicted_iter_s > 0.0);
+            assert!(r.error_pct.is_finite());
+        }
+        let j = report_to_json(&rows, &p.framework, SchedulerKind::Fifo, &p.tag());
+        let back = json::parse(&j.to_string()).unwrap();
+        assert_eq!(validate_report(&back).unwrap(), 2);
+        let table = render(&rows);
+        assert!(table.contains("alexnet") && table.contains("googlenet"));
+        let means = mean_errors(&rows);
+        assert_eq!(means.len(), 2);
+        assert!(means.iter().all(|(_, e)| e.is_finite()));
+    }
+
+    #[test]
+    fn validator_rejects_bad_reports() {
+        let p = profile();
+        let rows = prediction_rows(&p, SchedulerKind::Fifo).unwrap();
+        let good = report_to_json(&rows, &p.framework, SchedulerKind::Fifo, &p.tag()).to_string();
+        let check = |s: &str| validate_report(&json::parse(s).unwrap());
+        assert!(check(&good).is_ok());
+        assert!(check(&good.replace("\"schema_version\":1", "\"schema_version\":7")).is_err());
+        assert!(check(&good.replace("calibration-report", "campaign")).is_err());
+        assert!(check(&good.replace("\"rows\":[", "\"rows2\":[")).is_err());
+        assert!(check("{\"schema_version\":1,\"bench\":\"calibration-report\"}").is_err());
+    }
+}

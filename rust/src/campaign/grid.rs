@@ -89,8 +89,17 @@ pub struct Scenario {
     pub scheduler: SchedulerKind,
     pub layerwise_update: bool,
     /// Seed for cells with stochastic inputs (Fig. 4's jittered traces);
-    /// the standard cell is deterministic and ignores it.
+    /// the standard cell is deterministic and ignores it. Profile-driven
+    /// cells reuse it to carry the profile's content hash, so a cache
+    /// entry can never outlive the profile content it measured.
     pub seed: u64,
+    /// Calibrated-profile tag (`framework#contenthash`,
+    /// `CalibratedProfile::tag`) for cells replaying calibrated traces
+    /// instead of preset strategies; `None` for model-driven cells.
+    /// Name-only [`Scenario::resolve`] ignores it — profile-driven
+    /// sweeps run through `runner::run_with` with a cell closure that
+    /// owns the loaded profile (`calib::replay::replay_cell`).
+    pub profile: Option<String>,
 }
 
 impl Scenario {
@@ -99,7 +108,7 @@ impl Scenario {
     /// any field's rendering) invalidates every cache entry by design.
     pub fn key(&self) -> String {
         format!(
-            "cluster={} interconnect={} net={} fw={} nodes={} gpus={} batch={} iters={} scheduler={} layerwise={} seed={}",
+            "cluster={} interconnect={} net={} fw={} nodes={} gpus={} batch={} iters={} scheduler={} layerwise={} seed={} profile={}",
             self.cluster,
             self.interconnect.name(),
             self.net,
@@ -113,6 +122,7 @@ impl Scenario {
             self.scheduler.name(),
             self.layerwise_update,
             self.seed,
+            self.profile.as_deref().unwrap_or("-"),
         )
     }
 
@@ -219,8 +229,9 @@ pub fn measure_cell(
 }
 
 /// A declarative scenario grid: one `Vec` per axis, expanded as the full
-/// cartesian product in fixed axis order (clusters → interconnects →
-/// nets → frameworks → topologies → schedulers → layerwise).
+/// cartesian product in fixed axis order (profiles → clusters →
+/// interconnects → nets → frameworks → topologies → schedulers →
+/// layerwise).
 #[derive(Clone, Debug)]
 pub struct Grid {
     pub name: String,
@@ -232,6 +243,10 @@ pub struct Grid {
     pub topologies: Vec<(usize, usize)>,
     pub schedulers: Vec<SchedulerKind>,
     pub layerwise: Vec<bool>,
+    /// Calibrated-profile axis: `None` cells use the framework's preset
+    /// strategy, `Some(tag)` cells replay the named calibrated profile
+    /// (`campaign --profile`). Every built-in grid is `vec![None]`.
+    pub profiles: Vec<Option<String>>,
     pub iterations: usize,
     pub seed: u64,
 }
@@ -239,7 +254,8 @@ pub struct Grid {
 impl Grid {
     /// Number of cells the full cartesian product expands to.
     pub fn len(&self) -> usize {
-        self.clusters.len()
+        self.profiles.len()
+            * self.clusters.len()
             * self.interconnects.len()
             * self.nets.len()
             * self.frameworks.len()
@@ -255,26 +271,29 @@ impl Grid {
     /// Expand to concrete cells, in deterministic axis order.
     pub fn expand(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
-        for cluster in &self.clusters {
-            for &interconnect in &self.interconnects {
-                for net in &self.nets {
-                    for framework in &self.frameworks {
-                        for &(nodes, gpus_per_node) in &self.topologies {
-                            for &scheduler in &self.schedulers {
-                                for &layerwise_update in &self.layerwise {
-                                    out.push(Scenario {
-                                        cluster: cluster.clone(),
-                                        interconnect,
-                                        net: net.clone(),
-                                        framework: framework.clone(),
-                                        nodes,
-                                        gpus_per_node,
-                                        batch_per_gpu: None,
-                                        iterations: self.iterations,
-                                        scheduler,
-                                        layerwise_update,
-                                        seed: self.seed,
-                                    });
+        for profile in &self.profiles {
+            for cluster in &self.clusters {
+                for &interconnect in &self.interconnects {
+                    for net in &self.nets {
+                        for framework in &self.frameworks {
+                            for &(nodes, gpus_per_node) in &self.topologies {
+                                for &scheduler in &self.schedulers {
+                                    for &layerwise_update in &self.layerwise {
+                                        out.push(Scenario {
+                                            cluster: cluster.clone(),
+                                            interconnect,
+                                            net: net.clone(),
+                                            framework: framework.clone(),
+                                            nodes,
+                                            gpus_per_node,
+                                            batch_per_gpu: None,
+                                            iterations: self.iterations,
+                                            scheduler,
+                                            layerwise_update,
+                                            seed: self.seed,
+                                            profile: profile.clone(),
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -318,6 +337,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Grid> {
             topologies: vec![(1, 4), (4, 4)],
             schedulers: vec![SchedulerKind::Fifo],
             layerwise: vec![false],
+            profiles: vec![None],
             iterations: 8,
             seed,
         }),
@@ -331,6 +351,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Grid> {
             topologies: vec![(1, 2)],
             schedulers: vec![SchedulerKind::Fifo],
             layerwise: vec![false],
+            profiles: vec![None],
             iterations: 8,
             seed,
         }),
@@ -349,6 +370,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Grid> {
                 SchedulerKind::Fusion,
             ],
             layerwise: vec![true],
+            profiles: vec![None],
             iterations: 8,
             seed,
         }),
@@ -362,6 +384,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Grid> {
             topologies: vec![(2, 4), (4, 4)],
             schedulers: vec![SchedulerKind::Fifo],
             layerwise: vec![false],
+            profiles: vec![None],
             iterations: 8,
             seed,
         }),
@@ -383,6 +406,7 @@ mod tests {
             topologies: vec![(1, 2)],
             schedulers: vec![SchedulerKind::Fifo],
             layerwise: vec![false],
+            profiles: vec![None],
             iterations: 8,
             seed: 7,
         }
@@ -454,6 +478,29 @@ mod tests {
         for n in ["stock", "10gbe", "100gb-ib"] {
             assert_eq!(Interconnect::by_name(n).unwrap().name(), n);
         }
+    }
+
+    #[test]
+    fn profile_axis_expands_and_keys() {
+        let mut g = tiny();
+        g.profiles = vec![None, Some("caffe-mpi#00000000deadbeef".into())];
+        assert_eq!(g.len(), 8);
+        let cells = g.expand();
+        assert_eq!(cells.len(), 8);
+        // Profiles are the outermost axis: model-driven cells first.
+        assert!(cells[0].key().ends_with("profile=-"), "{}", cells[0].key());
+        assert!(
+            cells[4].key().ends_with("profile=caffe-mpi#00000000deadbeef"),
+            "{}",
+            cells[4].key()
+        );
+        // Name-only resolution ignores the profile tag.
+        cells[4].resolve().unwrap();
+        // The axis keeps keys (and therefore cache entries) distinct.
+        let mut keys: Vec<String> = cells.iter().map(|s| s.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 8);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //!       "stock", "net": "resnet50", "framework": "caffe-mpi",
 //!       "nodes": 4, "gpus_per_node": 4, "batch_per_gpu": null,
 //!       "iterations": 8, "scheduler": "fifo",
-//!       "layerwise_update": false, "seed": 7,
+//!       "layerwise_update": false, "seed": 7, "profile": null,
 //!       "metrics": { "iter_time_s": 0.31, "samples_per_s": 1652.0,
 //!                    "predicted_iter_s": 0.30, "predicted_speedup": 13.1,
 //!                    "comm_s": 0.21, "comm_hidden_pct": 87.0 } }
@@ -93,6 +93,13 @@ pub fn to_json(grid_name: &str, outcome: &Outcome) -> Json {
                 ("scheduler", Json::str(s.scheduler.name())),
                 ("layerwise_update", Json::Bool(s.layerwise_update)),
                 ("seed", Json::num(s.seed as f64)),
+                (
+                    "profile",
+                    s.profile
+                        .as_ref()
+                        .map(|p| Json::str(p.clone()))
+                        .unwrap_or(Json::Null),
+                ),
                 ("metrics", metrics_to_json(r)),
             ])
         })
@@ -171,6 +178,12 @@ pub fn validate(report: &Json) -> Result<usize, String> {
         match cell.get("batch_per_gpu") {
             Some(Json::Null) | Some(Json::Num(_)) => {}
             _ => return Err(format!("{at}: 'batch_per_gpu' must be null or a number")),
+        }
+        // `profile` is optional (schema v1 predates it): null for
+        // model-driven cells, the profile tag for replayed ones.
+        match cell.get("profile") {
+            None | Some(Json::Null) | Some(Json::Str(_)) => {}
+            _ => return Err(format!("{at}: 'profile' must be null or a string")),
         }
         let metrics = cell
             .get("metrics")

@@ -66,6 +66,19 @@ impl ClusterSpec {
             "gpus/node out of range"
         );
     }
+
+    /// Readers contending for one storage device — Eq. 6's `t_io_y`
+    /// term: every active rank when storage is shared (Cluster 1's
+    /// NFS), one node's GPUs when it is node-local (Cluster 2's SSD).
+    /// The single definition behind the analytic model, Fig. 4 and the
+    /// calibration replay's traced estimate.
+    pub fn io_sharing(&self, nodes: usize, gpus_per_node: usize) -> f64 {
+        if self.shared_storage {
+            (nodes * gpus_per_node) as f64
+        } else {
+            gpus_per_node as f64
+        }
+    }
 }
 
 /// Resource handles for one simulated job on a cluster selection.
@@ -172,5 +185,14 @@ mod tests {
     fn selection_validated() {
         let c = presets::k80_cluster();
         c.build_resources(5, 4);
+    }
+
+    #[test]
+    fn io_sharing_follows_storage_locality() {
+        // NFS: every active rank contends; SSD: one node's GPUs only.
+        assert_eq!(presets::k80_cluster().io_sharing(4, 4), 16.0);
+        assert_eq!(presets::k80_cluster().io_sharing(1, 2), 2.0);
+        assert_eq!(presets::v100_cluster().io_sharing(4, 4), 4.0);
+        assert_eq!(presets::v100_cluster().io_sharing(1, 2), 2.0);
     }
 }

@@ -43,6 +43,45 @@ impl Link {
             bw: self.bw * eff,
         }
     }
+
+    /// Least-squares α–β fit over `(bytes, seconds)` measurements: the
+    /// affine model `t = α + S/bw` fitted to transfer (or collective)
+    /// timings at several message sizes — the calibration workflow of
+    /// arXiv:1711.05979 §IV, used by [`crate::calib::fit`] to recover an
+    /// *effective* end-to-end link from a layer-wise trace.
+    ///
+    /// Errors when there are fewer than two distinct sizes (the line is
+    /// underdetermined) or the fitted bandwidth is non-positive (the
+    /// measurements are not consistent with an α–β channel). A slightly
+    /// negative fitted intercept is clamped to 0.
+    pub fn fit(points: &[(f64, f64)]) -> Result<Link, String> {
+        let n = points.len() as f64;
+        if points.len() < 2 {
+            return Err(format!(
+                "α-β fit needs ≥ 2 measurements, got {}",
+                points.len()
+            ));
+        }
+        let mean_x: f64 = points.iter().map(|p| p.0).sum::<f64>() / n;
+        let mean_y: f64 = points.iter().map(|p| p.1).sum::<f64>() / n;
+        let mut sxx = 0.0;
+        let mut sxy = 0.0;
+        for &(x, y) in points {
+            sxx += (x - mean_x) * (x - mean_x);
+            sxy += (x - mean_x) * (y - mean_y);
+        }
+        if sxx <= 0.0 {
+            return Err("α-β fit needs ≥ 2 distinct message sizes".into());
+        }
+        let slope = sxy / sxx;
+        if slope <= 0.0 {
+            return Err(format!(
+                "α-β fit produced non-positive slope {slope:e} (time must grow with size)"
+            ));
+        }
+        let alpha = (mean_y - slope * mean_x).max(0.0);
+        Ok(Link::new(alpha, 1.0 / slope))
+    }
 }
 
 #[cfg(test)]
@@ -75,5 +114,57 @@ mod tests {
     #[should_panic]
     fn negative_bytes_rejected() {
         Link::new(0.0, 1.0).xfer(-1.0);
+    }
+
+    #[test]
+    fn fit_recovers_exact_affine_data() {
+        let truth = Link::new(35e-6, 9.7e9);
+        let points: Vec<(f64, f64)> = [1e3, 1e5, 1e6, 5e7, 2e8]
+            .iter()
+            .map(|&s| (s, truth.xfer(s)))
+            .collect();
+        let fitted = Link::fit(&points).unwrap();
+        assert!((fitted.alpha / truth.alpha - 1.0).abs() < 1e-9, "{}", fitted.alpha);
+        assert!((fitted.bw / truth.bw - 1.0).abs() < 1e-9, "{}", fitted.bw);
+    }
+
+    #[test]
+    fn fit_tolerant_to_noise() {
+        let truth = Link::new(100e-6, 1.25e9);
+        // ±2 % multiplicative noise, alternating sign.
+        let points: Vec<(f64, f64)> = (1..=8)
+            .map(|i| {
+                let s = 1e5 * i as f64 * i as f64;
+                let eps = if i % 2 == 0 { 1.02 } else { 0.98 };
+                (s, truth.xfer(s) * eps)
+            })
+            .collect();
+        let fitted = Link::fit(&points).unwrap();
+        assert!((fitted.bw / truth.bw - 1.0).abs() < 0.1, "bw {}", fitted.bw);
+        assert!(fitted.alpha >= 0.0);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_inputs() {
+        assert!(Link::fit(&[]).is_err());
+        assert!(Link::fit(&[(1e6, 0.1)]).is_err(), "single point");
+        assert!(
+            Link::fit(&[(1e6, 0.1), (1e6, 0.2)]).is_err(),
+            "one distinct size"
+        );
+        assert!(
+            Link::fit(&[(1e6, 0.2), (2e6, 0.1)]).is_err(),
+            "time shrinking with size"
+        );
+    }
+
+    #[test]
+    fn fit_clamps_small_negative_intercept() {
+        // Pure-bandwidth data (zero latency): the fitted α must not go
+        // negative from float round-off.
+        let points: Vec<(f64, f64)> = (1..=5).map(|i| (i as f64 * 1e6, i as f64 * 1e-3)).collect();
+        let fitted = Link::fit(&points).unwrap();
+        assert!(fitted.alpha >= 0.0);
+        assert!((fitted.bw - 1e9).abs() / 1e9 < 1e-9);
     }
 }

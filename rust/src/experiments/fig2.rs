@@ -46,6 +46,7 @@ pub fn scenarios(cluster: &ClusterSpec, gpu_counts: &[usize]) -> Vec<Scenario> {
         topologies,
         schedulers: vec![SchedulerKind::Fifo],
         layerwise: vec![false],
+        profiles: vec![None],
         iterations: 8,
         seed: 0,
     }

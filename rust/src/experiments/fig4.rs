@@ -51,6 +51,7 @@ pub fn scenarios(cluster: &ClusterSpec, configs: &[(usize, usize)], seed: u64) -
         topologies: configs.to_vec(),
         schedulers: vec![SchedulerKind::Fifo],
         layerwise: vec![false],
+        profiles: vec![None],
         iterations: 8,
         seed,
     }
@@ -72,12 +73,7 @@ pub fn predict_cell(cluster: &ClusterSpec, job: &JobSpec, seed: u64) -> CellResu
     // The trace's data row is the uncontended per-GPU fetch; scale by
     // the number of GPUs sharing the storage device (Eq. 6's t_io_y
     // term).
-    let sharing = if cluster.shared_storage {
-        job.ranks()
-    } else {
-        job.gpus_per_node
-    } as f64;
-    inputs.t_io *= sharing;
+    inputs.t_io *= cluster.io_sharing(job.nodes, job.gpus_per_node);
     let predicted = eqs::iter_time(&inputs, fw.prefetch_io, fw.wfbp);
 
     let mut r = CellResult::new();

@@ -6,3 +6,4 @@ pub mod fig3;
 pub mod fig4;
 pub mod info;
 pub mod sched;
+pub mod table5;

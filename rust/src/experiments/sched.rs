@@ -65,6 +65,7 @@ pub fn scenarios(
             scheduler,
             layerwise_update: strategy.layerwise_update,
             seed: 0,
+            profile: None,
         })
         .collect()
 }

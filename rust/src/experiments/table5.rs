@@ -1,0 +1,141 @@
+//! Table V — validation of the DAG model's predictions against traces,
+//! regenerated through the full calibration loop.
+//!
+//! The paper's Table V predicts Caffe-MPI's iteration time from measured
+//! per-layer times and scores it against measurement, per net × cluster
+//! × GPU count. Here the loop is closed end to end in-process: for every
+//! (cluster, net) cell a layer-wise trace is synthesized (the stand-in
+//! for the published measurement files), **calibrated**
+//! ([`calibrate_one`]), **replayed** through the DAG simulator
+//! ([`replay::replay_entry`]) and scored against the closed-form
+//! iteration-time estimate of the trace itself
+//! ([`replay::traced_iter_time`]) — the same pipeline `dagsgd calibrate
+//! --replay --report` runs over an on-disk trace directory.
+//!
+//! Structurally this is a campaign with a bespoke cell ([`table5_cell`])
+//! swept by the shared runner, like Fig. 4 and `sched`.
+
+use crate::calib::fit::calibrate_one;
+use crate::calib::replay;
+use crate::calib::validate::PredictionRow;
+use crate::campaign::grid::{CellResult, Grid, Interconnect, Scenario};
+use crate::campaign::runner;
+use crate::cluster::presets;
+use crate::dag::builder::JobSpec;
+use crate::frameworks::strategy;
+use crate::models::zoo;
+use crate::sim::scheduler::SchedulerKind;
+use crate::trace::synth::synth_trace;
+
+/// Iterations synthesized per trace (§VI publishes 100; 20 keeps the
+/// in-process experiment quick while averaging the jitter well).
+pub const DEFAULT_TRACE_ITERS: usize = 20;
+
+/// The Table V grid: both clusters × all three nets, whole-cluster
+/// Caffe-MPI. The grid's `iterations` field carries the *trace length*
+/// (the replay always simulates [`replay::REPLAY_ITERS`] iterations).
+pub fn scenarios(kind: SchedulerKind, trace_iters: usize, seed: u64) -> Vec<Scenario> {
+    Grid {
+        name: "table5".into(),
+        clusters: vec!["k80".into(), "v100".into()],
+        interconnects: vec![Interconnect::Stock],
+        nets: zoo::all().iter().map(|n| n.name.clone()).collect(),
+        frameworks: vec!["caffe-mpi".into()],
+        topologies: vec![(4, 4)],
+        schedulers: vec![kind],
+        layerwise: vec![false],
+        profiles: vec![None],
+        iterations: trace_iters,
+        seed,
+    }
+    .expand()
+}
+
+/// One Table V cell: synthesize → calibrate → replay → score.
+pub fn table5_cell(s: &Scenario) -> CellResult {
+    let cluster = presets::by_name(&s.cluster).expect("table5 scenario cluster");
+    let net = zoo::by_name(&s.net).expect("table5 scenario net");
+    let fw = strategy::by_name(&s.framework).expect("table5 scenario framework");
+    let job = JobSpec {
+        batch_per_gpu: s.batch_per_gpu.unwrap_or(net.default_batch),
+        net,
+        nodes: s.nodes,
+        gpus_per_node: s.gpus_per_node,
+        iterations: 1,
+    };
+    let trace = synth_trace(&cluster, &job, &fw, s.iterations, s.seed);
+    let entry = calibrate_one(&trace, &fw).expect("synthetic traces always calibrate");
+    let scored = replay::score_entry(&entry, s.scheduler, &fw).expect("entry resolvable");
+    let mut r = CellResult::new();
+    r.set("iter_time_s", scored.replayed.iter_time_s)
+        .set("samples_per_s", scored.replayed.samples_per_s)
+        .set("traced_iter_s", scored.traced_iter_s)
+        .set("batch", job.batch_per_gpu as f64)
+        .set("error_pct", scored.error_pct);
+    r
+}
+
+/// Sweep the Table V grid and reshape cells into report rows
+/// ([`crate::calib::validate`] renders/serializes them).
+pub fn run(kind: SchedulerKind, trace_iters: usize, seed: u64) -> Vec<PredictionRow> {
+    let cells = scenarios(kind, trace_iters, seed);
+    let outcome = runner::run_with(&cells, runner::auto_jobs(), None, table5_cell);
+    outcome
+        .cells
+        .iter()
+        .map(|(s, r)| PredictionRow {
+            net: s.net.clone(),
+            // Report the resolvable preset's full name, like calibrate.
+            cluster: presets::by_name(&s.cluster)
+                .map(|c| c.name)
+                .unwrap_or_else(|| s.cluster.clone()),
+            gpus: s.nodes * s.gpus_per_node,
+            batch: r.get("batch").expect("table5 cell metric") as usize,
+            traced_iter_s: r.get("traced_iter_s").expect("table5 cell metric"),
+            predicted_iter_s: r.get("iter_time_s").expect("table5 cell metric"),
+            error_pct: r.get("error_pct").expect("table5 cell metric"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::validate;
+
+    /// The reproduction of Table V: mean prediction error per net in
+    /// the paper's low range (it reports 2–10 %; our cells are the
+    /// hardest whole-cluster configuration only, so allow headroom).
+    #[test]
+    fn prediction_errors_in_paper_range() {
+        let rows = run(SchedulerKind::Fifo, DEFAULT_TRACE_ITERS, 7);
+        assert_eq!(rows.len(), 6, "2 clusters x 3 nets");
+        for (net, err) in validate::mean_errors(&rows) {
+            assert!(err < 15.0, "{net}: mean |err| {err:.1}% exceeds paper-like range");
+        }
+    }
+
+    #[test]
+    fn rows_carry_full_addresses() {
+        let rows = run(SchedulerKind::Fifo, 4, 3);
+        for r in &rows {
+            assert_eq!(r.gpus, 16);
+            assert!(r.batch > 0);
+            assert!(r.traced_iter_s > 0.0 && r.predicted_iter_s > 0.0);
+            assert!(r.cluster.contains('-'), "full preset name: {}", r.cluster);
+        }
+        // And the shared report machinery accepts them.
+        let j = validate::report_to_json(&rows, "caffe-mpi", SchedulerKind::Fifo, "synthetic#3");
+        assert_eq!(validate::validate_report(&j).unwrap(), 6);
+    }
+
+    #[test]
+    fn deterministic_for_a_seed() {
+        let a = run(SchedulerKind::Fifo, 4, 9);
+        let b = run(SchedulerKind::Fifo, 4, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.predicted_iter_s.to_bits(), y.predicted_iter_s.to_bits());
+            assert_eq!(x.traced_iter_s.to_bits(), y.traced_iter_s.to_bits());
+        }
+    }
+}

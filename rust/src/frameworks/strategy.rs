@@ -19,6 +19,7 @@
 //! (§V.C.1).
 
 use crate::comm::allreduce::{allreduce_time, Algorithm, CommTopo};
+use crate::comm::alpha_beta::Link;
 use crate::sim::scheduler::SchedulerKind;
 
 /// Gradient-exchange backend.
@@ -34,6 +35,30 @@ pub enum Backend {
 /// gRPC protocol efficiency vs raw sockets and its per-call overhead.
 const GRPC_BW_EFFICIENCY: f64 = 0.5;
 const GRPC_CALL_OVERHEAD: f64 = 1500e-6;
+
+/// Trace-calibrated gradient-exchange cost: an effective end-to-end α–β
+/// link fitted over the measured per-layer all-reduce times
+/// ([`Link::fit`]), plus the framework software overhead the hardware
+/// model does *not* explain (the fitted intercept's excess over the
+/// backend model's per-collective latency). Installed on a [`Strategy`]
+/// by `calib::fit`, after which [`Strategy::comm_time`] answers from the
+/// measurement instead of the backend model — the "calibrated profile"
+/// axis of campaign sweeps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibratedComm {
+    /// Fitted effective collective channel (α = hardware-attributable
+    /// latency, bw = achieved all-reduce bandwidth over message size).
+    pub link: Link,
+    /// Per-collective framework overhead beyond the hardware model, s.
+    pub overhead_s: f64,
+}
+
+impl CalibratedComm {
+    /// Time for one all-reduce of `bytes` under the calibration.
+    pub fn comm_time(&self, bytes: f64) -> f64 {
+        self.overhead_s + self.link.xfer(bytes)
+    }
+}
 
 /// One framework's optimization strategy.
 #[derive(Clone, Debug)]
@@ -62,13 +87,24 @@ pub struct Strategy {
     /// ([`SchedulerKind::Fifo`]); `--scheduler` and the `sched`
     /// experiment override it.
     pub default_scheduler: SchedulerKind,
+    /// Trace-calibrated comm override: when set, [`comm_time`] answers
+    /// from the fitted α–β channel + framework overhead instead of the
+    /// backend model. `None` for all built-in strategies; `calib::fit`
+    /// installs it.
+    ///
+    /// [`comm_time`]: Strategy::comm_time
+    pub calibrated_comm: Option<CalibratedComm>,
 }
 
 impl Strategy {
-    /// Time for one gradient all-reduce of `bytes` under this backend.
+    /// Time for one gradient all-reduce of `bytes` under this backend
+    /// (or under the trace calibration, when one is installed).
     pub fn comm_time(&self, topo: &CommTopo, bytes: f64) -> f64 {
         if topo.ranks() <= 1 || bytes <= 0.0 {
             return 0.0;
+        }
+        if let Some(cal) = &self.calibrated_comm {
+            return cal.comm_time(bytes);
         }
         match self.backend {
             Backend::Nccl(algo) => allreduce_time(algo, topo, bytes),
@@ -95,6 +131,7 @@ pub fn caffe_mpi() -> Strategy {
         backend: Backend::Nccl(Algorithm::Hierarchical),
         layerwise_update: false,
         default_scheduler: SchedulerKind::Fifo,
+        calibrated_comm: None,
     }
 }
 
@@ -109,6 +146,7 @@ pub fn cntk() -> Strategy {
         backend: Backend::Nccl(Algorithm::Hierarchical),
         layerwise_update: false,
         default_scheduler: SchedulerKind::Fifo,
+        calibrated_comm: None,
     }
 }
 
@@ -123,6 +161,7 @@ pub fn mxnet() -> Strategy {
         backend: Backend::Nccl(Algorithm::Ring),
         layerwise_update: false,
         default_scheduler: SchedulerKind::Fifo,
+        calibrated_comm: None,
     }
 }
 
@@ -137,6 +176,7 @@ pub fn tensorflow() -> Strategy {
         backend: Backend::Grpc,
         layerwise_update: false,
         default_scheduler: SchedulerKind::Fifo,
+        calibrated_comm: None,
     }
 }
 
@@ -219,5 +259,27 @@ mod tests {
             assert_eq!(by_name(&s.name).unwrap().name, s.name);
         }
         assert!(by_name("pytorch").is_none());
+    }
+
+    #[test]
+    fn calibrated_comm_overrides_backend_model() {
+        let topo = topo();
+        let mut s = caffe_mpi();
+        assert!(s.calibrated_comm.is_none(), "built-ins ship uncalibrated");
+        let base = s.comm_time(&topo, 1e6);
+        let cal = CalibratedComm {
+            link: Link::new(us(50.0), 2e9),
+            overhead_s: us(150.0),
+        };
+        s.calibrated_comm = Some(cal);
+        let t = s.comm_time(&topo, 1e6);
+        assert!((t - (us(200.0) + 1e6 / 2e9)).abs() < 1e-12);
+        assert_ne!(t.to_bits(), base.to_bits());
+        // Single rank and empty messages stay free under calibration too.
+        let mut solo = topo;
+        solo.nodes = 1;
+        solo.gpus_per_node = 1;
+        assert_eq!(s.comm_time(&solo, 1e6), 0.0);
+        assert_eq!(s.comm_time(&topo, 0.0), 0.0);
     }
 }

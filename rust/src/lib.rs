@@ -8,11 +8,13 @@
 //! The crate has two halves:
 //!
 //! * **Modeling** ([`dag`], [`sim`], [`cluster`], [`comm`], [`models`],
-//!   [`trace`], [`analytic`], [`frameworks`]) — the paper's DAG model of
-//!   S-SGD, a discrete-event cluster simulator that executes those DAGs
-//!   against hardware models of the paper's two clusters, closed-form
-//!   predictors (Eqs. 1–6), the four framework strategies, and the
-//!   layer-wise trace dataset toolchain (Table VI format).
+//!   [`trace`], [`analytic`], [`frameworks`], [`calib`]) — the paper's
+//!   DAG model of S-SGD, a discrete-event cluster simulator that
+//!   executes those DAGs against hardware models of the paper's two
+//!   clusters, closed-form predictors (Eqs. 1–6), the four framework
+//!   strategies, the layer-wise trace dataset toolchain (Table VI
+//!   format), and the trace calibration & replay loop (ingest published
+//!   traces → fit simulator parameters → replay → Table V validation).
 //! * **Runtime** ([`runtime`], [`coordinator`]) — a real data-parallel
 //!   S-SGD trainer: N workers execute an AOT-compiled XLA train step
 //!   (JAX/Pallas authored, loaded via PJRT), exchange gradients through a
@@ -84,6 +86,13 @@ pub mod analytic {
     pub mod eqs;
     pub mod fusion;
     pub mod speedup;
+}
+
+pub mod calib {
+    pub mod fit;
+    pub mod ingest;
+    pub mod replay;
+    pub mod validate;
 }
 
 pub mod campaign {

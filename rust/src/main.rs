@@ -9,6 +9,9 @@
 //!   sched     [flags]            scheduler-policy comparison on one job
 //!   campaign  [flags]            parallel scenario sweep with cached results
 //!   traces    [flags]            emit the §VI layer-wise trace dataset
+//!   calibrate [flags]            fit simulator parameters from a trace dir,
+//!                                replay them, score the predictions
+//!   table5    [flags]            the Table V validation table end to end
 //!   train     [flags]            real S-SGD training via PJRT artifacts
 //!
 //! Per-command flags are documented in README.md.
@@ -42,11 +45,13 @@ fn main() {
         "sched" | "schedulers" => cmd_sched(&args),
         "campaign" => cmd_campaign(&args),
         "traces" => cmd_traces(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "table5" => cmd_table5(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),
         other => {
             eprintln!(
-                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|train|analyze> [--flags]\n\
+                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|calibrate|table5|train|analyze> [--flags]\n\
                  see README.md for per-command flags"
             );
             if other == "help" {
@@ -107,10 +112,12 @@ fn scheduler_arg(args: &Args) -> SchedulerKind {
     parse_scheduler(&args.str_or("scheduler", "fifo"))
 }
 
-/// Parse `--scheduler` as a comma list; default: every registered policy.
-fn scheduler_list_arg(args: &Args) -> Vec<SchedulerKind> {
+/// Parse `--scheduler` as a comma list, falling back to `default` when
+/// the flag is absent (`sched` compares every policy by default; the
+/// profile sweep defaults to fifo only).
+fn scheduler_list_or(args: &Args, default: &[SchedulerKind]) -> Vec<SchedulerKind> {
     match args.get("scheduler") {
-        None => SchedulerKind::all().to_vec(),
+        None => default.to_vec(),
         Some(v) => v.split(',').map(|n| parse_scheduler(n.trim())).collect(),
     }
 }
@@ -136,7 +143,7 @@ fn cmd_sched(args: &Args) -> i32 {
     job.iterations = args.usize_or("iters", job.iterations);
     let mut fw = fw_arg(args);
     fw.layerwise_update = args.bool_or("layerwise", true);
-    let kinds = scheduler_list_arg(args);
+    let kinds = scheduler_list_or(args, &SchedulerKind::all());
     let pts = sched::run(&cluster, &job, &fw, &kinds);
     print!("{}", sched::render(&job, &cluster, &fw, &pts));
     0
@@ -149,11 +156,14 @@ fn cmd_sched(args: &Args) -> i32 {
 ///
 /// Flags: `--grid paper|smoke|sched|interconnect`, `--jobs N|auto`,
 /// `--cache-dir DIR|none`, `--filter SUBSTR`, `--seed N`, `--iters N`,
-/// `--out PATH`. Tooling modes (no sweep): `--check-bench FILE`
-/// validates a report against the schema; `--canon FILE` prints its
-/// deterministic canonical form (CI's replay job diffs two of these).
+/// `--out PATH`. `--profile FILE` switches to the calibrated-profile
+/// axis (one replay cell per profile entry × `--scheduler`; see
+/// [`cmd_campaign_profile`]). Tooling modes (no sweep):
+/// `--check-bench FILE` validates a report against the schema;
+/// `--canon FILE` prints its deterministic canonical form (CI's replay
+/// job diffs two of these).
 fn cmd_campaign(args: &Args) -> i32 {
-    use dagsgd::campaign::{cache::Cache, grid, report, runner};
+    use dagsgd::campaign::{grid, report, runner};
     use dagsgd::util::json;
 
     // Tooling modes: validate / canonicalize an existing report file
@@ -198,6 +208,13 @@ fn cmd_campaign(args: &Args) -> i32 {
         };
     }
 
+    // Profile-driven sweep (the `calib` axis): replay a calibrated
+    // profile's entries through the shared runner/cache/report plumbing
+    // instead of expanding a named grid.
+    if let Some(path) = args.get("profile") {
+        return cmd_campaign_profile(args, path);
+    }
+
     let seed = args.u64_or("seed", 7);
     let grid_name = args.str_or("grid", "paper");
     let Some(mut grid) = grid::by_name(&grid_name, seed) else {
@@ -211,16 +228,11 @@ fn cmd_campaign(args: &Args) -> i32 {
         return 2;
     }
     let jobs = args.parallelism_or("jobs", 4);
-    let cache_dir = args.str_or("cache-dir", ".campaign-cache");
-    let cache = if cache_dir == "none" {
-        None
-    } else {
-        match Cache::open(&cache_dir) {
-            Ok(c) => Some(c),
-            Err(e) => {
-                eprintln!("cannot open cache dir {cache_dir}: {e}");
-                return 1;
-            }
+    let cache = match cache_arg(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
         }
     };
     let outcome = match runner::run(&scenarios, jobs, cache.as_ref()) {
@@ -232,12 +244,275 @@ fn cmd_campaign(args: &Args) -> i32 {
     };
     print!("{}", report::render_table(&outcome));
     println!("{grid_name}: {}", report::summary(&outcome));
+    write_campaign_report(args, &grid_name, &outcome)
+}
+
+/// Load + schema-check a calibrated profile file.
+fn load_profile(path: &str) -> Result<dagsgd::calib::fit::CalibratedProfile, String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))
+        .and_then(|t| {
+            dagsgd::util::json::parse(&t).map_err(|e| format!("{path}: invalid JSON: {e}"))
+        })
+        .and_then(|j| {
+            dagsgd::calib::fit::CalibratedProfile::from_json(&j).map_err(|e| format!("{path}: {e}"))
+        })
+}
+
+/// Shared `--cache-dir DIR|none` handling of the campaign sweeps.
+fn cache_arg(args: &Args) -> Result<Option<dagsgd::campaign::cache::Cache>, String> {
+    let cache_dir = args.str_or("cache-dir", ".campaign-cache");
+    if cache_dir == "none" {
+        return Ok(None);
+    }
+    dagsgd::campaign::cache::Cache::open(&cache_dir)
+        .map(Some)
+        .map_err(|e| format!("cannot open cache dir {cache_dir}: {e}"))
+}
+
+/// Shared `--out` handling: write the campaign report JSON.
+fn write_campaign_report(
+    args: &Args,
+    grid_name: &str,
+    outcome: &dagsgd::campaign::runner::Outcome,
+) -> i32 {
     let out = args.str_or("out", "BENCH_campaign.json");
-    if let Err(e) = std::fs::write(&out, report::to_json(&grid_name, &outcome).to_string()) {
+    if let Err(e) = std::fs::write(
+        &out,
+        dagsgd::campaign::report::to_json(grid_name, outcome).to_string(),
+    ) {
         eprintln!("cannot write {out}: {e}");
         return 1;
     }
     println!("wrote {out}");
+    0
+}
+
+/// `dagsgd campaign --profile FILE` — sweep a calibrated profile: one
+/// cell per profile entry × scheduler (`--scheduler`, default fifo),
+/// each replaying the measured per-layer times through the DAG
+/// simulator (`calib::replay`). Cells are cached content-addressed (the
+/// profile's hash is part of every key), and the report flows through
+/// the standard `BENCH_campaign.json` machinery with `grid: "calib"`.
+fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
+    use dagsgd::calib::replay;
+    use dagsgd::campaign::{report, runner};
+
+    let profile = match load_profile(path).and_then(|p| {
+        replay::validate_profile(&p)?;
+        Ok(p)
+    }) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let kinds = scheduler_list_or(args, &[SchedulerKind::Fifo]);
+    let mut cells = replay::scenarios(&profile, &kinds);
+    if let Some(pat) = args.get("filter") {
+        cells.retain(|s| s.key().contains(pat));
+        if cells.is_empty() {
+            eprintln!("--filter matched none of the profile's cells");
+            return 2;
+        }
+    }
+    let jobs = args.parallelism_or("jobs", 4);
+    let cache = match cache_arg(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let outcome = runner::run_with(&cells, jobs, cache.as_ref(), |s| {
+        replay::replay_cell(&profile, s)
+    });
+    print!("{}", report::render_table(&outcome));
+    println!("calib ({}): {}", profile.tag(), report::summary(&outcome));
+    write_campaign_report(args, "calib", &outcome)
+}
+
+/// Read + JSON-parse a file, then run a schema check on it (the
+/// `calibrate --check-profile/--check-report` tooling modes).
+fn check_json_file(
+    path: &str,
+    check: impl Fn(&dagsgd::util::json::Json) -> Result<String, String>,
+) -> i32 {
+    let result = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read: {e}"))
+        .and_then(|t| dagsgd::util::json::parse(&t).map_err(|e| format!("invalid JSON: {e}")))
+        .and_then(|j| check(&j));
+    match result {
+        Ok(msg) => {
+            println!("{path}: {msg}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            1
+        }
+    }
+}
+
+/// `dagsgd calibrate` — the trace → profile → replay → report loop:
+/// ingest a trace directory (`--traces DIR`, headerless files included),
+/// fit simulator parameters (per-layer efficiencies, α–β comm, framework
+/// overhead) into a serializable profile (`--out profile.json`),
+/// optionally replay every entry through the DAG simulator under a
+/// policy (`--replay --scheduler S`) and write the Table-V-style
+/// prediction-error report (`--report [PATH]`, schema-validated).
+/// Tooling: `--check-profile FILE` / `--check-report FILE`.
+fn cmd_calibrate(args: &Args) -> i32 {
+    use dagsgd::calib::{fit, ingest, replay, validate};
+    use dagsgd::util::units::fmt_rate;
+
+    if let Some(path) = args.get("check-profile") {
+        return check_json_file(path, |j| {
+            fit::CalibratedProfile::from_json(j)
+                .map(|p| format!("profile ok ({} entries, tag {})", p.entries.len(), p.tag()))
+        });
+    }
+    if let Some(path) = args.get("check-report") {
+        return check_json_file(path, |j| {
+            validate::validate_report(j).map(|n| format!("report ok ({n} rows)"))
+        });
+    }
+
+    let Some(dir) = args.get("traces") else {
+        eprintln!(
+            "calibrate: --traces DIR is required (generate one with `dagsgd traces --out DIR`)"
+        );
+        return 2;
+    };
+    let fw = fw_arg(args);
+    let set = match ingest::load_dir(std::path::Path::new(dir)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    for (path, why) in &set.skipped {
+        eprintln!("skipping {path}: {why}");
+    }
+
+    let mut entries = Vec::new();
+    for loaded in &set.traces {
+        match fit::calibrate_one(&loaded.trace, &fw) {
+            Ok(e) => entries.push(e),
+            Err(why) => eprintln!("skipping {}: {why}", loaded.path),
+        }
+    }
+    if entries.is_empty() {
+        eprintln!("calibrate: no ingested trace could be calibrated");
+        return 1;
+    }
+    let profile = fit::CalibratedProfile {
+        framework: fw.name.clone(),
+        entries,
+    };
+    println!("{} | calibrated {} entries under {}", set.summary(), profile.entries.len(), fw.name);
+    for e in &profile.entries {
+        let eff = |v: Option<f64>| v.map(|x| f(x, 3)).unwrap_or_else(|| "-".into());
+        let comm = e
+            .comm
+            .map(|c| {
+                format!(
+                    "alpha {} bw {} ovh {}",
+                    fmt_dur(c.alpha_s),
+                    fmt_rate(c.bw_bps),
+                    fmt_dur(c.overhead_s)
+                )
+            })
+            .unwrap_or_else(|| "no comm fit (single GPU?)".into());
+        println!(
+            "  {:<38} t_io {:>9}  eff conv {} fc {}  | {}",
+            e.key(),
+            fmt_dur(e.t_io_s),
+            eff(e.eff_conv),
+            eff(e.eff_fc),
+            comm
+        );
+    }
+
+    // Refuse to write a profile the downstream tooling would reject
+    // (duplicate entry addresses — e.g. legacy- and batch-named traces
+    // of the same job in one dir — or unsweepable topologies).
+    if let Err(e) = replay::validate_profile(&profile) {
+        eprintln!("calibrate: {e}");
+        return 1;
+    }
+
+    let out = args.str_or("out", "profile.json");
+    if let Err(e) = std::fs::write(&out, profile.to_json().to_string()) {
+        eprintln!("cannot write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {out} (tag {})", profile.tag());
+
+    let kind = scheduler_arg(args);
+    let want_report = args.has("report");
+    if args.bool_or("replay", false) || want_report {
+        let rows = match validate::prediction_rows(&profile, kind) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("replay failed: {e}");
+                return 1;
+            }
+        };
+        print!("{}", validate::render(&rows));
+        for (net, err) in validate::mean_errors(&rows) {
+            println!("mean |err| {net}: {}%", f(err, 1));
+        }
+        if want_report {
+            let path = match args.get("report") {
+                Some("true") | None => "BENCH_calibration.json".to_string(),
+                Some(p) => p.to_string(),
+            };
+            let j = validate::report_to_json(&rows, &profile.framework, kind, &profile.tag());
+            validate::validate_report(&j).expect("generated report must satisfy its own schema");
+            if let Err(e) = std::fs::write(&path, j.to_string()) {
+                eprintln!("cannot write {path}: {e}");
+                return 1;
+            }
+            println!("wrote {path}");
+        }
+    }
+    0
+}
+
+/// `dagsgd table5` — reproduce the paper's validation table through the
+/// in-process calibration loop: synthesize traces for every net on both
+/// clusters, calibrate, replay, and print predicted-vs-traced iteration
+/// times with percent errors. `--out PATH` writes the schema-validated
+/// report (`--iters` trace length, `--seed`, `--scheduler`).
+fn cmd_table5(args: &Args) -> i32 {
+    use dagsgd::calib::validate;
+    use dagsgd::experiments::table5;
+
+    let kind = scheduler_arg(args);
+    let iters = args.usize_or("iters", table5::DEFAULT_TRACE_ITERS);
+    let seed = args.u64_or("seed", 7);
+    let rows = table5::run(kind, iters, seed);
+    print!("{}", validate::render(&rows));
+    for (net, err) in validate::mean_errors(&rows) {
+        println!("mean |err| {net}: {}%", f(err, 1));
+    }
+    if let Some(path) = args.get("out") {
+        let j = validate::report_to_json(
+            &rows,
+            "caffe-mpi",
+            kind,
+            &format!("synthetic#seed{seed}"),
+        );
+        validate::validate_report(&j).expect("generated report must satisfy its own schema");
+        if let Err(e) = std::fs::write(path, j.to_string()) {
+            eprintln!("cannot write {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
     0
 }
 
@@ -275,7 +550,48 @@ fn faults_arg(args: &Args) -> Vec<dagsgd::sim::failures::Fault> {
 fn cmd_simulate(args: &Args) -> i32 {
     let cluster = cluster_arg(args);
     let job = job_arg(args);
-    let fw = fw_arg(args);
+    let mut fw = fw_arg(args);
+    // What-if against measured hardware: `--profile FILE` installs the
+    // matching entry's fitted α–β comm channel on the strategy
+    // (`calib::fit::CalibratedComm`), so this model-driven simulation
+    // runs its gradient exchange at the *calibrated* cost.
+    if let Some(path) = args.get("profile") {
+        let profile = match load_profile(path) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let entry = profile
+            .entries
+            .iter()
+            .filter(|e| e.net == job.net.name && e.cluster == cluster.name)
+            .min_by_key(|e| e.gpus.abs_diff(job.ranks()));
+        let Some(entry) = entry else {
+            eprintln!(
+                "{path}: no entry for net={} cluster={} (have: {})",
+                job.net.name,
+                cluster.name,
+                profile
+                    .entries
+                    .iter()
+                    .map(|e| e.key())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            return 2;
+        };
+        fw = entry.apply_to(&fw);
+        if fw.calibrated_comm.is_some() {
+            println!("calibrated comm installed from {path} ({})", entry.key());
+        } else {
+            eprintln!(
+                "warning: {} has no comm fit; simulating with the stock backend",
+                entry.key()
+            );
+        }
+    }
     let kind = scheduler_arg(args);
     let mut sched = kind.build(&job.net);
     let (mut dag, res) = builder::build_ssgd_dag(&cluster, &job, &fw);

@@ -35,7 +35,7 @@ pub fn efficiency_for(gpu_name: &str) -> Efficiency {
 }
 
 /// Fixed per-kernel launch cost — floors the many tiny layers.
-const KERNEL_LAUNCH: f64 = 6e-6;
+pub const KERNEL_LAUNCH: f64 = 6e-6;
 
 /// Per-layer time model.
 #[derive(Clone, Debug)]
@@ -99,6 +99,33 @@ impl PerfModel {
     }
 }
 
+/// Least-squares fit of one efficiency factor from measured layer times:
+/// the roofline's compute arm is `t = flops / (peak · eff)`, linear in
+/// `x = 1/eff`, so `x* = Σ aᵢtᵢ / Σ aᵢ²` with `aᵢ = flopsᵢ / peak`
+/// minimizes the squared residual. `samples` are `(flops, seconds)` for
+/// layers known to be compute-bound (the caller filters out layers where
+/// the memory or launch floor binds — their time says nothing about
+/// arithmetic efficiency). Returns `None` when no sample is usable; the
+/// result is clamped to `(0, 1]`.
+pub fn fit_efficiency(samples: &[(f64, f64)], peak_flops: f64) -> Option<f64> {
+    assert!(peak_flops > 0.0);
+    let mut saa = 0.0;
+    let mut sat = 0.0;
+    for &(flops, t) in samples {
+        if flops <= 0.0 || t <= 0.0 {
+            continue;
+        }
+        let a = flops / peak_flops;
+        saa += a * a;
+        sat += a * t;
+    }
+    if saa <= 0.0 || sat <= 0.0 {
+        return None;
+    }
+    let inv_eff = sat / saa;
+    Some((1.0 / inv_eff).clamp(f64::MIN_POSITIVE, 1.0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +180,34 @@ mod tests {
         let a = pm.update_time(&zoo::alexnet());
         let g = pm.update_time(&zoo::googlenet());
         assert!(a > 5.0 * g);
+    }
+
+    #[test]
+    fn fit_efficiency_recovers_model_value() {
+        // Build samples exactly from the model's compute arm and check
+        // the fit inverts it.
+        let pm = PerfModel::for_cluster(&presets::k80_cluster());
+        let net = zoo::alexnet();
+        let batch = 1024usize;
+        let samples: Vec<(f64, f64)> = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .map(|l| {
+                let flops = 2.0 * l.fwd_macs * batch as f64;
+                (flops, flops / (pm.peak_flops * pm.eff.conv))
+            })
+            .collect();
+        let eff = fit_efficiency(&samples, pm.peak_flops).unwrap();
+        assert!((eff / pm.eff.conv - 1.0).abs() < 1e-9, "eff={eff}");
+    }
+
+    #[test]
+    fn fit_efficiency_degenerate_inputs() {
+        assert!(fit_efficiency(&[], 1e12).is_none());
+        assert!(fit_efficiency(&[(0.0, 1.0), (1e9, 0.0)], 1e12).is_none());
+        // Faster-than-peak measurements clamp to eff = 1.
+        assert_eq!(fit_efficiency(&[(1e12, 0.5)], 1e12), Some(1.0));
     }
 
     #[test]

@@ -33,9 +33,40 @@ pub fn generate_all(iters: usize, seed: u64) -> Vec<Trace> {
     out
 }
 
-/// File name convention: `<net>_<cluster>_g<gpus>.trace`.
+/// File name convention: `<net>_<cluster>_g<gpus>_b<batch>.trace`.
+/// The batch size is part of the name so variant-batch traces of the
+/// same net × cluster × GPU count cannot collide on disk.
 pub fn file_name(t: &Trace) -> String {
-    format!("{}_{}_g{}.trace", t.net, t.cluster, t.gpus)
+    format!("{}_{}_g{}_b{}.trace", t.net, t.cluster, t.gpus, t.batch)
+}
+
+/// Invert [`file_name`]: recover `(net, cluster, gpus, batch)` from a
+/// file stem. Accepts both the current `<net>_<cluster>_g<G>_b<B>` form
+/// and the pre-batch `<net>_<cluster>_g<G>` layout (batch reported as
+/// 0 — the caller falls back to the net's default). Returns `None` for
+/// stems that don't follow the convention (e.g. the Table VI golden
+/// file), which ingest treats as "trust the `#!` header only".
+pub fn parse_file_name(stem: &str) -> Option<(String, String, usize, usize)> {
+    let parts: Vec<&str> = stem.split('_').collect();
+    let tagged = |part: &str, tag: char| -> Option<usize> {
+        let rest = part.strip_prefix(tag)?;
+        if rest.is_empty() {
+            return None;
+        }
+        rest.parse().ok()
+    };
+    match parts.as_slice() {
+        [net, cluster, g, b] => {
+            let gpus = tagged(g, 'g')?;
+            let batch = tagged(b, 'b')?;
+            Some((net.to_string(), cluster.to_string(), gpus, batch))
+        }
+        [net, cluster, g] => {
+            let gpus = tagged(g, 'g')?;
+            Some((net.to_string(), cluster.to_string(), gpus, 0))
+        }
+        _ => None,
+    }
 }
 
 /// Write the dataset to `dir`. Returns the written paths.
@@ -67,6 +98,40 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 6, "file names must be unique");
+    }
+
+    /// The regression the batch suffix fixes: same net × cluster × GPUs
+    /// at two batch sizes must land in two files.
+    #[test]
+    fn variant_batches_get_distinct_file_names() {
+        let mut a = generate_all(1, 1).remove(0);
+        let mut b = a.clone();
+        a.batch = 512;
+        b.batch = 1024;
+        assert_ne!(file_name(&a), file_name(&b));
+        assert!(file_name(&a).ends_with("_b512.trace"));
+    }
+
+    #[test]
+    fn file_name_roundtrips_through_parse() {
+        for t in generate_all(1, 3) {
+            let name = file_name(&t);
+            let stem = name.strip_suffix(".trace").unwrap();
+            let (net, cluster, gpus, batch) = parse_file_name(stem).unwrap();
+            assert_eq!(net, t.net);
+            assert_eq!(cluster, t.cluster);
+            assert_eq!(gpus, t.gpus);
+            assert_eq!(batch, t.batch);
+        }
+        // Legacy layout without the batch segment still parses (batch 0).
+        assert_eq!(
+            parse_file_name("alexnet_k80-pcie-10gbe_g16"),
+            Some(("alexnet".into(), "k80-pcie-10gbe".into(), 16, 0))
+        );
+        // Non-conforming stems are rejected, not misparsed.
+        assert!(parse_file_name("table6_alexnet_k80_example").is_none());
+        assert!(parse_file_name("alexnet").is_none());
+        assert!(parse_file_name("alexnet_k80_gxx_b12").is_none());
     }
 
     #[test]

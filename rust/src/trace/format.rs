@@ -103,11 +103,13 @@ impl Trace {
     }
 
     /// Parse the text format (tolerates missing `#!` header: metadata
-    /// defaults to empty/zero, like the paper's raw files).
+    /// defaults to empty/zero, like the paper's raw files). A trace with
+    /// no layer records at all — empty input, or only comments/iteration
+    /// markers — is an error: every downstream consumer (averaging,
+    /// calibration) needs at least one populated iteration.
     pub fn parse(text: &str) -> Result<Trace, String> {
         let mut trace = Trace::default();
         let mut current: Vec<LayerRecord> = Vec::new();
-        let mut any_iter_marker = false;
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() {
@@ -128,7 +130,6 @@ impl Trace {
                 continue;
             }
             if line.starts_with("# iter") {
-                any_iter_marker = true;
                 if !current.is_empty() {
                     trace.iterations.push(std::mem::take(&mut current));
                 }
@@ -163,8 +164,20 @@ impl Trace {
         if !current.is_empty() {
             trace.iterations.push(current);
         }
-        if trace.iterations.is_empty() && !any_iter_marker {
-            return Err("no records found".into());
+        if trace.iterations.is_empty() {
+            return Err("no layer records found".into());
+        }
+        // Ragged traces (iterations with different row counts — e.g. a
+        // file truncated mid-write) are malformed: every consumer
+        // (`mean_rows`, calibration) assumes a rectangular table.
+        let nlayers = trace.iterations[0].len();
+        for (i, it) in trace.iterations.iter().enumerate() {
+            if it.len() != nlayers {
+                return Err(format!(
+                    "iteration {i} has {} rows but iteration 0 has {nlayers} (truncated trace?)",
+                    it.len()
+                ));
+            }
         }
         Ok(trace)
     }
@@ -277,5 +290,71 @@ mod tests {
         assert!(Trace::parse("1 conv1 3.0\n").is_err());
         assert!(Trace::parse("").is_err());
         assert!(Trace::parse("x conv1 1 2 3 4\n").is_err());
+    }
+
+    /// parse∘to_text∘parse ≡ parse for a file WITH the `#!` header:
+    /// every field (metadata + all rows) survives the full cycle.
+    #[test]
+    fn roundtrip_identity_with_header() {
+        let once = Trace::parse(&sample().to_text()).unwrap();
+        let twice = Trace::parse(&once.to_text()).unwrap();
+        assert_eq!(once, twice);
+        assert_eq!(once, sample(), "serialize∘parse is the identity");
+    }
+
+    /// The same identity for a headerless (paper-style) file: metadata
+    /// stays at its defaults through arbitrarily many cycles, and the
+    /// rows are preserved exactly.
+    #[test]
+    fn roundtrip_identity_headerless() {
+        let text = "0 data 1.20e+06 0 0 0\n1 conv1 3.27e+06 288202 123.424 139776\n\
+                    # iter 1\n0 data 1.1e+06 0 0 0\n1 conv1 3.1e+06 290000 125.5 139776\n";
+        let once = Trace::parse(text).unwrap();
+        assert_eq!(once.net, "");
+        assert_eq!(once.gpus, 0);
+        assert_eq!(once.iterations.len(), 2);
+        let twice = Trace::parse(&once.to_text()).unwrap();
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn malformed_rows_error_with_line_numbers() {
+        // Wrong field count (5 of 6).
+        let e = Trace::parse("0 data 1 0 0 0\n1 conv1 2 3 4\n").unwrap_err();
+        assert!(e.contains("line 2") && e.contains("5"), "{e}");
+        // Unparseable numeric fields name the field.
+        let e = Trace::parse("0 conv1 abc 0 0 0\n").unwrap_err();
+        assert!(e.contains("forward"), "{e}");
+        let e = Trace::parse("0 conv1 1 2 3 banana\n").unwrap_err();
+        assert!(e.contains("size"), "{e}");
+        // A bad header value is an error, not a silent default.
+        assert!(Trace::parse("#! net=x gpus=two\n0 c 1 2 3 4\n").is_err());
+    }
+
+    #[test]
+    fn ragged_traces_are_rejected() {
+        // Iteration 1 cut off mid-write: parse must fail, not hand a
+        // ragged table to mean_rows (which would index out of bounds).
+        let text = "0 data 1 0 0 0\n1 conv1 2 3 4 5\n\
+                    # iter 1\n0 data 1 0 0 0\n";
+        let e = Trace::parse(text).unwrap_err();
+        assert!(e.contains("iteration 1"), "{e}");
+        // Equal-length iterations still parse.
+        let ok = "0 data 1 0 0 0\n# iter 1\n0 data 2 0 0 0\n";
+        assert_eq!(Trace::parse(ok).unwrap().iterations.len(), 2);
+    }
+
+    #[test]
+    fn empty_iterations_are_errors() {
+        // Only iteration markers, no rows: nothing to average/calibrate.
+        assert!(Trace::parse("# iter 0\n# iter 1\n").is_err());
+        // Header + comments only.
+        assert!(Trace::parse("#! net=alexnet cluster=k80 gpus=2 batch=1\n# Id\tName\n").is_err());
+        // Whitespace only.
+        assert!(Trace::parse("\n\n  \n").is_err());
+        // But blank lines *between* records are fine.
+        let t = Trace::parse("\n0 data 1 0 0 0\n\n1 conv1 2 3 4 5\n").unwrap();
+        assert_eq!(t.iterations.len(), 1);
+        assert_eq!(t.iterations[0].len(), 2);
     }
 }

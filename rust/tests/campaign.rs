@@ -119,6 +119,7 @@ fn property_campaign_cell_matches_direct_experiment() {
             scheduler: SchedulerKind::Fifo,
             layerwise_update: false,
             seed: 0,
+            profile: None,
         };
         let cell = s.run().map_err(|e| e.to_string())?;
 
@@ -206,6 +207,7 @@ fn adhoc_grid_len_matches_expansion() {
         topologies: vec![(1, 2), (2, 2), (4, 4)],
         schedulers: vec![SchedulerKind::Fifo, SchedulerKind::Priority],
         layerwise: vec![false, true],
+        profiles: vec![None],
         iterations: 8,
         seed: 0,
     };
