@@ -1,0 +1,61 @@
+//! Bench: throughput of the what-if engine — per-prediction cost of the
+//! fabric substitution + DAG replay, the fusion autotune (bucket-size
+//! scan over the fitted channel + fused replay), and the full
+//! calibrate → predict sweep over the §VI dataset shape on the
+//! experiment's fabric ladder.
+//!
+//!     cargo bench --bench whatif_sweep
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::calib::whatif::{self, Fabric};
+use dagsgd::experiments::whatif as exp;
+use dagsgd::frameworks::strategy;
+use dagsgd::sim::scheduler::SchedulerKind;
+
+fn main() {
+    let mut bench = Bench::new("whatif_sweep").with_iters(1, 5);
+
+    let profile = exp::profile(30, 7);
+    let fabrics = exp::fabrics();
+    let fw = strategy::by_name(&profile.framework).expect("profile framework");
+    let predictions = (profile.entries.len() * fabrics.len()) as f64;
+    println!(
+        "profile: {} entries x {} fabrics = {} predictions per sweep",
+        profile.entries.len(),
+        fabrics.len(),
+        predictions
+    );
+
+    bench.case("predict (predictions/s)", predictions, || {
+        let mut acc = 0.0;
+        for entry in &profile.entries {
+            for fabric in &fabrics {
+                acc += whatif::predict_entry(entry, fabric, SchedulerKind::Fifo, &fw)
+                    .expect("ladder fabric resolvable")
+                    .replayed
+                    .iter_time_s;
+            }
+        }
+        acc
+    });
+
+    bench.case("autotune_fusion (entries/s)", profile.entries.len() as f64, || {
+        profile
+            .entries
+            .iter()
+            .map(|e| {
+                whatif::autotune_fusion(e, &Fabric::Measured, &fw)
+                    .expect("whole-cluster entries fuse")
+                    .replayed_iter_s
+            })
+            .sum::<f64>()
+    });
+
+    bench.case("sweep_e2e (predictions/s)", predictions, || {
+        let (_, rows) =
+            exp::run(30, 7, &exp::fabrics(), &[SchedulerKind::Fifo], false, 4).expect("sweep runs");
+        rows.len() as f64
+    });
+
+    bench.report();
+}

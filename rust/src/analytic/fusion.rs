@@ -15,6 +15,13 @@
 //! * [`pipeline_time`] — iteration time under WFBP for a bucketing
 //!   (generalization of `eqs::tc_no` to fused buckets);
 //! * [`optimal_bucket_bytes`] — scan bucket caps, return the best.
+//!
+//! Every entry point exists in two forms: the original `(topo, strategy)`
+//! signature (the backend model prices each collective) and a `_with`
+//! variant taking an arbitrary `bytes → seconds` channel function. The
+//! channel form is what `calib::whatif` uses to run the scan against a
+//! *calibrated* α–β channel (or a hypothetical fabric) instead of the
+//! model — the ROADMAP's measurement-driven fusion autotuning.
 
 use super::eqs::IterInputs;
 use crate::comm::allreduce::CommTopo;
@@ -56,13 +63,45 @@ pub fn fused_comm_times(
     topo: &CommTopo,
     strategy: &Strategy,
 ) -> Vec<f64> {
+    fused_comm_times_with(bucketing, comm_bytes, &|bytes| strategy.comm_time(topo, bytes))
+}
+
+/// [`fused_comm_times`] against an arbitrary collective-cost channel
+/// (`bytes → seconds`), e.g. a calibrated α–β fit.
+pub fn fused_comm_times_with(
+    bucketing: &Bucketing,
+    comm_bytes: &[f64],
+    channel: &dyn Fn(f64) -> f64,
+) -> Vec<f64> {
     bucketing
         .iter()
         .map(|bucket| {
             let bytes: f64 = bucket.iter().map(|&l| comm_bytes[l]).sum();
-            strategy.comm_time(topo, bytes)
+            channel(bytes)
         })
         .collect()
+}
+
+/// Lower a bucketing back into a layer-indexed per-collective duration
+/// vector for the DAG builder: the whole fused cost of a bucket lands on
+/// its **lowest** layer index (backward order produces that layer last,
+/// so an aggregate task gated on it starts exactly when every member
+/// gradient exists — the fused-launch semantics), every other member
+/// costs 0 (the builder then skips their aggregate tasks). This is how
+/// `calib::whatif` replays a winning bucket plan through the simulator.
+pub fn fused_comm_vector(
+    bucketing: &Bucketing,
+    comm_bytes: &[f64],
+    channel: &dyn Fn(f64) -> f64,
+) -> Vec<f64> {
+    let mut out = vec![0.0; comm_bytes.len()];
+    for bucket in bucketing {
+        let bytes: f64 = bucket.iter().map(|&l| comm_bytes[l]).sum();
+        if let Some(&anchor) = bucket.iter().min() {
+            out[anchor] = channel(bytes);
+        }
+    }
+    out
 }
 
 /// WFBP pipeline time with fused buckets: bucket `i` becomes ready when
@@ -84,10 +123,7 @@ pub fn pipeline_time(inputs: &IterInputs, bucketing: &Bucketing, bucket_comm: &[
     let mut comm_end = 0.0f64;
     for (bucket, &ct) in bucketing.iter().zip(bucket_comm) {
         // Ready when the last layer of the bucket (lowest index) is done.
-        let ready = bucket
-            .iter()
-            .map(|&li| finish[li])
-            .fold(0.0f64, f64::max);
+        let ready = bucket.iter().map(|&li| finish[li]).fold(0.0f64, f64::max);
         comm_end = comm_end.max(ready) + ct;
     }
     total_compute + (comm_end - total_compute).max(0.0)
@@ -108,19 +144,37 @@ pub fn optimal_bucket_bytes(
     topo: &CommTopo,
     strategy: &Strategy,
 ) -> (Vec<FusionPoint>, FusionPoint) {
+    optimal_bucket_bytes_with(inputs, comm_bytes, &|bytes| strategy.comm_time(topo, bytes))
+}
+
+/// [`optimal_bucket_bytes`] against an arbitrary collective-cost channel
+/// (the calibrated-profile autotuning path). The scan grid is identical
+/// (64 KiB doubling to 2× the gradient total), so "within one scan step"
+/// means a factor of two in cap between two channels' optima.
+pub fn optimal_bucket_bytes_with(
+    inputs: &IterInputs,
+    comm_bytes: &[f64],
+    channel: &dyn Fn(f64) -> f64,
+) -> (Vec<FusionPoint>, FusionPoint) {
     let total: f64 = comm_bytes.iter().sum();
     let mut points = Vec::new();
-    // From "every tensor alone" to "one giant bucket".
+    // From "every tensor alone" to "one giant bucket". Do-while: even a
+    // gradient stream smaller than the first cap (hand-edited profiles
+    // can carry tiny size_bytes) yields the one-bucket point instead of
+    // an empty scan.
     let mut cap = 64.0 * 1024.0;
-    while cap < total * 2.0 {
+    loop {
         let bucketing = bucketing_by_cap(comm_bytes, cap);
-        let ct = fused_comm_times(&bucketing, comm_bytes, topo, strategy);
+        let ct = fused_comm_times_with(&bucketing, comm_bytes, channel);
         points.push(FusionPoint {
             cap_bytes: cap,
             buckets: bucketing.len(),
             iter_time: pipeline_time(inputs, &bucketing, &ct),
         });
         cap *= 2.0;
+        if cap >= total * 2.0 {
+            break;
+        }
     }
     let best = points
         .iter()
@@ -228,6 +282,55 @@ mod tests {
             fused < 0.5 * layerwise,
             "fused {fused} should be well under layer-wise {layerwise}"
         );
+    }
+
+    /// The `(topo, strategy)` form and the channel form are the same
+    /// computation: a closure over `strategy.comm_time` must reproduce
+    /// the original scan bit-for-bit.
+    #[test]
+    fn channel_form_matches_strategy_form() {
+        let (inputs, bytes, topo, fw) = setup();
+        let (pts_a, best_a) = optimal_bucket_bytes(&inputs, &bytes, &topo, &fw);
+        let (pts_b, best_b) =
+            optimal_bucket_bytes_with(&inputs, &bytes, &|b| fw.comm_time(&topo, b));
+        assert_eq!(pts_a.len(), pts_b.len());
+        for (a, b) in pts_a.iter().zip(&pts_b) {
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+            assert_eq!(a.buckets, b.buckets);
+        }
+        assert_eq!(best_a.cap_bytes, best_b.cap_bytes);
+    }
+
+    /// `fused_comm_vector` lowers a bucketing into builder durations:
+    /// the bucket's whole cost on its lowest member, zeros elsewhere,
+    /// totalling exactly the per-bucket times.
+    #[test]
+    fn fused_comm_vector_anchors_on_lowest_member() {
+        let bytes = vec![10.0, 0.0, 20.0, 30.0];
+        let channel = |b: f64| 1.0 + b; // affine, distinguishable
+        let bucketing = bucketing_by_cap(&bytes, 35.0); // [[3], [2, 0]]
+        let v = fused_comm_vector(&bucketing, &bytes, &channel);
+        assert_eq!(v.len(), 4);
+        assert!((v[3] - channel(30.0)).abs() < 1e-12);
+        assert!((v[0] - channel(30.0)).abs() < 1e-12, "bucket [2,0] anchors on layer 0");
+        assert_eq!(v[1], 0.0);
+        assert_eq!(v[2], 0.0);
+        let per_bucket = fused_comm_times_with(&bucketing, &bytes, &channel);
+        let total: f64 = v.iter().sum();
+        assert!((total - per_bucket.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    /// A gradient stream smaller than the first scan cap still yields a
+    /// (single-point, one-bucket) scan — the what-if autotuner must get
+    /// a result, never an empty-scan panic, on tiny profiles.
+    #[test]
+    fn scan_handles_tiny_gradient_totals() {
+        let (inputs, _, topo, fw) = setup();
+        let tiny = vec![0.0, 1000.0, 2000.0]; // 3 KB total, < 64 KiB cap
+        let (points, best) = optimal_bucket_bytes(&inputs, &tiny, &topo, &fw);
+        assert_eq!(points.len(), 1);
+        assert_eq!(best.buckets, 1, "everything fits one bucket");
+        assert!(best.iter_time.is_finite());
     }
 
     #[test]

@@ -45,7 +45,12 @@ pub const REPLAY_ITERS: usize = 8;
 /// forward, backward and comm; modeled h2d and update (absent from the
 /// trace format). Decode time is 0 — the Table VI convention folds any
 /// CPU decode into the data row, which replay accounts to the I/O stage.
-pub fn durations_from(entry: &NetCalibration, job: &JobSpec, pm: &PerfModel, h2d: f64) -> Durations {
+pub fn durations_from(
+    entry: &NetCalibration,
+    job: &JobSpec,
+    pm: &PerfModel,
+    h2d: f64,
+) -> Durations {
     let mut fwd = vec![0.0; entry.layers.len()];
     let mut bwd = vec![0.0; entry.layers.len()];
     let mut comm = vec![0.0; entry.layers.len()];
@@ -68,8 +73,12 @@ pub fn durations_from(entry: &NetCalibration, job: &JobSpec, pm: &PerfModel, h2d
     }
 }
 
-/// Resolve an entry back into simulator specs.
-fn resolve(entry: &NetCalibration) -> Result<(crate::cluster::topology::ClusterSpec, JobSpec), String> {
+/// Resolve an entry back into simulator specs (shared with the what-if
+/// engine, which keeps the measured compute side of the job and swaps
+/// only the collective channel).
+pub(crate) fn resolve(
+    entry: &NetCalibration,
+) -> Result<(crate::cluster::topology::ClusterSpec, JobSpec), String> {
     let cluster = presets::by_name(&entry.cluster)
         .ok_or_else(|| format!("unknown cluster '{}' in profile", entry.cluster))?;
     let net = zoo::by_name(&entry.net)
@@ -102,10 +111,40 @@ pub fn replay_entry(
     kind: SchedulerKind,
     fw: &Strategy,
 ) -> Result<Replayed, String> {
+    replay_entry_with_comm(entry, kind, fw, None)
+}
+
+/// [`replay_entry`] with an optionally substituted per-layer collective
+/// cost vector (forward layer order, one slot per trace row) — the
+/// what-if engine's door into the replay pipeline. `None` replays the
+/// measured comm exactly; the two calls are the *same* code path, so a
+/// what-if prediction on the measured fabric is bit-identical to plain
+/// replay by construction.
+pub fn replay_entry_with_comm(
+    entry: &NetCalibration,
+    kind: SchedulerKind,
+    fw: &Strategy,
+    comm: Option<&[f64]>,
+) -> Result<Replayed, String> {
     let (cluster, job) = resolve(entry)?;
     let pm = PerfModel::for_cluster(&cluster);
     let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
-    let dur = durations_from(entry, &job, &pm, h2d);
+    let mut dur = durations_from(entry, &job, &pm, h2d);
+    if let Some(comm) = comm {
+        if comm.len() != dur.comm.len() {
+            return Err(format!(
+                "substituted comm vector has {} slots but {} has {} layers",
+                comm.len(),
+                entry.net,
+                dur.comm.len()
+            ));
+        }
+        for (i, spec) in job.net.layers.iter().enumerate() {
+            if spec.kind != crate::models::layer::LayerKind::Data {
+                dur.comm[i] = comm[i];
+            }
+        }
+    }
     let res = cluster.build_resources(job.nodes, job.gpus_per_node);
     let dag = builder::build_with(&res, &job, fw, &dur);
     let mut sched = kind.build(&job.net);
@@ -221,10 +260,26 @@ pub fn scenarios(profile: &CalibratedProfile, kinds: &[SchedulerKind]) -> Vec<Sc
                 layerwise_update: false,
                 seed,
                 profile: Some(tag.clone()),
+                fabric: None,
             });
         }
     }
     out
+}
+
+/// The profile entry a campaign scenario addresses (net × cluster ×
+/// GPU count × batch — the single definition of the cell identity
+/// [`scenarios`] encodes; the what-if axis reuses it).
+pub fn entry_for<'a>(
+    profile: &'a CalibratedProfile,
+    s: &Scenario,
+) -> Option<&'a NetCalibration> {
+    profile.entries.iter().find(|e| {
+        e.net == s.net
+            && e.cluster == s.cluster
+            && e.gpus == s.nodes * s.gpus_per_node
+            && Some(e.batch) == s.batch_per_gpu
+    })
 }
 
 /// The per-cell measurement for profile-driven sweeps: replay the
@@ -232,16 +287,7 @@ pub fn scenarios(profile: &CalibratedProfile, kinds: &[SchedulerKind]) -> Vec<Sc
 /// traced estimate + prediction error.
 pub fn replay_cell(profile: &CalibratedProfile, s: &Scenario) -> CellResult {
     let fw = strategy::by_name(&profile.framework).expect("profile validated before sweep");
-    let entry = profile
-        .entries
-        .iter()
-        .find(|e| {
-            e.net == s.net
-                && e.cluster == s.cluster
-                && e.gpus == s.nodes * s.gpus_per_node
-                && Some(e.batch) == s.batch_per_gpu
-        })
-        .expect("scenario was built from this profile");
+    let entry = entry_for(profile, s).expect("scenario was built from this profile");
     let scored = score_entry(entry, s.scheduler, &fw).expect("profile validated before sweep");
     let mut r = CellResult::new();
     r.set("iter_time_s", scored.replayed.iter_time_s)
@@ -260,7 +306,12 @@ mod tests {
     use crate::frameworks::strategy as fws;
     use crate::trace::synth::synth_trace;
 
-    fn entry_of(net: crate::models::layer::NetSpec, nodes: usize, gpn: usize, iters: usize) -> NetCalibration {
+    fn entry_of(
+        net: crate::models::layer::NetSpec,
+        nodes: usize,
+        gpn: usize,
+        iters: usize,
+    ) -> NetCalibration {
         let cluster = presets::k80_cluster();
         let job = JobSpec {
             batch_per_gpu: net.default_batch,

@@ -1,0 +1,904 @@
+//! The what-if engine: measured compute on hypothetical fabrics.
+//!
+//! The paper's payoff is predictive — its PCIe/NVLink/10GbE/InfiniBand
+//! study asks "what would this workload cost on that interconnect". PR 3
+//! closed the trace → [`CalibratedProfile`] → replay loop, but replay
+//! only reproduces the measured hardware. This module completes the
+//! other half: keep an entry's *measured* per-layer compute costs and
+//! fitted framework overhead, substitute a **hypothetical** collective
+//! channel (a cluster preset, a named inter-node fabric, an explicit
+//! α–β pair, or the degenerate ideal channel), rebuild the S-SGD DAG via
+//! `builder::build_with` and simulate it under any scheduler — the α–β
+//! comm analysis shared with arXiv:1711.05979 applied forward instead of
+//! backward.
+//!
+//! Contracts the tests pin:
+//!
+//! * [`Fabric::Measured`] passes **no** comm substitution, so a what-if
+//!   prediction on the measured fabric is the same code path as
+//!   [`replay::replay_entry`] — bit-identical by construction.
+//! * [`Fabric::Ideal`] (zero-α, infinite-bandwidth) zeroes every
+//!   collective and therefore lower-bounds every real fabric.
+//! * [`autotune_fusion`] runs `analytic::fusion`'s bucket-size scan
+//!   against the entry's channel on the chosen fabric and replays the
+//!   winning bucket plan through the simulator, so fusion
+//!   recommendations come from measurements, not the model
+//!   (cf. the MPI-collective-in-DAG embedding of arXiv:1802.06949).
+
+use super::fit::{CalibratedProfile, NetCalibration};
+use super::replay::{self, resolve, Replayed};
+use crate::analytic::{eqs, fusion};
+use crate::campaign::grid::{CellResult, Interconnect, Scenario};
+use crate::campaign::runner;
+use crate::cluster::presets;
+use crate::comm::alpha_beta::Link;
+use crate::dag::builder::comm_topo;
+use crate::frameworks::strategy::{self, Strategy};
+use crate::models::perf::PerfModel;
+use crate::sim::scheduler::SchedulerKind;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+use crate::util::units::{fmt_bytes, fmt_dur};
+use std::collections::BTreeMap;
+
+/// Version of the `BENCH_whatif.json` format; bump on any layout change.
+pub const WHATIF_SCHEMA_VERSION: u64 = 1;
+
+/// A hypothetical collective channel to price an entry's gradient
+/// exchange on. Addressed by name so fabrics can ride in campaign cell
+/// keys ([`Fabric::name`] / [`Fabric::parse`] round-trip).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fabric {
+    /// The entry's own measured channel — what-if ≡ replay.
+    Measured,
+    /// Zero-latency, infinite-bandwidth: communication is free. Lower
+    /// bound of every real fabric (the keystone property test).
+    Ideal,
+    /// A cluster preset's interconnect pair (intra + inter links) under
+    /// the backend model, plus the entry's fitted framework overhead.
+    Cluster(String),
+    /// One of the paper's named inter-node fabrics swapped onto the
+    /// *measured* cluster (`stock` models the measured fabric itself).
+    Interconnect(Interconnect),
+    /// An explicit α–β collective channel (plus fitted overhead).
+    AlphaBeta { alpha_s: f64, bw_bps: f64 },
+}
+
+impl Fabric {
+    /// Validated α–β constructor (the CLI's `--alpha/--beta` pair).
+    pub fn alpha_beta(alpha_s: f64, bw_bps: f64) -> Result<Fabric, String> {
+        if !alpha_s.is_finite() || alpha_s < 0.0 {
+            return Err(format!("fabric α must be finite and ≥ 0, got {alpha_s}"));
+        }
+        if !bw_bps.is_finite() || bw_bps <= 0.0 {
+            return Err(format!("fabric bandwidth must be finite and > 0, got {bw_bps}"));
+        }
+        Ok(Fabric::AlphaBeta { alpha_s, bw_bps })
+    }
+
+    /// Canonical name (cell keys, reports). `parse(name())` round-trips.
+    pub fn name(&self) -> String {
+        match self {
+            Fabric::Measured => "measured".into(),
+            Fabric::Ideal => "ideal".into(),
+            Fabric::Cluster(c) => c.clone(),
+            Fabric::Interconnect(i) => i.name().into(),
+            Fabric::AlphaBeta { alpha_s, bw_bps } => format!("alpha{alpha_s}-bw{bw_bps}"),
+        }
+    }
+
+    /// Resolve a fabric name: `measured`, `ideal`, an interconnect name
+    /// (`stock`, `10gbe`, `100gb-ib`), a cluster preset, or the explicit
+    /// `alpha<SECONDS>-bw<BYTES/S>` form.
+    pub fn parse(name: &str) -> Result<Fabric, String> {
+        match name {
+            "measured" => Ok(Fabric::Measured),
+            "ideal" => Ok(Fabric::Ideal),
+            _ => {
+                if let Some(rest) = name.strip_prefix("alpha") {
+                    let (a, b) = rest.split_once("-bw").ok_or_else(|| {
+                        format!("bad α–β fabric '{name}' (want alpha<SECONDS>-bw<BYTES/S>)")
+                    })?;
+                    let alpha_s: f64 =
+                        a.parse().map_err(|e| format!("bad α in fabric '{name}': {e}"))?;
+                    let bw_bps: f64 =
+                        b.parse().map_err(|e| format!("bad bandwidth in fabric '{name}': {e}"))?;
+                    Fabric::alpha_beta(alpha_s, bw_bps)
+                } else if let Some(i) = Interconnect::by_name(name) {
+                    Ok(Fabric::Interconnect(i))
+                } else if let Some(c) = presets::by_name(name) {
+                    Ok(Fabric::Cluster(c.name))
+                } else {
+                    Err(format!(
+                        "unknown fabric '{name}' (try measured, ideal, stock, 10gbe, \
+                         100gb-ib, a cluster preset, or alpha<S>-bw<B/S>)"
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// The per-collective cost model of `entry`'s gradient exchange on a
+/// fabric: seconds for one all-reduce of `bytes`. Single-rank entries
+/// communicate for free on every fabric. Hypothetical fabrics price the
+/// hardware with the backend model (or the explicit α–β line) and carry
+/// the entry's *fitted framework overhead* on top — the software cost
+/// measured on the real system follows the workload to the new fabric.
+pub fn channel(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    fw: &Strategy,
+) -> Result<Box<dyn Fn(f64) -> f64>, String> {
+    let (cluster, job) = resolve(entry)?;
+    if job.ranks() <= 1 {
+        return Ok(Box::new(|_| 0.0));
+    }
+    let overhead = entry.comm.map(|c| c.overhead_s).unwrap_or(0.0);
+    match fabric {
+        Fabric::Measured => {
+            let cal = entry.calibrated_comm().ok_or_else(|| {
+                format!("{}: no fitted comm channel to price collectives with", entry.key())
+            })?;
+            Ok(Box::new(move |bytes| cal.comm_time(bytes)))
+        }
+        Fabric::Ideal => Ok(Box::new(|_| 0.0)),
+        Fabric::AlphaBeta { alpha_s, bw_bps } => {
+            Fabric::alpha_beta(*alpha_s, *bw_bps)?; // reject NaN/negative pairs
+            let link = Link::new(*alpha_s, *bw_bps);
+            Ok(Box::new(move |bytes| overhead + link.xfer(bytes)))
+        }
+        Fabric::Cluster(name) => {
+            let hypo = presets::by_name(name)
+                .ok_or_else(|| format!("unknown cluster fabric '{name}'"))?;
+            if job.nodes > hypo.nodes || job.gpus_per_node > hypo.gpus_per_node {
+                return Err(format!(
+                    "{}: {}x{} GPUs do not fit fabric cluster '{}' ({}x{})",
+                    entry.key(),
+                    job.nodes,
+                    job.gpus_per_node,
+                    hypo.name,
+                    hypo.nodes,
+                    hypo.gpus_per_node
+                ));
+            }
+            let topo = comm_topo(&hypo, job.nodes, job.gpus_per_node);
+            let mut base = fw.clone();
+            base.calibrated_comm = None;
+            Ok(Box::new(move |bytes| overhead + base.comm_time(&topo, bytes)))
+        }
+        Fabric::Interconnect(i) => {
+            let mut swapped = cluster.clone();
+            i.apply(&mut swapped);
+            let topo = comm_topo(&swapped, job.nodes, job.gpus_per_node);
+            let mut base = fw.clone();
+            base.calibrated_comm = None;
+            Ok(Box::new(move |bytes| overhead + base.comm_time(&topo, bytes)))
+        }
+    }
+}
+
+/// The substituted per-layer collective-cost vector for an entry on a
+/// fabric, or `None` for the measured fabric (replay the raw
+/// measurements — the bit-identity contract).
+pub fn comm_override(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    fw: &Strategy,
+) -> Result<Option<Vec<f64>>, String> {
+    if matches!(fabric, Fabric::Measured) {
+        return Ok(None);
+    }
+    let ch = channel(entry, fabric, fw)?;
+    Ok(Some(
+        entry
+            .layers
+            .iter()
+            .map(|l| if l.size_bytes > 0 { ch(l.size_bytes as f64) } else { 0.0 })
+            .collect(),
+    ))
+}
+
+/// One what-if prediction: an entry's measured compute simulated against
+/// a fabric, with the measured-fabric replay as the baseline.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub fabric: Fabric,
+    pub scheduler: SchedulerKind,
+    pub replayed: Replayed,
+    /// Sum of the substituted per-layer collective costs, seconds.
+    pub comm_total_s: f64,
+    /// Replay on the measured fabric under the same scheduler.
+    pub measured_iter_s: f64,
+}
+
+impl Prediction {
+    /// >1: the hypothetical fabric is faster than the measured one.
+    pub fn speedup_vs_measured(&self) -> f64 {
+        self.measured_iter_s / self.replayed.iter_time_s
+    }
+}
+
+/// Predict one entry on one fabric under one scheduling policy. The
+/// measured baseline is recomputed per prediction — campaign cells must
+/// stay pure functions of their scenario (deterministic, cacheable);
+/// sweeps that already hold the baseline pass it via
+/// [`predict_entry_with_baseline`] instead.
+pub fn predict_entry(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    kind: SchedulerKind,
+    fw: &Strategy,
+) -> Result<Prediction, String> {
+    predict_entry_with_baseline(entry, fabric, kind, fw, None)
+}
+
+/// [`predict_entry`] with an optional precomputed measured-fabric
+/// baseline (the replay of `entry` under `kind`), so batch sweeps don't
+/// re-simulate the identical baseline once per fabric. The replay is
+/// deterministic, so a supplied baseline is bit-identical to a
+/// recomputed one.
+pub fn predict_entry_with_baseline(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    kind: SchedulerKind,
+    fw: &Strategy,
+    baseline: Option<f64>,
+) -> Result<Prediction, String> {
+    let comm = comm_override(entry, fabric, fw)?;
+    let replayed = replay::replay_entry_with_comm(entry, kind, fw, comm.as_deref())?;
+    let comm_total_s = match &comm {
+        Some(v) => v.iter().sum(),
+        None => entry.layers.iter().map(|l| l.comm_s).sum(),
+    };
+    let measured_iter_s = match (&comm, baseline) {
+        (None, _) => replayed.iter_time_s,
+        (Some(_), Some(b)) => b,
+        (Some(_), None) => replay::replay_entry(entry, kind, fw)?.iter_time_s,
+    };
+    Ok(Prediction {
+        fabric: fabric.clone(),
+        scheduler: kind,
+        replayed,
+        comm_total_s,
+        measured_iter_s,
+    })
+}
+
+/// Result of autotuning the gradient-fusion bucket size against an
+/// entry's channel on a fabric.
+#[derive(Clone, Debug)]
+pub struct FusionTune {
+    /// Winning bucket-size cap, bytes.
+    pub cap_bytes: f64,
+    /// Buckets the winning cap partitions the gradient stream into.
+    pub buckets: usize,
+    /// Closed-form WFBP pipeline time at the winning cap (the scan
+    /// objective, `analytic::fusion::pipeline_time`).
+    pub scan_iter_s: f64,
+    /// The winning bucket plan replayed through the DAG simulator
+    /// (fused costs lowered via `fusion::fused_comm_vector`).
+    pub replayed_iter_s: f64,
+    /// Unfused (layer-wise) replay on the same fabric, for the gain.
+    pub layerwise_iter_s: f64,
+}
+
+impl FusionTune {
+    /// Replayed fusion gain over layer-wise exchange, percent.
+    pub fn gain_pct(&self) -> f64 {
+        100.0 * (self.layerwise_iter_s - self.replayed_iter_s) / self.layerwise_iter_s
+    }
+}
+
+/// Run the bucket-size scan against the entry's channel on `fabric`
+/// (for [`Fabric::Measured`], the profile's *fitted* α–β channel — the
+/// ROADMAP's measurement-driven autotuning) and replay the winner.
+/// Errors on single-rank entries, entries without gradient sizes, and
+/// measured-fabric entries without a comm fit.
+pub fn autotune_fusion(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    fw: &Strategy,
+) -> Result<FusionTune, String> {
+    let (cluster, job) = resolve(entry)?;
+    if job.ranks() <= 1 {
+        return Err(format!("{}: single-rank job has nothing to fuse", entry.key()));
+    }
+    let bytes: Vec<f64> = entry.layers.iter().map(|l| l.size_bytes as f64).collect();
+    if bytes.iter().sum::<f64>() <= 0.0 {
+        return Err(format!("{}: trace records no gradient sizes", entry.key()));
+    }
+    let ch = channel(entry, fabric, fw)?;
+    let pm = PerfModel::for_cluster(&cluster);
+    let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
+    let dur = replay::durations_from(entry, &job, &pm, h2d);
+    let comm: Vec<f64> = entry
+        .layers
+        .iter()
+        .map(|l| if l.size_bytes > 0 { ch(l.size_bytes as f64) } else { 0.0 })
+        .collect();
+    let inputs = eqs::IterInputs {
+        t_io: entry.t_io_s * cluster.io_sharing(job.nodes, job.gpus_per_node),
+        t_h2d: h2d,
+        fwd: dur.fwd.clone(),
+        bwd: dur.bwd.clone(),
+        comm: comm.clone(),
+        t_u: dur.update,
+    };
+    let (_, best) = fusion::optimal_bucket_bytes_with(&inputs, &bytes, ch.as_ref());
+    let bucketing = fusion::bucketing_by_cap(&bytes, best.cap_bytes);
+    let fused = fusion::fused_comm_vector(&bucketing, &bytes, ch.as_ref());
+    let replayed = replay::replay_entry_with_comm(entry, SchedulerKind::Fifo, fw, Some(&fused))?;
+    let layerwise = replay::replay_entry_with_comm(entry, SchedulerKind::Fifo, fw, Some(&comm))?;
+    Ok(FusionTune {
+        cap_bytes: best.cap_bytes,
+        buckets: best.buckets,
+        scan_iter_s: best.iter_time,
+        replayed_iter_s: replayed.iter_time_s,
+        layerwise_iter_s: layerwise.iter_time_s,
+    })
+}
+
+/// Campaign scenarios for a what-if sweep: one cell per profile entry ×
+/// fabric × scheduler, tagged with the profile's content hash *and* the
+/// fabric name, so cache entries stay content-addressed exactly like
+/// `campaign --profile` cells.
+pub fn scenarios(
+    profile: &CalibratedProfile,
+    fabrics: &[Fabric],
+    kinds: &[SchedulerKind],
+) -> Vec<Scenario> {
+    let mut out = Vec::with_capacity(profile.entries.len() * fabrics.len() * kinds.len());
+    for base in replay::scenarios(profile, kinds) {
+        for fabric in fabrics {
+            let mut s = base.clone();
+            s.fabric = Some(fabric.name());
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// A prediction lowered into the flat campaign metric map.
+fn metrics_of(p: &Prediction) -> CellResult {
+    let mut r = CellResult::new();
+    r.set("iter_time_s", p.replayed.iter_time_s)
+        .set("samples_per_s", p.replayed.samples_per_s)
+        .set("makespan_s", p.replayed.makespan_s)
+        .set("comm_total_s", p.comm_total_s)
+        .set("measured_iter_s", p.measured_iter_s)
+        .set("speedup_vs_measured", p.speedup_vs_measured());
+    r
+}
+
+/// The per-cell measurement of what-if sweeps: predict the matching
+/// entry on the cell's fabric under the cell's scheduler.
+pub fn whatif_cell(profile: &CalibratedProfile, s: &Scenario) -> CellResult {
+    let fw = strategy::by_name(&profile.framework).expect("profile validated before sweep");
+    let entry = replay::entry_for(profile, s).expect("scenario was built from this profile");
+    let fabric = Fabric::parse(s.fabric.as_deref().expect("whatif cells carry a fabric"))
+        .expect("fabric validated before sweep");
+    let p =
+        predict_entry(entry, &fabric, s.scheduler, &fw).expect("fabric validated before sweep");
+    metrics_of(&p)
+}
+
+/// Pre-sweep gate: the profile must be sweepable and every entry must be
+/// pricable on every requested fabric, so a bad fabric fails with a
+/// message before workers spawn. The measured fabric is exempt from the
+/// channel check — prediction on it replays raw measurements and needs
+/// no fitted channel.
+pub fn validate_whatif(profile: &CalibratedProfile, fabrics: &[Fabric]) -> Result<(), String> {
+    replay::validate_profile(profile)?;
+    if fabrics.is_empty() {
+        return Err("no fabrics to sweep".into());
+    }
+    let fw = strategy::by_name(&profile.framework).expect("validate_profile checked the name");
+    for entry in &profile.entries {
+        for fabric in fabrics {
+            if matches!(fabric, Fabric::Measured) {
+                continue;
+            }
+            channel(entry, fabric, &fw)
+                .map_err(|e| format!("{} on fabric '{}': {e}", entry.key(), fabric.name()))?;
+        }
+    }
+    Ok(())
+}
+
+/// One report row: an entry × fabric × scheduler prediction, with the
+/// optional fusion autotune attached (shared across the schedulers of
+/// the same entry × fabric).
+#[derive(Clone, Debug)]
+pub struct WhatIfRow {
+    pub net: String,
+    pub cluster: String,
+    pub gpus: usize,
+    pub batch: usize,
+    pub fabric: String,
+    pub scheduler: SchedulerKind,
+    pub iter_time_s: f64,
+    pub samples_per_s: f64,
+    pub comm_total_s: f64,
+    pub measured_iter_s: f64,
+    pub speedup_vs_measured: f64,
+    pub fusion: Option<FusionTune>,
+}
+
+/// Sweep a profile across fabrics × schedulers on `jobs` workers and
+/// shape the cells into report rows. With `autotune`, each entry ×
+/// fabric additionally carries the fusion autotune (entries that cannot
+/// fuse — single rank, no gradient sizes, measured fabric without a comm
+/// fit — get `fusion: None` instead of failing the sweep).
+pub fn rows(
+    profile: &CalibratedProfile,
+    fabrics: &[Fabric],
+    kinds: &[SchedulerKind],
+    autotune: bool,
+    jobs: usize,
+) -> Result<Vec<WhatIfRow>, String> {
+    validate_whatif(profile, fabrics)?;
+    if kinds.is_empty() {
+        return Err("no schedulers to sweep".into());
+    }
+    let fw = strategy::by_name(&profile.framework).expect("validated");
+
+    // Measured baselines once per entry × scheduler (the replay is
+    // deterministic, so injecting them into every prediction is
+    // bit-identical to the cells recomputing them per fabric). Only
+    // needed when a hypothetical fabric is in the sweep — measured
+    // cells are their own baseline.
+    let mut baselines: BTreeMap<(String, &str), f64> = BTreeMap::new();
+    if fabrics.iter().any(|f| !matches!(f, Fabric::Measured)) {
+        for entry in &profile.entries {
+            for &kind in kinds {
+                let base = replay::replay_entry(entry, kind, &fw)
+                    .map_err(|e| format!("{}: {e}", entry.key()))?;
+                baselines.insert((entry.key(), kind.name()), base.iter_time_s);
+            }
+        }
+    }
+
+    let cells = scenarios(profile, fabrics, kinds);
+    let outcome = runner::run_with(&cells, jobs, None, |s| {
+        let entry = replay::entry_for(profile, s).expect("scenario was built from this profile");
+        let fabric = Fabric::parse(s.fabric.as_deref().expect("whatif cells carry a fabric"))
+            .expect("fabric validated before sweep");
+        let base = baselines.get(&(entry.key(), s.scheduler.name())).copied();
+        let p = predict_entry_with_baseline(entry, &fabric, s.scheduler, &fw, base)
+            .expect("fabric validated before sweep");
+        metrics_of(&p)
+    });
+
+    // Fusion autotunes are scheduler-independent: one per entry ×
+    // fabric, fanned through the same worker pool (they are the
+    // heaviest stage — a bucket-cap scan plus two replays each).
+    let mut tunes: BTreeMap<(String, String), FusionTune> = BTreeMap::new();
+    if autotune {
+        let tune_cells = scenarios(profile, fabrics, &[SchedulerKind::Fifo]);
+        let tuned = runner::run_with(&tune_cells, jobs, None, |s| {
+            let entry =
+                replay::entry_for(profile, s).expect("scenario was built from this profile");
+            let fabric = Fabric::parse(s.fabric.as_deref().expect("whatif cells carry a fabric"))
+                .expect("fabric validated before sweep");
+            let mut r = CellResult::new();
+            // Entries that cannot fuse (single rank, no gradient sizes,
+            // measured fabric without a comm fit) yield an empty cell.
+            if let Ok(t) = autotune_fusion(entry, &fabric, &fw) {
+                r.set("cap_bytes", t.cap_bytes)
+                    .set("buckets", t.buckets as f64)
+                    .set("scan_iter_s", t.scan_iter_s)
+                    .set("replayed_iter_s", t.replayed_iter_s)
+                    .set("layerwise_iter_s", t.layerwise_iter_s);
+            }
+            r
+        });
+        for (s, r) in &tuned.cells {
+            let entry = replay::entry_for(profile, s).expect("tune scenario from this profile");
+            let fabric_name = s.fabric.clone().expect("whatif cells carry a fabric");
+            if let Some(cap_bytes) = r.get("cap_bytes") {
+                tunes.insert(
+                    (entry.key(), fabric_name),
+                    FusionTune {
+                        cap_bytes,
+                        buckets: r.get("buckets").expect("tune cell metric") as usize,
+                        scan_iter_s: r.get("scan_iter_s").expect("tune cell metric"),
+                        replayed_iter_s: r.get("replayed_iter_s").expect("tune cell metric"),
+                        layerwise_iter_s: r.get("layerwise_iter_s").expect("tune cell metric"),
+                    },
+                );
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(outcome.cells.len());
+    for (s, r) in &outcome.cells {
+        let entry = replay::entry_for(profile, s).expect("scenario was built from this profile");
+        let fabric_name = s.fabric.clone().expect("whatif cells carry a fabric");
+        let metric = |k: &str| r.get(k).expect("whatif cell metric");
+        out.push(WhatIfRow {
+            net: s.net.clone(),
+            cluster: s.cluster.clone(),
+            gpus: entry.gpus,
+            batch: entry.batch,
+            fabric: fabric_name.clone(),
+            scheduler: s.scheduler,
+            iter_time_s: metric("iter_time_s"),
+            samples_per_s: metric("samples_per_s"),
+            comm_total_s: metric("comm_total_s"),
+            measured_iter_s: metric("measured_iter_s"),
+            speedup_vs_measured: metric("speedup_vs_measured"),
+            fusion: tunes.get(&(entry.key(), fabric_name)).cloned(),
+        });
+    }
+    Ok(out)
+}
+
+/// Render the human table.
+pub fn render(rows: &[WhatIfRow]) -> String {
+    let mut t = Table::new(&[
+        "net",
+        "cluster",
+        "gpus",
+        "fabric",
+        "scheduler",
+        "measured",
+        "predicted",
+        "speedup",
+        "comm",
+        "fusion cap",
+        "fusion gain",
+    ]);
+    for r in rows {
+        let (cap, gain) = match &r.fusion {
+            Some(tune) => (fmt_bytes(tune.cap_bytes), format!("{}%", f(tune.gain_pct(), 1))),
+            None => ("-".into(), "-".into()),
+        };
+        t.row(&[
+            r.net.clone(),
+            r.cluster.clone(),
+            r.gpus.to_string(),
+            r.fabric.clone(),
+            r.scheduler.name().to_string(),
+            fmt_dur(r.measured_iter_s),
+            fmt_dur(r.iter_time_s),
+            format!("{}x", f(r.speedup_vs_measured, 2)),
+            fmt_dur(r.comm_total_s),
+            cap,
+            gain,
+        ]);
+    }
+    t.render()
+}
+
+/// Serialize the report (schema v`WHATIF_SCHEMA_VERSION`).
+pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) -> Json {
+    let row_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let fusion = match &r.fusion {
+                None => Json::Null,
+                Some(t) => Json::obj(vec![
+                    ("cap_bytes", Json::num(t.cap_bytes)),
+                    ("buckets", Json::num(t.buckets as f64)),
+                    ("scan_iter_s", Json::num(t.scan_iter_s)),
+                    ("replayed_iter_s", Json::num(t.replayed_iter_s)),
+                    ("layerwise_iter_s", Json::num(t.layerwise_iter_s)),
+                ]),
+            };
+            Json::obj(vec![
+                ("net", Json::str(r.net.clone())),
+                ("cluster", Json::str(r.cluster.clone())),
+                ("gpus", Json::num(r.gpus as f64)),
+                ("batch", Json::num(r.batch as f64)),
+                ("fabric", Json::str(r.fabric.clone())),
+                ("scheduler", Json::str(r.scheduler.name())),
+                ("iter_time_s", Json::num(r.iter_time_s)),
+                ("samples_per_s", Json::num(r.samples_per_s)),
+                ("comm_total_s", Json::num(r.comm_total_s)),
+                ("measured_iter_s", Json::num(r.measured_iter_s)),
+                ("speedup_vs_measured", Json::num(r.speedup_vs_measured)),
+                ("fusion", fusion),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema_version", Json::num(WHATIF_SCHEMA_VERSION as f64)),
+        ("bench", Json::str("whatif")),
+        ("framework", Json::str(framework)),
+        ("profile", Json::str(profile_tag)),
+        ("rows", Json::Arr(row_json)),
+    ])
+}
+
+/// Validate a `BENCH_whatif.json` against schema v1. Returns the row
+/// count.
+pub fn validate_report(report: &Json) -> Result<usize, String> {
+    let version = report
+        .get("schema_version")
+        .and_then(|v| v.as_f64())
+        .ok_or("missing schema_version")?;
+    if version != WHATIF_SCHEMA_VERSION as f64 {
+        return Err(format!(
+            "schema_version {version} != supported {WHATIF_SCHEMA_VERSION}"
+        ));
+    }
+    if report.get("bench").and_then(|v| v.as_str()) != Some("whatif") {
+        return Err("bench field must be \"whatif\"".into());
+    }
+    for field in ["framework", "profile"] {
+        report
+            .get(field)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("missing string field '{field}'"))?;
+    }
+    let rows = report
+        .get("rows")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing rows array")?;
+    if rows.is_empty() {
+        return Err("rows array is empty".into());
+    }
+    let req_num = |row: &Json, field: &str, at: &str| -> Result<f64, String> {
+        let v = row
+            .get(field)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{at}: missing numeric field '{field}'"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("{at}: field '{field}' must be finite and ≥ 0"));
+        }
+        Ok(v)
+    };
+    for (i, row) in rows.iter().enumerate() {
+        let at = format!("rows[{i}]");
+        for field in ["net", "cluster", "fabric", "scheduler"] {
+            row.get(field)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("{at}: missing string field '{field}'"))?;
+        }
+        for field in [
+            "gpus",
+            "batch",
+            "iter_time_s",
+            "samples_per_s",
+            "comm_total_s",
+            "measured_iter_s",
+            "speedup_vs_measured",
+        ] {
+            req_num(row, field, &at)?;
+        }
+        // comm_total_s may legitimately be 0 (ideal fabric, single GPU);
+        // everything else must be positive.
+        for field in [
+            "gpus",
+            "iter_time_s",
+            "samples_per_s",
+            "measured_iter_s",
+            "speedup_vs_measured",
+        ] {
+            if row.get(field).and_then(|v| v.as_f64()) == Some(0.0) {
+                return Err(format!("{at}: field '{field}' must be positive"));
+            }
+        }
+        match row.get("fusion") {
+            None | Some(Json::Null) => {}
+            Some(fusion) => {
+                for field in [
+                    "cap_bytes",
+                    "buckets",
+                    "scan_iter_s",
+                    "replayed_iter_s",
+                    "layerwise_iter_s",
+                ] {
+                    let v = req_num(fusion, field, &format!("{at}.fusion"))?;
+                    if v <= 0.0 {
+                        return Err(format!("{at}.fusion: field '{field}' must be positive"));
+                    }
+                }
+            }
+        }
+    }
+    Ok(rows.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::fit::calibrate_one;
+    use crate::dag::builder::JobSpec;
+    use crate::frameworks::strategy as fws;
+    use crate::models::zoo;
+    use crate::trace::synth::synth_trace;
+    use crate::util::json;
+
+    fn entry_of(
+        net: crate::models::layer::NetSpec,
+        cluster: &crate::cluster::topology::ClusterSpec,
+        nodes: usize,
+        gpn: usize,
+    ) -> NetCalibration {
+        let job = JobSpec {
+            batch_per_gpu: net.default_batch,
+            net,
+            nodes,
+            gpus_per_node: gpn,
+            iterations: 1,
+        };
+        let t = synth_trace(cluster, &job, &fws::caffe_mpi(), 10, 23);
+        calibrate_one(&t, &fws::caffe_mpi()).unwrap()
+    }
+
+    fn profile_for(cluster: &crate::cluster::topology::ClusterSpec) -> CalibratedProfile {
+        CalibratedProfile {
+            framework: "caffe-mpi".into(),
+            entries: vec![
+                entry_of(zoo::alexnet(), cluster, 2, 4),
+                entry_of(zoo::resnet50(), cluster, 4, 4),
+            ],
+        }
+    }
+
+    #[test]
+    fn fabric_names_round_trip() {
+        let fabrics = [
+            Fabric::Measured,
+            Fabric::Ideal,
+            Fabric::Cluster("v100-nvlink-ib".into()),
+            Fabric::Interconnect(Interconnect::TenGbE),
+            Fabric::Interconnect(Interconnect::Stock),
+            Fabric::alpha_beta(4e-5, 1.25e9).unwrap(),
+        ];
+        for f in &fabrics {
+            let back = Fabric::parse(&f.name()).unwrap_or_else(|e| panic!("{}: {e}", f.name()));
+            assert_eq!(&back, f, "{}", f.name());
+        }
+        assert!(Fabric::parse("warpdrive").is_err());
+        assert!(Fabric::parse("alpha1e-5").is_err(), "missing -bw part");
+        assert!(Fabric::alpha_beta(-1.0, 1e9).is_err());
+        assert!(Fabric::alpha_beta(0.0, 0.0).is_err());
+        // Short cluster aliases canonicalize to the full preset name.
+        assert_eq!(Fabric::parse("v100").unwrap().name(), "v100-nvlink-ib");
+    }
+
+    /// The bit-identity contract: the measured fabric takes the exact
+    /// replay code path.
+    #[test]
+    fn measured_fabric_is_bit_identical_to_replay() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::alexnet(), &cluster, 2, 4);
+        let fw = fws::caffe_mpi();
+        for kind in [SchedulerKind::Fifo, SchedulerKind::Priority] {
+            let p = predict_entry(&entry, &Fabric::Measured, kind, &fw).unwrap();
+            let r = replay::replay_entry(&entry, kind, &fw).unwrap();
+            assert_eq!(p.replayed.iter_time_s.to_bits(), r.iter_time_s.to_bits());
+            assert_eq!(p.replayed.makespan_s.to_bits(), r.makespan_s.to_bits());
+            assert_eq!(p.speedup_vs_measured(), 1.0);
+        }
+    }
+
+    #[test]
+    fn ideal_fabric_lower_bounds_real_fabrics() {
+        let cluster = crate::cluster::presets::v100_cluster();
+        let entry = entry_of(zoo::resnet50(), &cluster, 4, 4);
+        let fw = fws::caffe_mpi();
+        let ideal = predict_entry(&entry, &Fabric::Ideal, SchedulerKind::Fifo, &fw).unwrap();
+        assert_eq!(ideal.comm_total_s, 0.0);
+        for fabric in [
+            Fabric::Measured,
+            Fabric::Interconnect(Interconnect::TenGbE),
+            Fabric::Interconnect(Interconnect::Ib100),
+            Fabric::Cluster("k80-pcie-10gbe".into()),
+            Fabric::alpha_beta(1e-4, 1e9).unwrap(),
+        ] {
+            let p = predict_entry(&entry, &fabric, SchedulerKind::Fifo, &fw).unwrap();
+            assert!(
+                ideal.replayed.iter_time_s <= p.replayed.iter_time_s + 1e-12,
+                "ideal {} > {} on {}",
+                ideal.replayed.iter_time_s,
+                p.replayed.iter_time_s,
+                fabric.name()
+            );
+        }
+    }
+
+    /// Swapping the 10 GbE cluster's measured workload onto the 100 Gb
+    /// IB fabric must speed up the comm-bound job — the paper's central
+    /// what-if, now answered from measurements.
+    #[test]
+    fn faster_fabric_speeds_up_comm_bound_entry() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::resnet50(), &cluster, 4, 4);
+        let fw = fws::caffe_mpi();
+        let fabric = Fabric::Interconnect(Interconnect::Ib100);
+        let ib = predict_entry(&entry, &fabric, SchedulerKind::Fifo, &fw).unwrap();
+        assert!(
+            ib.speedup_vs_measured() > 1.0,
+            "IB should beat measured 10GbE: {}x",
+            ib.speedup_vs_measured()
+        );
+        assert!(ib.comm_total_s > 0.0);
+    }
+
+    #[test]
+    fn autotune_fusion_beats_layerwise_on_comm_bound_entry() {
+        let cluster = crate::cluster::presets::v100_cluster();
+        let entry = entry_of(zoo::resnet50(), &cluster, 4, 4);
+        let fw = fws::caffe_mpi();
+        let tune = autotune_fusion(&entry, &Fabric::Measured, &fw).unwrap();
+        assert!(tune.buckets > 1, "optimum should fuse but not into one bucket");
+        assert!(tune.cap_bytes >= 64.0 * 1024.0);
+        assert!(
+            tune.replayed_iter_s < tune.layerwise_iter_s,
+            "fused replay {} should beat layer-wise {}",
+            tune.replayed_iter_s,
+            tune.layerwise_iter_s
+        );
+        assert!(tune.gain_pct() > 0.0);
+        // Single-rank entries cannot fuse.
+        let solo = entry_of(zoo::googlenet(), &cluster, 1, 1);
+        assert!(autotune_fusion(&solo, &Fabric::Measured, &fw).is_err());
+    }
+
+    #[test]
+    fn scenarios_cross_entries_fabrics_schedulers() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let profile = profile_for(&cluster);
+        let fabrics = [Fabric::Measured, Fabric::Ideal];
+        let kinds = [SchedulerKind::Fifo, SchedulerKind::Priority];
+        validate_whatif(&profile, &fabrics).unwrap();
+        let cells = scenarios(&profile, &fabrics, &kinds);
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        let mut keys: Vec<String> = cells.iter().map(|s| s.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len(), "fabric axis must keep keys distinct");
+        assert!(keys.iter().any(|k| k.contains("fabric=ideal")));
+        assert!(keys.iter().all(|k| k.contains("profile=caffe-mpi#")));
+        let outcome = runner::run_with(&cells, 2, None, |s| whatif_cell(&profile, s));
+        for (s, r) in &outcome.cells {
+            assert!(r.get("iter_time_s").unwrap() > 0.0, "{}", s.key());
+            assert!(r.get("speedup_vs_measured").unwrap() > 0.0);
+            if s.fabric.as_deref() == Some("ideal") {
+                assert_eq!(r.get("comm_total_s"), Some(0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn validate_whatif_gates_bad_fabrics() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let profile = profile_for(&cluster);
+        assert!(validate_whatif(&profile, &[]).is_err());
+        // localhost has 1 node x 4 workers: the 4-node entry cannot fit.
+        let err = validate_whatif(&profile, &[Fabric::Cluster("localhost-shm".into())])
+            .unwrap_err();
+        assert!(err.contains("do not fit"), "{err}");
+        // The measured fabric is exempt from channel checks.
+        validate_whatif(&profile, &[Fabric::Measured, Fabric::Ideal]).unwrap();
+    }
+
+    #[test]
+    fn report_roundtrips_and_validator_rejects_tampering() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let profile = profile_for(&cluster);
+        let fabrics = [Fabric::Measured, Fabric::Interconnect(Interconnect::Ib100)];
+        let rows = rows(&profile, &fabrics, &[SchedulerKind::Fifo], true, 2).unwrap();
+        assert_eq!(rows.len(), 2 * 2);
+        assert!(
+            rows.iter().any(|r| r.fusion.is_some()),
+            "multi-rank entries should autotune"
+        );
+        let table = render(&rows);
+        assert!(table.contains("ib") || table.contains("100gb-ib"));
+
+        let good = report_to_json(&rows, &profile.framework, &profile.tag());
+        let text = good.to_string();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(validate_report(&back).unwrap(), rows.len());
+        let check = |s: &str| validate_report(&json::parse(s).unwrap());
+        assert!(check(&text.replace("\"schema_version\":1", "\"schema_version\":3")).is_err());
+        assert!(check(&text.replace("\"bench\":\"whatif\"", "\"bench\":\"other\"")).is_err());
+        assert!(check(&text.replace("\"rows\":[", "\"cells\":[")).is_err());
+        assert!(check("{\"schema_version\":1,\"bench\":\"whatif\"}").is_err());
+    }
+}

@@ -100,6 +100,12 @@ pub struct Scenario {
     /// sweeps run through `runner::run_with` with a cell closure that
     /// owns the loaded profile (`calib::replay::replay_cell`).
     pub profile: Option<String>,
+    /// Hypothetical-fabric name (`calib::whatif::Fabric::name`) for
+    /// what-if cells predicting a profile entry on a substituted
+    /// collective channel; `None` everywhere else. Like `profile`, it is
+    /// part of the canonical key (distinct cache cells per fabric) and
+    /// ignored by name-only [`Scenario::resolve`].
+    pub fabric: Option<String>,
 }
 
 impl Scenario {
@@ -108,7 +114,7 @@ impl Scenario {
     /// any field's rendering) invalidates every cache entry by design.
     pub fn key(&self) -> String {
         format!(
-            "cluster={} interconnect={} net={} fw={} nodes={} gpus={} batch={} iters={} scheduler={} layerwise={} seed={} profile={}",
+            "cluster={} interconnect={} net={} fw={} nodes={} gpus={} batch={} iters={} scheduler={} layerwise={} seed={} profile={} fabric={}",
             self.cluster,
             self.interconnect.name(),
             self.net,
@@ -123,6 +129,7 @@ impl Scenario {
             self.layerwise_update,
             self.seed,
             self.profile.as_deref().unwrap_or("-"),
+            self.fabric.as_deref().unwrap_or("-"),
         )
     }
 
@@ -292,6 +299,7 @@ impl Grid {
                                             layerwise_update,
                                             seed: self.seed,
                                             profile: profile.clone(),
+                                            fabric: None,
                                         });
                                     }
                                 }
@@ -488,9 +496,9 @@ mod tests {
         let cells = g.expand();
         assert_eq!(cells.len(), 8);
         // Profiles are the outermost axis: model-driven cells first.
-        assert!(cells[0].key().ends_with("profile=-"), "{}", cells[0].key());
+        assert!(cells[0].key().ends_with("profile=- fabric=-"), "{}", cells[0].key());
         assert!(
-            cells[4].key().ends_with("profile=caffe-mpi#00000000deadbeef"),
+            cells[4].key().ends_with("profile=caffe-mpi#00000000deadbeef fabric=-"),
             "{}",
             cells[4].key()
         );
@@ -501,6 +509,19 @@ mod tests {
         keys.sort();
         keys.dedup();
         assert_eq!(keys.len(), 8);
+    }
+
+    /// The fabric axis (what-if cells): part of the canonical key,
+    /// ignored by name-only resolution, `None` for every grid cell.
+    #[test]
+    fn fabric_axis_keys_and_resolution() {
+        let mut s = tiny().expand().remove(0);
+        assert!(s.fabric.is_none(), "grid cells are fabric-less");
+        let plain = s.key();
+        s.fabric = Some("ideal".into());
+        assert!(s.key().ends_with("fabric=ideal"), "{}", s.key());
+        assert_ne!(s.key(), plain, "fabric must change the cache identity");
+        s.resolve().unwrap();
     }
 
     #[test]

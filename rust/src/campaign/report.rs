@@ -16,6 +16,7 @@
 //!       "nodes": 4, "gpus_per_node": 4, "batch_per_gpu": null,
 //!       "iterations": 8, "scheduler": "fifo",
 //!       "layerwise_update": false, "seed": 7, "profile": null,
+//!       "fabric": null,
 //!       "metrics": { "iter_time_s": 0.31, "samples_per_s": 1652.0,
 //!                    "predicted_iter_s": 0.30, "predicted_speedup": 13.1,
 //!                    "comm_s": 0.21, "comm_hidden_pct": 87.0 } }
@@ -100,6 +101,13 @@ pub fn to_json(grid_name: &str, outcome: &Outcome) -> Json {
                         .map(|p| Json::str(p.clone()))
                         .unwrap_or(Json::Null),
                 ),
+                (
+                    "fabric",
+                    s.fabric
+                        .as_ref()
+                        .map(|f| Json::str(f.clone()))
+                        .unwrap_or(Json::Null),
+                ),
                 ("metrics", metrics_to_json(r)),
             ])
         })
@@ -179,11 +187,14 @@ pub fn validate(report: &Json) -> Result<usize, String> {
             Some(Json::Null) | Some(Json::Num(_)) => {}
             _ => return Err(format!("{at}: 'batch_per_gpu' must be null or a number")),
         }
-        // `profile` is optional (schema v1 predates it): null for
-        // model-driven cells, the profile tag for replayed ones.
-        match cell.get("profile") {
-            None | Some(Json::Null) | Some(Json::Str(_)) => {}
-            _ => return Err(format!("{at}: 'profile' must be null or a string")),
+        // `profile` and `fabric` are optional (schema v1 predates
+        // them): null for model-driven cells, the profile tag / fabric
+        // name for replayed and what-if cells.
+        for field in ["profile", "fabric"] {
+            match cell.get(field) {
+                None | Some(Json::Null) | Some(Json::Str(_)) => {}
+                _ => return Err(format!("{at}: '{field}' must be null or a string")),
+            }
         }
         let metrics = cell
             .get("metrics")
@@ -247,7 +258,9 @@ pub fn render_table(outcome: &Outcome) -> String {
         let dur = |k: &str| r.get(k).map(fmt_dur).unwrap_or_else(|| "-".into());
         t.row(&[
             s.cluster.clone(),
-            s.interconnect.name().to_string(),
+            // What-if cells show their hypothetical fabric; everything
+            // else shows the interconnect axis.
+            s.fabric.clone().unwrap_or_else(|| s.interconnect.name().to_string()),
             s.net.clone(),
             s.framework.clone(),
             format!("{}x{}", s.nodes, s.gpus_per_node),

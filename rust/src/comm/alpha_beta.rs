@@ -73,14 +73,23 @@ impl Link {
         if sxx <= 0.0 {
             return Err("α-β fit needs ≥ 2 distinct message sizes".into());
         }
+        // Guard the whole arithmetic chain against overflow: extreme
+        // (but finite) measurements can push `sxy` to ±inf, which would
+        // otherwise turn into a zero/NaN bandwidth and panic
+        // `Link::new` — fuzz-hardening for externally supplied traces.
         let slope = sxy / sxx;
-        if slope <= 0.0 {
+        if !slope.is_finite() || slope <= 0.0 {
             return Err(format!(
-                "α-β fit produced non-positive slope {slope:e} (time must grow with size)"
+                "α-β fit produced unusable slope {slope:e} (time must grow with size)"
             ));
         }
-        let alpha = (mean_y - slope * mean_x).max(0.0);
-        Ok(Link::new(alpha, 1.0 / slope))
+        // Finiteness must be checked before the clamp: f64::max(NaN, 0.0)
+        // returns 0.0, which would silently launder a NaN intercept.
+        let intercept = mean_y - slope * mean_x;
+        if !intercept.is_finite() {
+            return Err("α-β fit produced a non-finite intercept".into());
+        }
+        Ok(Link::new(intercept.max(0.0), 1.0 / slope))
     }
 }
 
@@ -155,6 +164,12 @@ mod tests {
         assert!(
             Link::fit(&[(1e6, 0.2), (2e6, 0.1)]).is_err(),
             "time shrinking with size"
+        );
+        // Overflow-scale measurements: the fit errors instead of
+        // panicking Link::new with a zero/NaN bandwidth.
+        assert!(
+            Link::fit(&[(1e3, 1e302), (2e8, 1.7e308)]).is_err(),
+            "overflowing slope"
         );
     }
 

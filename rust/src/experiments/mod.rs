@@ -7,3 +7,4 @@ pub mod fig4;
 pub mod info;
 pub mod sched;
 pub mod table5;
+pub mod whatif;

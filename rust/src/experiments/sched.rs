@@ -66,6 +66,7 @@ pub fn scenarios(
             layerwise_update: strategy.layerwise_update,
             seed: 0,
             profile: None,
+            fabric: None,
         })
         .collect()
 }

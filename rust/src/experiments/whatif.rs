@@ -1,0 +1,114 @@
+//! What-if sweep experiment — the in-process proof of the prediction
+//! engine: synthesize the §VI dataset shape, calibrate it, then predict
+//! every measured workload on the paper's fabric ladder (measured →
+//! 10 GbE → 100 Gb IB → ideal). This is the interconnect study of §V
+//! re-run *forward* from calibrated measurements instead of the model —
+//! the `dagsgd whatif` demo mode, `benches/whatif_sweep.rs` and the
+//! what-if tests all drive it.
+
+use crate::calib::fit::{self, CalibratedProfile};
+use crate::calib::whatif::{self, Fabric, WhatIfRow};
+use crate::campaign::grid::Interconnect;
+use crate::cluster::presets;
+use crate::dag::builder::JobSpec;
+use crate::frameworks::strategy;
+use crate::models::zoo;
+use crate::sim::scheduler::SchedulerKind;
+use crate::trace::synth::synth_trace;
+
+/// Iterations synthesized per trace (matches `experiments::table5`).
+pub const DEFAULT_TRACE_ITERS: usize = 20;
+
+/// The experiment's fabric ladder: measured baseline, the paper's two
+/// named inter-node fabrics, and the degenerate ideal channel that
+/// lower-bounds them all.
+pub fn fabrics() -> Vec<Fabric> {
+    vec![
+        Fabric::Measured,
+        Fabric::Interconnect(Interconnect::TenGbE),
+        Fabric::Interconnect(Interconnect::Ib100),
+        Fabric::Ideal,
+    ]
+}
+
+/// Synthesize the §VI dataset shape in process and calibrate it: all
+/// three nets on both clusters, whole-cluster (4×4) Caffe-MPI.
+pub fn profile(trace_iters: usize, seed: u64) -> CalibratedProfile {
+    let fw = strategy::caffe_mpi();
+    let mut traces = Vec::new();
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net,
+                nodes: 4,
+                gpus_per_node: 4,
+                iterations: 1,
+            };
+            traces.push(synth_trace(&cluster, &job, &fw, trace_iters, seed));
+        }
+    }
+    fit::calibrate(&traces, &fw).expect("synthetic traces always calibrate")
+}
+
+/// Run the sweep end to end: calibrate in process, then predict every
+/// entry on every fabric in `fabrics` (callers usually pass
+/// [`fabrics()`], the standard ladder) under each policy in `kinds`.
+pub fn run(
+    trace_iters: usize,
+    seed: u64,
+    fabrics: &[Fabric],
+    kinds: &[SchedulerKind],
+    autotune: bool,
+    jobs: usize,
+) -> Result<(CalibratedProfile, Vec<WhatIfRow>), String> {
+    let p = profile(trace_iters, seed);
+    let rows = whatif::rows(&p, fabrics, kinds, autotune, jobs)?;
+    Ok((p, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_entries_x_fabrics() {
+        let (p, rows) = run(6, 11, &fabrics(), &[SchedulerKind::Fifo], false, 4).unwrap();
+        assert_eq!(p.entries.len(), 6, "3 nets x 2 clusters");
+        assert_eq!(rows.len(), 6 * fabrics().len());
+        let j = whatif::report_to_json(&rows, &p.framework, &p.tag());
+        assert_eq!(whatif::validate_report(&j).unwrap(), rows.len());
+    }
+
+    /// Per entry, the ladder must order itself: ideal ≤ IB prediction,
+    /// and ideal ≤ the measured baseline.
+    #[test]
+    fn ideal_rung_is_fastest_per_entry() {
+        let (p, rows) = run(6, 13, &fabrics(), &[SchedulerKind::Fifo], false, 4).unwrap();
+        for entry in &p.entries {
+            let of = |fabric: &str| {
+                rows.iter()
+                    .find(|r| {
+                        r.net == entry.net && r.cluster == entry.cluster && r.fabric == fabric
+                    })
+                    .unwrap_or_else(|| panic!("{} missing fabric {fabric}", entry.key()))
+                    .iter_time_s
+            };
+            let ideal = of("ideal");
+            assert!(ideal <= of("100gb-ib") + 1e-12, "{}", entry.key());
+            assert!(ideal <= of("measured") + 1e-12, "{}", entry.key());
+        }
+    }
+
+    #[test]
+    fn deterministic_for_a_seed() {
+        let (_, a) = run(4, 9, &fabrics(), &[SchedulerKind::Fifo], false, 1).unwrap();
+        let (_, b) = run(4, 9, &fabrics(), &[SchedulerKind::Fifo], false, 4).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            let (xi, yi) = (x.iter_time_s.to_bits(), y.iter_time_s.to_bits());
+            assert_eq!(xi, yi, "{} {}", x.net, x.fabric);
+            assert_eq!(x.fabric, y.fabric);
+        }
+    }
+}

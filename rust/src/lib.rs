@@ -93,6 +93,7 @@ pub mod calib {
     pub mod ingest;
     pub mod replay;
     pub mod validate;
+    pub mod whatif;
 }
 
 pub mod campaign {

@@ -11,6 +11,9 @@
 //!   traces    [flags]            emit the §VI layer-wise trace dataset
 //!   calibrate [flags]            fit simulator parameters from a trace dir,
 //!                                replay them, score the predictions
+//!   whatif    [flags]            predict a calibrated profile on
+//!                                hypothetical fabrics (α–β what-ifs,
+//!                                fusion autotuning over fitted channels)
 //!   table5    [flags]            the Table V validation table end to end
 //!   train     [flags]            real S-SGD training via PJRT artifacts
 //!
@@ -46,12 +49,13 @@ fn main() {
         "campaign" => cmd_campaign(&args),
         "traces" => cmd_traces(&args),
         "calibrate" => cmd_calibrate(&args),
+        "whatif" => cmd_whatif(&args),
         "table5" => cmd_table5(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),
         other => {
             eprintln!(
-                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|calibrate|table5|train|analyze> [--flags]\n\
+                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|calibrate|whatif|table5|train|analyze> [--flags]\n\
                  see README.md for per-command flags"
             );
             if other == "help" {
@@ -288,14 +292,42 @@ fn write_campaign_report(
     0
 }
 
+/// Parse the fabric axis: `--fabric NAME[,NAME...]` (measured, ideal,
+/// stock, 10gbe, 100gb-ib, cluster presets, or `alpha<S>-bw<B/S>`),
+/// plus `--alpha SECONDS --beta BYTES_PER_S` appending one explicit α–β
+/// channel. Defaults to the measured fabric alone.
+fn fabrics_arg(args: &Args) -> Result<Vec<dagsgd::calib::whatif::Fabric>, String> {
+    use dagsgd::calib::whatif::Fabric;
+    let mut fabrics = match args.get("fabric") {
+        None => vec![Fabric::Measured],
+        Some(list) => list
+            .split(',')
+            .map(|n| Fabric::parse(n.trim()))
+            .collect::<Result<Vec<_>, String>>()?,
+    };
+    match (args.get("alpha"), args.get("beta")) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            let alpha: f64 = a.parse().map_err(|e| format!("--alpha: {e}"))?;
+            let bw: f64 = b.parse().map_err(|e| format!("--beta: {e}"))?;
+            fabrics.push(Fabric::alpha_beta(alpha, bw)?);
+        }
+        _ => return Err("--alpha and --beta must be given together (one α–β fabric)".into()),
+    }
+    Ok(fabrics)
+}
+
 /// `dagsgd campaign --profile FILE` — sweep a calibrated profile: one
 /// cell per profile entry × scheduler (`--scheduler`, default fifo),
 /// each replaying the measured per-layer times through the DAG
-/// simulator (`calib::replay`). Cells are cached content-addressed (the
-/// profile's hash is part of every key), and the report flows through
-/// the standard `BENCH_campaign.json` machinery with `grid: "calib"`.
+/// simulator (`calib::replay`). Adding `--fabric LIST` (and/or
+/// `--alpha/--beta`) switches to the what-if axis — entries ×
+/// hypothetical fabrics × schedulers (`calib::whatif`). Cells are
+/// cached content-addressed (the profile's hash and fabric name are
+/// part of every key), and the report flows through the standard
+/// `BENCH_campaign.json` machinery with `grid: "calib"` or `"whatif"`.
 fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
-    use dagsgd::calib::replay;
+    use dagsgd::calib::{replay, whatif};
     use dagsgd::campaign::{report, runner};
 
     let profile = match load_profile(path).and_then(|p| {
@@ -309,7 +341,27 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
         }
     };
     let kinds = scheduler_list_or(args, &[SchedulerKind::Fifo]);
-    let mut cells = replay::scenarios(&profile, &kinds);
+    let fabrics = if args.has("fabric") || args.has("alpha") || args.has("beta") {
+        match fabrics_arg(args) {
+            Ok(f) => Some(f),
+            Err(e) => {
+                eprintln!("campaign: {e}");
+                return 2;
+            }
+        }
+    } else {
+        None
+    };
+    let (mut cells, grid_name) = match &fabrics {
+        Some(f) => {
+            if let Err(e) = whatif::validate_whatif(&profile, f) {
+                eprintln!("{e}");
+                return 1;
+            }
+            (whatif::scenarios(&profile, f, &kinds), "whatif")
+        }
+        None => (replay::scenarios(&profile, &kinds), "calib"),
+    };
     if let Some(pat) = args.get("filter") {
         cells.retain(|s| s.key().contains(pat));
         if cells.is_empty() {
@@ -325,12 +377,117 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
             return 1;
         }
     };
-    let outcome = runner::run_with(&cells, jobs, cache.as_ref(), |s| {
-        replay::replay_cell(&profile, s)
-    });
+    let outcome = match &fabrics {
+        Some(_) => runner::run_with(&cells, jobs, cache.as_ref(), |s| {
+            whatif::whatif_cell(&profile, s)
+        }),
+        None => runner::run_with(&cells, jobs, cache.as_ref(), |s| {
+            replay::replay_cell(&profile, s)
+        }),
+    };
     print!("{}", report::render_table(&outcome));
-    println!("calib ({}): {}", profile.tag(), report::summary(&outcome));
-    write_campaign_report(args, "calib", &outcome)
+    println!("{grid_name} ({}): {}", profile.tag(), report::summary(&outcome));
+    write_campaign_report(args, grid_name, &outcome)
+}
+
+/// `dagsgd whatif` — the calibrated what-if engine: predict a profile's
+/// measured workloads on hypothetical fabrics. `--profile FILE` selects
+/// the profile; `--fabric LIST` picks the channels (measured, ideal, stock,
+/// 10gbe, 100gb-ib, cluster presets, `alpha<S>-bw<B/S>`), `--alpha S
+/// --beta BPS` adds one explicit α–β channel, `--scheduler LIST` the
+/// policies, `--autotune-fusion` attaches the measurement-driven
+/// fusion-bucket autotune per entry × fabric, `--jobs N` the sweep
+/// parallelism, and `--out [PATH]` writes the schema-validated
+/// `BENCH_whatif.json`. Without a profile it runs the in-process
+/// demo sweep (synthesize → calibrate → what-if; see
+/// `experiments::whatif`). Tooling: `--check-report FILE`.
+fn cmd_whatif(args: &Args) -> i32 {
+    use dagsgd::calib::whatif;
+    use dagsgd::experiments::whatif as whatif_exp;
+
+    if let Some(path) = args.get("check-report") {
+        return check_json_file(path, |j| {
+            whatif::validate_report(j).map(|n| format!("whatif report ok ({n} rows)"))
+        });
+    }
+
+    let kinds = scheduler_list_or(args, &[SchedulerKind::Fifo]);
+    let autotune = args.bool_or("autotune-fusion", false);
+    let jobs = args.parallelism_or("jobs", 4);
+
+    let (profile, rows) = match args.get("profile") {
+        Some(path) => {
+            let profile = match load_profile(path) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            let fabrics = match fabrics_arg(args) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("whatif: {e}");
+                    return 2;
+                }
+            };
+            let rows = match whatif::rows(&profile, &fabrics, &kinds, autotune, jobs) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("whatif: {e}");
+                    return 1;
+                }
+            };
+            (profile, rows)
+        }
+        None => {
+            // In-process demo: synthesize traces, calibrate, predict.
+            // Explicit --fabric/--alpha/--beta are honored; otherwise
+            // the experiment's standard fabric ladder is swept.
+            let fabrics = if args.has("fabric") || args.has("alpha") || args.has("beta") {
+                match fabrics_arg(args) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        eprintln!("whatif: {e}");
+                        return 2;
+                    }
+                }
+            } else {
+                whatif_exp::fabrics()
+            };
+            let iters = args.usize_or("iters", whatif_exp::DEFAULT_TRACE_ITERS);
+            let seed = args.u64_or("seed", 7);
+            match whatif_exp::run(iters, seed, &fabrics, &kinds, autotune, jobs) {
+                Ok(pair) => pair,
+                Err(e) => {
+                    eprintln!("whatif: {e}");
+                    return 1;
+                }
+            }
+        }
+    };
+
+    print!("{}", whatif::render(&rows));
+    println!(
+        "whatif ({}): {} prediction(s), {} with a fusion autotune",
+        profile.tag(),
+        rows.len(),
+        rows.iter().filter(|r| r.fusion.is_some()).count()
+    );
+    if args.has("out") {
+        let out = match args.get("out") {
+            Some("true") | None => "BENCH_whatif.json".to_string(),
+            Some(p) => p.to_string(),
+        };
+        let j = whatif::report_to_json(&rows, &profile.framework, &profile.tag());
+        whatif::validate_report(&j).expect("generated report must satisfy its own schema");
+        if let Err(e) = std::fs::write(&out, j.to_string()) {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    0
 }
 
 /// Read + JSON-parse a file, then run a schema check on it (the

@@ -146,9 +146,21 @@ impl Trace {
                     fields.len()
                 ));
             }
+            // Times and sizes must be finite and non-negative: real
+            // trace files never carry NaN/inf/negative entries, and
+            // letting them through would poison every downstream
+            // consumer (averaging, the α–β fit, simulator durations).
             let parse_f = |s: &str, what: &str| -> Result<f64, String> {
-                s.parse::<f64>()
-                    .map_err(|e| format!("line {}: bad {what} '{s}': {e}", lineno + 1))
+                let v = s
+                    .parse::<f64>()
+                    .map_err(|e| format!("line {}: bad {what} '{s}': {e}", lineno + 1))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!(
+                        "line {}: {what} '{s}' must be finite and ≥ 0",
+                        lineno + 1
+                    ));
+                }
+                Ok(v)
             };
             current.push(LayerRecord {
                 id: fields[0]
@@ -329,6 +341,27 @@ mod tests {
         assert!(e.contains("size"), "{e}");
         // A bad header value is an error, not a silent default.
         assert!(Trace::parse("#! net=x gpus=two\n0 c 1 2 3 4\n").is_err());
+    }
+
+    /// Non-finite and negative numerics are rejected at parse time so
+    /// they can never reach the α–β fit or simulator durations (the
+    /// fuzz-hardening contract of `tests/trace_fuzz.rs`).
+    #[test]
+    fn non_finite_and_negative_values_rejected() {
+        for bad in [
+            "0 conv1 NaN 2 3 4\n",
+            "0 conv1 1 inf 3 4\n",
+            "0 conv1 1 2 -inf 4\n",
+            "0 conv1 1 2 3 1e999\n",
+            "0 conv1 -1 2 3 4\n",
+            "0 conv1 1 -2.5 3 4\n",
+            "0 conv1 1 2 3 -4\n",
+        ] {
+            let e = Trace::parse(bad).unwrap_err();
+            assert!(e.contains("line 1"), "{bad:?}: {e}");
+        }
+        // Zero stays fine (non-learnable rows are all zeros).
+        assert!(Trace::parse("0 data 0 0 0 0\n").is_ok());
     }
 
     #[test]

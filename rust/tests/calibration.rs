@@ -123,7 +123,8 @@ fn disk_pipeline_end_to_end() {
     // Replay + report, schema-checked.
     let rows = validate::prediction_rows(&reloaded, SchedulerKind::Fifo).unwrap();
     assert_eq!(rows.len(), 7);
-    let j = validate::report_to_json(&rows, &profile.framework, SchedulerKind::Fifo, &profile.tag());
+    let j =
+        validate::report_to_json(&rows, &profile.framework, SchedulerKind::Fifo, &profile.tag());
     assert_eq!(validate::validate_report(&j).unwrap(), 7);
     // The dataset entries (not the 2-GPU golden) keep the DAG replay
     // and the closed-form traced estimate in the same regime (the

@@ -120,6 +120,7 @@ fn property_campaign_cell_matches_direct_experiment() {
             layerwise_update: false,
             seed: 0,
             profile: None,
+            fabric: None,
         };
         let cell = s.run().map_err(|e| e.to_string())?;
 

@@ -1,0 +1,391 @@
+//! Fuzz tests for the trace-ingest surface (`trace::format::parse` and
+//! `calib::ingest`), built on the in-tree `util::quickcheck` harness:
+//! deterministic generators produce malformed rows, ragged/truncated
+//! files, empty iterations, giant record counts and hostile byte
+//! sequences; the property under test is always *total safety* — every
+//! input must come back as `Ok` or `Err`, never a panic or an
+//! out-of-bounds index. A greedy shrinker minimizes any failing input
+//! before reporting it.
+
+use dagsgd::calib::{fit, ingest};
+use dagsgd::prop_assert;
+use dagsgd::trace::format::Trace;
+use dagsgd::util::quickcheck::{check, Gen};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+
+/// Cases per fuzz target (the ISSUE acceptance floor is 256).
+const CASES: u64 = 300;
+
+/// `true` when `f` panics (the fuzz oracle).
+fn panics<T>(f: impl FnOnce() -> T) -> bool {
+    catch_unwind(AssertUnwindSafe(f)).is_err()
+}
+
+/// Greedy input shrinker: while `fails` holds, drop whole lines, then
+/// single characters. Quadratic, but it only runs on a failing case —
+/// its job is a minimal reproducer in the panic message.
+fn shrink(input: &str, fails: &dyn Fn(&str) -> bool) -> String {
+    let mut cur = input.to_string();
+    loop {
+        let lines: Vec<&str> = cur.lines().collect();
+        let mut improved = false;
+        for i in 0..lines.len() {
+            let cand: String = lines
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, l)| *l)
+                .collect::<Vec<_>>()
+                .join("\n");
+            if cand.len() < cur.len() && fails(&cand) {
+                cur = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    loop {
+        let chars: Vec<char> = cur.chars().collect();
+        let mut improved = false;
+        for i in 0..chars.len() {
+            let cand: String = chars
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, c)| *c)
+                .collect();
+            if fails(&cand) {
+                cur = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    cur
+}
+
+/// Drive a parser-shaped function through one generated input; on panic,
+/// shrink and fail the property with the minimized reproducer.
+fn assert_total(text: &str, what: &str, f: &dyn Fn(&str) -> bool) -> Result<(), String> {
+    if f(text) {
+        let min = shrink(text, f);
+        return Err(format!("{what} panicked; minimized input ({} bytes): {min:?}", min.len()));
+    }
+    Ok(())
+}
+
+/// One pseudo-random token: numbers (sane, huge, negative, non-finite),
+/// overflow bait, names, comments and hostile unicode.
+fn token(g: &mut Gen) -> String {
+    const POOL: [&str; 24] = [
+        "0",
+        "1",
+        "17",
+        "3.25",
+        "1.2e6",
+        "1e308",
+        "1e999",
+        "-1e999",
+        "NaN",
+        "nan",
+        "inf",
+        "-inf",
+        "-5",
+        "-0.0",
+        "99999999999999999999999999",
+        "18446744073709551616",
+        "conv1",
+        "data",
+        "banana",
+        "",
+        "#",
+        "\u{0}",
+        "ﬁ\u{202e}☃",
+        "１２３",
+    ];
+    match g.usize(0, 10) {
+        // Mostly draw from the adversarial pool...
+        0..=7 => POOL[g.usize(0, POOL.len() - 1)].to_string(),
+        // ...sometimes a plausible float...
+        8 => format!("{}", g.f64(-1e9, 1e12)),
+        // ...sometimes raw character soup.
+        _ => {
+            let n = g.usize(0, 6);
+            (0..n)
+                .map(|_| char::from_u32(g.u64(1, 0x2FFF) as u32).unwrap_or('?'))
+                .collect()
+        }
+    }
+}
+
+/// One pseudo-random line in (or near) the trace grammar.
+fn line(g: &mut Gen) -> String {
+    match g.usize(0, 9) {
+        // Valid-shaped data row (fields may still be garbage).
+        0..=3 => {
+            let n = 6;
+            (0..n).map(|_| token(g)).collect::<Vec<_>>().join("\t")
+        }
+        // Wrong field count.
+        4 | 5 => {
+            let n = g.usize(0, 12);
+            (0..n).map(|_| token(g)).collect::<Vec<_>>().join(" ")
+        }
+        // Iteration markers, sometimes with garbage counters.
+        6 => format!("# iter {}", token(g)),
+        // Metadata headers with hostile values.
+        7 => format!(
+            "#! net={} cluster={} gpus={} batch={}",
+            token(g),
+            token(g),
+            token(g),
+            token(g)
+        ),
+        // Plain comments.
+        8 => format!("# {}", token(g)),
+        // Blank-ish noise.
+        _ => " \t ".into(),
+    }
+}
+
+/// A whole pseudo-random trace file, occasionally truncated mid-line
+/// (char-boundary cut, like a file cut off mid-write).
+fn text(g: &mut Gen) -> String {
+    let lines = g.usize(0, 40);
+    let mut out = String::new();
+    for _ in 0..lines {
+        out.push_str(&line(g));
+        out.push('\n');
+    }
+    if g.bool() {
+        let chars: Vec<char> = out.chars().collect();
+        let cut = g.usize(0, chars.len());
+        out = chars[..cut].iter().collect();
+    }
+    out
+}
+
+/// A pseudo-random file stem near the `<net>_<cluster>_g<G>_b<B>`
+/// naming convention (drives the metadata-recovery path of ingest).
+fn stem(g: &mut Gen) -> String {
+    match g.usize(0, 5) {
+        0 => "alexnet_k80-pcie-10gbe_g16_b1024".into(),
+        1 => format!("{}_{}_g{}_b{}", token(g), token(g), token(g), token(g)),
+        2 => format!("{}_{}_g{}", token(g), token(g), token(g)),
+        3 => "x_y_g18446744073709551616_b1".into(),
+        4 => token(g),
+        _ => format!("{}_{}", token(g), token(g)),
+    }
+}
+
+/// ≥ 256 generated line-soup inputs: `Trace::parse` must be total, and
+/// every accepted trace must satisfy the invariants its consumers
+/// assume (non-empty, rectangular, finite non-negative fields).
+#[test]
+fn parse_is_total_on_line_soup() {
+    check(CASES, |g: &mut Gen| {
+        let input = text(g);
+        assert_total(&input, "Trace::parse", &|s| {
+            panics(|| {
+                if let Ok(t) = Trace::parse(s) {
+                    assert!(!t.iterations.is_empty());
+                    let rows = t.iterations[0].len();
+                    for it in &t.iterations {
+                        assert_eq!(it.len(), rows, "accepted trace must be rectangular");
+                        for r in it {
+                            assert!(r.forward_us.is_finite() && r.forward_us >= 0.0);
+                            assert!(r.backward_us.is_finite() && r.backward_us >= 0.0);
+                            assert!(r.comm_us.is_finite() && r.comm_us >= 0.0);
+                        }
+                    }
+                    // The averaging consumers must be safe on anything
+                    // parse accepts.
+                    let _ = t.mean_rows();
+                    let _ = t.mean_totals();
+                }
+            })
+        })
+    });
+}
+
+/// ≥ 256 generated (stem, text) pairs: `calib::ingest`'s per-file entry
+/// point (parse + file-name metadata recovery) must be total too.
+#[test]
+fn ingest_parse_trace_file_is_total() {
+    check(CASES, |g: &mut Gen| {
+        let name = format!("{}.trace", stem(g));
+        let input = text(g);
+        assert_total(&input, "ingest::parse_trace_file", &|s| {
+            panics(|| {
+                let _ = ingest::parse_trace_file(Path::new(&name), s);
+            })
+        })
+    });
+}
+
+/// Mutations of a *valid* trace (truncation, line deletion/duplication,
+/// token swaps into NaN/overflow/garbage) must flow through parse *and*
+/// calibration without panicking — errors are the only failure mode.
+#[test]
+fn mutated_valid_traces_never_panic_through_calibration() {
+    let cluster = dagsgd::cluster::presets::k80_cluster();
+    let net = dagsgd::models::zoo::alexnet();
+    let job = dagsgd::dag::builder::JobSpec {
+        batch_per_gpu: net.default_batch,
+        net,
+        nodes: 2,
+        gpus_per_node: 4,
+        iterations: 1,
+    };
+    let fw = dagsgd::frameworks::strategy::caffe_mpi();
+    let valid = dagsgd::trace::synth::synth_trace(&cluster, &job, &fw, 3, 5).to_text();
+
+    check(CASES, |g: &mut Gen| {
+        let mut s: String = valid.clone();
+        for _ in 0..g.usize(1, 4) {
+            match g.usize(0, 3) {
+                // Truncate at an arbitrary char boundary.
+                0 => {
+                    let chars: Vec<char> = s.chars().collect();
+                    let cut = g.usize(0, chars.len());
+                    s = chars[..cut].iter().collect();
+                }
+                // Delete a random line.
+                1 => {
+                    let lines: Vec<&str> = s.lines().collect();
+                    if !lines.is_empty() {
+                        let i = g.usize(0, lines.len() - 1);
+                        s = lines
+                            .iter()
+                            .enumerate()
+                            .filter(|(j, _)| *j != i)
+                            .map(|(_, l)| *l)
+                            .collect::<Vec<_>>()
+                            .join("\n");
+                    }
+                }
+                // Duplicate a random line (ragged tables).
+                2 => {
+                    let lines: Vec<&str> = s.lines().collect();
+                    if !lines.is_empty() {
+                        let i = g.usize(0, lines.len() - 1);
+                        let mut out: Vec<&str> = Vec::with_capacity(lines.len() + 1);
+                        for (j, l) in lines.iter().enumerate() {
+                            out.push(l);
+                            if j == i {
+                                out.push(l);
+                            }
+                        }
+                        s = out.join("\n");
+                    }
+                }
+                // Swap a whitespace-separated token for adversarial junk.
+                _ => {
+                    let junk = token(g);
+                    let toks: Vec<&str> = s.split(' ').collect();
+                    if toks.len() > 1 {
+                        let i = g.usize(0, toks.len() - 1);
+                        let mut out: Vec<&str> = toks.clone();
+                        out[i] = &junk;
+                        s = out.join(" ");
+                    }
+                }
+            }
+        }
+        assert_total(&s, "parse∘calibrate", &|input| {
+            panics(|| {
+                if let Ok(t) = Trace::parse(input) {
+                    // Whatever parse accepts, calibration must at worst
+                    // reject with an error.
+                    let _ = fit::calibrate_one(&t, &fw);
+                }
+            })
+        })
+    });
+}
+
+/// Giant record counts: huge claimed ids, thousands of rows and
+/// thousands of empty iteration markers must be handled (accepted or
+/// rejected) without panics or quadratic blowup surprises.
+#[test]
+fn giant_traces_are_handled_totally() {
+    let mut big = String::new();
+    for i in 0..5000u64 {
+        big.push_str(&format!("{} l{} 1 2 3 4\n", i.wrapping_mul(0x1000_0000_0000_0007), i));
+    }
+    assert!(!panics(|| {
+        let _ = Trace::parse(&big);
+    }));
+
+    let mut markers = String::from("0 data 1 0 0 0\n");
+    for i in 0..5000 {
+        markers.push_str(&format!("# iter {i}\n"));
+    }
+    assert!(!panics(|| {
+        let t = Trace::parse(&markers).unwrap();
+        // Only one populated iteration: empty markers collapse.
+        assert_eq!(t.iterations.len(), 1);
+    }));
+}
+
+/// On-disk fuzz of `ingest::load_dir`: random bytes — including invalid
+/// UTF-8 — next to valid traces must be skipped with a reason, never a
+/// panic.
+#[test]
+fn load_dir_is_total_on_hostile_files() {
+    let dir = std::env::temp_dir().join(format!("dagsgd-fuzz-dir-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // One valid anchor file so the directory is loadable.
+    std::fs::write(
+        dir.join("alexnet_k80_g4_b64.trace"),
+        "0 data 1.2e6 0 0 0\n1 conv1 3.27e6 288202 123.424 139776\n",
+    )
+    .unwrap();
+    // Invalid UTF-8.
+    std::fs::write(dir.join("binary.trace"), [0xFF, 0xFE, 0x00, 0x80, 0xC3, 0x28]).unwrap();
+    // Generated hostile text files.
+    check(24, |g: &mut Gen| {
+        let name = format!("fuzz{}_{}.trace", g.u64(0, 1 << 62), stem(g));
+        let sane: String = name
+            .chars()
+            .filter(|c| c.is_ascii_alphanumeric() || *c == '_' || *c == '.')
+            .collect();
+        std::fs::write(dir.join(sane), text(g)).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+
+    let outcome = catch_unwind(AssertUnwindSafe(|| ingest::load_dir(&dir)));
+    let set = outcome.expect("load_dir must not panic on hostile files").unwrap();
+    assert!(!set.is_empty(), "the valid anchor file must survive");
+    for (path, why) in &set.skipped {
+        assert!(!why.is_empty(), "{path}: skip reason must be populated");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The shrinker itself: minimizes against a stand-in failure predicate.
+#[test]
+fn shrinker_minimizes_failing_inputs() {
+    let fails = |s: &str| s.contains('X') && s.contains('Y');
+    let noisy = "abc\nqqXqq\nlong line of junk\nYzz\ntrailer\n";
+    let min = shrink(noisy, &fails);
+    assert!(fails(&min), "shrinking must preserve the failure");
+    assert_eq!(min.len(), 2, "minimal failing input is exactly \"XY\": {min:?}");
+    check(40, |g: &mut Gen| {
+        let input = text(g);
+        if fails(&input) {
+            let m = shrink(&input, &fails);
+            prop_assert!(fails(&m) && m.len() <= input.len());
+        }
+        Ok(())
+    });
+}

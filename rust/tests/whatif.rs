@@ -1,0 +1,256 @@
+//! Integration tests for the what-if engine — above all the ISSUE's two
+//! keystone properties:
+//!
+//! 1. a profile "predicted" onto its *own* measured fabric is
+//!    bit-identical to plain `calibrate --replay`;
+//! 2. the degenerate zero-α/infinite-bandwidth fabric ([`Fabric::Ideal`])
+//!    lower-bounds every real fabric's predicted iteration time;
+//!
+//! plus the golden pin on the fusion autotuner: against a profile
+//! synthesized from a *known* α–β channel, the autotuned bucket size
+//! must land within one scan step of the `analytic::fusion` closed-form
+//! optimum computed from the true channel.
+
+use dagsgd::analytic::eqs::IterInputs;
+use dagsgd::analytic::fusion;
+use dagsgd::calib::fit::{calibrate_one, NetCalibration};
+use dagsgd::calib::whatif::{self, Fabric};
+use dagsgd::calib::{replay, validate};
+use dagsgd::campaign::grid::Interconnect;
+use dagsgd::cluster::presets;
+use dagsgd::dag::builder::{self, JobSpec};
+use dagsgd::experiments::whatif as exp;
+use dagsgd::frameworks::strategy::{self, CalibratedComm};
+use dagsgd::models::layer::LayerKind;
+use dagsgd::models::zoo;
+use dagsgd::sim::scheduler::SchedulerKind;
+use dagsgd::trace::format::{LayerRecord, Trace};
+
+/// Keystone 1: what-if on the measured fabric ≡ `calibrate --replay`,
+/// bit for bit, across the whole §VI-shaped profile.
+#[test]
+fn measured_fabric_matches_calibrate_replay_bit_for_bit() {
+    let profile = exp::profile(10, 31);
+    let rows =
+        whatif::rows(&profile, &[Fabric::Measured], &[SchedulerKind::Fifo], false, 2).unwrap();
+    let replayed = validate::prediction_rows(&profile, SchedulerKind::Fifo).unwrap();
+    assert_eq!(rows.len(), replayed.len());
+    for r in &rows {
+        let twin = replayed
+            .iter()
+            .find(|p| p.net == r.net && p.cluster == r.cluster)
+            .unwrap_or_else(|| panic!("no replay row for {} on {}", r.net, r.cluster));
+        assert_eq!(
+            r.iter_time_s.to_bits(),
+            twin.predicted_iter_s.to_bits(),
+            "{} on {}: whatif(measured) must be bit-identical to replay",
+            r.net,
+            r.cluster
+        );
+        assert_eq!(r.speedup_vs_measured.to_bits(), 1.0f64.to_bits());
+    }
+}
+
+/// Keystone 2: the ideal fabric lower-bounds every real fabric, for
+/// every entry, including explicit α–β channels and full cluster swaps.
+#[test]
+fn ideal_fabric_lower_bounds_every_real_fabric() {
+    let profile = exp::profile(8, 37);
+    let fw = strategy::by_name(&profile.framework).unwrap();
+    let real = [
+        Fabric::Measured,
+        Fabric::Interconnect(Interconnect::Stock),
+        Fabric::Interconnect(Interconnect::TenGbE),
+        Fabric::Interconnect(Interconnect::Ib100),
+        Fabric::Cluster("k80-pcie-10gbe".into()),
+        Fabric::Cluster("v100-nvlink-ib".into()),
+        Fabric::alpha_beta(5e-5, 2.5e9).unwrap(),
+    ];
+    for entry in &profile.entries {
+        let ideal = whatif::predict_entry(entry, &Fabric::Ideal, SchedulerKind::Fifo, &fw)
+            .unwrap()
+            .replayed
+            .iter_time_s;
+        for fabric in &real {
+            let p = whatif::predict_entry(entry, fabric, SchedulerKind::Fifo, &fw).unwrap();
+            assert!(
+                ideal <= p.replayed.iter_time_s + 1e-12,
+                "{}: ideal {:.6}s > {:.6}s on {}",
+                entry.key(),
+                ideal,
+                p.replayed.iter_time_s,
+                fabric.name()
+            );
+        }
+    }
+}
+
+/// Build a calibration entry from a trace synthesized with a *known*
+/// collective channel and zero jitter: compute rows from the hardware
+/// model, comm rows priced exactly at `truth.comm_time(bytes)`.
+fn entry_from_known_channel(truth: &CalibratedComm) -> NetCalibration {
+    let cluster = presets::v100_cluster();
+    let net = zoo::resnet50();
+    let job = JobSpec {
+        batch_per_gpu: net.default_batch,
+        net: net.clone(),
+        nodes: 4,
+        gpus_per_node: 4,
+        iterations: 1,
+    };
+    let fw = strategy::caffe_mpi();
+    let d = builder::durations(&cluster, &job, &fw);
+    let rows: Vec<LayerRecord> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(id, l)| {
+            let (fwd, bwd, comm) = if l.kind == LayerKind::Data {
+                (d.io + d.decode, 0.0, 0.0)
+            } else if l.params > 0 {
+                (d.fwd[id], d.bwd[id], truth.comm_time(l.param_bytes() as f64))
+            } else {
+                (d.fwd[id], d.bwd[id], 0.0)
+            };
+            LayerRecord {
+                id,
+                name: l.name.clone(),
+                forward_us: fwd * 1e6,
+                backward_us: bwd * 1e6,
+                comm_us: comm * 1e6,
+                size_bytes: l.param_bytes(),
+            }
+        })
+        .collect();
+    let trace = Trace {
+        net: net.name.clone(),
+        cluster: cluster.name.clone(),
+        gpus: job.ranks(),
+        batch: job.batch_per_gpu,
+        iterations: vec![rows.clone(), rows],
+    };
+    calibrate_one(&trace, &fw).unwrap()
+}
+
+/// Golden pin: the autotuned bucket size from the *fitted* profile
+/// channel equals the `analytic::fusion` closed-form optimum computed
+/// from the *true* channel, within one scan step (a factor of two in
+/// cap — both scans walk the same 64 KiB-doubling grid).
+#[test]
+fn autotuned_bucket_size_matches_closed_form_within_one_step() {
+    let truth = CalibratedComm {
+        link: dagsgd::comm::alpha_beta::Link::new(60e-6, 4e9),
+        overhead_s: 100e-6,
+    };
+    let entry = entry_from_known_channel(&truth);
+    let fitted = entry.calibrated_comm().expect("affine comm rows fit exactly");
+    // The α–β fit over exactly-affine measurements recovers the truth
+    // (split between alpha and overhead may differ; the total cannot).
+    for bytes in [1e5, 1e7, 1e8] {
+        let err = (fitted.comm_time(bytes) / truth.comm_time(bytes) - 1.0).abs();
+        assert!(err < 1e-6, "fitted channel drifted at {bytes}: {err}");
+    }
+
+    let fw = strategy::caffe_mpi();
+    let auto = whatif::autotune_fusion(&entry, &Fabric::Measured, &fw).unwrap();
+
+    // Closed form from the true channel, over the same compute profile.
+    let cluster = presets::v100_cluster();
+    let net = zoo::resnet50();
+    let job = JobSpec {
+        batch_per_gpu: net.default_batch,
+        net: net.clone(),
+        nodes: 4,
+        gpus_per_node: 4,
+        iterations: 1,
+    };
+    let d = builder::durations(&cluster, &job, &fw);
+    let bytes: Vec<f64> = net.layers.iter().map(|l| l.param_bytes() as f64).collect();
+    let comm: Vec<f64> = net
+        .layers
+        .iter()
+        .map(|l| {
+            if l.params > 0 {
+                truth.comm_time(l.param_bytes() as f64)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let inputs = IterInputs {
+        t_io: 0.0,
+        t_h2d: 0.0,
+        fwd: d.fwd.clone(),
+        bwd: d.bwd.clone(),
+        comm,
+        t_u: d.update,
+    };
+    let mut truth_strategy = strategy::caffe_mpi();
+    truth_strategy.calibrated_comm = Some(truth);
+    let topo = builder::comm_topo(&cluster, job.nodes, job.gpus_per_node);
+    let (_, closed) = fusion::optimal_bucket_bytes(&inputs, &bytes, &topo, &truth_strategy);
+
+    let ratio = auto.cap_bytes / closed.cap_bytes;
+    assert!(
+        (0.5 - 1e-9..=2.0 + 1e-9).contains(&ratio),
+        "autotuned cap {} vs closed-form {} (ratio {ratio}) exceeds one scan step",
+        auto.cap_bytes,
+        closed.cap_bytes
+    );
+    // Both agree fusion wins on this comm-bound configuration.
+    assert!(auto.buckets > 1);
+    assert!(auto.replayed_iter_s < auto.layerwise_iter_s);
+}
+
+/// The campaign what-if axis end to end: entries × fabrics × schedulers
+/// flow through the shared runner with distinct, cacheable, filterable
+/// keys, and cells agree with direct predictions bit-for-bit.
+#[test]
+fn whatif_campaign_cells_match_direct_predictions() {
+    use dagsgd::campaign::cache::Cache;
+    use dagsgd::campaign::runner;
+
+    let profile = exp::profile(6, 41);
+    let fw = strategy::by_name(&profile.framework).unwrap();
+    let fabrics = [Fabric::Measured, Fabric::Interconnect(Interconnect::Ib100), Fabric::Ideal];
+    whatif::validate_whatif(&profile, &fabrics).unwrap();
+    let cells = whatif::scenarios(&profile, &fabrics, &[SchedulerKind::Fifo]);
+    assert_eq!(cells.len(), profile.entries.len() * fabrics.len());
+
+    let dir = std::env::temp_dir().join(format!("dagsgd-whatif-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = Cache::open(&dir).unwrap();
+    let first = runner::run_with(&cells, 4, Some(&cache), |s| whatif::whatif_cell(&profile, s));
+    assert_eq!(first.stats.simulated, cells.len());
+    let second = runner::run_with(&cells, 4, Some(&cache), |s| whatif::whatif_cell(&profile, s));
+    assert_eq!(second.stats.simulated, 0, "what-if cells must be cacheable");
+
+    for (s, r) in &first.cells {
+        let entry = profile
+            .entries
+            .iter()
+            .find(|e| e.net == s.net && e.cluster == s.cluster)
+            .unwrap();
+        let fabric = Fabric::parse(s.fabric.as_deref().unwrap()).unwrap();
+        let direct = whatif::predict_entry(entry, &fabric, s.scheduler, &fw).unwrap();
+        assert_eq!(
+            r.get("iter_time_s").unwrap().to_bits(),
+            direct.replayed.iter_time_s.to_bits(),
+            "{}",
+            s.key()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Substituted-comm replay validates its inputs: a wrong-length vector
+/// is an error, not an index panic.
+#[test]
+fn substituted_comm_vector_is_length_checked() {
+    let profile = exp::profile(4, 43);
+    let entry = &profile.entries[0];
+    let fw = strategy::by_name(&profile.framework).unwrap();
+    let err = replay::replay_entry_with_comm(entry, SchedulerKind::Fifo, &fw, Some(&[1.0, 2.0]))
+        .unwrap_err();
+    assert!(err.contains("slots"), "{err}");
+}
