@@ -1,0 +1,73 @@
+//! Bench: throughput of the scale-out prediction path — per-entry cost
+//! of the topology rescale (fit scaling + collective re-pricing), of a
+//! single cross-scale prediction (rescale + enlarged-cluster DAG
+//! replay), and of the full calibrate-at-2-nodes → predict-the-ladder
+//! sweep (`experiments::whatif::run_scale`, the CI scale-prediction
+//! smoke's engine).
+//!
+//!     cargo bench --bench whatif_scale
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::calib::whatif::{self, Fabric, Topology};
+use dagsgd::experiments::whatif as exp;
+use dagsgd::frameworks::strategy;
+use dagsgd::sim::scheduler::SchedulerKind;
+
+fn main() {
+    let mut bench = Bench::new("whatif_scale").with_iters(1, 5);
+
+    let profile = exp::profile_at(30, 7, exp::SCALE_PROFILE_NODES);
+    let fw = strategy::by_name(&profile.framework).expect("profile framework");
+    let ladder = exp::scale_ladder();
+    let predictions = (profile.entries.len() * ladder.len()) as f64;
+    println!(
+        "profile: {} entries (measured at {} nodes) x {} ladder rungs = {} predictions",
+        profile.entries.len(),
+        exp::SCALE_PROFILE_NODES,
+        ladder.len(),
+        predictions
+    );
+
+    let eight = Topology::new(8, 4).expect("8x4 is in range");
+    bench.case("rescale_entry (entries/s)", profile.entries.len() as f64, || {
+        profile
+            .entries
+            .iter()
+            .map(|e| {
+                whatif::rescale_entry(e, eight, &fw)
+                    .expect("2-node entries carry a comm fit")
+                    .layers
+                    .iter()
+                    .map(|l| l.comm_s)
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+    });
+
+    bench.case("predict_8x4 (predictions/s)", profile.entries.len() as f64, || {
+        profile
+            .entries
+            .iter()
+            .map(|e| {
+                whatif::predict_entry_at(
+                    e,
+                    &Fabric::Measured,
+                    Some(eight),
+                    SchedulerKind::Fifo,
+                    &fw,
+                    None,
+                )
+                .expect("ladder rung resolvable")
+                .replayed
+                .iter_time_s
+            })
+            .sum::<f64>()
+    });
+
+    bench.case("scale_sweep_e2e (predictions/s)", predictions, || {
+        let (_, rows) = exp::run_scale(30, 7, &[SchedulerKind::Fifo], 4).expect("sweep runs");
+        rows.len() as f64
+    });
+
+    bench.report();
+}

@@ -53,7 +53,8 @@ fn main() {
 
     bench.case("sweep_e2e (predictions/s)", predictions, || {
         let (_, rows) =
-            exp::run(30, 7, &exp::fabrics(), &[SchedulerKind::Fifo], false, 4).expect("sweep runs");
+            exp::run(30, 7, &exp::fabrics(), &[None], &[SchedulerKind::Fifo], false, 4)
+                .expect("sweep runs");
         rows.len() as f64
     });
 

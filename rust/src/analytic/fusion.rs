@@ -184,6 +184,23 @@ pub fn optimal_bucket_bytes_with(
     (points, best)
 }
 
+/// The winning bucket cap of the scan against a channel, or `None` when
+/// the gradient stream is empty (nothing to fuse). This is the single
+/// value [`crate::sim::scheduler::SchedulerKind::Fusion`]'s gang-launch
+/// policy consumes when calibrated replays feed it the measured optimum
+/// instead of the 25 MiB default.
+pub fn autotuned_cap(
+    inputs: &IterInputs,
+    comm_bytes: &[f64],
+    channel: &dyn Fn(f64) -> f64,
+) -> Option<f64> {
+    if comm_bytes.iter().sum::<f64>() <= 0.0 {
+        return None;
+    }
+    let (_, best) = optimal_bucket_bytes_with(inputs, comm_bytes, channel);
+    Some(best.cap_bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

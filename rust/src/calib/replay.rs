@@ -16,9 +16,10 @@
 //! cache and report plumbing — the `calib` campaign axis.
 
 use super::fit::{split_ranks, CalibratedProfile, NetCalibration};
-use crate::analytic::eqs;
+use crate::analytic::{eqs, fusion};
 use crate::campaign::grid::{CellResult, Interconnect, Scenario};
 use crate::cluster::presets;
+use crate::cluster::topology::ClusterSpec;
 use crate::dag::builder::{self, Durations, JobSpec};
 use crate::frameworks::strategy::{self, Strategy};
 use crate::models::perf::PerfModel;
@@ -76,10 +77,25 @@ pub fn durations_from(
 /// Resolve an entry back into simulator specs (shared with the what-if
 /// engine, which keeps the measured compute side of the job and swaps
 /// only the collective channel).
-pub(crate) fn resolve(
+pub(crate) fn resolve(entry: &NetCalibration) -> Result<(ClusterSpec, JobSpec), String> {
+    resolve_at(entry, None)
+}
+
+/// [`resolve`] with an optional hypothetical-topology override — the
+/// what-if engine's scale-out axis. `Some((nodes, gpus_per_node))`
+/// places the entry's per-GPU workload on that many nodes/GPUs of the
+/// *same* per-node hardware, enlarging the preset cluster's extent when
+/// the target exceeds it (predicting a job bigger than the measured
+/// testbed is the point of a scale-out what-if; per-node link and GPU
+/// parameters are untouched). The entry's GPU count must equal the
+/// target's rank count — rescaled entries are synthesized to match.
+/// `None` keeps the strict measured-layout resolution, which rejects
+/// counts the physical cluster cannot host.
+pub(crate) fn resolve_at(
     entry: &NetCalibration,
-) -> Result<(crate::cluster::topology::ClusterSpec, JobSpec), String> {
-    let cluster = presets::by_name(&entry.cluster)
+    at: Option<(usize, usize)>,
+) -> Result<(ClusterSpec, JobSpec), String> {
+    let mut cluster = presets::by_name(&entry.cluster)
         .ok_or_else(|| format!("unknown cluster '{}' in profile", entry.cluster))?;
     let net = zoo::by_name(&entry.net)
         .ok_or_else(|| format!("unknown net '{}' in profile", entry.net))?;
@@ -91,7 +107,24 @@ pub(crate) fn resolve(
             net.layers.len()
         ));
     }
-    let (nodes, gpus_per_node) = split_ranks(&cluster, entry.gpus)?;
+    let (nodes, gpus_per_node) = match at {
+        None => split_ranks(&cluster, entry.gpus)?,
+        Some((nodes, gpus_per_node)) => {
+            if nodes == 0 || gpus_per_node == 0 {
+                return Err(format!("topology {nodes}x{gpus_per_node} has no GPUs"));
+            }
+            if nodes * gpus_per_node != entry.gpus {
+                return Err(format!(
+                    "entry has {} GPUs but topology {nodes}x{gpus_per_node} has {}",
+                    entry.gpus,
+                    nodes * gpus_per_node
+                ));
+            }
+            cluster.nodes = cluster.nodes.max(nodes);
+            cluster.gpus_per_node = cluster.gpus_per_node.max(gpus_per_node);
+            (nodes, gpus_per_node)
+        }
+    };
     let batch = if entry.batch > 0 { entry.batch } else { net.default_batch };
     let job = JobSpec {
         batch_per_gpu: batch,
@@ -126,10 +159,54 @@ pub fn replay_entry_with_comm(
     fw: &Strategy,
     comm: Option<&[f64]>,
 ) -> Result<Replayed, String> {
-    let (cluster, job) = resolve(entry)?;
+    replay_entry_with_comm_at(entry, kind, fw, comm, None)
+}
+
+/// [`replay_entry_with_comm`] at an optional hypothetical topology
+/// (`(nodes, gpus_per_node)`, see [`resolve_at`]) — the scale-out
+/// door: the what-if engine rescales an entry to a different node/GPU
+/// count and replays it here, so I/O contention (the resource structure
+/// behind `ClusterSpec::io_sharing`), prefetch pipelines and collective
+/// serialization are all re-simulated at the *predicted* scale. `None`
+/// is the exact measured-layout code path.
+pub fn replay_entry_with_comm_at(
+    entry: &NetCalibration,
+    kind: SchedulerKind,
+    fw: &Strategy,
+    comm: Option<&[f64]>,
+    at: Option<(usize, usize)>,
+) -> Result<Replayed, String> {
+    replay_entry_with_comm_capped(entry, kind, fw, comm, at, None)
+}
+
+/// [`replay_entry_with_comm_at`] with an explicit fusion bucket cap for
+/// [`SchedulerKind::Fusion`]'s gang-launch policy. `None` autotunes the
+/// cap against the entry's *fitted* channel (the measured optimum —
+/// right for measured-fabric replays); the what-if engine passes the
+/// cap scanned against the *fabric being predicted* when it substitutes
+/// a hypothetical channel, so the policy is tuned for the comm costs it
+/// actually schedules. Non-fusion policies ignore the cap.
+pub fn replay_entry_with_comm_capped(
+    entry: &NetCalibration,
+    kind: SchedulerKind,
+    fw: &Strategy,
+    comm: Option<&[f64]>,
+    at: Option<(usize, usize)>,
+    cap_override: Option<f64>,
+) -> Result<Replayed, String> {
+    let (cluster, job) = resolve_at(entry, at)?;
     let pm = PerfModel::for_cluster(&cluster);
     let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
     let mut dur = durations_from(entry, &job, &pm, h2d);
+    // The fusion policy's bucket cap: an explicit override wins; else
+    // autotune against the *measured* durations and fitted channel (the
+    // ROADMAP wiring), taken before any what-if comm override rewrites
+    // `dur`. Non-fusion kinds skip the scan entirely.
+    let fusion_cap = match (kind, cap_override) {
+        (SchedulerKind::Fusion, Some(cap)) => Some(cap),
+        (SchedulerKind::Fusion, None) => fusion_cap_with(entry, &cluster, &job, h2d, &dur),
+        _ => None,
+    };
     if let Some(comm) = comm {
         if comm.len() != dur.comm.len() {
             return Err(format!(
@@ -147,7 +224,7 @@ pub fn replay_entry_with_comm(
     }
     let res = cluster.build_resources(job.nodes, job.gpus_per_node);
     let dag = builder::build_with(&res, &job, fw, &dur);
-    let mut sched = kind.build(&job.net);
+    let mut sched = kind.build_with_fusion_cap(&job.net, fusion_cap);
     let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
     let iter = executor::steady_state_from(&sim, &dag, job.iterations, 2);
     Ok(Replayed {
@@ -156,6 +233,61 @@ pub fn replay_entry_with_comm(
         samples_per_s: (job.ranks() * job.batch_per_gpu) as f64 / iter,
         tasks: dag.len(),
     })
+}
+
+/// The measurement-driven fusion bucket cap for an entry: the optimum of
+/// `analytic::fusion`'s scan run against the entry's *fitted* α–β
+/// channel over its measured gradient stream (the ROADMAP item — `sched`-
+/// style comparisons on calibrated profiles run at the measured optimum,
+/// not the 25 MiB default). `None` when the entry has no comm fit or
+/// records no gradient sizes; callers fall back to the default cap.
+pub fn fusion_cap_for(
+    entry: &NetCalibration,
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+) -> Option<f64> {
+    let pm = PerfModel::for_cluster(cluster);
+    let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
+    let dur = durations_from(entry, job, &pm, h2d);
+    fusion_cap_with(entry, cluster, job, h2d, &dur)
+}
+
+/// WFBP iteration inputs of an entry over the given per-layer
+/// collective costs — the single assembly the fusion-cap scans share
+/// (replay's fitted-channel fallback and the what-if engine's
+/// fabric-channel scans), so the `io_sharing` term and friends can
+/// never silently diverge between them.
+pub(crate) fn scan_iter_inputs(
+    entry: &NetCalibration,
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    h2d: f64,
+    dur: &Durations,
+    comm: Vec<f64>,
+) -> eqs::IterInputs {
+    eqs::IterInputs {
+        t_io: entry.t_io_s * cluster.io_sharing(job.nodes, job.gpus_per_node),
+        t_h2d: h2d,
+        fwd: dur.fwd.clone(),
+        bwd: dur.bwd.clone(),
+        comm,
+        t_u: dur.update,
+    }
+}
+
+/// [`fusion_cap_for`] over already-assembled measured durations (the
+/// replay path computes them anyway; don't rebuild them per cell).
+fn fusion_cap_with(
+    entry: &NetCalibration,
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    h2d: f64,
+    dur: &Durations,
+) -> Option<f64> {
+    let cal = entry.calibrated_comm()?;
+    let bytes: Vec<f64> = entry.layers.iter().map(|l| l.size_bytes as f64).collect();
+    let inputs = scan_iter_inputs(entry, cluster, job, h2d, dur, dur.comm.clone());
+    fusion::autotuned_cap(&inputs, &bytes, &|b| cal.comm_time(b))
 }
 
 /// The closed-form iteration-time estimate of the *trace itself* (the
@@ -261,6 +393,7 @@ pub fn scenarios(profile: &CalibratedProfile, kinds: &[SchedulerKind]) -> Vec<Sc
                 seed,
                 profile: Some(tag.clone()),
                 fabric: None,
+                topology: None,
             });
         }
     }
@@ -410,6 +543,50 @@ mod tests {
             assert!(r.get("iter_time_s").unwrap() > 0.0, "{}", s.key());
             assert!(r.get("error_pct").unwrap().is_finite());
         }
+    }
+
+    /// The ROADMAP wiring: replaying a calibrated entry under
+    /// `SchedulerKind::Fusion` gang-launches at the *measured* autotuned
+    /// bucket cap, not the 25 MiB default. The wired cap is the scan
+    /// optimum of the fitted channel, it differs from the default (the
+    /// scan grid is 64 KiB doublings, which never hit 25 MiB), and the
+    /// replay is bit-identical to a hand-built fusion policy at that cap.
+    #[test]
+    fn fusion_replay_runs_at_the_autotuned_cap() {
+        use crate::sim::scheduler::DEFAULT_FUSION_CAP_BYTES;
+
+        let e = entry_of(zoo::resnet50(), 4, 4, 10);
+        let fw = fws::caffe_mpi();
+        let (cluster, job) = resolve(&e).unwrap();
+        let cap = fusion_cap_for(&e, &cluster, &job).expect("multi-rank entry has a comm fit");
+        assert_ne!(cap.to_bits(), DEFAULT_FUSION_CAP_BYTES.to_bits());
+
+        // The wired cap is exactly the fitted-channel scan optimum.
+        let cal = e.calibrated_comm().unwrap();
+        let bytes: Vec<f64> = e.layers.iter().map(|l| l.size_bytes as f64).collect();
+        let pm = PerfModel::for_cluster(&cluster);
+        let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
+        let dur = durations_from(&e, &job, &pm, h2d);
+        let inputs = eqs::IterInputs {
+            t_io: e.t_io_s * cluster.io_sharing(job.nodes, job.gpus_per_node),
+            t_h2d: h2d,
+            fwd: dur.fwd.clone(),
+            bwd: dur.bwd.clone(),
+            comm: dur.comm.clone(),
+            t_u: dur.update,
+        };
+        let (_, best) = fusion::optimal_bucket_bytes_with(&inputs, &bytes, &|b| cal.comm_time(b));
+        assert_eq!(cap.to_bits(), best.cap_bytes.to_bits());
+
+        // And the replay builds its policy at that cap: bit-identical to
+        // simulating the same DAG under a hand-built fusion scheduler.
+        let replayed = replay_entry(&e, SchedulerKind::Fusion, &fw).unwrap();
+        let res = cluster.build_resources(job.nodes, job.gpus_per_node);
+        let dag = builder::build_with(&res, &job, &fw, &dur);
+        let mut hand = SchedulerKind::Fusion.build_with_fusion_cap(&job.net, Some(cap));
+        let sim = crate::sim::executor::simulate_with(&dag, &res.pool, hand.as_mut());
+        let iter = crate::sim::executor::steady_state_from(&sim, &dag, job.iterations, 2);
+        assert_eq!(replayed.iter_time_s.to_bits(), iter.to_bits());
     }
 
     #[test]

@@ -25,15 +25,16 @@
 //!   recommendations come from measurements, not the model
 //!   (cf. the MPI-collective-in-DAG embedding of arXiv:1802.06949).
 
-use super::fit::{CalibratedProfile, NetCalibration};
-use super::replay::{self, resolve, Replayed};
+use super::fit::{CalibratedProfile, CommFit, NetCalibration};
+use super::replay::{self, resolve, resolve_at, Replayed};
 use crate::analytic::{eqs, fusion};
 use crate::campaign::grid::{CellResult, Interconnect, Scenario};
 use crate::campaign::runner;
 use crate::cluster::presets;
+use crate::cluster::topology::ClusterSpec;
 use crate::comm::alpha_beta::Link;
-use crate::dag::builder::comm_topo;
-use crate::frameworks::strategy::{self, Strategy};
+use crate::dag::builder::{comm_topo, JobSpec};
+use crate::frameworks::strategy::{self, CalibratedComm, Strategy};
 use crate::models::perf::PerfModel;
 use crate::sim::scheduler::SchedulerKind;
 use crate::util::json::Json;
@@ -42,7 +43,235 @@ use crate::util::units::{fmt_bytes, fmt_dur};
 use std::collections::BTreeMap;
 
 /// Version of the `BENCH_whatif.json` format; bump on any layout change.
-pub const WHATIF_SCHEMA_VERSION: u64 = 1;
+/// v2 added the scale-out axis (`topology` + `pred_gpus` per row).
+pub const WHATIF_SCHEMA_VERSION: u64 = 2;
+
+/// Rank ceiling for hypothetical topologies: generous headroom over the
+/// paper's testbeds while keeping a typo'd `1000x1000` from building a
+/// multi-gigabyte DAG inside a sweep worker.
+pub const MAX_TOPOLOGY_RANKS: usize = 4096;
+
+/// A hypothetical rank layout to rescale a measured entry onto — the
+/// scale-out axis of the what-if engine (`whatif --nodes/--gpus`, the
+/// campaign `topology` axis). Addressed by name (`"<nodes>x<gpus>"`) so
+/// topologies ride in campaign cell keys exactly like fabrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    /// Validated constructor: both counts ≥ 1, total ranks capped.
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Result<Topology, String> {
+        if nodes == 0 || gpus_per_node == 0 {
+            return Err(format!(
+                "topology {nodes}x{gpus_per_node} has no GPUs (both counts must be ≥ 1)"
+            ));
+        }
+        if nodes.saturating_mul(gpus_per_node) > MAX_TOPOLOGY_RANKS {
+            return Err(format!(
+                "topology {nodes}x{gpus_per_node} exceeds {MAX_TOPOLOGY_RANKS} ranks"
+            ));
+        }
+        Ok(Topology {
+            nodes,
+            gpus_per_node,
+        })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Canonical name (cell keys, reports). `parse(name())` round-trips.
+    pub fn name(&self) -> String {
+        format!("{}x{}", self.nodes, self.gpus_per_node)
+    }
+
+    /// Parse the `<nodes>x<gpus_per_node>` form.
+    pub fn parse(s: &str) -> Result<Topology, String> {
+        let (n, g) = s
+            .split_once('x')
+            .ok_or_else(|| format!("bad topology '{s}' (want <nodes>x<gpus_per_node>)"))?;
+        let nodes: usize = n
+            .parse()
+            .map_err(|e| format!("bad node count in topology '{s}': {e}"))?;
+        let gpus_per_node: usize = g
+            .parse()
+            .map_err(|e| format!("bad GPU count in topology '{s}': {e}"))?;
+        Topology::new(nodes, gpus_per_node)
+    }
+}
+
+/// The rank layout an entry was measured at (its [`replay::resolve`]d
+/// node split).
+pub fn measured_topology(entry: &NetCalibration) -> Result<Topology, String> {
+    let (_, job) = resolve(entry)?;
+    Topology::new(job.nodes, job.gpus_per_node)
+}
+
+/// Collapse an explicit topology equal to the entry's measured layout
+/// onto `None`, so "rescale to the scale you measured at" takes the
+/// exact measured-layout code path — the bit-identity keystone — and
+/// every caller (validation, cells, autotune) agrees on which path runs.
+fn effective_topology(
+    entry: &NetCalibration,
+    topo: Option<Topology>,
+) -> Result<Option<Topology>, String> {
+    match topo {
+        None => Ok(None),
+        Some(t) => {
+            if t == measured_topology(entry)? {
+                Ok(None)
+            } else {
+                Ok(Some(t))
+            }
+        }
+    }
+}
+
+/// Affine `(intercept, slope)` view of the backend collective model at a
+/// rank layout. Every backend (ring / tree / hierarchical / parameter
+/// server / gRPC) prices one collective as `A(topology) + S · B(topology)`
+/// at a fixed participant count, so two probes recover the structural
+/// latency and bandwidth factors exactly. These factors are what scale a
+/// *fitted* α–β channel to a different participant count.
+fn backend_affine(
+    cluster: &ClusterSpec,
+    nodes: usize,
+    gpus_per_node: usize,
+    base: &Strategy,
+) -> (f64, f64) {
+    let topo = comm_topo(cluster, nodes, gpus_per_node);
+    const S1: f64 = 1.0;
+    const S2: f64 = 64.0 * 1024.0 * 1024.0;
+    let t1 = base.comm_time(&topo, S1);
+    let t2 = base.comm_time(&topo, S2);
+    let slope = (t2 - t1) / (S2 - S1);
+    (t1 - slope * S1, slope)
+}
+
+/// Re-price a fitted α–β channel at a different participant count: the
+/// hardware-attributable latency scales with the backend model's
+/// latency-structure ratio, the inverse bandwidth with its bandwidth-
+/// structure ratio, and the fitted *framework overhead* — software cost
+/// per collective, not a function of scale — rides along unchanged.
+/// This is the arXiv:1711.05979 workflow run forward: fit at one scale,
+/// extrapolate through the collective's closed form to another.
+fn scaled_comm_fit(
+    fit: CommFit,
+    cluster: &ClusterSpec,
+    from: Topology,
+    to: Topology,
+    fw: &Strategy,
+) -> Result<CommFit, String> {
+    let mut base = fw.clone();
+    base.calibrated_comm = None;
+    let (a_from, b_from) = backend_affine(cluster, from.nodes, from.gpus_per_node, &base);
+    let (a_to, b_to) = backend_affine(cluster, to.nodes, to.gpus_per_node, &base);
+    let from_ok = a_from.is_finite() && a_from > 0.0 && b_from.is_finite() && b_from > 0.0;
+    if !from_ok {
+        return Err(format!(
+            "backend model is degenerate at the measured layout {} (cannot rescale)",
+            from.name()
+        ));
+    }
+    let (alpha_factor, slope_factor) = (a_to / a_from, b_to / b_from);
+    if !alpha_factor.is_finite() || !slope_factor.is_finite() || slope_factor <= 0.0 {
+        return Err(format!(
+            "backend model is degenerate at the target layout {} (cannot rescale)",
+            to.name()
+        ));
+    }
+    let link = Link::new(fit.alpha_s, fit.bw_bps).rescaled(alpha_factor, slope_factor);
+    Ok(CommFit {
+        alpha_s: link.alpha,
+        bw_bps: link.bw,
+        overhead_s: fit.overhead_s,
+        samples: fit.samples,
+    })
+}
+
+/// Synthesize the entry a profile *would* contain had the same per-GPU
+/// job been measured on `topo` — the tentpole of the scale-out what-if:
+///
+/// * per-layer forward/backward costs and the data-layer fetch are the
+///   measured per-GPU minibatch numbers, carried over verbatim (weak
+///   scaling keeps the per-GPU workload fixed; I/O contention and Eq. 6's
+///   `io_sharing` re-emerge from the DAG's shared resources at the new
+///   node count);
+/// * the fitted per-layer efficiencies and framework overhead are kept;
+/// * every collective is re-priced through the fitted α–β channel scaled
+///   to the new participant count ([`scaled_comm_fit`]), and the scaled
+///   fit is installed on the entry so downstream pricing (fusion
+///   autotunes, the measured fabric) answers at the new scale.
+///
+/// Rescaling to the measured layout returns the entry unchanged — the
+/// bit-identity contract. A multi-rank target needs a fitted channel;
+/// a single-rank target drops communication entirely.
+pub fn rescale_entry(
+    entry: &NetCalibration,
+    topo: Topology,
+    fw: &Strategy,
+) -> Result<NetCalibration, String> {
+    let (cluster, job) = resolve(entry)?;
+    let from = Topology::new(job.nodes, job.gpus_per_node)?;
+    if from == topo {
+        return Ok(entry.clone());
+    }
+    let mut out = entry.clone();
+    out.gpus = topo.ranks();
+    if topo.ranks() <= 1 {
+        out.comm = None;
+        for l in &mut out.layers {
+            l.comm_s = 0.0;
+        }
+        return Ok(out);
+    }
+    let fit = entry.comm.ok_or_else(|| {
+        format!(
+            "{}: no fitted comm channel to re-price collectives at {}",
+            entry.key(),
+            topo.name()
+        )
+    })?;
+    let scaled = scaled_comm_fit(fit, &cluster, from, topo, fw)?;
+    let channel = CalibratedComm {
+        link: Link::new(scaled.alpha_s, scaled.bw_bps),
+        overhead_s: scaled.overhead_s,
+    };
+    out.comm = Some(scaled);
+    for l in &mut out.layers {
+        l.comm_s = if l.size_bytes > 0 {
+            channel.comm_time(l.size_bytes as f64)
+        } else {
+            0.0
+        };
+    }
+    Ok(out)
+}
+
+/// The single resolution step every topology-aware entry point shares:
+/// collapse the target onto the measured layout when they coincide
+/// ([`effective_topology`], the bit-identity contract), rescale
+/// otherwise, and hand back the collapsed target, the synthesized entry
+/// (`None` when no real rescale happened — callers fall back to the
+/// original) and the replay-layout override.
+fn rescaled_for(
+    entry: &NetCalibration,
+    topo: Option<Topology>,
+    fw: &Strategy,
+) -> Result<(Option<Topology>, Option<NetCalibration>, Option<(usize, usize)>), String> {
+    match effective_topology(entry, topo)? {
+        None => Ok((None, None, None)),
+        Some(t) => Ok((
+            Some(t),
+            Some(rescale_entry(entry, t, fw)?),
+            Some((t.nodes, t.gpus_per_node)),
+        )),
+    }
+}
 
 /// A hypothetical collective channel to price an entry's gradient
 /// exchange on. Addressed by name so fabrics can ride in campaign cell
@@ -130,7 +359,23 @@ pub fn channel(
     fabric: &Fabric,
     fw: &Strategy,
 ) -> Result<Box<dyn Fn(f64) -> f64>, String> {
-    let (cluster, job) = resolve(entry)?;
+    channel_at(entry, fabric, fw, None)
+}
+
+/// [`channel`] at an optional hypothetical topology (see
+/// [`replay::resolve_at`] via `resolve_at`): callers predicting a
+/// *rescaled* entry pass the target layout so cluster/interconnect
+/// fabrics are priced at the new participant count. With an explicit
+/// topology, a cluster fabric smaller than the target is scaled out
+/// like the measured cluster (that is what the axis asks for); without
+/// one, the strict "does the job fit this fabric" check stands.
+pub fn channel_at(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    fw: &Strategy,
+    at: Option<(usize, usize)>,
+) -> Result<Box<dyn Fn(f64) -> f64>, String> {
+    let (cluster, job) = resolve_at(entry, at)?;
     if job.ranks() <= 1 {
         return Ok(Box::new(|_| 0.0));
     }
@@ -149,9 +394,10 @@ pub fn channel(
             Ok(Box::new(move |bytes| overhead + link.xfer(bytes)))
         }
         Fabric::Cluster(name) => {
-            let hypo = presets::by_name(name)
+            let mut hypo = presets::by_name(name)
                 .ok_or_else(|| format!("unknown cluster fabric '{name}'"))?;
-            if job.nodes > hypo.nodes || job.gpus_per_node > hypo.gpus_per_node {
+            let fits = job.nodes <= hypo.nodes && job.gpus_per_node <= hypo.gpus_per_node;
+            if at.is_none() && !fits {
                 return Err(format!(
                     "{}: {}x{} GPUs do not fit fabric cluster '{}' ({}x{})",
                     entry.key(),
@@ -162,12 +408,16 @@ pub fn channel(
                     hypo.gpus_per_node
                 ));
             }
+            hypo.nodes = hypo.nodes.max(job.nodes);
+            hypo.gpus_per_node = hypo.gpus_per_node.max(job.gpus_per_node);
             let topo = comm_topo(&hypo, job.nodes, job.gpus_per_node);
             let mut base = fw.clone();
             base.calibrated_comm = None;
             Ok(Box::new(move |bytes| overhead + base.comm_time(&topo, bytes)))
         }
         Fabric::Interconnect(i) => {
+            // `cluster` is already scale-enlarged by `resolve_at` when a
+            // hypothetical topology is in play.
             let mut swapped = cluster.clone();
             i.apply(&mut swapped);
             let topo = comm_topo(&swapped, job.nodes, job.gpus_per_node);
@@ -186,10 +436,20 @@ pub fn comm_override(
     fabric: &Fabric,
     fw: &Strategy,
 ) -> Result<Option<Vec<f64>>, String> {
+    comm_override_at(entry, fabric, fw, None)
+}
+
+/// [`comm_override`] at an optional hypothetical topology.
+pub fn comm_override_at(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    fw: &Strategy,
+    at: Option<(usize, usize)>,
+) -> Result<Option<Vec<f64>>, String> {
     if matches!(fabric, Fabric::Measured) {
         return Ok(None);
     }
-    let ch = channel(entry, fabric, fw)?;
+    let ch = channel_at(entry, fabric, fw, at)?;
     Ok(Some(
         entry
             .layers
@@ -200,15 +460,23 @@ pub fn comm_override(
 }
 
 /// One what-if prediction: an entry's measured compute simulated against
-/// a fabric, with the measured-fabric replay as the baseline.
+/// a fabric (and optionally rescaled to a hypothetical topology), with
+/// the measured-fabric replay *at the measured scale* as the baseline.
 #[derive(Clone, Debug)]
 pub struct Prediction {
     pub fabric: Fabric,
+    /// Rescale target; `None` when predicting at the measured layout
+    /// (an explicit target equal to the measured layout collapses here).
+    pub topology: Option<Topology>,
+    /// GPUs the prediction runs on (the target's ranks, or the entry's
+    /// measured count).
+    pub pred_gpus: usize,
     pub scheduler: SchedulerKind,
     pub replayed: Replayed,
     /// Sum of the substituted per-layer collective costs, seconds.
     pub comm_total_s: f64,
-    /// Replay on the measured fabric under the same scheduler.
+    /// Replay on the measured fabric at the measured scale under the
+    /// same scheduler.
     pub measured_iter_s: f64,
 }
 
@@ -230,7 +498,7 @@ pub fn predict_entry(
     kind: SchedulerKind,
     fw: &Strategy,
 ) -> Result<Prediction, String> {
-    predict_entry_with_baseline(entry, fabric, kind, fw, None)
+    predict_entry_at(entry, fabric, None, kind, fw, None)
 }
 
 /// [`predict_entry`] with an optional precomputed measured-fabric
@@ -245,24 +513,105 @@ pub fn predict_entry_with_baseline(
     fw: &Strategy,
     baseline: Option<f64>,
 ) -> Result<Prediction, String> {
-    let comm = comm_override(entry, fabric, fw)?;
-    let replayed = replay::replay_entry_with_comm(entry, kind, fw, comm.as_deref())?;
+    predict_entry_at(entry, fabric, None, kind, fw, baseline)
+}
+
+/// The full prediction: one entry × one fabric × one (optional)
+/// hypothetical topology × one scheduling policy. With a topology the
+/// entry is first rescaled ([`rescale_entry`]) and replayed at the
+/// target layout; a target equal to the measured layout collapses onto
+/// the exact measured-layout code path, so "rescale to the scale you
+/// measured at" is bit-identical to plain replay by construction.
+pub fn predict_entry_at(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    topo: Option<Topology>,
+    kind: SchedulerKind,
+    fw: &Strategy,
+    baseline: Option<f64>,
+) -> Result<Prediction, String> {
+    let (topo, scaled, at) = rescaled_for(entry, topo, fw)?;
+    let eff = scaled.as_ref().unwrap_or(entry);
+    let comm = comm_override_at(eff, fabric, fw, at)?;
+    // The fusion policy must gang-launch at a cap tuned for the channel
+    // it actually schedules: when a hypothetical fabric substitutes the
+    // comm costs, scan against *that* fabric (replay's internal fallback
+    // tunes against the fitted channel, which is only right for the
+    // measured fabric).
+    let cap = if kind == SchedulerKind::Fusion && comm.is_some() {
+        fabric_fusion_cap(eff, fabric, fw, at)?
+    } else {
+        None
+    };
+    let replayed =
+        replay::replay_entry_with_comm_capped(eff, kind, fw, comm.as_deref(), at, cap)?;
     let comm_total_s = match &comm {
         Some(v) => v.iter().sum(),
-        None => entry.layers.iter().map(|l| l.comm_s).sum(),
+        None => eff.layers.iter().map(|l| l.comm_s).sum(),
     };
-    let measured_iter_s = match (&comm, baseline) {
-        (None, _) => replayed.iter_time_s,
-        (Some(_), Some(b)) => b,
-        (Some(_), None) => replay::replay_entry(entry, kind, fw)?.iter_time_s,
+    // The measured-scale measured-fabric cell is its own baseline; every
+    // hypothetical cell measures against the entry's own replay.
+    let measured_iter_s = if comm.is_none() && at.is_none() {
+        replayed.iter_time_s
+    } else {
+        match baseline {
+            Some(b) => b,
+            None => replay::replay_entry(entry, kind, fw)?.iter_time_s,
+        }
     };
     Ok(Prediction {
         fabric: fabric.clone(),
+        topology: topo,
+        pred_gpus: topo.map(|t| t.ranks()).unwrap_or(entry.gpus),
         scheduler: kind,
         replayed,
         comm_total_s,
         measured_iter_s,
     })
+}
+
+/// Assemble the fusion-scan inputs of an entry against a channel at a
+/// resolved job: gradient sizes, per-layer collective costs priced on
+/// the channel, and the WFBP iteration inputs (one definition, shared
+/// by the autotuner and the prediction-path cap scan via
+/// [`replay::scan_iter_inputs`]).
+fn scan_inputs(
+    eff: &NetCalibration,
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    ch: &dyn Fn(f64) -> f64,
+) -> (Vec<f64>, Vec<f64>, eqs::IterInputs) {
+    let pm = PerfModel::for_cluster(cluster);
+    let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
+    let dur = replay::durations_from(eff, job, &pm, h2d);
+    let bytes: Vec<f64> = eff.layers.iter().map(|l| l.size_bytes as f64).collect();
+    let comm: Vec<f64> = eff
+        .layers
+        .iter()
+        .map(|l| if l.size_bytes > 0 { ch(l.size_bytes as f64) } else { 0.0 })
+        .collect();
+    let inputs = replay::scan_iter_inputs(eff, cluster, job, h2d, &dur, comm.clone());
+    (bytes, comm, inputs)
+}
+
+/// The optimal fusion bucket cap for an entry against a fabric's
+/// channel at a layout — the scan half of [`autotune_fusion_at`],
+/// reused by [`predict_entry_at`] to tune [`SchedulerKind::Fusion`]'s
+/// gang-launch policy for the channel it actually schedules. `None`
+/// when there is nothing to fuse (single rank, no gradient sizes).
+fn fabric_fusion_cap(
+    eff: &NetCalibration,
+    fabric: &Fabric,
+    fw: &Strategy,
+    at: Option<(usize, usize)>,
+) -> Result<Option<f64>, String> {
+    let (cluster, job) = resolve_at(eff, at)?;
+    if job.ranks() <= 1 {
+        return Ok(None);
+    }
+    let ch = channel_at(eff, fabric, fw, at)?;
+    let (bytes, _, inputs) = scan_inputs(eff, &cluster, &job, ch.as_ref());
+    Ok(fusion::autotuned_cap(&inputs, &bytes, ch.as_ref()))
 }
 
 /// Result of autotuning the gradient-fusion bucket size against an
@@ -300,36 +649,37 @@ pub fn autotune_fusion(
     fabric: &Fabric,
     fw: &Strategy,
 ) -> Result<FusionTune, String> {
-    let (cluster, job) = resolve(entry)?;
+    autotune_fusion_at(entry, fabric, fw, None)
+}
+
+/// [`autotune_fusion`] at an optional hypothetical topology: the entry
+/// is rescaled first, so the scan runs against the channel *at the
+/// target participant count* and the fused/layer-wise replays simulate
+/// the target-scale DAG.
+pub fn autotune_fusion_at(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    fw: &Strategy,
+    topo: Option<Topology>,
+) -> Result<FusionTune, String> {
+    let (_, scaled, at) = rescaled_for(entry, topo, fw)?;
+    let eff = scaled.as_ref().unwrap_or(entry);
+    let (cluster, job) = resolve_at(eff, at)?;
     if job.ranks() <= 1 {
         return Err(format!("{}: single-rank job has nothing to fuse", entry.key()));
     }
-    let bytes: Vec<f64> = entry.layers.iter().map(|l| l.size_bytes as f64).collect();
+    let ch = channel_at(eff, fabric, fw, at)?;
+    let (bytes, comm, inputs) = scan_inputs(eff, &cluster, &job, ch.as_ref());
     if bytes.iter().sum::<f64>() <= 0.0 {
         return Err(format!("{}: trace records no gradient sizes", entry.key()));
     }
-    let ch = channel(entry, fabric, fw)?;
-    let pm = PerfModel::for_cluster(&cluster);
-    let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
-    let dur = replay::durations_from(entry, &job, &pm, h2d);
-    let comm: Vec<f64> = entry
-        .layers
-        .iter()
-        .map(|l| if l.size_bytes > 0 { ch(l.size_bytes as f64) } else { 0.0 })
-        .collect();
-    let inputs = eqs::IterInputs {
-        t_io: entry.t_io_s * cluster.io_sharing(job.nodes, job.gpus_per_node),
-        t_h2d: h2d,
-        fwd: dur.fwd.clone(),
-        bwd: dur.bwd.clone(),
-        comm: comm.clone(),
-        t_u: dur.update,
-    };
     let (_, best) = fusion::optimal_bucket_bytes_with(&inputs, &bytes, ch.as_ref());
     let bucketing = fusion::bucketing_by_cap(&bytes, best.cap_bytes);
     let fused = fusion::fused_comm_vector(&bucketing, &bytes, ch.as_ref());
-    let replayed = replay::replay_entry_with_comm(entry, SchedulerKind::Fifo, fw, Some(&fused))?;
-    let layerwise = replay::replay_entry_with_comm(entry, SchedulerKind::Fifo, fw, Some(&comm))?;
+    let replayed =
+        replay::replay_entry_with_comm_at(eff, SchedulerKind::Fifo, fw, Some(&fused), at)?;
+    let layerwise =
+        replay::replay_entry_with_comm_at(eff, SchedulerKind::Fifo, fw, Some(&comm), at)?;
     Ok(FusionTune {
         cap_bytes: best.cap_bytes,
         buckets: best.buckets,
@@ -340,20 +690,27 @@ pub fn autotune_fusion(
 }
 
 /// Campaign scenarios for a what-if sweep: one cell per profile entry ×
-/// fabric × scheduler, tagged with the profile's content hash *and* the
-/// fabric name, so cache entries stay content-addressed exactly like
-/// `campaign --profile` cells.
+/// topology × fabric × scheduler, tagged with the profile's content hash
+/// plus the fabric and topology names, so cache entries stay
+/// content-addressed exactly like `campaign --profile` cells. A `None`
+/// topology predicts at the entry's own measured layout.
 pub fn scenarios(
     profile: &CalibratedProfile,
     fabrics: &[Fabric],
+    topologies: &[Option<Topology>],
     kinds: &[SchedulerKind],
 ) -> Vec<Scenario> {
-    let mut out = Vec::with_capacity(profile.entries.len() * fabrics.len() * kinds.len());
+    let mut out = Vec::with_capacity(
+        profile.entries.len() * fabrics.len() * topologies.len() * kinds.len(),
+    );
     for base in replay::scenarios(profile, kinds) {
-        for fabric in fabrics {
-            let mut s = base.clone();
-            s.fabric = Some(fabric.name());
-            out.push(s);
+        for topo in topologies {
+            for fabric in fabrics {
+                let mut s = base.clone();
+                s.fabric = Some(fabric.name());
+                s.topology = topo.map(|t| t.name());
+                out.push(s);
+            }
         }
     }
     out
@@ -367,55 +724,135 @@ fn metrics_of(p: &Prediction) -> CellResult {
         .set("makespan_s", p.replayed.makespan_s)
         .set("comm_total_s", p.comm_total_s)
         .set("measured_iter_s", p.measured_iter_s)
-        .set("speedup_vs_measured", p.speedup_vs_measured());
+        .set("speedup_vs_measured", p.speedup_vs_measured())
+        .set("pred_gpus", p.pred_gpus as f64);
     r
 }
 
+/// The topology a what-if scenario predicts at (`None`: the measured
+/// layout). Scenarios reach cells only after [`validate_whatif`].
+fn cell_topology(s: &Scenario) -> Option<Topology> {
+    s.topology
+        .as_deref()
+        .map(|t| Topology::parse(t).expect("topology validated before sweep"))
+}
+
+/// Measured baselines for the cells of a sweep — one replay per entry ×
+/// scheduler that appears in a *hypothetical* cell (non-measured fabric
+/// or explicit topology); measured-scale measured-fabric cells are
+/// their own baseline and add nothing. [`rows`] injects this and
+/// `campaign --profile` passes it to [`whatif_cell_with`], so a sweep
+/// never re-simulates the identical baseline once per fabric × topology
+/// cell — and a `--filter`ed sweep only pays for the cells it keeps.
+pub fn measured_baselines(
+    profile: &CalibratedProfile,
+    cells: &[Scenario],
+) -> Result<BTreeMap<(String, String), f64>, String> {
+    let fw = strategy::by_name(&profile.framework)
+        .ok_or_else(|| format!("unknown framework '{}' in profile", profile.framework))?;
+    let mut out = BTreeMap::new();
+    for s in cells {
+        if s.fabric.as_deref() == Some("measured") && s.topology.is_none() {
+            continue; // its own baseline
+        }
+        let Some(entry) = replay::entry_for(profile, s) else {
+            continue; // validated sweeps never hit this
+        };
+        let key = (entry.key(), s.scheduler.name().to_string());
+        if out.contains_key(&key) {
+            continue;
+        }
+        let base = replay::replay_entry(entry, s.scheduler, &fw)
+            .map_err(|e| format!("{}: {e}", entry.key()))?;
+        out.insert(key, base.iter_time_s);
+    }
+    Ok(out)
+}
+
 /// The per-cell measurement of what-if sweeps: predict the matching
-/// entry on the cell's fabric under the cell's scheduler.
+/// entry on the cell's fabric × topology under the cell's scheduler,
+/// recomputing the measured baseline in-cell (pure function of the
+/// scenario — deterministic, cacheable). Batch sweeps precompute the
+/// baselines once and use [`whatif_cell_with`]; the replay is
+/// deterministic, so the two are bit-identical.
 pub fn whatif_cell(profile: &CalibratedProfile, s: &Scenario) -> CellResult {
+    whatif_cell_with(profile, s, &BTreeMap::new())
+}
+
+/// [`whatif_cell`] with precomputed measured baselines
+/// ([`measured_baselines`]); cells missing from the map recompute
+/// theirs.
+pub fn whatif_cell_with(
+    profile: &CalibratedProfile,
+    s: &Scenario,
+    baselines: &BTreeMap<(String, String), f64>,
+) -> CellResult {
     let fw = strategy::by_name(&profile.framework).expect("profile validated before sweep");
     let entry = replay::entry_for(profile, s).expect("scenario was built from this profile");
     let fabric = Fabric::parse(s.fabric.as_deref().expect("whatif cells carry a fabric"))
         .expect("fabric validated before sweep");
-    let p =
-        predict_entry(entry, &fabric, s.scheduler, &fw).expect("fabric validated before sweep");
+    let base = baselines
+        .get(&(entry.key(), s.scheduler.name().to_string()))
+        .copied();
+    let p = predict_entry_at(entry, &fabric, cell_topology(s), s.scheduler, &fw, base)
+        .expect("fabric/topology validated before sweep");
     metrics_of(&p)
 }
 
-/// Pre-sweep gate: the profile must be sweepable and every entry must be
-/// pricable on every requested fabric, so a bad fabric fails with a
-/// message before workers spawn. The measured fabric is exempt from the
-/// channel check — prediction on it replays raw measurements and needs
-/// no fitted channel.
-pub fn validate_whatif(profile: &CalibratedProfile, fabrics: &[Fabric]) -> Result<(), String> {
+/// Pre-sweep gate: the profile must be sweepable, every entry must be
+/// rescalable to every requested topology (fitted channel present,
+/// target in range), and every rescaled entry must be pricable on every
+/// requested fabric — so a bad axis value fails with a message before
+/// workers spawn, never as a panic inside the pool. The measured fabric
+/// is exempt from the channel check — prediction on it replays raw (or
+/// re-priced) measurements and needs no extra fit.
+pub fn validate_whatif(
+    profile: &CalibratedProfile,
+    fabrics: &[Fabric],
+    topologies: &[Option<Topology>],
+) -> Result<(), String> {
     replay::validate_profile(profile)?;
     if fabrics.is_empty() {
         return Err("no fabrics to sweep".into());
     }
+    if topologies.is_empty() {
+        return Err("no topologies to sweep".into());
+    }
     let fw = strategy::by_name(&profile.framework).expect("validate_profile checked the name");
     for entry in &profile.entries {
-        for fabric in fabrics {
-            if matches!(fabric, Fabric::Measured) {
-                continue;
+        for topo in topologies {
+            let (_, scaled, at) = rescaled_for(entry, *topo, &fw)
+                .map_err(|e| format!("{}: {e}", entry.key()))?;
+            let eff = scaled.as_ref().unwrap_or(entry);
+            for fabric in fabrics {
+                if matches!(fabric, Fabric::Measured) {
+                    continue;
+                }
+                channel_at(eff, fabric, &fw, at)
+                    .map_err(|e| format!("{} on fabric '{}': {e}", entry.key(), fabric.name()))?;
             }
-            channel(entry, fabric, &fw)
-                .map_err(|e| format!("{} on fabric '{}': {e}", entry.key(), fabric.name()))?;
         }
     }
     Ok(())
 }
 
-/// One report row: an entry × fabric × scheduler prediction, with the
-/// optional fusion autotune attached (shared across the schedulers of
-/// the same entry × fabric).
+/// One report row: an entry × topology × fabric × scheduler prediction,
+/// with the optional fusion autotune attached (shared across the
+/// schedulers of the same entry × topology × fabric).
 #[derive(Clone, Debug)]
 pub struct WhatIfRow {
     pub net: String,
     pub cluster: String,
+    /// GPUs the entry was *measured* on.
     pub gpus: usize,
     pub batch: usize,
     pub fabric: String,
+    /// Layout the prediction runs at (`"<nodes>x<gpus>"`; the measured
+    /// layout for measured-scale rows).
+    pub topology: String,
+    /// GPUs the prediction runs on (`nodes × gpus_per_node` of
+    /// `topology`).
+    pub pred_gpus: usize,
     pub scheduler: SchedulerKind,
     pub iter_time_s: f64,
     pub samples_per_s: f64,
@@ -425,57 +862,42 @@ pub struct WhatIfRow {
     pub fusion: Option<FusionTune>,
 }
 
-/// Sweep a profile across fabrics × schedulers on `jobs` workers and
-/// shape the cells into report rows. With `autotune`, each entry ×
-/// fabric additionally carries the fusion autotune (entries that cannot
-/// fuse — single rank, no gradient sizes, measured fabric without a comm
-/// fit — get `fusion: None` instead of failing the sweep).
+/// Sweep a profile across topologies × fabrics × schedulers on `jobs`
+/// workers and shape the cells into report rows. With `autotune`, each
+/// entry × topology × fabric additionally carries the fusion autotune
+/// (entries that cannot fuse — single rank, no gradient sizes, measured
+/// fabric without a comm fit — get `fusion: None` instead of failing
+/// the sweep).
 pub fn rows(
     profile: &CalibratedProfile,
     fabrics: &[Fabric],
+    topologies: &[Option<Topology>],
     kinds: &[SchedulerKind],
     autotune: bool,
     jobs: usize,
 ) -> Result<Vec<WhatIfRow>, String> {
-    validate_whatif(profile, fabrics)?;
+    validate_whatif(profile, fabrics, topologies)?;
     if kinds.is_empty() {
         return Err("no schedulers to sweep".into());
     }
     let fw = strategy::by_name(&profile.framework).expect("validated");
 
+    let cells = scenarios(profile, fabrics, topologies, kinds);
     // Measured baselines once per entry × scheduler (the replay is
     // deterministic, so injecting them into every prediction is
-    // bit-identical to the cells recomputing them per fabric). Only
-    // needed when a hypothetical fabric is in the sweep — measured
-    // cells are their own baseline.
-    let mut baselines: BTreeMap<(String, &str), f64> = BTreeMap::new();
-    if fabrics.iter().any(|f| !matches!(f, Fabric::Measured)) {
-        for entry in &profile.entries {
-            for &kind in kinds {
-                let base = replay::replay_entry(entry, kind, &fw)
-                    .map_err(|e| format!("{}: {e}", entry.key()))?;
-                baselines.insert((entry.key(), kind.name()), base.iter_time_s);
-            }
-        }
-    }
-
-    let cells = scenarios(profile, fabrics, kinds);
-    let outcome = runner::run_with(&cells, jobs, None, |s| {
-        let entry = replay::entry_for(profile, s).expect("scenario was built from this profile");
-        let fabric = Fabric::parse(s.fabric.as_deref().expect("whatif cells carry a fabric"))
-            .expect("fabric validated before sweep");
-        let base = baselines.get(&(entry.key(), s.scheduler.name())).copied();
-        let p = predict_entry_with_baseline(entry, &fabric, s.scheduler, &fw, base)
-            .expect("fabric validated before sweep");
-        metrics_of(&p)
-    });
+    // bit-identical to the cells recomputing them per cell). Empty —
+    // and unused — when the sweep holds only measured-scale
+    // measured-fabric cells, which are their own baseline.
+    let baselines = measured_baselines(profile, &cells)?;
+    let outcome =
+        runner::run_with(&cells, jobs, None, |s| whatif_cell_with(profile, s, &baselines));
 
     // Fusion autotunes are scheduler-independent: one per entry ×
-    // fabric, fanned through the same worker pool (they are the
-    // heaviest stage — a bucket-cap scan plus two replays each).
-    let mut tunes: BTreeMap<(String, String), FusionTune> = BTreeMap::new();
+    // topology × fabric, fanned through the same worker pool (they are
+    // the heaviest stage — a bucket-cap scan plus two replays each).
+    let mut tunes: BTreeMap<(String, String, String), FusionTune> = BTreeMap::new();
     if autotune {
-        let tune_cells = scenarios(profile, fabrics, &[SchedulerKind::Fifo]);
+        let tune_cells = scenarios(profile, fabrics, topologies, &[SchedulerKind::Fifo]);
         let tuned = runner::run_with(&tune_cells, jobs, None, |s| {
             let entry =
                 replay::entry_for(profile, s).expect("scenario was built from this profile");
@@ -484,7 +906,7 @@ pub fn rows(
             let mut r = CellResult::new();
             // Entries that cannot fuse (single rank, no gradient sizes,
             // measured fabric without a comm fit) yield an empty cell.
-            if let Ok(t) = autotune_fusion(entry, &fabric, &fw) {
+            if let Ok(t) = autotune_fusion_at(entry, &fabric, &fw, cell_topology(s)) {
                 r.set("cap_bytes", t.cap_bytes)
                     .set("buckets", t.buckets as f64)
                     .set("scan_iter_s", t.scan_iter_s)
@@ -496,9 +918,10 @@ pub fn rows(
         for (s, r) in &tuned.cells {
             let entry = replay::entry_for(profile, s).expect("tune scenario from this profile");
             let fabric_name = s.fabric.clone().expect("whatif cells carry a fabric");
+            let topo_name = s.topology.clone().unwrap_or_else(|| "-".into());
             if let Some(cap_bytes) = r.get("cap_bytes") {
                 tunes.insert(
-                    (entry.key(), fabric_name),
+                    (entry.key(), topo_name, fabric_name),
                     FusionTune {
                         cap_bytes,
                         buckets: r.get("buckets").expect("tune cell metric") as usize,
@@ -515,6 +938,13 @@ pub fn rows(
     for (s, r) in &outcome.cells {
         let entry = replay::entry_for(profile, s).expect("scenario was built from this profile");
         let fabric_name = s.fabric.clone().expect("whatif cells carry a fabric");
+        let topo_key = s.topology.clone().unwrap_or_else(|| "-".into());
+        // Display layout: the predicted scale, or the measured one
+        // (replay::scenarios stamps it on the base cell).
+        let topo_name = s
+            .topology
+            .clone()
+            .unwrap_or_else(|| format!("{}x{}", s.nodes, s.gpus_per_node));
         let metric = |k: &str| r.get(k).expect("whatif cell metric");
         out.push(WhatIfRow {
             net: s.net.clone(),
@@ -522,13 +952,15 @@ pub fn rows(
             gpus: entry.gpus,
             batch: entry.batch,
             fabric: fabric_name.clone(),
+            topology: topo_name,
+            pred_gpus: metric("pred_gpus") as usize,
             scheduler: s.scheduler,
             iter_time_s: metric("iter_time_s"),
             samples_per_s: metric("samples_per_s"),
             comm_total_s: metric("comm_total_s"),
             measured_iter_s: metric("measured_iter_s"),
             speedup_vs_measured: metric("speedup_vs_measured"),
-            fusion: tunes.get(&(entry.key(), fabric_name)).cloned(),
+            fusion: tunes.get(&(entry.key(), topo_key, fabric_name)).cloned(),
         });
     }
     Ok(out)
@@ -540,6 +972,7 @@ pub fn render(rows: &[WhatIfRow]) -> String {
         "net",
         "cluster",
         "gpus",
+        "topo",
         "fabric",
         "scheduler",
         "measured",
@@ -558,6 +991,7 @@ pub fn render(rows: &[WhatIfRow]) -> String {
             r.net.clone(),
             r.cluster.clone(),
             r.gpus.to_string(),
+            r.topology.clone(),
             r.fabric.clone(),
             r.scheduler.name().to_string(),
             fmt_dur(r.measured_iter_s),
@@ -592,6 +1026,8 @@ pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) ->
                 ("gpus", Json::num(r.gpus as f64)),
                 ("batch", Json::num(r.batch as f64)),
                 ("fabric", Json::str(r.fabric.clone())),
+                ("topology", Json::str(r.topology.clone())),
+                ("pred_gpus", Json::num(r.pred_gpus as f64)),
                 ("scheduler", Json::str(r.scheduler.name())),
                 ("iter_time_s", Json::num(r.iter_time_s)),
                 ("samples_per_s", Json::num(r.samples_per_s)),
@@ -611,7 +1047,7 @@ pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) ->
     ])
 }
 
-/// Validate a `BENCH_whatif.json` against schema v1. Returns the row
+/// Validate a `BENCH_whatif.json` against schema v2. Returns the row
 /// count.
 pub fn validate_report(report: &Json) -> Result<usize, String> {
     let version = report
@@ -651,7 +1087,7 @@ pub fn validate_report(report: &Json) -> Result<usize, String> {
     };
     for (i, row) in rows.iter().enumerate() {
         let at = format!("rows[{i}]");
-        for field in ["net", "cluster", "fabric", "scheduler"] {
+        for field in ["net", "cluster", "fabric", "topology", "scheduler"] {
             row.get(field)
                 .and_then(|v| v.as_str())
                 .ok_or_else(|| format!("{at}: missing string field '{field}'"))?;
@@ -659,6 +1095,7 @@ pub fn validate_report(report: &Json) -> Result<usize, String> {
         for field in [
             "gpus",
             "batch",
+            "pred_gpus",
             "iter_time_s",
             "samples_per_s",
             "comm_total_s",
@@ -671,6 +1108,7 @@ pub fn validate_report(report: &Json) -> Result<usize, String> {
         // everything else must be positive.
         for field in [
             "gpus",
+            "pred_gpus",
             "iter_time_s",
             "samples_per_s",
             "measured_iter_s",
@@ -840,19 +1278,21 @@ mod tests {
     }
 
     #[test]
-    fn scenarios_cross_entries_fabrics_schedulers() {
+    fn scenarios_cross_entries_topologies_fabrics_schedulers() {
         let cluster = crate::cluster::presets::k80_cluster();
         let profile = profile_for(&cluster);
         let fabrics = [Fabric::Measured, Fabric::Ideal];
+        let topologies = [None, Some(Topology::new(8, 4).unwrap())];
         let kinds = [SchedulerKind::Fifo, SchedulerKind::Priority];
-        validate_whatif(&profile, &fabrics).unwrap();
-        let cells = scenarios(&profile, &fabrics, &kinds);
-        assert_eq!(cells.len(), 2 * 2 * 2);
+        validate_whatif(&profile, &fabrics, &topologies).unwrap();
+        let cells = scenarios(&profile, &fabrics, &topologies, &kinds);
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2);
         let mut keys: Vec<String> = cells.iter().map(|s| s.key()).collect();
         keys.sort();
         keys.dedup();
-        assert_eq!(keys.len(), cells.len(), "fabric axis must keep keys distinct");
+        assert_eq!(keys.len(), cells.len(), "axes must keep keys distinct");
         assert!(keys.iter().any(|k| k.contains("fabric=ideal")));
+        assert!(keys.iter().any(|k| k.contains("topology=8x4")));
         assert!(keys.iter().all(|k| k.contains("profile=caffe-mpi#")));
         let outcome = runner::run_with(&cells, 2, None, |s| whatif_cell(&profile, s));
         for (s, r) in &outcome.cells {
@@ -861,20 +1301,143 @@ mod tests {
             if s.fabric.as_deref() == Some("ideal") {
                 assert_eq!(r.get("comm_total_s"), Some(0.0));
             }
+            if s.topology.as_deref() == Some("8x4") {
+                assert_eq!(r.get("pred_gpus"), Some(32.0), "{}", s.key());
+            }
         }
     }
 
     #[test]
-    fn validate_whatif_gates_bad_fabrics() {
+    fn validate_whatif_gates_bad_fabrics_and_topologies() {
         let cluster = crate::cluster::presets::k80_cluster();
         let profile = profile_for(&cluster);
-        assert!(validate_whatif(&profile, &[]).is_err());
+        assert!(validate_whatif(&profile, &[], &[None]).is_err());
+        assert!(validate_whatif(&profile, &[Fabric::Measured], &[]).is_err());
         // localhost has 1 node x 4 workers: the 4-node entry cannot fit.
-        let err = validate_whatif(&profile, &[Fabric::Cluster("localhost-shm".into())])
+        let err = validate_whatif(&profile, &[Fabric::Cluster("localhost-shm".into())], &[None])
             .unwrap_err();
         assert!(err.contains("do not fit"), "{err}");
         // The measured fabric is exempt from channel checks.
-        validate_whatif(&profile, &[Fabric::Measured, Fabric::Ideal]).unwrap();
+        validate_whatif(&profile, &[Fabric::Measured, Fabric::Ideal], &[None]).unwrap();
+        // Topology gates run pre-sweep too: a single-GPU-measured entry
+        // has no fitted channel, so it cannot rescale out — that must be
+        // a clean validation error, not a worker panic.
+        let solo = CalibratedProfile {
+            framework: "caffe-mpi".into(),
+            entries: vec![entry_of(zoo::googlenet(), &cluster, 1, 1)],
+        };
+        let err = validate_whatif(
+            &solo,
+            &[Fabric::Measured],
+            &[Some(Topology::new(2, 4).unwrap())],
+        )
+        .unwrap_err();
+        assert!(err.contains("no fitted comm channel"), "{err}");
+    }
+
+    #[test]
+    fn topology_names_round_trip_and_validate() {
+        for t in [Topology::new(1, 1).unwrap(), Topology::new(8, 4).unwrap()] {
+            assert_eq!(Topology::parse(&t.name()).unwrap(), t);
+        }
+        assert_eq!(Topology::parse("2x4").unwrap().ranks(), 8);
+        assert!(Topology::new(0, 4).is_err(), "zero nodes");
+        assert!(Topology::new(4, 0).is_err(), "zero GPUs");
+        assert!(Topology::parse("0x4").is_err());
+        assert!(Topology::parse("4x").is_err());
+        assert!(Topology::parse("16").is_err(), "missing separator");
+        assert!(Topology::parse("1000x1000").is_err(), "rank cap");
+    }
+
+    /// The identity contract behind the bit-identity keystone: rescaling
+    /// an entry to its own measured layout returns the entry unchanged,
+    /// and the prediction collapses onto the plain-replay code path.
+    #[test]
+    fn rescale_to_measured_scale_is_identity() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::alexnet(), &cluster, 2, 4);
+        let fw = fws::caffe_mpi();
+        let measured = measured_topology(&entry).unwrap();
+        assert_eq!(measured, Topology::new(2, 4).unwrap());
+        let same = rescale_entry(&entry, measured, &fw).unwrap();
+        assert_eq!(same, entry);
+        let p = predict_entry_at(
+            &entry,
+            &Fabric::Measured,
+            Some(measured),
+            SchedulerKind::Fifo,
+            &fw,
+            None,
+        )
+        .unwrap();
+        let r = replay::replay_entry(&entry, SchedulerKind::Fifo, &fw).unwrap();
+        assert_eq!(p.replayed.iter_time_s.to_bits(), r.iter_time_s.to_bits());
+        assert_eq!(p.topology, None, "identity target collapses");
+        assert_eq!(p.pred_gpus, entry.gpus);
+    }
+
+    /// Scaling out re-prices every collective upward: the scaled fit's
+    /// latency grows and bandwidth shrinks with the participant count,
+    /// and the per-layer comm costs follow.
+    #[test]
+    fn rescale_reprices_collectives_with_scale() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::resnet50(), &cluster, 2, 4);
+        let fw = fws::caffe_mpi();
+        let at4 = rescale_entry(&entry, Topology::new(4, 4).unwrap(), &fw).unwrap();
+        let at8 = rescale_entry(&entry, Topology::new(8, 4).unwrap(), &fw).unwrap();
+        assert_eq!(at4.gpus, 16);
+        assert_eq!(at8.gpus, 32);
+        let (c2, c4, c8) = (entry.comm.unwrap(), at4.comm.unwrap(), at8.comm.unwrap());
+        assert!(c4.alpha_s > c2.alpha_s, "latency grows with nodes");
+        assert!(c8.alpha_s > c4.alpha_s);
+        assert!(c4.bw_bps < c2.bw_bps, "effective bandwidth shrinks");
+        assert!(c8.bw_bps < c4.bw_bps);
+        assert_eq!(c8.overhead_s, c2.overhead_s, "framework overhead is kept");
+        for ((l2, l4), l8) in entry.layers.iter().zip(&at4.layers).zip(&at8.layers) {
+            assert_eq!(l2.fwd_s.to_bits(), l4.fwd_s.to_bits(), "compute is kept");
+            assert_eq!(l2.bwd_s.to_bits(), l8.bwd_s.to_bits());
+            if l2.size_bytes > 0 {
+                assert!(l8.comm_s > l4.comm_s, "{}: comm must grow", l2.name);
+            }
+        }
+        // Scaling down to one rank drops communication entirely.
+        let solo = rescale_entry(&entry, Topology::new(1, 1).unwrap(), &fw).unwrap();
+        assert!(solo.comm.is_none());
+        assert!(solo.layers.iter().all(|l| l.comm_s == 0.0));
+        // A single-GPU-measured entry has no channel to scale out with.
+        let single = entry_of(zoo::googlenet(), &cluster, 1, 1);
+        let err = rescale_entry(&single, Topology::new(2, 4).unwrap(), &fw).unwrap_err();
+        assert!(err.contains("no fitted comm channel"), "{err}");
+    }
+
+    /// The fusion scheduling policy works on every what-if axis: its
+    /// gang-launch cap is tuned against the channel actually scheduled
+    /// (the fabric's, not blindly the fitted one) and the prediction
+    /// simulates cleanly across fabrics × topologies — including the
+    /// ideal channel, where every cap ties and fusing is free.
+    #[test]
+    fn fusion_policy_predictions_cover_every_axis() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::resnet50(), &cluster, 2, 4);
+        let fw = fws::caffe_mpi();
+        for fabric in [
+            Fabric::Measured,
+            Fabric::Interconnect(Interconnect::TenGbE),
+            Fabric::alpha_beta(5e-3, 1e8).unwrap(), // drastically slower channel
+            Fabric::Ideal,
+        ] {
+            for topo in [None, Some(Topology::new(4, 4).unwrap())] {
+                let p = predict_entry_at(&entry, &fabric, topo, SchedulerKind::Fusion, &fw, None)
+                    .unwrap_or_else(|e| panic!("{} at {:?}: {e}", fabric.name(), topo));
+                assert!(
+                    p.replayed.iter_time_s > 0.0 && p.replayed.iter_time_s.is_finite(),
+                    "{} at {:?}",
+                    fabric.name(),
+                    topo
+                );
+            }
+        }
     }
 
     #[test]
@@ -882,23 +1445,26 @@ mod tests {
         let cluster = crate::cluster::presets::k80_cluster();
         let profile = profile_for(&cluster);
         let fabrics = [Fabric::Measured, Fabric::Interconnect(Interconnect::Ib100)];
-        let rows = rows(&profile, &fabrics, &[SchedulerKind::Fifo], true, 2).unwrap();
-        assert_eq!(rows.len(), 2 * 2);
+        let topologies = [None, Some(Topology::new(8, 4).unwrap())];
+        let rows = rows(&profile, &fabrics, &topologies, &[SchedulerKind::Fifo], true, 2).unwrap();
+        assert_eq!(rows.len(), 2 * 2 * 2);
         assert!(
             rows.iter().any(|r| r.fusion.is_some()),
             "multi-rank entries should autotune"
         );
         let table = render(&rows);
         assert!(table.contains("ib") || table.contains("100gb-ib"));
+        assert!(table.contains("8x4"), "predicted scale column:\n{table}");
 
         let good = report_to_json(&rows, &profile.framework, &profile.tag());
         let text = good.to_string();
         let back = json::parse(&text).unwrap();
         assert_eq!(validate_report(&back).unwrap(), rows.len());
         let check = |s: &str| validate_report(&json::parse(s).unwrap());
-        assert!(check(&text.replace("\"schema_version\":1", "\"schema_version\":3")).is_err());
+        assert!(check(&text.replace("\"schema_version\":2", "\"schema_version\":3")).is_err());
         assert!(check(&text.replace("\"bench\":\"whatif\"", "\"bench\":\"other\"")).is_err());
         assert!(check(&text.replace("\"rows\":[", "\"cells\":[")).is_err());
-        assert!(check("{\"schema_version\":1,\"bench\":\"whatif\"}").is_err());
+        assert!(check(&text.replace("\"topology\":", "\"layout\":")).is_err());
+        assert!(check("{\"schema_version\":2,\"bench\":\"whatif\"}").is_err());
     }
 }

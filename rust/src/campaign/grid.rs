@@ -106,6 +106,14 @@ pub struct Scenario {
     /// part of the canonical key (distinct cache cells per fabric) and
     /// ignored by name-only [`Scenario::resolve`].
     pub fabric: Option<String>,
+    /// Hypothetical-topology name (`calib::whatif::Topology::name`,
+    /// `"<nodes>x<gpus>"`) for what-if cells rescaling a profile entry
+    /// to a different node/GPU count; `None` for cells at the measured
+    /// (or grid-specified) layout. Part of the canonical key — distinct
+    /// predicted scales are distinct cache cells — and ignored by
+    /// name-only [`Scenario::resolve`] (the `nodes`/`gpus_per_node`
+    /// fields keep addressing the *measured* entry).
+    pub topology: Option<String>,
 }
 
 impl Scenario {
@@ -114,7 +122,7 @@ impl Scenario {
     /// any field's rendering) invalidates every cache entry by design.
     pub fn key(&self) -> String {
         format!(
-            "cluster={} interconnect={} net={} fw={} nodes={} gpus={} batch={} iters={} scheduler={} layerwise={} seed={} profile={} fabric={}",
+            "cluster={} interconnect={} net={} fw={} nodes={} gpus={} batch={} iters={} scheduler={} layerwise={} seed={} profile={} fabric={} topology={}",
             self.cluster,
             self.interconnect.name(),
             self.net,
@@ -130,6 +138,7 @@ impl Scenario {
             self.seed,
             self.profile.as_deref().unwrap_or("-"),
             self.fabric.as_deref().unwrap_or("-"),
+            self.topology.as_deref().unwrap_or("-"),
         )
     }
 
@@ -300,6 +309,7 @@ impl Grid {
                                             seed: self.seed,
                                             profile: profile.clone(),
                                             fabric: None,
+                                            topology: None,
                                         });
                                     }
                                 }
@@ -496,9 +506,15 @@ mod tests {
         let cells = g.expand();
         assert_eq!(cells.len(), 8);
         // Profiles are the outermost axis: model-driven cells first.
-        assert!(cells[0].key().ends_with("profile=- fabric=-"), "{}", cells[0].key());
         assert!(
-            cells[4].key().ends_with("profile=caffe-mpi#00000000deadbeef fabric=-"),
+            cells[0].key().ends_with("profile=- fabric=- topology=-"),
+            "{}",
+            cells[0].key()
+        );
+        assert!(
+            cells[4]
+                .key()
+                .ends_with("profile=caffe-mpi#00000000deadbeef fabric=- topology=-"),
             "{}",
             cells[4].key()
         );
@@ -519,9 +535,26 @@ mod tests {
         assert!(s.fabric.is_none(), "grid cells are fabric-less");
         let plain = s.key();
         s.fabric = Some("ideal".into());
-        assert!(s.key().ends_with("fabric=ideal"), "{}", s.key());
+        assert!(s.key().contains("fabric=ideal"), "{}", s.key());
         assert_ne!(s.key(), plain, "fabric must change the cache identity");
         s.resolve().unwrap();
+    }
+
+    /// The topology axis (scale-out what-if cells): part of the
+    /// canonical key — distinct predicted scales must be distinct cache
+    /// cells — and ignored by name-only resolution.
+    #[test]
+    fn topology_axis_keys_and_resolution() {
+        let mut s = tiny().expand().remove(0);
+        assert!(s.topology.is_none(), "grid cells stay at their own layout");
+        let plain = s.key();
+        s.topology = Some("8x4".into());
+        assert!(s.key().ends_with("topology=8x4"), "{}", s.key());
+        assert_ne!(s.key(), plain, "topology must change the cache identity");
+        s.resolve().unwrap();
+        let mut other = s.clone();
+        other.topology = Some("4x4".into());
+        assert_ne!(s.key(), other.key(), "distinct scales, distinct keys");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!       "nodes": 4, "gpus_per_node": 4, "batch_per_gpu": null,
 //!       "iterations": 8, "scheduler": "fifo",
 //!       "layerwise_update": false, "seed": 7, "profile": null,
-//!       "fabric": null,
+//!       "fabric": null, "topology": null,
 //!       "metrics": { "iter_time_s": 0.31, "samples_per_s": 1652.0,
 //!                    "predicted_iter_s": 0.30, "predicted_speedup": 13.1,
 //!                    "comm_s": 0.21, "comm_hidden_pct": 87.0 } }
@@ -108,6 +108,13 @@ pub fn to_json(grid_name: &str, outcome: &Outcome) -> Json {
                         .map(|f| Json::str(f.clone()))
                         .unwrap_or(Json::Null),
                 ),
+                (
+                    "topology",
+                    s.topology
+                        .as_ref()
+                        .map(|t| Json::str(t.clone()))
+                        .unwrap_or(Json::Null),
+                ),
                 ("metrics", metrics_to_json(r)),
             ])
         })
@@ -187,10 +194,11 @@ pub fn validate(report: &Json) -> Result<usize, String> {
             Some(Json::Null) | Some(Json::Num(_)) => {}
             _ => return Err(format!("{at}: 'batch_per_gpu' must be null or a number")),
         }
-        // `profile` and `fabric` are optional (schema v1 predates
-        // them): null for model-driven cells, the profile tag / fabric
-        // name for replayed and what-if cells.
-        for field in ["profile", "fabric"] {
+        // `profile`, `fabric` and `topology` are optional (schema v1
+        // predates them): null for model-driven cells, the profile tag /
+        // fabric name / predicted layout for replayed, what-if and
+        // scale-out cells.
+        for field in ["profile", "fabric", "topology"] {
             match cell.get(field) {
                 None | Some(Json::Null) | Some(Json::Str(_)) => {}
                 _ => return Err(format!("{at}: '{field}' must be null or a string")),
@@ -263,7 +271,11 @@ pub fn render_table(outcome: &Outcome) -> String {
             s.fabric.clone().unwrap_or_else(|| s.interconnect.name().to_string()),
             s.net.clone(),
             s.framework.clone(),
-            format!("{}x{}", s.nodes, s.gpus_per_node),
+            // Scale-out what-if cells show the *predicted* layout; every
+            // other cell shows the measured/grid one.
+            s.topology
+                .clone()
+                .unwrap_or_else(|| format!("{}x{}", s.nodes, s.gpus_per_node)),
             s.scheduler.name().to_string(),
             dur("iter_time_s"),
             num("samples_per_s", 1),

@@ -44,6 +44,19 @@ impl Link {
         }
     }
 
+    /// Re-scale the channel's two terms independently: the latency by
+    /// `alpha_factor`, the *slope* of the affine cost (inverse
+    /// bandwidth) by `slope_factor`. This is how a fitted effective
+    /// collective channel moves to a different participant count — the
+    /// collective's closed form changes its structural latency and
+    /// bandwidth factors, the α–β shape does not
+    /// (`calib::whatif::rescale_entry`).
+    pub fn rescaled(&self, alpha_factor: f64, slope_factor: f64) -> Link {
+        assert!(alpha_factor.is_finite() && alpha_factor >= 0.0);
+        assert!(slope_factor.is_finite() && slope_factor > 0.0);
+        Link::new(self.alpha * alpha_factor, self.bw / slope_factor)
+    }
+
     /// Least-squares α–β fit over `(bytes, seconds)` measurements: the
     /// affine model `t = α + S/bw` fitted to transfer (or collective)
     /// timings at several message sizes — the calibration workflow of
@@ -117,6 +130,23 @@ mod tests {
     fn efficiency_derating() {
         let l = Link::new(0.0, 100.0).with_efficiency(0.5);
         assert_eq!(l.bw, 50.0);
+    }
+
+    #[test]
+    fn rescaled_scales_terms_independently() {
+        let l = Link::new(2e-5, 1e9).rescaled(3.0, 2.0);
+        assert!((l.alpha - 6e-5).abs() < 1e-18);
+        assert!((l.bw - 5e8).abs() < 1e-3);
+        // Identity factors reproduce the channel exactly.
+        let id = Link::new(2e-5, 1e9).rescaled(1.0, 1.0);
+        assert_eq!(id.alpha.to_bits(), 2e-5f64.to_bits());
+        assert_eq!(id.bw.to_bits(), 1e9f64.to_bits());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rescaled_rejects_zero_slope_factor() {
+        Link::new(1e-5, 1e9).rescaled(1.0, 0.0);
     }
 
     #[test]

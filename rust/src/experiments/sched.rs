@@ -67,6 +67,7 @@ pub fn scenarios(
             seed: 0,
             profile: None,
             fabric: None,
+            topology: None,
         })
         .collect()
 }

@@ -1,13 +1,15 @@
 //! What-if sweep experiment — the in-process proof of the prediction
 //! engine: synthesize the §VI dataset shape, calibrate it, then predict
 //! every measured workload on the paper's fabric ladder (measured →
-//! 10 GbE → 100 Gb IB → ideal). This is the interconnect study of §V
-//! re-run *forward* from calibrated measurements instead of the model —
-//! the `dagsgd whatif` demo mode, `benches/whatif_sweep.rs` and the
-//! what-if tests all drive it.
+//! 10 GbE → 100 Gb IB → ideal) and/or across the node-count scale
+//! ladder (1 → 2 → 4 → 8 nodes from one profile — Table V's cross-scale
+//! promise run forward). This is the study of §V re-run from calibrated
+//! measurements instead of the model — the `dagsgd whatif` demo modes,
+//! `benches/whatif_sweep.rs`, `benches/whatif_scale.rs` and the what-if
+//! tests all drive it.
 
 use crate::calib::fit::{self, CalibratedProfile};
-use crate::calib::whatif::{self, Fabric, WhatIfRow};
+use crate::calib::whatif::{self, Fabric, Topology, WhatIfRow};
 use crate::campaign::grid::Interconnect;
 use crate::cluster::presets;
 use crate::dag::builder::JobSpec;
@@ -18,6 +20,9 @@ use crate::trace::synth::synth_trace;
 
 /// Iterations synthesized per trace (matches `experiments::table5`).
 pub const DEFAULT_TRACE_ITERS: usize = 20;
+
+/// Nodes the scale-ladder profile is "measured" at.
+pub const SCALE_PROFILE_NODES: usize = 2;
 
 /// The experiment's fabric ladder: measured baseline, the paper's two
 /// named inter-node fabrics, and the degenerate ideal channel that
@@ -31,9 +36,20 @@ pub fn fabrics() -> Vec<Fabric> {
     ]
 }
 
+/// The scale ladder: 1 → 2 → 4 → 8 nodes at 4 GPUs each. Rungs at the
+/// profile's own measured layout collapse onto plain replay (the
+/// bit-identity contract), rungs beyond the 4-node presets exercise the
+/// hypothetical cluster enlargement.
+pub fn scale_ladder() -> Vec<Option<Topology>> {
+    [1usize, 2, 4, 8]
+        .iter()
+        .map(|&n| Some(Topology::new(n, 4).expect("ladder rungs are in range")))
+        .collect()
+}
+
 /// Synthesize the §VI dataset shape in process and calibrate it: all
-/// three nets on both clusters, whole-cluster (4×4) Caffe-MPI.
-pub fn profile(trace_iters: usize, seed: u64) -> CalibratedProfile {
+/// three nets on both clusters under Caffe-MPI, `nodes`×4 GPUs.
+pub fn profile_at(trace_iters: usize, seed: u64, nodes: usize) -> CalibratedProfile {
     let fw = strategy::caffe_mpi();
     let mut traces = Vec::new();
     for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
@@ -41,7 +57,7 @@ pub fn profile(trace_iters: usize, seed: u64) -> CalibratedProfile {
             let job = JobSpec {
                 batch_per_gpu: net.default_batch,
                 net,
-                nodes: 4,
+                nodes,
                 gpus_per_node: 4,
                 iterations: 1,
             };
@@ -51,19 +67,39 @@ pub fn profile(trace_iters: usize, seed: u64) -> CalibratedProfile {
     fit::calibrate(&traces, &fw).expect("synthetic traces always calibrate")
 }
 
+/// [`profile_at`] on the whole cluster (4×4) — the §VI shape.
+pub fn profile(trace_iters: usize, seed: u64) -> CalibratedProfile {
+    profile_at(trace_iters, seed, 4)
+}
+
 /// Run the sweep end to end: calibrate in process, then predict every
-/// entry on every fabric in `fabrics` (callers usually pass
-/// [`fabrics()`], the standard ladder) under each policy in `kinds`.
+/// entry on every fabric × topology (callers usually pass [`fabrics()`]
+/// and `&[None]`) under each policy in `kinds`.
 pub fn run(
     trace_iters: usize,
     seed: u64,
     fabrics: &[Fabric],
+    topologies: &[Option<Topology>],
     kinds: &[SchedulerKind],
     autotune: bool,
     jobs: usize,
 ) -> Result<(CalibratedProfile, Vec<WhatIfRow>), String> {
     let p = profile(trace_iters, seed);
-    let rows = whatif::rows(&p, fabrics, kinds, autotune, jobs)?;
+    let rows = whatif::rows(&p, fabrics, topologies, kinds, autotune, jobs)?;
+    Ok((p, rows))
+}
+
+/// The scale-ladder sweep: calibrate a *2-node* profile in process, then
+/// predict the 1-, 2-, 4- and 8-node jobs from it on the measured
+/// fabric — one profile, four cluster sizes.
+pub fn run_scale(
+    trace_iters: usize,
+    seed: u64,
+    kinds: &[SchedulerKind],
+    jobs: usize,
+) -> Result<(CalibratedProfile, Vec<WhatIfRow>), String> {
+    let p = profile_at(trace_iters, seed, SCALE_PROFILE_NODES);
+    let rows = whatif::rows(&p, &[Fabric::Measured], &scale_ladder(), kinds, false, jobs)?;
     Ok((p, rows))
 }
 
@@ -73,7 +109,7 @@ mod tests {
 
     #[test]
     fn sweep_covers_entries_x_fabrics() {
-        let (p, rows) = run(6, 11, &fabrics(), &[SchedulerKind::Fifo], false, 4).unwrap();
+        let (p, rows) = run(6, 11, &fabrics(), &[None], &[SchedulerKind::Fifo], false, 4).unwrap();
         assert_eq!(p.entries.len(), 6, "3 nets x 2 clusters");
         assert_eq!(rows.len(), 6 * fabrics().len());
         let j = whatif::report_to_json(&rows, &p.framework, &p.tag());
@@ -84,7 +120,7 @@ mod tests {
     /// and ideal ≤ the measured baseline.
     #[test]
     fn ideal_rung_is_fastest_per_entry() {
-        let (p, rows) = run(6, 13, &fabrics(), &[SchedulerKind::Fifo], false, 4).unwrap();
+        let (p, rows) = run(6, 13, &fabrics(), &[None], &[SchedulerKind::Fifo], false, 4).unwrap();
         for entry in &p.entries {
             let of = |fabric: &str| {
                 rows.iter()
@@ -102,13 +138,40 @@ mod tests {
 
     #[test]
     fn deterministic_for_a_seed() {
-        let (_, a) = run(4, 9, &fabrics(), &[SchedulerKind::Fifo], false, 1).unwrap();
-        let (_, b) = run(4, 9, &fabrics(), &[SchedulerKind::Fifo], false, 4).unwrap();
+        let (_, a) = run(4, 9, &fabrics(), &[None], &[SchedulerKind::Fifo], false, 1).unwrap();
+        let (_, b) = run(4, 9, &fabrics(), &[None], &[SchedulerKind::Fifo], false, 4).unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             let (xi, yi) = (x.iter_time_s.to_bits(), y.iter_time_s.to_bits());
             assert_eq!(xi, yi, "{} {}", x.net, x.fabric);
             assert_eq!(x.fabric, y.fabric);
         }
+    }
+
+    /// The scale ladder covers every entry at every rung, rung GPU
+    /// counts follow the ladder, and the 2-node rung (the profile's own
+    /// scale) reports itself as the baseline.
+    #[test]
+    fn scale_ladder_covers_entries_x_rungs() {
+        let (p, rows) = run_scale(6, 17, &[SchedulerKind::Fifo], 4).unwrap();
+        assert_eq!(p.entries.len(), 6);
+        assert!(p.entries.iter().all(|e| e.gpus == SCALE_PROFILE_NODES * 4));
+        assert_eq!(rows.len(), 6 * scale_ladder().len());
+        for entry in &p.entries {
+            let rung = |topo: &str| {
+                rows.iter()
+                    .find(|r| {
+                        r.net == entry.net && r.cluster == entry.cluster && r.topology == topo
+                    })
+                    .unwrap_or_else(|| panic!("{} missing rung {topo}", entry.key()))
+            };
+            assert_eq!(rung("1x4").pred_gpus, 4);
+            assert_eq!(rung("8x4").pred_gpus, 32);
+            let own = rung("2x4");
+            assert_eq!(own.pred_gpus, entry.gpus);
+            assert_eq!(own.speedup_vs_measured.to_bits(), 1.0f64.to_bits());
+        }
+        let j = whatif::report_to_json(&rows, &p.framework, &p.tag());
+        assert_eq!(whatif::validate_report(&j).unwrap(), rows.len());
     }
 }

@@ -12,8 +12,10 @@
 //!   calibrate [flags]            fit simulator parameters from a trace dir,
 //!                                replay them, score the predictions
 //!   whatif    [flags]            predict a calibrated profile on
-//!                                hypothetical fabrics (α–β what-ifs,
-//!                                fusion autotuning over fitted channels)
+//!                                hypothetical fabrics and/or at
+//!                                hypothetical scales (α–β what-ifs,
+//!                                topology rescaling, fusion autotuning
+//!                                over fitted channels)
 //!   table5    [flags]            the Table V validation table end to end
 //!   train     [flags]            real S-SGD training via PJRT artifacts
 //!
@@ -292,6 +294,37 @@ fn write_campaign_report(
     0
 }
 
+/// Parse the topology (scale-out) axis: `--topology LIST` where each
+/// element is `<nodes>x<gpus_per_node>` or the word `measured` (the
+/// entry's own layout), plus `--nodes N --gpus G` appending one explicit
+/// target. Defaults to the measured layout alone.
+fn topologies_arg(args: &Args) -> Result<Vec<Option<dagsgd::calib::whatif::Topology>>, String> {
+    use dagsgd::calib::whatif::Topology;
+    let mut topologies: Vec<Option<Topology>> = match args.get("topology") {
+        None => vec![],
+        Some(list) => list
+            .split(',')
+            .map(|t| match t.trim() {
+                "measured" => Ok(None),
+                s => Topology::parse(s).map(Some),
+            })
+            .collect::<Result<Vec<_>, String>>()?,
+    };
+    match (args.get("nodes"), args.get("gpus")) {
+        (None, None) => {}
+        (Some(n), Some(g)) => {
+            let nodes: usize = n.parse().map_err(|e| format!("--nodes: {e}"))?;
+            let gpus: usize = g.parse().map_err(|e| format!("--gpus: {e}"))?;
+            topologies.push(Some(Topology::new(nodes, gpus)?));
+        }
+        _ => return Err("--nodes and --gpus must be given together (one topology)".into()),
+    }
+    if topologies.is_empty() {
+        topologies.push(None);
+    }
+    Ok(topologies)
+}
+
 /// Parse the fabric axis: `--fabric NAME[,NAME...]` (measured, ideal,
 /// stock, 10gbe, 100gb-ib, cluster presets, or `alpha<S>-bw<B/S>`),
 /// plus `--alpha SECONDS --beta BYTES_PER_S` appending one explicit α–β
@@ -321,11 +354,13 @@ fn fabrics_arg(args: &Args) -> Result<Vec<dagsgd::calib::whatif::Fabric>, String
 /// cell per profile entry × scheduler (`--scheduler`, default fifo),
 /// each replaying the measured per-layer times through the DAG
 /// simulator (`calib::replay`). Adding `--fabric LIST` (and/or
-/// `--alpha/--beta`) switches to the what-if axis — entries ×
-/// hypothetical fabrics × schedulers (`calib::whatif`). Cells are
-/// cached content-addressed (the profile's hash and fabric name are
-/// part of every key), and the report flows through the standard
-/// `BENCH_campaign.json` machinery with `grid: "calib"` or `"whatif"`.
+/// `--alpha/--beta`) and/or `--topology LIST` (and/or
+/// `--nodes/--gpus`) switches to the what-if axes — entries ×
+/// hypothetical topologies × fabrics × schedulers (`calib::whatif`).
+/// Cells are cached content-addressed (the profile's hash plus fabric
+/// and topology names are part of every key), and the report flows
+/// through the standard `BENCH_campaign.json` machinery with
+/// `grid: "calib"` or `"whatif"`.
 fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
     use dagsgd::calib::{replay, whatif};
     use dagsgd::campaign::{report, runner};
@@ -341,7 +376,15 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
         }
     };
     let kinds = scheduler_list_or(args, &[SchedulerKind::Fifo]);
-    let fabrics = if args.has("fabric") || args.has("alpha") || args.has("beta") {
+    // A lone --nodes (or --gpus) must reach topologies_arg's pairing
+    // error instead of silently running a measured-scale sweep.
+    let whatif_axes = args.has("fabric")
+        || args.has("alpha")
+        || args.has("beta")
+        || args.has("topology")
+        || args.has("nodes")
+        || args.has("gpus");
+    let fabrics = if whatif_axes {
         match fabrics_arg(args) {
             Ok(f) => Some(f),
             Err(e) => {
@@ -354,11 +397,18 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
     };
     let (mut cells, grid_name) = match &fabrics {
         Some(f) => {
-            if let Err(e) = whatif::validate_whatif(&profile, f) {
+            let topologies = match topologies_arg(args) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("campaign: {e}");
+                    return 2;
+                }
+            };
+            if let Err(e) = whatif::validate_whatif(&profile, f, &topologies) {
                 eprintln!("{e}");
                 return 1;
             }
-            (whatif::scenarios(&profile, f, &kinds), "whatif")
+            (whatif::scenarios(&profile, f, &topologies, &kinds), "whatif")
         }
         None => (replay::scenarios(&profile, &kinds), "calib"),
     };
@@ -369,6 +419,21 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
             return 2;
         }
     }
+    // One measured replay per entry x scheduler appearing in a
+    // hypothetical *retained* cell, shared instead of re-simulated per
+    // cell (computed after --filter so narrowed sweeps pay only for
+    // what they keep).
+    let baselines = if fabrics.is_some() {
+        match whatif::measured_baselines(&profile, &cells) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    } else {
+        std::collections::BTreeMap::new()
+    };
     let jobs = args.parallelism_or("jobs", 4);
     let cache = match cache_arg(args) {
         Ok(c) => c,
@@ -379,7 +444,7 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
     };
     let outcome = match &fabrics {
         Some(_) => runner::run_with(&cells, jobs, cache.as_ref(), |s| {
-            whatif::whatif_cell(&profile, s)
+            whatif::whatif_cell_with(&profile, s, &baselines)
         }),
         None => runner::run_with(&cells, jobs, cache.as_ref(), |s| {
             replay::replay_cell(&profile, s)
@@ -391,16 +456,20 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
 }
 
 /// `dagsgd whatif` — the calibrated what-if engine: predict a profile's
-/// measured workloads on hypothetical fabrics. `--profile FILE` selects
-/// the profile; `--fabric LIST` picks the channels (measured, ideal, stock,
-/// 10gbe, 100gb-ib, cluster presets, `alpha<S>-bw<B/S>`), `--alpha S
-/// --beta BPS` adds one explicit α–β channel, `--scheduler LIST` the
-/// policies, `--autotune-fusion` attaches the measurement-driven
-/// fusion-bucket autotune per entry × fabric, `--jobs N` the sweep
-/// parallelism, and `--out [PATH]` writes the schema-validated
-/// `BENCH_whatif.json`. Without a profile it runs the in-process
-/// demo sweep (synthesize → calibrate → what-if; see
-/// `experiments::whatif`). Tooling: `--check-report FILE`.
+/// measured workloads on hypothetical fabrics and/or at hypothetical
+/// scales. `--profile FILE` selects the profile; `--fabric LIST` picks
+/// the channels (measured, ideal, stock, 10gbe, 100gb-ib, cluster
+/// presets, `alpha<S>-bw<B/S>`), `--alpha S --beta BPS` adds one
+/// explicit α–β channel, `--topology LIST` (`<N>x<G>` or `measured`)
+/// and/or `--nodes N --gpus G` rescale the predictions to other rank
+/// layouts, `--scheduler LIST` the policies, `--autotune-fusion`
+/// attaches the measurement-driven fusion-bucket autotune per entry ×
+/// topology × fabric, `--jobs N` the sweep parallelism, and `--out
+/// [PATH]` writes the schema-validated `BENCH_whatif.json`. Without a
+/// profile it runs the in-process demo sweep (synthesize → calibrate →
+/// what-if; `--scale-ladder` demos the 1→2→4→8-node prediction from a
+/// 2-node profile instead; see `experiments::whatif`). Tooling:
+/// `--check-report FILE`.
 fn cmd_whatif(args: &Args) -> i32 {
     use dagsgd::calib::whatif;
     use dagsgd::experiments::whatif as whatif_exp;
@@ -414,6 +483,31 @@ fn cmd_whatif(args: &Args) -> i32 {
     let kinds = scheduler_list_or(args, &[SchedulerKind::Fifo]);
     let autotune = args.bool_or("autotune-fusion", false);
     let jobs = args.parallelism_or("jobs", 4);
+    let ladder = args.bool_or("scale-ladder", false);
+    if ladder {
+        // The ladder demo is fixed (measured fabric, 1/2/4/8 nodes, no
+        // autotune); reject flags it would otherwise silently discard.
+        for flag in ["profile", "fabric", "alpha", "beta", "topology", "nodes", "gpus"] {
+            if args.has(flag) {
+                eprintln!(
+                    "whatif: --scale-ladder is a fixed demo (measured fabric, \
+                     1/2/4/8-node ladder) and cannot be combined with --{flag}"
+                );
+                return 2;
+            }
+        }
+        if autotune {
+            eprintln!("whatif: --scale-ladder does not support --autotune-fusion");
+            return 2;
+        }
+    }
+    let topologies = match topologies_arg(args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("whatif: {e}");
+            return 2;
+        }
+    };
 
     let (profile, rows) = match args.get("profile") {
         Some(path) => {
@@ -431,7 +525,8 @@ fn cmd_whatif(args: &Args) -> i32 {
                     return 2;
                 }
             };
-            let rows = match whatif::rows(&profile, &fabrics, &kinds, autotune, jobs) {
+            let swept = whatif::rows(&profile, &fabrics, &topologies, &kinds, autotune, jobs);
+            let rows = match swept {
                 Ok(r) => r,
                 Err(e) => {
                     eprintln!("whatif: {e}");
@@ -439,6 +534,19 @@ fn cmd_whatif(args: &Args) -> i32 {
                 }
             };
             (profile, rows)
+        }
+        None if ladder => {
+            // Scale-ladder demo: calibrate a 2-node profile in process
+            // and predict 1/2/4/8-node jobs from it.
+            let iters = args.usize_or("iters", whatif_exp::DEFAULT_TRACE_ITERS);
+            let seed = args.u64_or("seed", 7);
+            match whatif_exp::run_scale(iters, seed, &kinds, jobs) {
+                Ok(pair) => pair,
+                Err(e) => {
+                    eprintln!("whatif: {e}");
+                    return 1;
+                }
+            }
         }
         None => {
             // In-process demo: synthesize traces, calibrate, predict.
@@ -457,7 +565,7 @@ fn cmd_whatif(args: &Args) -> i32 {
             };
             let iters = args.usize_or("iters", whatif_exp::DEFAULT_TRACE_ITERS);
             let seed = args.u64_or("seed", 7);
-            match whatif_exp::run(iters, seed, &fabrics, &kinds, autotune, jobs) {
+            match whatif_exp::run(iters, seed, &fabrics, &topologies, &kinds, autotune, jobs) {
                 Ok(pair) => pair,
                 Err(e) => {
                     eprintln!("whatif: {e}");
@@ -610,7 +718,21 @@ fn cmd_calibrate(args: &Args) -> i32 {
 
     let kind = scheduler_arg(args);
     let want_report = args.has("report");
-    if args.bool_or("replay", false) || want_report {
+    // `--max-err FRAC` (e.g. 0.15) is the self-calibration drift gate:
+    // replay the freshly fitted profile and fail when the mean
+    // |simulated − traced| error leaves the Table-V-style band. It
+    // implies `--replay`.
+    let max_err = match args.get("max-err") {
+        None => None,
+        Some(v) => match v.parse::<f64>() {
+            Ok(frac) if frac.is_finite() && frac > 0.0 => Some(frac),
+            _ => {
+                eprintln!("calibrate: --max-err wants a positive fraction (e.g. 0.15)");
+                return 2;
+            }
+        },
+    };
+    if args.bool_or("replay", false) || want_report || max_err.is_some() {
         let rows = match validate::prediction_rows(&profile, kind) {
             Ok(r) => r,
             Err(e) => {
@@ -634,6 +756,32 @@ fn cmd_calibrate(args: &Args) -> i32 {
                 return 1;
             }
             println!("wrote {path}");
+        }
+        if let Some(band) = max_err {
+            let errs: Vec<f64> = rows.iter().map(|r| r.error_pct).collect();
+            let mean = dagsgd::util::stats::mean(&errs);
+            let worst = rows
+                .iter()
+                .max_by(|a, b| a.error_pct.total_cmp(&b.error_pct))
+                .expect("prediction_rows is non-empty");
+            println!(
+                "drift gate: mean |err| {}% (worst {} @ {} g{} at {}%) vs band {}%",
+                f(mean, 1),
+                worst.net,
+                worst.cluster,
+                worst.gpus,
+                f(worst.error_pct, 1),
+                f(band * 100.0, 1)
+            );
+            if mean > band * 100.0 {
+                eprintln!(
+                    "calibrate: simulator drifted from the measured runtime: mean |err| \
+                     {}% exceeds --max-err {}%",
+                    f(mean, 1),
+                    f(band * 100.0, 1)
+                );
+                return 1;
+            }
         }
     }
     0
@@ -852,10 +1000,20 @@ fn cmd_fig4(args: &Args) -> i32 {
     0
 }
 
+/// `dagsgd traces` — emit the §VI layer-wise trace dataset. `--nodes N`
+/// shrinks (or grows) the measured node count: the scale-prediction
+/// workflow calibrates a 2-node dataset and predicts the larger jobs
+/// via `whatif --topology`.
 fn cmd_traces(args: &Args) -> i32 {
     let dir = PathBuf::from(args.str_or("out", "traces"));
     let iters = args.usize_or("iters", 100);
-    let paths = dataset::write_dataset(&dir, iters, args.u64_or("seed", 1)).expect("write dataset");
+    let nodes = args.usize_or("nodes", 4);
+    if nodes == 0 || nodes > 4 {
+        eprintln!("traces: --nodes must be 1..=4 (the clusters have 4 nodes)");
+        return 2;
+    }
+    let paths = dataset::write_dataset_at(&dir, iters, args.u64_or("seed", 1), nodes)
+        .expect("write dataset");
     println!("wrote {} trace files to {}", paths.len(), dir.display());
     for p in paths {
         println!("  {p}");

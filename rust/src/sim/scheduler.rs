@@ -412,13 +412,27 @@ impl SchedulerKind {
     /// Instantiate the policy for a job on `net` (the fusion policy needs
     /// the network's gradient sizes; the rest ignore it).
     pub fn build(self, net: &NetSpec) -> Box<dyn Scheduler> {
+        self.build_with_fusion_cap(net, None)
+    }
+
+    /// [`SchedulerKind::build`] with an explicit fusion bucket cap:
+    /// `Some(bytes)` gang-launches [`SchedulerKind::Fusion`]'s buckets
+    /// at that cap (calibrated replays pass the autotuned optimum of
+    /// `calib::replay::fusion_cap_for`), `None` keeps the 25 MiB
+    /// default. Non-fusion policies ignore the cap.
+    pub fn build_with_fusion_cap(
+        self,
+        net: &NetSpec,
+        cap_bytes: Option<f64>,
+    ) -> Box<dyn Scheduler> {
         match self {
             SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
             SchedulerKind::Priority => Box::new(PriorityScheduler::new()),
             SchedulerKind::CriticalPath => Box::new(CriticalPathScheduler::new()),
-            SchedulerKind::Fusion => {
-                Box::new(FusionAwareScheduler::for_net(net, DEFAULT_FUSION_CAP_BYTES))
-            }
+            SchedulerKind::Fusion => Box::new(FusionAwareScheduler::for_net(
+                net,
+                cap_bytes.unwrap_or(DEFAULT_FUSION_CAP_BYTES),
+            )),
         }
     }
 }

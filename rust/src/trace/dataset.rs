@@ -17,13 +17,20 @@ use std::path::Path;
 /// Default shape of the published dataset: Caffe-MPI traces on both
 /// clusters, full 4×4 GPU configuration, 100 iterations.
 pub fn generate_all(iters: usize, seed: u64) -> Vec<Trace> {
+    generate_all_at(iters, seed, 4)
+}
+
+/// [`generate_all`] at a different node count (`nodes`×4 GPUs) — the
+/// scale-prediction workflow measures at a small node count (e.g. 2)
+/// and lets `whatif --topology` predict the rest of the ladder.
+pub fn generate_all_at(iters: usize, seed: u64, nodes: usize) -> Vec<Trace> {
     let mut out = Vec::new();
     for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
         for net in zoo::all() {
             let job = JobSpec {
                 batch_per_gpu: net.default_batch,
                 net,
-                nodes: 4,
+                nodes,
                 gpus_per_node: 4,
                 iterations: 1,
             };
@@ -71,9 +78,19 @@ pub fn parse_file_name(stem: &str) -> Option<(String, String, usize, usize)> {
 
 /// Write the dataset to `dir`. Returns the written paths.
 pub fn write_dataset(dir: &Path, iters: usize, seed: u64) -> std::io::Result<Vec<String>> {
+    write_dataset_at(dir, iters, seed, 4)
+}
+
+/// [`write_dataset`] at a different node count (`traces --nodes`).
+pub fn write_dataset_at(
+    dir: &Path,
+    iters: usize,
+    seed: u64,
+    nodes: usize,
+) -> std::io::Result<Vec<String>> {
     fs::create_dir_all(dir)?;
     let mut paths = Vec::new();
-    for t in generate_all(iters, seed) {
+    for t in generate_all_at(iters, seed, nodes) {
         let p = dir.join(file_name(&t));
         fs::write(&p, t.to_text())?;
         paths.push(p.display().to_string());
@@ -98,6 +115,16 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 6, "file names must be unique");
+    }
+
+    /// `traces --nodes 2` emits the same dataset shape at 2×4 GPUs —
+    /// the measurement half of the scale-prediction workflow.
+    #[test]
+    fn dataset_at_two_nodes_reports_eight_gpus() {
+        let all = generate_all_at(2, 1, 2);
+        assert_eq!(all.len(), 6);
+        assert!(all.iter().all(|t| t.gpus == 8), "2 nodes x 4 GPUs");
+        assert!(all.iter().map(file_name).all(|n| n.contains("_g8_")));
     }
 
     /// The regression the batch suffix fixes: same net × cluster × GPUs

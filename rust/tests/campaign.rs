@@ -121,6 +121,7 @@ fn property_campaign_cell_matches_direct_experiment() {
             seed: 0,
             profile: None,
             fabric: None,
+            topology: None,
         };
         let cell = s.run().map_err(|e| e.to_string())?;
 

@@ -1,10 +1,14 @@
-//! Integration tests for the what-if engine — above all the ISSUE's two
-//! keystone properties:
+//! Integration tests for the what-if engine — above all the keystone
+//! properties:
 //!
 //! 1. a profile "predicted" onto its *own* measured fabric is
 //!    bit-identical to plain `calibrate --replay`;
-//! 2. the degenerate zero-α/infinite-bandwidth fabric ([`Fabric::Ideal`])
+//! 2. a topology rescale to the profile's own measured scale is
+//!    bit-identical to plain `calibrate --replay`;
+//! 3. the degenerate zero-α/infinite-bandwidth fabric ([`Fabric::Ideal`])
 //!    lower-bounds every real fabric's predicted iteration time;
+//! 4. predicted iteration time is monotone non-decreasing as the node
+//!    count grows under a fixed collective channel;
 //!
 //! plus the golden pin on the fusion autotuner: against a profile
 //! synthesized from a *known* α–β channel, the autotuned bucket size
@@ -14,7 +18,7 @@
 use dagsgd::analytic::eqs::IterInputs;
 use dagsgd::analytic::fusion;
 use dagsgd::calib::fit::{calibrate_one, NetCalibration};
-use dagsgd::calib::whatif::{self, Fabric};
+use dagsgd::calib::whatif::{self, Fabric, Topology};
 use dagsgd::calib::{replay, validate};
 use dagsgd::campaign::grid::Interconnect;
 use dagsgd::cluster::presets;
@@ -32,7 +36,8 @@ use dagsgd::trace::format::{LayerRecord, Trace};
 fn measured_fabric_matches_calibrate_replay_bit_for_bit() {
     let profile = exp::profile(10, 31);
     let rows =
-        whatif::rows(&profile, &[Fabric::Measured], &[SchedulerKind::Fifo], false, 2).unwrap();
+        whatif::rows(&profile, &[Fabric::Measured], &[None], &[SchedulerKind::Fifo], false, 2)
+            .unwrap();
     let replayed = validate::prediction_rows(&profile, SchedulerKind::Fifo).unwrap();
     assert_eq!(rows.len(), replayed.len());
     for r in &rows {
@@ -51,7 +56,76 @@ fn measured_fabric_matches_calibrate_replay_bit_for_bit() {
     }
 }
 
-/// Keystone 2: the ideal fabric lower-bounds every real fabric, for
+/// Keystone 2 (this PR's): an explicit topology rescale to the
+/// profile's own measured layout is bit-identical to plain
+/// `calibrate --replay`, across the whole 2-node profile.
+#[test]
+fn rescale_to_measured_scale_matches_replay_bit_for_bit() {
+    let profile = exp::profile_at(8, 29, exp::SCALE_PROFILE_NODES);
+    let own = Topology::new(exp::SCALE_PROFILE_NODES, 4).unwrap();
+    let rows =
+        whatif::rows(&profile, &[Fabric::Measured], &[Some(own)], &[SchedulerKind::Fifo], false, 2)
+            .unwrap();
+    let replayed = validate::prediction_rows(&profile, SchedulerKind::Fifo).unwrap();
+    assert_eq!(rows.len(), replayed.len());
+    for r in &rows {
+        let twin = replayed
+            .iter()
+            .find(|p| p.net == r.net && p.cluster == r.cluster)
+            .unwrap_or_else(|| panic!("no replay row for {} on {}", r.net, r.cluster));
+        assert_eq!(
+            r.iter_time_s.to_bits(),
+            twin.predicted_iter_s.to_bits(),
+            "{} on {}: rescale-to-measured-scale must be bit-identical to replay",
+            r.net,
+            r.cluster
+        );
+        assert_eq!(r.pred_gpus, exp::SCALE_PROFILE_NODES * 4);
+        assert_eq!(r.speedup_vs_measured.to_bits(), 1.0f64.to_bits());
+    }
+}
+
+/// Keystone 4 (this PR's): as the node count grows, the predicted
+/// iteration time is monotone non-decreasing — per-GPU compute is
+/// fixed, while the communication share (and on shared-NFS clusters the
+/// I/O contention) can only grow. Checked both under the entry's own
+/// rescaled channel and under a *fixed* explicit α–β channel, where the
+/// growth comes from contention alone.
+#[test]
+fn scale_ladder_iteration_time_is_monotone_in_node_count() {
+    let fw = strategy::caffe_mpi();
+    let profile = exp::profile_at(8, 23, exp::SCALE_PROFILE_NODES);
+    let fixed = Fabric::alpha_beta(8e-5, 2.5e9).unwrap();
+    for entry in &profile.entries {
+        for fabric in [Fabric::Measured, fixed.clone()] {
+            let mut prev = 0.0f64;
+            for nodes in [1usize, 2, 4, 8] {
+                let topo = Topology::new(nodes, 4).unwrap();
+                let p = whatif::predict_entry_at(
+                    entry,
+                    &fabric,
+                    Some(topo),
+                    SchedulerKind::Fifo,
+                    &fw,
+                    None,
+                )
+                .unwrap_or_else(|e| panic!("{} at {}: {e}", entry.key(), topo.name()));
+                assert!(
+                    p.replayed.iter_time_s >= prev - 1e-9,
+                    "{} on {}: iter time dropped {} -> {} going to {} nodes",
+                    entry.key(),
+                    fabric.name(),
+                    prev,
+                    p.replayed.iter_time_s,
+                    nodes
+                );
+                prev = p.replayed.iter_time_s;
+            }
+        }
+    }
+}
+
+/// Keystone 3: the ideal fabric lower-bounds every real fabric, for
 /// every entry, including explicit α–β channels and full cluster swaps.
 #[test]
 fn ideal_fabric_lower_bounds_every_real_fabric() {
@@ -202,20 +276,27 @@ fn autotuned_bucket_size_matches_closed_form_within_one_step() {
     assert!(auto.replayed_iter_s < auto.layerwise_iter_s);
 }
 
-/// The campaign what-if axis end to end: entries × fabrics × schedulers
-/// flow through the shared runner with distinct, cacheable, filterable
-/// keys, and cells agree with direct predictions bit-for-bit.
+/// The campaign what-if axes end to end: entries × topologies × fabrics
+/// × schedulers flow through the shared runner with distinct, cacheable,
+/// filterable keys, and cells agree with direct predictions bit-for-bit.
 #[test]
 fn whatif_campaign_cells_match_direct_predictions() {
-    use dagsgd::campaign::cache::Cache;
+    use dagsgd::campaign::cache::{self, Cache};
     use dagsgd::campaign::runner;
 
     let profile = exp::profile(6, 41);
     let fw = strategy::by_name(&profile.framework).unwrap();
     let fabrics = [Fabric::Measured, Fabric::Interconnect(Interconnect::Ib100), Fabric::Ideal];
-    whatif::validate_whatif(&profile, &fabrics).unwrap();
-    let cells = whatif::scenarios(&profile, &fabrics, &[SchedulerKind::Fifo]);
-    assert_eq!(cells.len(), profile.entries.len() * fabrics.len());
+    let topologies = [None, Some(Topology::new(8, 4).unwrap())];
+    whatif::validate_whatif(&profile, &fabrics, &topologies).unwrap();
+    let cells = whatif::scenarios(&profile, &fabrics, &topologies, &[SchedulerKind::Fifo]);
+    assert_eq!(cells.len(), profile.entries.len() * fabrics.len() * topologies.len());
+    // The satellite contract: distinct topologies are distinct cache
+    // cells — their content hashes must never collide.
+    let mut hashes: Vec<u64> = cells.iter().map(cache::cell_hash).collect();
+    hashes.sort();
+    hashes.dedup();
+    assert_eq!(hashes.len(), cells.len(), "topology axis must keep hashes distinct");
 
     let dir = std::env::temp_dir().join(format!("dagsgd-whatif-cache-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
@@ -232,7 +313,9 @@ fn whatif_campaign_cells_match_direct_predictions() {
             .find(|e| e.net == s.net && e.cluster == s.cluster)
             .unwrap();
         let fabric = Fabric::parse(s.fabric.as_deref().unwrap()).unwrap();
-        let direct = whatif::predict_entry(entry, &fabric, s.scheduler, &fw).unwrap();
+        let topo = s.topology.as_deref().map(|t| Topology::parse(t).unwrap());
+        let direct =
+            whatif::predict_entry_at(entry, &fabric, topo, s.scheduler, &fw, None).unwrap();
         assert_eq!(
             r.get("iter_time_s").unwrap().to_bits(),
             direct.replayed.iter_time_s.to_bits(),
@@ -240,7 +323,45 @@ fn whatif_campaign_cells_match_direct_predictions() {
             s.key()
         );
     }
+
+    // Injected precomputed baselines are bit-identical to per-cell
+    // recomputation (the sweep-efficiency contract of
+    // `measured_baselines` / `whatif_cell_with`).
+    let baselines = whatif::measured_baselines(&profile, &cells).unwrap();
+    assert!(!baselines.is_empty(), "hypothetical axes need baselines");
+    let injected =
+        runner::run_with(&cells, 4, None, |s| whatif::whatif_cell_with(&profile, s, &baselines));
+    for ((s, a), (_, b)) in first.cells.iter().zip(&injected.cells) {
+        assert_eq!(a, b, "{}", s.key());
+    }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The other half of the topology-axis satellite: an out-of-range
+/// topology (0 GPUs, over the rank cap) or an unrescalable entry fails
+/// `validate_whatif` with a clean message before any worker spawns.
+#[test]
+fn out_of_range_topologies_fail_validation_cleanly() {
+    assert!(Topology::new(0, 4).is_err());
+    assert!(Topology::new(2, 0).is_err());
+    assert!(Topology::parse("0x0").is_err());
+    let profile = exp::profile(4, 47);
+    // A parsed-but-hostile topology cannot exist (the constructor gates
+    // it), so the sweep-level gate is about rescalability: a profile
+    // whose entries carry no comm fit cannot scale out.
+    let mut no_fit = profile.clone();
+    for e in &mut no_fit.entries {
+        e.comm = None;
+    }
+    let err = whatif::validate_whatif(
+        &no_fit,
+        &[Fabric::Measured],
+        &[Some(Topology::new(8, 4).unwrap())],
+    )
+    .unwrap_err();
+    assert!(err.contains("no fitted comm channel"), "{err}");
+    // The same profile at its measured scale stays sweepable.
+    whatif::validate_whatif(&no_fit, &[Fabric::Measured], &[None]).unwrap();
 }
 
 /// Substituted-comm replay validates its inputs: a wrong-length vector
