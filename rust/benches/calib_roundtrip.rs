@@ -32,6 +32,17 @@ fn main() {
             .collect::<Vec<Trace>>()
     });
 
+    // Streaming ingest (the `load_dir` path): same line-level parser fed
+    // through a buffered reader. Must parse identically — and is the
+    // throughput the CI ratchet gates.
+    let streamed = bench.case("ingest_stream (MB/s)", total_mb, || {
+        texts
+            .iter()
+            .map(|t| Trace::parse_reader(t.as_bytes()).expect("dataset text parses"))
+            .collect::<Vec<Trace>>()
+    });
+    assert_eq!(parsed, streamed, "streaming parse must match in-memory parse");
+
     let fw = strategy::caffe_mpi();
     let profile = bench.case("fit (traces/s)", parsed.len() as f64, || {
         fit::calibrate(&parsed, &fw).expect("dataset calibrates")

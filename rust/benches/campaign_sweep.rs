@@ -38,6 +38,17 @@ fn main() {
         assert_eq!(ra, rb, "worker count changed results for {}", sa.key());
     }
 
+    // Batched template sweep: structure-sharing FIFO cells advance as
+    // replicas of one DAG template through single engine passes — and
+    // must not change a single bit either.
+    let batched = bench.case("sweep_batched (cells/s)", ncells, || {
+        runner::run_batched(&cells, None).expect("batched sweep")
+    });
+    for ((sa, ra), (sb, rb)) in serial.cells.iter().zip(batched.cells.iter()) {
+        assert_eq!(sa.key(), sb.key(), "batched sweep must keep cell order");
+        assert_eq!(ra, rb, "batching changed results for {}", sa.key());
+    }
+
     // Cache: populate once, then measure hit-only sweeps.
     let dir = std::env::temp_dir().join(format!("dagsgd-campaign-bench-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,9 +1,14 @@
 //! Bench: the hot paths of the L3 coordinator (the §Perf deliverable).
 //!
 //! * discrete-event engine — simulated tasks/second (target ≥ 1 M/s)
-//! * S-SGD DAG construction — DAGs/second at paper scale
+//! * S-SGD DAG construction — DAGs/second at paper scale, fresh-build
+//!   vs template re-stamp vs batched multi-replica engine passes
 //! * ring vs flat all-reduce — effective GB/s on gradient-sized buffers
 //! * WFBP bucketing — tensors/second
+//!
+//! Writes the harness timings to `BENCH_hotpath.json` at the repository
+//! root (override with `BENCH_HOTPATH_OUT`) — one of the three files the
+//! CI `bench-ratchet` job compares against the previous main run.
 //!
 //!     cargo bench --bench perf_hotpath
 
@@ -11,11 +16,13 @@ use dagsgd::bench::harness::Bench;
 use dagsgd::cluster::presets;
 use dagsgd::coordinator::allreduce::{flat_allreduce, ring_allreduce, DEFAULT_CHUNK};
 use dagsgd::coordinator::bucket::make_buckets;
-use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+use dagsgd::dag::builder::{self, build_ssgd_dag, JobSpec};
 use dagsgd::frameworks::strategy;
 use dagsgd::models::zoo;
-use dagsgd::sim::executor::simulate;
+use dagsgd::sim::executor::{simulate, simulate_replicas};
+use dagsgd::util::json::Json;
 use dagsgd::util::rng::Rng;
+use std::path::PathBuf;
 
 fn main() {
     let mut bench = Bench::new("perf_hotpath").with_iters(2, 7);
@@ -37,9 +44,27 @@ fn main() {
         simulate(&dag, &res.pool).makespan
     });
 
-    // --- DAG construction ---
+    // --- DAG construction: fresh build vs template re-stamp ---
     bench.case("build_ssgd_dag (tasks/s)", ntasks, || {
         build_ssgd_dag(&cluster, &job, &fw).0.len()
+    });
+    let dur = builder::durations(&cluster, &job, &fw);
+    builder::cached_template(&res, &job, &fw, &dur); // warm the cache
+    bench.case("stamp_template (tasks/s)", ntasks, || {
+        builder::build_with_cached(&res, &job, &fw, &dur).len()
+    });
+
+    // --- batched replicas: 8 duration variants through one engine pass ---
+    let tpl = builder::cached_template(&res, &job, &fw, &dur);
+    let variants: Vec<Vec<f64>> = (0..8)
+        .map(|k| {
+            let mut j = job.clone();
+            j.batch_per_gpu = job.batch_per_gpu << (k % 4);
+            tpl.durations_vec(&builder::durations(&cluster, &j, &fw))
+        })
+        .collect();
+    bench.case("simulate_replicas_x8 (tasks/s)", ntasks * 8.0, || {
+        simulate_replicas(tpl.dag(), &res.pool, &variants).len()
     });
 
     // --- ring all-reduce bandwidth: transformer-sized gradients ---
@@ -99,4 +124,22 @@ fn main() {
         (2.0 * 3.0 / 4.0 * (grad_len * 4) as f64 * 4.0) / ring4 / 1e9,
         (grad_len * 4) as f64 / memcpy / 1e9
     );
+    let fresh = bench.mean_of("build_ssgd_dag (tasks/s)").unwrap();
+    let stamp = bench.mean_of("stamp_template (tasks/s)").unwrap();
+    println!("template re-stamp vs fresh build: {:.1}x", fresh / stamp);
+
+    // Persist the trajectory for the CI bench-ratchet gate.
+    let top = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath")),
+        ("generated", Json::num(1.0)),
+        ("bench_cases", bench.rows_json()),
+    ]);
+    let out = std::env::var("BENCH_HOTPATH_OUT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("manifest dir has a parent")
+            .join("BENCH_hotpath.json")
+    });
+    std::fs::write(&out, top.to_string()).expect("write BENCH_hotpath.json");
+    println!("wrote {}", out.display());
 }

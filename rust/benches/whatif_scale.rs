@@ -5,6 +5,12 @@
 //! sweep (`experiments::whatif::run_scale`, the CI scale-prediction
 //! smoke's engine).
 //!
+//! Writes the harness timings to `BENCH_whatif_scale_perf.json` at the
+//! repository root (override with `BENCH_WHATIF_SCALE_OUT`; the name
+//! avoids the what-if smoke's `BENCH_whatif_scale.json` report) — one of
+//! the three files the CI `bench-ratchet` job compares against the
+//! previous main run.
+//!
 //!     cargo bench --bench whatif_scale
 
 use dagsgd::bench::harness::Bench;
@@ -12,6 +18,8 @@ use dagsgd::calib::whatif::{self, Fabric, Topology};
 use dagsgd::experiments::whatif as exp;
 use dagsgd::frameworks::strategy;
 use dagsgd::sim::scheduler::SchedulerKind;
+use dagsgd::util::json::Json;
+use std::path::PathBuf;
 
 fn main() {
     let mut bench = Bench::new("whatif_scale").with_iters(1, 5);
@@ -70,4 +78,19 @@ fn main() {
     });
 
     bench.report();
+
+    // Persist the trajectory for the CI bench-ratchet gate.
+    let top = Json::obj(vec![
+        ("bench", Json::str("whatif_scale")),
+        ("generated", Json::num(1.0)),
+        ("bench_cases", bench.rows_json()),
+    ]);
+    let out = std::env::var("BENCH_WHATIF_SCALE_OUT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("manifest dir has a parent")
+            .join("BENCH_whatif_scale_perf.json")
+    });
+    std::fs::write(&out, top.to_string()).expect("write BENCH_whatif_scale_perf.json");
+    println!("wrote {}", out.display());
 }

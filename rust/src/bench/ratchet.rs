@@ -1,0 +1,242 @@
+//! Bench-ratchet comparison: gate CI on throughput regressions.
+//!
+//! Every bench binary persists a `BENCH_*.json` with a `bench_cases`
+//! array of `{case, mean_s, p50_s, p95_s, rate_per_s}` rows
+//! ([`super::harness::Bench::rows_json`]). The CI `bench-ratchet` job
+//! downloads the previous main run's artifacts and compares them against
+//! the current run's with [`compare`]: a case whose `rate_per_s` falls
+//! below `min_ratio` × baseline (default 0.85, i.e. a >15% throughput
+//! regression) fails the gate. Cases present on only one side are
+//! reported but never fail — renames and new benches must not wedge the
+//! ratchet — and rate-less cases (`rate_per_s == 0`) are skipped.
+//!
+//! Pure JSON-in/verdict-out so it is unit-testable without touching the
+//! filesystem; the `dagsgd ratchet` subcommand owns the I/O.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Default floor for `current / baseline` throughput: 0.85 fails
+/// anything more than 15% slower than the previous run.
+pub const DEFAULT_MIN_RATIO: f64 = 0.85;
+
+/// One case's baseline-vs-current throughput comparison.
+#[derive(Clone, Debug)]
+pub struct CaseDelta {
+    pub case: String,
+    /// Baseline throughput, items/second.
+    pub baseline: f64,
+    /// Current throughput, items/second.
+    pub current: f64,
+    /// `current / baseline` (> 1 means faster than the baseline).
+    pub ratio: f64,
+    /// Whether this case clears the ratchet floor.
+    pub ok: bool,
+}
+
+/// The full gate verdict for one `BENCH_*.json` pair.
+#[derive(Clone, Debug)]
+pub struct Ratchet {
+    /// Cases present (with a rate) on both sides, in name order.
+    pub rows: Vec<CaseDelta>,
+    /// Cases only in the current run (new benches) — informational.
+    pub added: Vec<String>,
+    /// Cases only in the baseline (removed/renamed) — informational.
+    pub removed: Vec<String>,
+    /// The floor the rows were judged against.
+    pub min_ratio: f64,
+}
+
+impl Ratchet {
+    pub fn passed(&self) -> bool {
+        self.rows.iter().all(|r| r.ok)
+    }
+
+    pub fn regressions(&self) -> Vec<&CaseDelta> {
+        self.rows.iter().filter(|r| !r.ok).collect()
+    }
+
+    /// Human-readable table (the `dagsgd ratchet` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let lw = self.rows.iter().map(|r| r.case.len()).max().unwrap_or(8).max(8);
+        let _ = writeln!(
+            out,
+            "{:lw$}  {:>12}  {:>12}  {:>7}  {}",
+            "case", "baseline/s", "current/s", "ratio", "status"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:lw$}  {:>12.3e}  {:>12.3e}  {:>6.2}x  {}",
+                r.case,
+                r.baseline,
+                r.current,
+                r.ratio,
+                if r.ok { "ok" } else { "REGRESSED" }
+            );
+        }
+        for c in &self.added {
+            let _ = writeln!(out, "{c:lw$}  (new case: no baseline, seeded this run)");
+        }
+        for c in &self.removed {
+            let _ = writeln!(out, "{c:lw$}  (case absent from current run)");
+        }
+        let _ = writeln!(
+            out,
+            "ratchet floor: {:.0}% of baseline — {}",
+            self.min_ratio * 100.0,
+            if self.passed() { "PASS" } else { "FAIL" }
+        );
+        out
+    }
+}
+
+/// Extract `case -> rate_per_s` from a persisted bench report, skipping
+/// rate-less rows (cases benched without a work figure).
+fn rates(doc: &Json) -> Result<BTreeMap<String, f64>, String> {
+    let cases = doc
+        .get("bench_cases")
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| "no bench_cases array (not a bench report?)".to_string())?;
+    let mut out = BTreeMap::new();
+    for (i, row) in cases.iter().enumerate() {
+        let name = row
+            .get("case")
+            .and_then(|c| c.as_str())
+            .ok_or_else(|| format!("bench_cases[{i}]: missing case name"))?;
+        let rate = row
+            .get("rate_per_s")
+            .and_then(|r| r.as_f64())
+            .ok_or_else(|| format!("bench_cases[{i}] ({name}): missing rate_per_s"))?;
+        if rate > 0.0 {
+            out.insert(name.to_string(), rate);
+        }
+    }
+    Ok(out)
+}
+
+/// Compare two persisted bench reports. Errors only on malformed input;
+/// a throughput regression is a *failing* [`Ratchet`], not an `Err`.
+pub fn compare(baseline: &Json, current: &Json, min_ratio: f64) -> Result<Ratchet, String> {
+    let base = rates(baseline)?;
+    let cur = rates(current)?;
+    let mut rows = Vec::new();
+    let mut removed = Vec::new();
+    for (name, &b) in &base {
+        match cur.get(name) {
+            Some(&c) => {
+                let ratio = c / b;
+                rows.push(CaseDelta {
+                    case: name.clone(),
+                    baseline: b,
+                    current: c,
+                    ratio,
+                    ok: ratio >= min_ratio,
+                });
+            }
+            None => removed.push(name.clone()),
+        }
+    }
+    let added = cur.keys().filter(|n| !base.contains_key(*n)).cloned().collect();
+    Ok(Ratchet {
+        rows,
+        added,
+        removed,
+        min_ratio,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cases: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("test")),
+            (
+                "bench_cases",
+                Json::Arr(
+                    cases
+                        .iter()
+                        .map(|(name, rate)| {
+                            Json::obj(vec![
+                                ("case", Json::str((*name).to_string())),
+                                ("mean_s", Json::num(1.0)),
+                                ("p50_s", Json::num(1.0)),
+                                ("p95_s", Json::num(1.0)),
+                                ("rate_per_s", Json::num(*rate)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn equal_runs_pass() {
+        let a = report(&[("sim (tasks/s)", 1e6), ("build (tasks/s)", 2e5)]);
+        let r = compare(&a, &a, DEFAULT_MIN_RATIO).unwrap();
+        assert!(r.passed());
+        assert_eq!(r.rows.len(), 2);
+        assert!(r.rows.iter().all(|d| (d.ratio - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn small_wobble_passes_big_regression_fails() {
+        let base = report(&[("sim (tasks/s)", 1e6)]);
+        let wobble = report(&[("sim (tasks/s)", 0.9e6)]);
+        assert!(compare(&base, &wobble, DEFAULT_MIN_RATIO).unwrap().passed());
+        let slow = report(&[("sim (tasks/s)", 0.8e6)]);
+        let r = compare(&base, &slow, DEFAULT_MIN_RATIO).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.regressions().len(), 1);
+        assert!(r.render().contains("REGRESSED"), "{}", r.render());
+        assert!(r.render().contains("FAIL"), "{}", r.render());
+    }
+
+    #[test]
+    fn speedups_always_pass() {
+        let base = report(&[("sim (tasks/s)", 1e6)]);
+        let fast = report(&[("sim (tasks/s)", 3e6)]);
+        let r = compare(&base, &fast, DEFAULT_MIN_RATIO).unwrap();
+        assert!(r.passed());
+        assert!(r.rows[0].ratio > 2.9);
+    }
+
+    #[test]
+    fn added_and_removed_cases_never_fail() {
+        let base = report(&[("old (x/s)", 1e3), ("kept (x/s)", 1e3)]);
+        let cur = report(&[("kept (x/s)", 1e3), ("new (x/s)", 5.0)]);
+        let r = compare(&base, &cur, DEFAULT_MIN_RATIO).unwrap();
+        assert!(r.passed());
+        assert_eq!(r.added, vec!["new (x/s)".to_string()]);
+        assert_eq!(r.removed, vec!["old (x/s)".to_string()]);
+        assert!(r.render().contains("new case"), "{}", r.render());
+    }
+
+    #[test]
+    fn rate_less_cases_are_skipped() {
+        let base = report(&[("timed only", 0.0), ("real (x/s)", 10.0)]);
+        let r = compare(&base, &base, DEFAULT_MIN_RATIO).unwrap();
+        assert_eq!(r.rows.len(), 1, "rate-less case must not be compared");
+    }
+
+    #[test]
+    fn malformed_reports_error() {
+        let bad = Json::obj(vec![("bench", Json::str("x"))]);
+        let good = report(&[("a (x/s)", 1.0)]);
+        assert!(compare(&bad, &good, DEFAULT_MIN_RATIO).is_err());
+        assert!(compare(&good, &bad, DEFAULT_MIN_RATIO).is_err());
+    }
+
+    #[test]
+    fn custom_floor_is_honoured() {
+        let base = report(&[("sim (tasks/s)", 1e6)]);
+        let slow = report(&[("sim (tasks/s)", 0.5e6)]);
+        assert!(compare(&base, &slow, 0.4).unwrap().passed());
+        assert!(!compare(&base, &slow, 0.6).unwrap().passed());
+    }
+}

@@ -87,7 +87,17 @@ fn meta_complete(trace: &Trace) -> Result<(), String> {
 
 /// Parse one trace file (text + its path for metadata recovery).
 pub fn parse_trace_file(path: &Path, text: &str) -> Result<Trace, String> {
-    let mut trace = Trace::parse(text)?;
+    finish_trace(Trace::parse(text)?, path)
+}
+
+/// Streaming twin of [`parse_trace_file`]: parse straight off a buffered
+/// reader (one reused line buffer, no whole-file `String`), then apply
+/// the same file-name metadata recovery and completeness checks.
+pub fn parse_trace_reader<R: std::io::BufRead>(path: &Path, reader: R) -> Result<Trace, String> {
+    finish_trace(Trace::parse_reader(reader)?, path)
+}
+
+fn finish_trace(mut trace: Trace, path: &Path) -> Result<Trace, String> {
     if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
         apply_file_name_meta(&mut trace, stem);
     }
@@ -110,14 +120,17 @@ pub fn load_dir(dir: &Path) -> Result<TraceSet, String> {
     let mut set = TraceSet::default();
     for path in paths {
         let shown = path.display().to_string();
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
+        // Stream each file through a buffered reader: directories of
+        // 100-iteration traces ingest without ever holding a whole file
+        // in memory (the PR 4 `read_to_string` note, closed).
+        let file = match std::fs::File::open(&path) {
+            Ok(f) => f,
             Err(e) => {
                 set.skipped.push((shown, format!("unreadable: {e}")));
                 continue;
             }
         };
-        match parse_trace_file(&path, &text) {
+        match parse_trace_reader(&path, std::io::BufReader::new(file)) {
             Ok(trace) => set.traces.push(LoadedTrace { path: shown, trace }),
             Err(why) => set.skipped.push((shown, why)),
         }

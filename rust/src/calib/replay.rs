@@ -223,7 +223,10 @@ pub fn replay_entry_with_comm_capped(
         }
     }
     let res = cluster.build_resources(job.nodes, job.gpus_per_node);
-    let dag = builder::build_with(&res, &job, fw, &dur);
+    // Template-cached build: repeated replays of the same entry (what-if
+    // sweeps, cap scans) re-stamp durations onto a cached CSR skeleton
+    // instead of re-running the builder.
+    let dag = builder::build_with_cached(&res, &job, fw, &dur);
     let mut sched = kind.build_with_fusion_cap(&job.net, fusion_cap);
     let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
     let iter = executor::steady_state_from(&sim, &dag, job.iterations, 2);

@@ -8,9 +8,10 @@
 //! fitted framework overhead, substitute a **hypothetical** collective
 //! channel (a cluster preset, a named inter-node fabric, an explicit
 //! α–β pair, or the degenerate ideal channel), rebuild the S-SGD DAG via
-//! `builder::build_with` and simulate it under any scheduler — the α–β
-//! comm analysis shared with arXiv:1711.05979 applied forward instead of
-//! backward.
+//! `builder::build_with_cached` (every cell of a fabric sweep re-stamps
+//! the same cached [`crate::dag::builder::DagTemplate`] — only durations
+//! change) and simulate it under any scheduler — the α–β comm analysis
+//! shared with arXiv:1711.05979 applied forward instead of backward.
 //!
 //! Contracts the tests pin:
 //!

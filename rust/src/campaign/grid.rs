@@ -223,6 +223,19 @@ pub fn measure_cell(
 ) -> CellResult {
     let mut sched = kind.build(&job.net);
     let iter = builder::iteration_time_with(cluster, job, fw, sched.as_mut());
+    cell_from_iter(cluster, job, fw, iter)
+}
+
+/// Assemble the standard cell metrics from an already-simulated
+/// steady-state iteration time. Split out of [`measure_cell`] so the
+/// batched runner ([`super::runner::run_batched`]), which obtains `iter`
+/// from a multi-replica engine pass, produces byte-identical metric maps.
+pub(crate) fn cell_from_iter(
+    cluster: &ClusterSpec,
+    job: &JobSpec,
+    fw: &Strategy,
+    iter: f64,
+) -> CellResult {
     let samples_per_s = (job.ranks() * job.batch_per_gpu) as f64 / iter;
 
     let inputs = speedup::iter_inputs(cluster, job, fw);

@@ -11,7 +11,13 @@
 //! same canonical bytes.
 
 use super::cache::Cache;
-use super::grid::{CellResult, Scenario};
+use super::grid::{self, CellResult, Scenario};
+use crate::cluster::topology::ClusterSpec;
+use crate::dag::builder::{self, JobSpec};
+use crate::frameworks::strategy::Strategy;
+use crate::sim::executor;
+use crate::sim::scheduler::SchedulerKind;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
@@ -53,6 +59,133 @@ pub fn run(scenarios: &[Scenario], jobs: usize, cache: Option<&Cache>) -> Result
     Ok(run_with(scenarios, jobs, cache, |s| {
         s.run().expect("scenario validated before sweep")
     }))
+}
+
+/// A cache-miss cell awaiting simulation in [`run_batched`], with its
+/// scenario index and resolved specs. `job` keeps the scenario's own
+/// iteration count; the simulation clamp (≥ 6, matching
+/// [`builder::iteration_time_with`]) is applied where the DAG is built.
+struct PendingCell {
+    idx: usize,
+    cluster: ClusterSpec,
+    job: JobSpec,
+    fw: Strategy,
+}
+
+/// Sweep `scenarios` with the standard cell measurement, batch-advancing
+/// structure-sharing FIFO cells through single multi-replica engine
+/// passes. Cells that differ only in durations (same cluster preset and
+/// [`builder::template_signature`] — e.g. a `batch_per_gpu` axis) are
+/// grouped, their shared [`builder::DagTemplate`] is stamped once per
+/// variant, and [`executor::simulate_replicas`] drives every variant in
+/// one pass. Non-FIFO or bespoke cells (profile / fabric / topology
+/// overrides) fall back to [`Scenario::run`] per cell.
+///
+/// Results are **bit-identical** to [`run`] (golden-tested): the fast
+/// multi-replica executor reproduces the reference timeline exactly, and
+/// the metric map is assembled by the same [`grid::cell_from_iter`].
+pub fn run_batched(scenarios: &[Scenario], cache: Option<&Cache>) -> Result<Outcome, String> {
+    let t0 = Instant::now();
+    for s in scenarios {
+        s.resolve().map_err(|e| format!("{}: {e}", s.key()))?;
+    }
+
+    let mut slots: Vec<Option<CellResult>> = vec![None; scenarios.len()];
+    let mut simulated = 0usize;
+    let mut groups: BTreeMap<String, Vec<PendingCell>> = BTreeMap::new();
+    let mut fallback: Vec<usize> = Vec::new();
+
+    for (i, s) in scenarios.iter().enumerate() {
+        if let Some(hit) = cache.and_then(|c| c.get(s)) {
+            slots[i] = Some(hit);
+            continue;
+        }
+        let batchable = s.scheduler == SchedulerKind::Fifo
+            && s.profile.is_none()
+            && s.fabric.is_none()
+            && s.topology.is_none();
+        if !batchable {
+            fallback.push(i);
+            continue;
+        }
+        let (cluster, job, fw) = s.resolve().expect("validated above");
+        let mut sim_job = job.clone();
+        if sim_job.iterations < 6 {
+            sim_job.iterations = 6;
+        }
+        let res = cluster.build_resources(sim_job.nodes, sim_job.gpus_per_node);
+        let dur = builder::durations(&cluster, &sim_job, &fw);
+        // The signature hashes structure, not pool capacities — prefix
+        // the cluster preset name so replicas in one engine pass always
+        // share one resource pool.
+        let sig = format!(
+            "{}|{}",
+            s.cluster,
+            builder::template_signature(&res, &sim_job, &fw, &dur)
+        );
+        groups.entry(sig).or_default().push(PendingCell {
+            idx: i,
+            cluster,
+            job,
+            fw,
+        });
+    }
+
+    for i in fallback {
+        let s = &scenarios[i];
+        let fresh = s.run().expect("validated above");
+        simulated += 1;
+        if let Some(c) = cache {
+            let _ = c.put(s, &fresh);
+        }
+        slots[i] = Some(fresh);
+    }
+
+    for cells in groups.values() {
+        let lead = &cells[0];
+        let mut sim_job = lead.job.clone();
+        if sim_job.iterations < 6 {
+            sim_job.iterations = 6;
+        }
+        let res = lead.cluster.build_resources(sim_job.nodes, sim_job.gpus_per_node);
+        let dur0 = builder::durations(&lead.cluster, &sim_job, &lead.fw);
+        let tpl = builder::cached_template(&res, &sim_job, &lead.fw, &dur0);
+        let durs: Vec<Vec<f64>> = cells
+            .iter()
+            .map(|p| {
+                let mut j = p.job.clone();
+                if j.iterations < 6 {
+                    j.iterations = 6;
+                }
+                tpl.durations_vec(&builder::durations(&p.cluster, &j, &p.fw))
+            })
+            .collect();
+        let sims = executor::simulate_replicas(tpl.dag(), &res.pool, &durs);
+        for (p, sim) in cells.iter().zip(&sims) {
+            let iters = p.job.iterations.max(6);
+            let iter = executor::steady_state_from(sim, tpl.dag(), iters, 2);
+            let fresh = grid::cell_from_iter(&p.cluster, &p.job, &p.fw, iter);
+            simulated += 1;
+            if let Some(c) = cache {
+                let _ = c.put(&scenarios[p.idx], &fresh);
+            }
+            slots[p.idx] = Some(fresh);
+        }
+    }
+
+    let mut out: Vec<(Scenario, CellResult)> = Vec::with_capacity(scenarios.len());
+    for (s, slot) in scenarios.iter().zip(slots.into_iter()) {
+        out.push((s.clone(), slot.expect("every cell filed")));
+    }
+    Ok(Outcome {
+        stats: RunStats {
+            simulated,
+            cached: out.len() - simulated,
+            jobs: 1,
+            wall_s: t0.elapsed().as_secs_f64(),
+        },
+        cells: out,
+    })
 }
 
 /// Sweep `scenarios` through an arbitrary cell function on `jobs`

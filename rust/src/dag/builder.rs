@@ -16,6 +16,8 @@ use crate::frameworks::strategy::Strategy;
 use crate::models::layer::{LayerKind, NetSpec};
 use crate::models::perf::PerfModel;
 use crate::util::units::us;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 /// One training job.
 #[derive(Clone, Debug)]
@@ -154,7 +156,259 @@ pub fn build_with(
     strategy: &Strategy,
     dur: &Durations,
 ) -> Dag {
+    build_impl(res, job, strategy, dur, true).0
+}
+
+/// Where a task's duration comes from, recorded per task during
+/// construction so a [`DagTemplate`] can re-stamp a structurally
+/// identical DAG with new durations instead of rebuilding it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DurKey {
+    Io,
+    Decode,
+    H2d,
+    Fwd(usize),
+    Bwd(usize),
+    Comm(usize),
+    /// Fused per-rank update: `dur.update`.
+    Update,
+    /// Layer-wise update sized by the layer's parameter share:
+    /// `dur.update * frac`. The fraction is structural (it depends only
+    /// on the net's parameter counts), so storing it reproduces the fresh
+    /// build's arithmetic bit-for-bit.
+    UpdateFrac(f64),
+}
+
+impl DurKey {
+    fn value(self, dur: &Durations) -> f64 {
+        match self {
+            DurKey::Io => dur.io,
+            DurKey::Decode => dur.decode,
+            DurKey::H2d => dur.h2d,
+            DurKey::Fwd(l) => dur.fwd[l],
+            DurKey::Bwd(l) => dur.bwd[l],
+            DurKey::Comm(l) => dur.comm[l],
+            DurKey::Update => dur.update,
+            DurKey::UpdateFrac(frac) => dur.update * frac,
+        }
+    }
+}
+
+/// A reusable DAG structure: the task/edge skeleton of one
+/// `(resources, net, strategy, iterations, duration-shape)` combination,
+/// plus the per-task [`DurKey`] map. Campaign and what-if cells that
+/// differ only in durations [`DagTemplate::stamp`] a clone (an O(tasks)
+/// copy sharing the CSR structure arrays) instead of re-running
+/// [`build_with`] — the builder's `format!` task names and edge wiring
+/// are the dominant cost of a cell, not the simulation itself.
+///
+/// Templates are built *nameless* (`Task::name` left empty): nothing on
+/// the measurement path reads names, and skipping ~`tasks` string
+/// formats is most of the win. Paths that render timelines or DOT keep
+/// using [`build_ssgd_dag`], which builds named DAGs directly.
+#[derive(Clone, Debug)]
+pub struct DagTemplate {
+    dag: Dag,
+    keys: Vec<DurKey>,
+    /// `dur.decode > 0.0` at build time: decode tasks exist iff true.
+    has_decode: bool,
+    /// `dur.comm[l] > 0.0` per layer at build time: aggregation tasks and
+    /// their wiring exist only where true.
+    comm_mask: Vec<bool>,
+}
+
+impl DagTemplate {
+    /// Build the template for this combination. `dur` supplies the
+    /// duration *shape* (which entries are zero); its values also
+    /// pre-stamp the template, so stamping with the same `dur` is a
+    /// no-op.
+    pub fn build(
+        res: &ClusterResources,
+        job: &JobSpec,
+        strategy: &Strategy,
+        dur: &Durations,
+    ) -> DagTemplate {
+        let (dag, keys) = build_impl(res, job, strategy, dur, false);
+        debug_assert_eq!(dag.len(), keys.len());
+        DagTemplate {
+            dag,
+            keys,
+            has_decode: dur.decode > 0.0,
+            comm_mask: dur.comm.iter().map(|&c| c > 0.0).collect(),
+        }
+    }
+
+    /// Would a fresh build with `dur` produce this template's structure?
+    /// (The DAG shape depends on which durations are zero: decode tasks
+    /// are skipped at `decode == 0`, aggregation tasks at `comm[l] <= 0`.)
+    pub fn matches(&self, dur: &Durations) -> bool {
+        (dur.decode > 0.0) == self.has_decode
+            && dur.comm.len() == self.comm_mask.len()
+            && dur
+                .comm
+                .iter()
+                .zip(&self.comm_mask)
+                .all(|(&c, &m)| (c > 0.0) == m)
+    }
+
+    /// The template's structure (durations are whatever it was last
+    /// built from — use [`DagTemplate::stamp`] for a simulation-ready
+    /// DAG).
+    pub fn dag(&self) -> &Dag {
+        &self.dag
+    }
+
+    pub fn len(&self) -> usize {
+        self.dag.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dag.is_empty()
+    }
+
+    /// The per-task duration vector a fresh build with `dur` would carry
+    /// (for batched replica simulation over the shared structure).
+    pub fn durations_vec(&self, dur: &Durations) -> Vec<f64> {
+        debug_assert!(self.matches(dur), "durations change the DAG shape");
+        self.keys.iter().map(|k| k.value(dur)).collect()
+    }
+
+    /// Clone the structure and overwrite every task duration from `dur`.
+    /// Bit-identical to `build_with(res, job, strategy, dur)` modulo task
+    /// names (golden-pinned in tests/golden_scheduler.rs).
+    pub fn stamp(&self, dur: &Durations) -> Dag {
+        debug_assert!(self.matches(dur), "durations change the DAG shape");
+        let mut dag = self.dag.clone();
+        for (task, key) in dag.tasks.iter_mut().zip(&self.keys) {
+            task.duration = key.value(dur);
+        }
+        dag
+    }
+}
+
+/// FNV-1a over raw bytes (signature hashing; no std hasher guarantees
+/// stability across releases, and the signature may get persisted later).
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Cache key for a template: everything that shapes the structure —
+/// resource-id layout, net architecture (layer kinds + parameter counts,
+/// which fix `gpu_layers`, learnable indices and update fractions),
+/// strategy wiring flags, iteration count, and the zero-pattern of the
+/// shape-changing durations. Values of nonzero durations are *not* part
+/// of the key: those are what stamping overwrites.
+pub fn template_signature(
+    res: &ClusterResources,
+    job: &JobSpec,
+    strategy: &Strategy,
+    dur: &Durations,
+) -> String {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for ids in [&res.disk, &res.cpu, &res.h2d, &res.gpu] {
+        for &id in ids.iter() {
+            fnv1a(&mut h, &(id as u64).to_le_bytes());
+        }
+        fnv1a(&mut h, b"|");
+    }
+    fnv1a(&mut h, &(res.collective as u64).to_le_bytes());
+    for l in &job.net.layers {
+        fnv1a(&mut h, &[l.kind as u8]);
+        fnv1a(&mut h, &l.params.to_le_bytes());
+    }
+    let mut mask = String::with_capacity(dur.comm.len());
+    for &c in &dur.comm {
+        mask.push(if c > 0.0 { '1' } else { '0' });
+    }
+    format!(
+        "{h:016x}|{}x{}|i{}|w{}f{}s{}l{}|d{}|{mask}",
+        res.nodes,
+        res.gpus_per_node,
+        job.iterations,
+        strategy.wfbp as u8,
+        strategy.prefetch_io as u8,
+        strategy.prestage_h2d as u8,
+        strategy.layerwise_update as u8,
+        (dur.decode > 0.0) as u8
+    )
+}
+
+/// Process-wide template cache. Keyed by [`template_signature`]; shared
+/// across the campaign worker threads (a `thread_local` would be rebuilt
+/// by every short-lived scoped worker). Bounded: a full cache is simply
+/// cleared — templates are cheap to rebuild relative to the sweeps that
+/// reuse them, and the working set of a sweep is a handful of entries.
+fn template_cache() -> &'static Mutex<HashMap<String, Arc<DagTemplate>>> {
+    static CACHE: OnceLock<Mutex<HashMap<String, Arc<DagTemplate>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+const TEMPLATE_CACHE_CAP: usize = 32;
+
+fn lock_cache() -> MutexGuard<'static, HashMap<String, Arc<DagTemplate>>> {
+    // A panicking test thread must not poison every later caller; the
+    // cache holds only immutable Arcs, so the data is always consistent.
+    template_cache().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Fetch (or build and cache) the template for this combination.
+pub fn cached_template(
+    res: &ClusterResources,
+    job: &JobSpec,
+    strategy: &Strategy,
+    dur: &Durations,
+) -> Arc<DagTemplate> {
+    let sig = template_signature(res, job, strategy, dur);
+    if let Some(t) = lock_cache().get(&sig) {
+        if t.matches(dur) {
+            return Arc::clone(t);
+        }
+    }
+    let t = Arc::new(DagTemplate::build(res, job, strategy, dur));
+    let mut cache = lock_cache();
+    if cache.len() >= TEMPLATE_CACHE_CAP {
+        cache.clear();
+    }
+    cache.insert(sig, Arc::clone(&t));
+    t
+}
+
+/// [`build_with`], served from the template cache: same simulation
+/// semantics (timelines are bit-identical), empty task names. The hot
+/// path for campaign sweeps and calibrated replay, where thousands of
+/// cells share a handful of structures.
+pub fn build_with_cached(
+    res: &ClusterResources,
+    job: &JobSpec,
+    strategy: &Strategy,
+    dur: &Durations,
+) -> Dag {
+    cached_template(res, job, strategy, dur).stamp(dur)
+}
+
+/// The construction loop. `names` controls whether tasks get their
+/// human-readable names (timeline/DOT paths) or empty ones (template/
+/// measurement paths — `String::new()` does not allocate). Returns the
+/// DAG and the per-task duration provenance for template stamping.
+fn build_impl(
+    res: &ClusterResources,
+    job: &JobSpec,
+    strategy: &Strategy,
+    dur: &Durations,
+    names: bool,
+) -> (Dag, Vec<DurKey>) {
     let mut dag = Dag::new();
+    let mut keys: Vec<DurKey> = Vec::new();
+    // Task names are pure presentation; skip the `format!` churn when
+    // building templates/measurement DAGs.
+    macro_rules! name {
+        ($($fmt:tt)*) => {
+            if names { format!($($fmt)*) } else { String::new() }
+        };
+    }
     let ranks = res.ranks();
     let layers = gpu_layers(&job.net);
     let learnable = job.net.learnable_indices();
@@ -185,8 +439,9 @@ pub fn build_with(
             let node = res.node_of(r);
 
             // --- input pipeline ---
+            keys.push(DurKey::Io);
             let io = dag.add(Task {
-                name: format!("io.i{it}.g{r}"),
+                name: name!("io.i{it}.g{r}"),
                 phase: Phase::Io,
                 resource: res.disk[node],
                 duration: dur.io,
@@ -209,8 +464,9 @@ pub fn build_with(
             prev_io[r] = Some(io);
 
             let staged = if dur.decode > 0.0 {
+                keys.push(DurKey::Decode);
                 let dec = dag.add(Task {
-                    name: format!("dec.i{it}.g{r}"),
+                    name: name!("dec.i{it}.g{r}"),
                     phase: Phase::Io,
                     resource: res.cpu[node],
                     duration: dur.decode,
@@ -224,8 +480,9 @@ pub fn build_with(
                 io
             };
 
+            keys.push(DurKey::H2d);
             let h2d = dag.add(Task {
-                name: format!("h2d.i{it}.g{r}"),
+                name: name!("h2d.i{it}.g{r}"),
                 phase: Phase::H2d,
                 resource: res.h2d[node],
                 duration: dur.h2d,
@@ -246,8 +503,9 @@ pub fn build_with(
             let mut prev: TaskId = h2d;
             let mut first_fwd = true;
             for &l in &layers {
+                keys.push(DurKey::Fwd(l));
                 let f = dag.add(Task {
-                    name: format!("fwd.{}.i{it}.g{r}", job.net.layers[l].name),
+                    name: name!("fwd.{}.i{it}.g{r}", job.net.layers[l].name),
                     phase: Phase::Forward,
                     resource: res.gpu[r],
                     duration: dur.fwd[l],
@@ -277,8 +535,9 @@ pub fn build_with(
 
             // --- backward (reverse layer order) ---
             for &l in layers.iter().rev() {
+                keys.push(DurKey::Bwd(l));
                 let b = dag.add(Task {
-                    name: format!("bwd.{}.i{it}.g{r}", job.net.layers[l].name),
+                    name: name!("bwd.{}.i{it}.g{r}", job.net.layers[l].name),
                     phase: Phase::Backward,
                     resource: res.gpu[r],
                     duration: dur.bwd[l],
@@ -306,8 +565,9 @@ pub fn build_with(
                 if dur.comm[l] <= 0.0 {
                     continue;
                 }
+                keys.push(DurKey::Comm(l));
                 let a = dag.add(Task {
-                    name: format!("agg.{}.i{it}", job.net.layers[l].name),
+                    name: name!("agg.{}.i{it}", job.net.layers[l].name),
                     phase: Phase::Aggregate,
                     resource: res.collective,
                     duration: dur.comm[l],
@@ -340,8 +600,9 @@ pub fn build_with(
                 let mut ups: Vec<(Option<usize>, TaskId)> = Vec::new();
                 for &l in &learnable {
                     let frac = job.net.layers[l].params as f64 / total_params;
+                    keys.push(DurKey::UpdateFrac(frac));
                     let u = dag.add(Task {
-                        name: format!("upd.{}.i{it}.g{r}", job.net.layers[l].name),
+                        name: name!("upd.{}.i{it}.g{r}", job.net.layers[l].name),
                         phase: Phase::Update,
                         resource: res.gpu[r],
                         duration: dur.update * frac,
@@ -364,8 +625,9 @@ pub fn build_with(
         } else {
             // One fused update per rank, gated on every aggregate.
             for r in 0..ranks {
+                keys.push(DurKey::Update);
                 let u = dag.add(Task {
-                    name: format!("upd.i{it}.g{r}"),
+                    name: name!("upd.i{it}.g{r}"),
                     phase: Phase::Update,
                     resource: res.gpu[r],
                     duration: dur.update,
@@ -382,7 +644,7 @@ pub fn build_with(
             }
         }
     }
-    dag
+    (dag, keys)
 }
 
 /// Simulate a job and return the steady-state iteration time (seconds),
@@ -404,7 +666,13 @@ pub fn iteration_time_with(
     if job.iterations < 6 {
         job.iterations = 6;
     }
-    let (dag, res) = build_ssgd_dag(cluster, &job, strategy);
+    // Template-cached build: repeated measurements of the same structure
+    // (campaign sweeps, what-if ladders, the scale-out CLI) re-stamp
+    // durations instead of re-wiring the DAG. Timelines are bit-identical
+    // to the named `build_ssgd_dag` path.
+    let res = cluster.build_resources(job.nodes, job.gpus_per_node);
+    let dur = durations(cluster, &job, strategy);
+    let dag = build_with_cached(&res, &job, strategy, &dur);
     crate::sim::executor::steady_state_iter_time_with(&dag, &res.pool, job.iterations, 2, sched)
 }
 
@@ -562,5 +830,85 @@ mod tests {
         let j = job(zoo::resnet50(), 4, 4);
         let t = iteration_time(&cluster, &j, &fw::caffe_mpi());
         assert!(t > 0.01 && t < 10.0, "t={t}");
+    }
+
+    /// Re-stamping a template with new durations must equal a fresh
+    /// build: same structure, bit-identical durations and simulation.
+    #[test]
+    fn template_stamp_equals_fresh_build() {
+        let cluster = presets::k80_cluster();
+        let strategy = fw::caffe_mpi();
+        let j = job(zoo::resnet50(), 2, 2);
+        let res = cluster.build_resources(j.nodes, j.gpus_per_node);
+        let dur1 = durations(&cluster, &j, &strategy);
+        let tpl = DagTemplate::build(&res, &j, &strategy, &dur1);
+
+        // A duration variant with the same zero-pattern (a different
+        // batch size on the same structure).
+        let mut j2 = j.clone();
+        j2.batch_per_gpu *= 2;
+        let dur2 = durations(&cluster, &j2, &strategy);
+        assert!(tpl.matches(&dur2));
+
+        let stamped = tpl.stamp(&dur2);
+        let fresh = build_with(&res, &j2, &strategy, &dur2);
+        assert_eq!(stamped.len(), fresh.len());
+        assert_eq!(stamped.edge_count(), fresh.edge_count());
+        for (s, f) in stamped.tasks.iter().zip(&fresh.tasks) {
+            assert_eq!(s.duration.to_bits(), f.duration.to_bits());
+            assert_eq!(s.resource, f.resource);
+            assert_eq!(s.phase, f.phase);
+            assert_eq!(s.iter, f.iter);
+            assert_eq!(s.layer, f.layer);
+        }
+        for t in 0..fresh.len() {
+            assert_eq!(stamped.succs_of(t), fresh.succs_of(t), "succs of {t}");
+        }
+        let a = crate::sim::executor::simulate(&stamped, &res.pool);
+        let b = crate::sim::executor::simulate(&fresh, &res.pool);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        // durations_vec is the same mapping, for batched replicas.
+        let dv = tpl.durations_vec(&dur2);
+        for (x, t) in dv.iter().zip(&fresh.tasks) {
+            assert_eq!(x.to_bits(), t.duration.to_bits());
+        }
+    }
+
+    /// A changed zero-pattern is a different structure: the template must
+    /// refuse it and the cache must not serve it.
+    #[test]
+    fn template_rejects_shape_changing_durations() {
+        let cluster = presets::k80_cluster();
+        let strategy = fw::caffe_mpi();
+        let j = job(zoo::alexnet(), 2, 2);
+        let res = cluster.build_resources(j.nodes, j.gpus_per_node);
+        let dur = durations(&cluster, &j, &strategy);
+        let tpl = DagTemplate::build(&res, &j, &strategy, &dur);
+
+        let mut zeroed = dur.clone();
+        for c in &mut zeroed.comm {
+            *c = 0.0;
+        }
+        assert!(!tpl.matches(&zeroed));
+        // The signature differs too, so the cache builds a new template
+        // (with fewer tasks: no aggregation) rather than mis-stamping.
+        assert_ne!(
+            template_signature(&res, &j, &strategy, &dur),
+            template_signature(&res, &j, &strategy, &zeroed)
+        );
+        let t2 = cached_template(&res, &j, &strategy, &zeroed);
+        assert!(t2.len() < tpl.len());
+    }
+
+    #[test]
+    fn cached_template_is_shared() {
+        let cluster = presets::v100_cluster();
+        let strategy = fw::mxnet();
+        let j = job(zoo::googlenet(), 2, 2);
+        let res = cluster.build_resources(j.nodes, j.gpus_per_node);
+        let dur = durations(&cluster, &j, &strategy);
+        let a = cached_template(&res, &j, &strategy, &dur);
+        let b = cached_template(&res, &j, &strategy, &dur);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
     }
 }

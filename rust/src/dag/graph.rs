@@ -4,17 +4,121 @@
 //! `e(x, y)` means task `y` may only begin after `x` finished. The graph is
 //! append-only; edges are validated to point between existing nodes, and
 //! acyclicity is checked by topological sort.
+//!
+//! # Memory layout
+//!
+//! Adjacency is *not* kept as per-node `Vec<Vec<TaskId>>` (one heap
+//! allocation per node, pointer-chasing per neighbor). Instead the graph
+//! stores a flat, insertion-ordered edge arena plus an intrusive per-node
+//! successor list (used only for duplicate-edge checks during
+//! construction), and lazily compiles a CSR (compressed sparse row) view:
+//!
+//! ```text
+//! edges:    [(a,b), (a,c), (b,d), (c,d)]          // arena, insertion order
+//! succ_off: [0,       2,     3,     4,   4]       // node → range into adj
+//! succ_adj: [ b, c,   d,     d          ]         // all succs, contiguous
+//! ```
+//!
+//! The CSR (both directions, plus a cached topological order) is built
+//! once per structural version by a stable counting sort, so per-node
+//! neighbor order equals edge insertion order — exactly what the old
+//! nested-Vec layout produced, which the golden schedule tests pin.
+//! Mutation (`add`/`edge`) invalidates the cache; queries rebuild it on
+//! demand. The CSR is shared behind an `Arc`, so cloning a [`Dag`] (e.g.
+//! stamping duration variants of a [`crate::dag::builder::DagTemplate`])
+//! copies tasks but *shares* the structure arrays.
 
-use super::node::{Task, TaskId};
+use super::node::{EdgeId, Task, TaskId};
 use std::collections::VecDeque;
+use std::sync::{Arc, OnceLock};
+
+/// Sentinel terminating an intrusive successor list.
+const NO_EDGE: EdgeId = EdgeId::MAX;
 
 #[derive(Clone, Debug, Default)]
 pub struct Dag {
     pub tasks: Vec<Task>,
-    /// `succs[x]` = tasks that depend on x.
-    pub succs: Vec<Vec<TaskId>>,
-    /// `preds[x]` = tasks x depends on.
-    pub preds: Vec<Vec<TaskId>>,
+    /// Edge arena in insertion order: `(from, to)` per edge.
+    edges: Vec<(u32, u32)>,
+    /// Head of each node's successor list (index into `edges`, or
+    /// [`NO_EDGE`]). Only used for O(out-degree) duplicate checks in
+    /// [`Dag::edge`]; traversal goes through the CSR.
+    succ_head: Vec<EdgeId>,
+    /// Next edge in the same node's successor list (parallel to `edges`).
+    succ_next: Vec<EdgeId>,
+    /// Lazily compiled CSR + cached topo order; cleared on mutation.
+    csr: OnceLock<Arc<Csr>>,
+}
+
+/// Compiled adjacency: both directions in CSR form, plus the cached Kahn
+/// topological order (`None` records "this version has a cycle", so
+/// repeated `is_acyclic` checks are O(1) too).
+#[derive(Debug)]
+struct Csr {
+    succ_off: Vec<u32>,
+    succ_adj: Vec<TaskId>,
+    pred_off: Vec<u32>,
+    pred_adj: Vec<TaskId>,
+    topo: Option<Vec<TaskId>>,
+}
+
+impl Csr {
+    fn build(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut succ_off = vec![0u32; n + 1];
+        let mut pred_off = vec![0u32; n + 1];
+        for &(f, t) in edges {
+            succ_off[f as usize + 1] += 1;
+            pred_off[t as usize + 1] += 1;
+        }
+        for i in 0..n {
+            succ_off[i + 1] += succ_off[i];
+            pred_off[i + 1] += pred_off[i];
+        }
+        // Stable counting sort: each node's neighbors land in edge
+        // insertion order (golden schedules and critical-path pred walks
+        // rely on it).
+        let mut succ_cur: Vec<u32> = succ_off[..n].to_vec();
+        let mut pred_cur: Vec<u32> = pred_off[..n].to_vec();
+        let mut succ_adj: Vec<TaskId> = vec![0; edges.len()];
+        let mut pred_adj: Vec<TaskId> = vec![0; edges.len()];
+        for &(f, t) in edges {
+            let c = &mut succ_cur[f as usize];
+            succ_adj[*c as usize] = t as TaskId;
+            *c += 1;
+            let c = &mut pred_cur[t as usize];
+            pred_adj[*c as usize] = f as TaskId;
+            *c += 1;
+        }
+        let topo = Csr::topo(n, &succ_off, &succ_adj, &pred_off);
+        Csr {
+            succ_off,
+            succ_adj,
+            pred_off,
+            pred_adj,
+            topo,
+        }
+    }
+
+    fn topo(
+        n: usize,
+        succ_off: &[u32],
+        succ_adj: &[TaskId],
+        pred_off: &[u32],
+    ) -> Option<Vec<TaskId>> {
+        let mut indeg: Vec<u32> = (0..n).map(|t| pred_off[t + 1] - pred_off[t]).collect();
+        let mut queue: VecDeque<TaskId> = (0..n).filter(|&t| indeg[t] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(t) = queue.pop_front() {
+            order.push(t);
+            for &s in &succ_adj[succ_off[t] as usize..succ_off[t + 1] as usize] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
 }
 
 impl Dag {
@@ -33,8 +137,8 @@ impl Dag {
     /// Append a task, returning its id.
     pub fn add(&mut self, task: Task) -> TaskId {
         self.tasks.push(task);
-        self.succs.push(Vec::new());
-        self.preds.push(Vec::new());
+        self.succ_head.push(NO_EDGE);
+        self.csr.take();
         self.tasks.len() - 1
     }
 
@@ -42,10 +146,19 @@ impl Dag {
     pub fn edge(&mut self, from: TaskId, to: TaskId) {
         assert!(from < self.len() && to < self.len(), "edge endpoints must exist");
         assert_ne!(from, to, "self-edges are not allowed");
-        if !self.succs[from].contains(&to) {
-            self.succs[from].push(to);
-            self.preds[to].push(from);
+        let mut e = self.succ_head[from];
+        while e != NO_EDGE {
+            if self.edges[e as usize].1 as TaskId == to {
+                return;
+            }
+            e = self.succ_next[e as usize];
         }
+        let id = self.edges.len() as EdgeId;
+        debug_assert!(id != NO_EDGE, "edge arena full");
+        self.edges.push((from as u32, to as u32));
+        self.succ_next.push(self.succ_head[from]);
+        self.succ_head[from] = id;
+        self.csr.take();
     }
 
     /// Add edges from every task in `from` to `to`.
@@ -55,45 +168,63 @@ impl Dag {
         }
     }
 
-    /// Kahn topological order; `None` if the graph has a cycle.
-    pub fn topo_order(&self) -> Option<Vec<TaskId>> {
-        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
-        let mut queue: VecDeque<TaskId> = (0..self.len()).filter(|&i| indeg[i] == 0).collect();
-        let mut order = Vec::with_capacity(self.len());
-        while let Some(t) = queue.pop_front() {
-            order.push(t);
-            for &s in &self.succs[t] {
-                indeg[s] -= 1;
-                if indeg[s] == 0 {
-                    queue.push_back(s);
-                }
-            }
-        }
-        if order.len() == self.len() {
-            Some(order)
-        } else {
-            None
-        }
+    /// The compiled CSR for the current structural version, building it on
+    /// first use after a mutation.
+    fn csr(&self) -> &Csr {
+        self.csr
+            .get_or_init(|| Arc::new(Csr::build(self.tasks.len(), &self.edges)))
     }
 
+    /// Successors of `t` (tasks that depend on `t`), in edge insertion
+    /// order, as a contiguous slice of the CSR arena.
+    pub fn succs_of(&self, t: TaskId) -> &[TaskId] {
+        let c = self.csr();
+        &c.succ_adj[c.succ_off[t] as usize..c.succ_off[t + 1] as usize]
+    }
+
+    /// Predecessors of `t` (tasks `t` depends on), in edge insertion
+    /// order, as a contiguous slice of the CSR arena.
+    pub fn preds_of(&self, t: TaskId) -> &[TaskId] {
+        let c = self.csr();
+        &c.pred_adj[c.pred_off[t] as usize..c.pred_off[t + 1] as usize]
+    }
+
+    /// In-degree of every task (the executor's readiness counters).
+    pub fn indegrees(&self) -> Vec<usize> {
+        let c = self.csr();
+        (0..self.len())
+            .map(|t| (c.pred_off[t + 1] - c.pred_off[t]) as usize)
+            .collect()
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle. The order
+    /// is computed once per structural version and cached, so calling this
+    /// (or [`Dag::is_acyclic`]) repeatedly — as every `simulate` does — is
+    /// a clone of the cached Vec, not a fresh sort.
+    pub fn topo_order(&self) -> Option<Vec<TaskId>> {
+        self.csr().topo.clone()
+    }
+
+    /// O(1) after the first query on a structural version.
     pub fn is_acyclic(&self) -> bool {
-        self.topo_order().is_some()
+        self.csr().topo.is_some()
     }
 
     /// Number of edges.
     pub fn edge_count(&self) -> usize {
-        self.succs.iter().map(|s| s.len()).sum()
+        self.edges.len()
     }
 
     /// Earliest start/finish ignoring resource contention (infinite
     /// resources). This is the classic DAG lower bound; the simulator adds
     /// queueing. Returns `(start, finish)` per task.
     pub fn earliest_times(&self) -> Option<(Vec<f64>, Vec<f64>)> {
-        let order = self.topo_order()?;
+        let csr = self.csr();
+        let order = csr.topo.as_ref()?;
         let mut start = vec![0.0f64; self.len()];
         let mut finish = vec![0.0f64; self.len()];
-        for &t in &order {
-            let s = self.preds[t]
+        for &t in order {
+            let s = csr.pred_adj[csr.pred_off[t] as usize..csr.pred_off[t + 1] as usize]
                 .iter()
                 .map(|&p| finish[p])
                 .fold(0.0f64, f64::max);
@@ -110,10 +241,11 @@ impl Dag {
     /// rank is how much work the makespan still owes once it starts.
     /// `None` if the graph has a cycle.
     pub fn upward_ranks(&self) -> Option<Vec<f64>> {
-        let order = self.topo_order()?;
+        let csr = self.csr();
+        let order = csr.topo.as_ref()?;
         let mut rank = vec![0.0f64; self.len()];
         for &t in order.iter().rev() {
-            let downstream = self.succs[t]
+            let downstream = csr.succ_adj[csr.succ_off[t] as usize..csr.succ_off[t + 1] as usize]
                 .iter()
                 .map(|&s| rank[s])
                 .fold(0.0f64, f64::max);
@@ -137,9 +269,10 @@ impl Dag {
             .filter(|&t| (finish[t] - makespan).abs() < 1e-12)
             .min_by(|a, b| a.cmp(b))?;
         let mut path = vec![cur];
-        while !self.preds[cur].is_empty() {
+        while !self.preds_of(cur).is_empty() {
             // Pick the predecessor whose finish equals our start.
-            let prev = self.preds[cur]
+            let prev = self
+                .preds_of(cur)
                 .iter()
                 .copied()
                 .find(|&p| (finish[p] - start[cur]).abs() < 1e-12);
@@ -171,8 +304,8 @@ impl Dag {
                 t.name
             ));
         }
-        for (from, succs) in self.succs.iter().enumerate() {
-            for &to in succs {
+        for from in 0..self.len() {
+            for &to in self.succs_of(from) {
                 out.push_str(&format!("  t{from} -> t{to};\n"));
             }
         }
@@ -289,5 +422,47 @@ mod tests {
             assert!(dot.contains(&format!("t{i} [")));
         }
         assert!(dot.contains("t0 -> t1"));
+    }
+
+    #[test]
+    fn csr_neighbors_keep_insertion_order() {
+        let mut g = Dag::new();
+        for i in 0..5 {
+            g.add(task(&format!("n{i}"), 1.0));
+        }
+        // Out-of-id-order insertions: CSR must reflect *edge* order.
+        g.edge(0, 3);
+        g.edge(0, 1);
+        g.edge(0, 2);
+        g.edge(4, 2);
+        g.edge(1, 2);
+        assert_eq!(g.succs_of(0), &[3, 1, 2]);
+        assert_eq!(g.preds_of(2), &[0, 4, 1]);
+        assert_eq!(g.succs_of(3), &[] as &[TaskId]);
+        assert_eq!(g.indegrees(), vec![0, 1, 3, 1, 0]);
+    }
+
+    #[test]
+    fn mutation_invalidates_cached_structure() {
+        let mut g = diamond();
+        assert!(g.is_acyclic()); // compile + cache the CSR
+        assert_eq!(g.succs_of(3), &[] as &[TaskId]);
+        let e = g.add(task("e", 1.0));
+        g.edge(3, e);
+        assert_eq!(g.succs_of(3), &[e]); // fresh CSR sees the new edge
+        assert!(g.is_acyclic());
+        g.edge(e, 0);
+        assert!(!g.is_acyclic()); // and the new cycle
+    }
+
+    #[test]
+    fn clone_shares_structure_but_not_durations() {
+        let g = diamond();
+        g.is_acyclic(); // warm the cache so the clone inherits it
+        let mut h = g.clone();
+        h.tasks[2].duration = 100.0;
+        assert_eq!(h.succs_of(0), g.succs_of(0));
+        assert!((h.critical_path_length().unwrap() - 102.0).abs() < 1e-12);
+        assert!((g.critical_path_length().unwrap() - 5.0).abs() < 1e-12);
     }
 }

@@ -9,6 +9,12 @@
 /// Index of a task within its [`super::graph::Dag`].
 pub type TaskId = usize;
 
+/// Index of an edge within a [`super::graph::Dag`]'s edge arena. Edges are
+/// stored `u32`-indexed (a DAG with > 4 billion edges would not fit in
+/// memory anyway), which keeps the CSR adjacency arrays and the intrusive
+/// successor lists half the size of `usize` indices on 64-bit hosts.
+pub type EdgeId = u32;
+
 /// The two node classes of the paper's DAG model (§IV.A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TaskKind {

@@ -107,6 +107,7 @@ pub mod experiments;
 
 pub mod bench {
     pub mod harness;
+    pub mod ratchet;
 }
 
 pub mod runtime {

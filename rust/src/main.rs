@@ -18,6 +18,8 @@
 //!                                over fitted channels)
 //!   table5    [flags]            the Table V validation table end to end
 //!   train     [flags]            real S-SGD training via PJRT artifacts
+//!   ratchet   [flags]            compare two BENCH_*.json files and fail
+//!                                on throughput regressions (CI perf gate)
 //!
 //! Per-command flags are documented in README.md.
 
@@ -55,9 +57,10 @@ fn main() {
         "table5" => cmd_table5(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),
+        "ratchet" => cmd_ratchet(&args),
         other => {
             eprintln!(
-                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|calibrate|whatif|table5|train|analyze> [--flags]\n\
+                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|calibrate|whatif|table5|train|analyze|ratchet> [--flags]\n\
                  see README.md for per-command flags"
             );
             if other == "help" {
@@ -616,6 +619,40 @@ fn check_json_file(
         Err(e) => {
             eprintln!("{path}: {e}");
             1
+        }
+    }
+}
+
+/// `dagsgd ratchet` — the CI perf gate: compare a current bench report
+/// against a baseline (`--baseline FILE --current FILE`) and exit 1 on
+/// any case whose throughput fell below `--min-ratio` (default 0.85,
+/// i.e. >15% slower) times the baseline. New/removed cases and rate-less
+/// rows are reported but never fail.
+fn cmd_ratchet(args: &Args) -> i32 {
+    use dagsgd::bench::ratchet;
+
+    let load = |key: &str| -> Result<dagsgd::util::json::Json, String> {
+        let path = args.get(key).ok_or_else(|| format!("missing --{key} FILE"))?;
+        let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        dagsgd::util::json::parse(&text).map_err(|e| format!("{path}: invalid JSON: {e}"))
+    };
+    let min_ratio = args.f64_or("min-ratio", ratchet::DEFAULT_MIN_RATIO);
+    let verdict = load("baseline")
+        .and_then(|b| load("current").map(|c| (b, c)))
+        .and_then(|(b, c)| ratchet::compare(&b, &c, min_ratio));
+    match verdict {
+        Ok(r) => {
+            print!("{}", r.render());
+            if r.passed() {
+                0
+            } else {
+                eprintln!("{} case(s) regressed past the ratchet floor", r.regressions().len());
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("ratchet: {e}");
+            2
         }
     }
 }

@@ -9,9 +9,17 @@
 //! capacity, the event queue); the scheduler owns policy (ordering) — see
 //! [`crate::sim::scheduler`] for the shipped policies.
 //!
-//! [`simulate`] runs the default [`FifoScheduler`], which reproduces the
-//! original monolithic executor exactly (ready-order FIFO, ties by task
-//! id; golden-tested in `tests/golden_scheduler.rs`).
+//! [`simulate`] runs FIFO scheduling (ready-order FIFO, ties by task id)
+//! through a monomorphic fast path: no dynamic scheduler dispatch, no
+//! per-call context snapshots, durations and resource ids densified into
+//! flat arrays. It is algorithm-for-algorithm the original monolithic
+//! executor, so its timelines are bit-identical to
+//! `simulate_with(.., FifoScheduler)` — golden-tested in
+//! `tests/golden_scheduler.rs`. The same core batch-advances K
+//! duration-variant *replicas* of one DAG structure through a single
+//! event queue ([`simulate_replicas`]), amortizing queue and seed
+//! overhead across campaign cells that share a
+//! [`crate::dag::builder::DagTemplate`].
 //!
 //! The output is a full timeline (start/finish per task) from which we
 //! derive iteration times, per-resource utilization and Gantt exports.
@@ -22,6 +30,7 @@ use super::resources::ResourcePool;
 use super::scheduler::{FifoScheduler, Scheduler};
 use crate::dag::graph::Dag;
 use crate::dag::node::TaskId;
+use std::collections::VecDeque;
 
 /// Simulation result for one DAG run.
 #[derive(Clone, Debug)]
@@ -62,10 +71,175 @@ enum Ev {
     Done(TaskId),
 }
 
+/// Per-replica mutable state for the FIFO fast path: everything a solo
+/// FIFO run owns, minus the shared structure (`res_of`, capacities, CSR).
+struct Replica {
+    indeg: Vec<u32>,
+    queue: Vec<VecDeque<u32>>,
+    in_service: Vec<usize>,
+    busy: Vec<f64>,
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    done: usize,
+    events: u64,
+}
+
+/// Monomorphic FIFO core: advance `durs.len()` duration-variant replicas
+/// of `dag`'s structure through one event queue.
+///
+/// Each replica runs *exactly* the original executor loop — per-resource
+/// FIFO ready queues, newly-ready sorted by task id, touched resources
+/// drained in ascending id order — with all state per-replica. The only
+/// shared mutable object is the event queue, which is order-only: each
+/// replica's events enter in the same relative order as its solo run
+/// (pushes happen at event times, not global state), so the `(time, seq)`
+/// pop order projected onto one replica equals that replica's solo pop
+/// order, and every timestamp/accounting f64 is computed by identical
+/// arithmetic in identical order. Bit-identity per replica, K=1 included.
+fn simulate_fifo_multi(dag: &Dag, pool: &ResourcePool, durs: &[&[f64]]) -> Vec<SimResult> {
+    assert!(dag.is_acyclic(), "simulate() requires an acyclic graph");
+    let n = dag.len();
+    let nres = pool.len();
+    for d in durs {
+        assert_eq!(d.len(), n, "replica durations must cover every task");
+    }
+
+    // Replica-invariant structure, densified once.
+    let res_of: Vec<u32> = dag.tasks.iter().map(|t| t.resource as u32).collect();
+    let base_indeg: Vec<u32> = dag.indegrees().iter().map(|&d| d as u32).collect();
+    let caps: Vec<usize> = pool.specs.iter().map(|s| s.capacity).collect();
+
+    let mut reps: Vec<Replica> = durs
+        .iter()
+        .map(|_| Replica {
+            indeg: base_indeg.clone(),
+            queue: vec![VecDeque::new(); nres],
+            in_service: vec![0; nres],
+            busy: vec![0.0f64; nres],
+            start: vec![f64::NAN; n],
+            finish: vec![f64::NAN; n],
+            done: 0,
+            events: 0,
+        })
+        .collect();
+
+    // In-flight events ≤ total resource capacity, per replica.
+    let cap: usize = caps.iter().sum();
+    let mut ev: EventQueue<(u32, u32)> = EventQueue::with_capacity(cap.min(n) * durs.len());
+
+    // Fill free capacity on resource r of replica ki at time `now`
+    // (a macro to borrow `ev` and the replica mutably without a closure
+    // fight, same shape as the original executor's drain).
+    macro_rules! drain_resource {
+        ($ki:expr, $rep:expr, $r:expr, $now:expr) => {{
+            let r = $r;
+            while $rep.in_service[r] < caps[r] {
+                match $rep.queue[r].pop_front() {
+                    Some(t) => {
+                        $rep.in_service[r] += 1;
+                        let tu = t as usize;
+                        $rep.start[tu] = $now;
+                        let d = durs[$ki][tu];
+                        $rep.busy[r] += d;
+                        ev.schedule_at($now + d, ($ki as u32, t));
+                    }
+                    None => break,
+                }
+            }
+        }};
+    }
+
+    // Seed each replica: tasks with no predecessors are ready at t=0 in
+    // id order; drain resources in id order. Replica-major seeding keeps
+    // each replica's seed events in its solo relative order.
+    for (ki, rep) in reps.iter_mut().enumerate() {
+        for t in 0..n {
+            if rep.indeg[t] == 0 {
+                rep.queue[res_of[t] as usize].push_back(t as u32);
+            }
+        }
+        for r in 0..nres {
+            drain_resource!(ki, rep, r, 0.0);
+        }
+    }
+
+    // Scratch buffers reused across events (no per-event allocation).
+    let mut newly_ready: Vec<u32> = Vec::with_capacity(16);
+    let mut touched: Vec<usize> = Vec::with_capacity(8);
+    while let Some((now, (ki, t))) = ev.pop() {
+        let kiu = ki as usize;
+        let rep = &mut reps[kiu];
+        let tu = t as usize;
+        rep.finish[tu] = now;
+        rep.done += 1;
+        rep.events += 1;
+        let r = res_of[tu] as usize;
+        rep.in_service[r] -= 1;
+
+        // Release successors; collect which become ready (in id order for
+        // determinism, matching the scheduler-driven engine).
+        newly_ready.clear();
+        for &s in dag.succs_of(tu) {
+            rep.indeg[s] -= 1;
+            if rep.indeg[s] == 0 {
+                newly_ready.push(s as u32);
+            }
+        }
+        newly_ready.sort_unstable();
+
+        // Only the freed resource and resources that received new work
+        // can start tasks — drain exactly those, id ascending.
+        touched.clear();
+        touched.push(r);
+        for &s in &newly_ready {
+            let sr = res_of[s as usize] as usize;
+            rep.queue[sr].push_back(s);
+            if !touched.contains(&sr) {
+                touched.push(sr);
+            }
+        }
+        touched.sort_unstable();
+        for &tr in &touched {
+            drain_resource!(kiu, rep, tr, now);
+        }
+    }
+
+    reps.into_iter()
+        .map(|rep| {
+            assert_eq!(
+                rep.done, n,
+                "deadlock: {} of {n} tasks completed (FIFO fast path starved)",
+                rep.done
+            );
+            let makespan = rep.finish.iter().copied().fold(0.0, f64::max);
+            SimResult {
+                start: rep.start,
+                finish: rep.finish,
+                makespan,
+                busy: rep.busy,
+                events: rep.events,
+            }
+        })
+        .collect()
+}
+
 /// Run the DAG to completion on the pool under FIFO scheduling (the
 /// paper frameworks' insertion-order behavior). Panics on cyclic DAGs.
 pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
-    simulate_with(dag, pool, &mut FifoScheduler::new())
+    let durs: Vec<f64> = dag.tasks.iter().map(|t| t.duration).collect();
+    simulate_fifo_multi(dag, pool, &[&durs])
+        .pop()
+        .expect("one replica in, one result out")
+}
+
+/// Batch-advance `durs.len()` duration variants of `dag`'s structure —
+/// same tasks, same edges, same resources, each with its own full
+/// duration vector — through a single FIFO engine pass. Returns one
+/// [`SimResult`] per variant, each bit-identical to a solo
+/// [`simulate`] of a DAG stamped with those durations.
+pub fn simulate_replicas(dag: &Dag, pool: &ResourcePool, durs: &[Vec<f64>]) -> Vec<SimResult> {
+    let slices: Vec<&[f64]> = durs.iter().map(|d| d.as_slice()).collect();
+    simulate_fifo_multi(dag, pool, &slices)
 }
 
 /// Run the DAG to completion on the pool under `sched`'s policy. Panics
@@ -74,7 +248,7 @@ pub fn simulate(dag: &Dag, pool: &ResourcePool) -> SimResult {
 pub fn simulate_with(dag: &Dag, pool: &ResourcePool, sched: &mut dyn Scheduler) -> SimResult {
     assert!(dag.is_acyclic(), "simulate() requires an acyclic graph");
     let n = dag.len();
-    let mut indeg: Vec<usize> = dag.preds.iter().map(|p| p.len()).collect();
+    let mut indeg: Vec<usize> = dag.indegrees();
 
     // Per-resource occupancy and accounting.
     let nres = pool.len();
@@ -133,8 +307,8 @@ pub fn simulate_with(dag: &Dag, pool: &ResourcePool, sched: &mut dyn Scheduler) 
     sched.on_start(&ctx!(0.0));
 
     // Seed: all tasks with no predecessors are ready at t=0, in id order.
-    for t in 0..n {
-        if indeg[t] == 0 {
+    for (t, &d) in indeg.iter().enumerate() {
+        if d == 0 {
             sched.on_task_ready(t, &ctx!(0.0));
         }
     }
@@ -157,7 +331,7 @@ pub fn simulate_with(dag: &Dag, pool: &ResourcePool, sched: &mut dyn Scheduler) 
         // determinism — succs are already appended in construction order,
         // but sort to be safe against builder changes).
         newly_ready.clear();
-        for &s in &dag.succs[t] {
+        for &s in dag.succs_of(t) {
             indeg[s] -= 1;
             if indeg[s] == 0 {
                 newly_ready.push(s);
@@ -207,7 +381,9 @@ pub fn simulate_with(dag: &Dag, pool: &ResourcePool, sched: &mut dyn Scheduler) 
 /// the last `iters - warmup` iterations. The first iterations are warmup
 /// (pipelines fill: prefetch buffers, overlapped comm).
 pub fn steady_state_iter_time(dag: &Dag, pool: &ResourcePool, iters: usize, warmup: usize) -> f64 {
-    steady_state_iter_time_with(dag, pool, iters, warmup, &mut FifoScheduler::new())
+    assert!(iters > warmup, "need at least one measured iteration");
+    let res = simulate(dag, pool);
+    steady_state_from(&res, dag, iters, warmup)
 }
 
 /// [`steady_state_iter_time`] under an explicit scheduling policy.
@@ -358,5 +534,52 @@ mod tests {
         }
         let it = steady_state_iter_time(&dag, &pool, 5, 1);
         assert!((it - 1.0).abs() < 1e-12);
+    }
+
+    /// Replica batching must reproduce solo runs bit-for-bit, per variant.
+    #[test]
+    fn replicas_match_solo_runs_bitwise() {
+        let mut pool = ResourcePool::new();
+        let disk = pool.add("disk", ResourceClass::Disk, 1);
+        let gpu = pool.add("gpu", ResourceClass::Gpu, 2);
+        let mut dag = Dag::new();
+        let a = dag.add(t("io", disk, 1.0));
+        let b = dag.add(t("fwd0", gpu, 2.0));
+        let c = dag.add(t("fwd1", gpu, 3.0));
+        let d = dag.add(t("upd", gpu, 0.5));
+        dag.edge(a, b);
+        dag.edge(a, c);
+        dag.edge(b, d);
+        dag.edge(c, d);
+
+        let variants: Vec<Vec<f64>> = vec![
+            vec![1.0, 2.0, 3.0, 0.5],
+            vec![0.25, 5.0, 0.125, 1.0],
+            vec![2.0, 2.0, 2.0, 2.0],
+        ];
+        let batched = simulate_replicas(&dag, &pool, &variants);
+        assert_eq!(batched.len(), variants.len());
+        for (durs, got) in variants.iter().zip(&batched) {
+            let mut stamped = dag.clone();
+            for (task, &d) in stamped.tasks.iter_mut().zip(durs) {
+                task.duration = d;
+            }
+            let solo = simulate(&stamped, &pool);
+            let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+            assert_eq!(bits(&got.start), bits(&solo.start));
+            assert_eq!(bits(&got.finish), bits(&solo.finish));
+            assert_eq!(bits(&got.busy), bits(&solo.busy));
+            assert_eq!(got.events, solo.events);
+            assert_eq!(got.makespan.to_bits(), solo.makespan.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_replica_list_is_fine() {
+        let mut pool = ResourcePool::new();
+        let gpu = pool.add("gpu", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        dag.add(t("a", gpu, 1.0));
+        assert!(simulate_replicas(&dag, &pool, &[]).is_empty());
     }
 }

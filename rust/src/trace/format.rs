@@ -108,82 +108,126 @@ impl Trace {
     /// markers — is an error: every downstream consumer (averaging,
     /// calibration) needs at least one populated iteration.
     pub fn parse(text: &str) -> Result<Trace, String> {
-        let mut trace = Trace::default();
-        let mut current: Vec<LayerRecord> = Vec::new();
+        let mut p = Parser::default();
         for (lineno, line) in text.lines().enumerate() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
+            p.line(lineno, line)?;
+        }
+        p.finish()
+    }
+
+    /// Streaming variant of [`Trace::parse`]: consume a buffered reader
+    /// line by line through one reused buffer, so multi-megabyte trace
+    /// files never materialize as a single `String`. Semantics are
+    /// identical — same accepted inputs, same error strings (including
+    /// line numbers). I/O errors are reported like malformed input.
+    pub fn parse_reader<R: std::io::BufRead>(mut r: R) -> Result<Trace, String> {
+        let mut p = Parser::default();
+        let mut buf = String::new();
+        let mut lineno = 0usize;
+        loop {
+            buf.clear();
+            let n = r
+                .read_line(&mut buf)
+                .map_err(|e| format!("line {}: read error: {e}", lineno + 1))?;
+            if n == 0 {
+                break;
             }
-            if let Some(rest) = line.strip_prefix("#!") {
-                for kv in rest.split_whitespace() {
-                    if let Some((k, v)) = kv.split_once('=') {
-                        match k {
-                            "net" => trace.net = v.to_string(),
-                            "cluster" => trace.cluster = v.to_string(),
-                            "gpus" => trace.gpus = v.parse().map_err(|e| format!("{e}"))?,
-                            "batch" => trace.batch = v.parse().map_err(|e| format!("{e}"))?,
-                            _ => {}
-                        }
+            p.line(lineno, &buf)?;
+            lineno += 1;
+        }
+        p.finish()
+    }
+}
+
+/// The per-line parser state machine behind [`Trace::parse`] and
+/// [`Trace::parse_reader`]: one code path, so the in-memory and the
+/// streaming parse can never drift. `line` consumes one raw line (any
+/// trailing `\n`/`\r\n` is trimmed away, matching `str::lines`);
+/// `finish` flushes the trailing iteration and runs whole-trace checks.
+#[derive(Default)]
+struct Parser {
+    trace: Trace,
+    current: Vec<LayerRecord>,
+}
+
+impl Parser {
+    fn line(&mut self, lineno: usize, line: &str) -> Result<(), String> {
+        let line = line.trim();
+        if line.is_empty() {
+            return Ok(());
+        }
+        if let Some(rest) = line.strip_prefix("#!") {
+            for kv in rest.split_whitespace() {
+                if let Some((k, v)) = kv.split_once('=') {
+                    match k {
+                        "net" => self.trace.net = v.to_string(),
+                        "cluster" => self.trace.cluster = v.to_string(),
+                        "gpus" => self.trace.gpus = v.parse().map_err(|e| format!("{e}"))?,
+                        "batch" => self.trace.batch = v.parse().map_err(|e| format!("{e}"))?,
+                        _ => {}
                     }
                 }
-                continue;
             }
-            if line.starts_with("# iter") {
-                if !current.is_empty() {
-                    trace.iterations.push(std::mem::take(&mut current));
-                }
-                continue;
+            return Ok(());
+        }
+        if line.starts_with("# iter") {
+            if !self.current.is_empty() {
+                self.trace.iterations.push(std::mem::take(&mut self.current));
             }
-            if line.starts_with('#') {
-                continue;
-            }
-            let fields: Vec<&str> = line.split_whitespace().collect();
-            if fields.len() != 6 {
+            return Ok(());
+        }
+        if line.starts_with('#') {
+            return Ok(());
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 6 {
+            return Err(format!(
+                "line {}: expected 6 fields, got {}",
+                lineno + 1,
+                fields.len()
+            ));
+        }
+        // Times and sizes must be finite and non-negative: real
+        // trace files never carry NaN/inf/negative entries, and
+        // letting them through would poison every downstream
+        // consumer (averaging, the α–β fit, simulator durations).
+        let parse_f = |s: &str, what: &str| -> Result<f64, String> {
+            let v = s
+                .parse::<f64>()
+                .map_err(|e| format!("line {}: bad {what} '{s}': {e}", lineno + 1))?;
+            if !v.is_finite() || v < 0.0 {
                 return Err(format!(
-                    "line {}: expected 6 fields, got {}",
-                    lineno + 1,
-                    fields.len()
+                    "line {}: {what} '{s}' must be finite and ≥ 0",
+                    lineno + 1
                 ));
             }
-            // Times and sizes must be finite and non-negative: real
-            // trace files never carry NaN/inf/negative entries, and
-            // letting them through would poison every downstream
-            // consumer (averaging, the α–β fit, simulator durations).
-            let parse_f = |s: &str, what: &str| -> Result<f64, String> {
-                let v = s
-                    .parse::<f64>()
-                    .map_err(|e| format!("line {}: bad {what} '{s}': {e}", lineno + 1))?;
-                if !v.is_finite() || v < 0.0 {
-                    return Err(format!(
-                        "line {}: {what} '{s}' must be finite and ≥ 0",
-                        lineno + 1
-                    ));
-                }
-                Ok(v)
-            };
-            current.push(LayerRecord {
-                id: fields[0]
-                    .parse()
-                    .map_err(|e| format!("line {}: bad id: {e}", lineno + 1))?,
-                name: fields[1].to_string(),
-                forward_us: parse_f(fields[2], "forward")?,
-                backward_us: parse_f(fields[3], "backward")?,
-                comm_us: parse_f(fields[4], "comm")?,
-                size_bytes: parse_f(fields[5], "size")? as u64,
-            });
+            Ok(v)
+        };
+        self.current.push(LayerRecord {
+            id: fields[0]
+                .parse()
+                .map_err(|e| format!("line {}: bad id: {e}", lineno + 1))?,
+            name: fields[1].to_string(),
+            forward_us: parse_f(fields[2], "forward")?,
+            backward_us: parse_f(fields[3], "backward")?,
+            comm_us: parse_f(fields[4], "comm")?,
+            size_bytes: parse_f(fields[5], "size")? as u64,
+        });
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<Trace, String> {
+        if !self.current.is_empty() {
+            self.trace.iterations.push(self.current);
         }
-        if !current.is_empty() {
-            trace.iterations.push(current);
-        }
-        if trace.iterations.is_empty() {
+        if self.trace.iterations.is_empty() {
             return Err("no layer records found".into());
         }
         // Ragged traces (iterations with different row counts — e.g. a
         // file truncated mid-write) are malformed: every consumer
         // (`mean_rows`, calibration) assumes a rectangular table.
-        let nlayers = trace.iterations[0].len();
-        for (i, it) in trace.iterations.iter().enumerate() {
+        let nlayers = self.trace.iterations[0].len();
+        for (i, it) in self.trace.iterations.iter().enumerate() {
             if it.len() != nlayers {
                 return Err(format!(
                     "iteration {i} has {} rows but iteration 0 has {nlayers} (truncated trace?)",
@@ -191,7 +235,7 @@ impl Trace {
                 ));
             }
         }
-        Ok(trace)
+        Ok(self.trace)
     }
 }
 
@@ -375,6 +419,25 @@ mod tests {
         // Equal-length iterations still parse.
         let ok = "0 data 1 0 0 0\n# iter 1\n0 data 2 0 0 0\n";
         assert_eq!(Trace::parse(ok).unwrap().iterations.len(), 2);
+    }
+
+    /// The streaming parser is observably the same function as the
+    /// in-memory one: same traces, same errors, same line numbers.
+    #[test]
+    fn parse_reader_matches_parse() {
+        let with_header = sample().to_text();
+        let headerless = "0 data 1.20e+06 0 0 0\n1 conv1 3.27e+06 288202 123.424 139776";
+        let crlf = "0 data 1 0 0 0\r\n# iter 1\r\n0 data 2 0 0 0\r\n";
+        for text in [with_header.as_str(), headerless, crlf] {
+            let a = Trace::parse(text).unwrap();
+            let b = Trace::parse_reader(text.as_bytes()).unwrap();
+            assert_eq!(a, b, "{text:?}");
+        }
+        for bad in ["", "1 conv1 3.0\n", "0 data 1 0 0 0\n1 conv1 2 3 4\n"] {
+            let ea = Trace::parse(bad).unwrap_err();
+            let eb = Trace::parse_reader(bad.as_bytes()).unwrap_err();
+            assert_eq!(ea, eb, "{bad:?}");
+        }
     }
 
     #[test]

@@ -196,6 +196,69 @@ fn checker_rejects_tampered_reports() {
     assert!(report::validate(&json::parse(&tampered).unwrap()).is_err());
 }
 
+/// The batched runner (template groups + multi-replica engine passes)
+/// must reproduce the per-cell runner bit-for-bit — over a grid with a
+/// batch-size axis (structure-sharing cells), mixed schedulers (the
+/// non-FIFO cells take the fallback path) and both clusters.
+#[test]
+fn run_batched_matches_per_cell_runner_bitwise() {
+    let mut scenarios: Vec<Scenario> = Vec::new();
+    for cluster in ["k80", "v100"] {
+        for batch in [None, Some(16), Some(32)] {
+            for sched in [SchedulerKind::Fifo, SchedulerKind::Priority] {
+                scenarios.push(Scenario {
+                    cluster: cluster.into(),
+                    interconnect: Interconnect::Stock,
+                    net: "resnet50".into(),
+                    framework: "caffe-mpi".into(),
+                    nodes: 2,
+                    gpus_per_node: 2,
+                    batch_per_gpu: batch,
+                    iterations: 8,
+                    scheduler: sched,
+                    layerwise_update: false,
+                    seed: 0,
+                    profile: None,
+                    fabric: None,
+                    topology: None,
+                });
+            }
+        }
+    }
+    let per_cell = runner::run(&scenarios, 2, None).unwrap();
+    let batched = runner::run_batched(&scenarios, None).unwrap();
+    assert_eq!(batched.cells.len(), per_cell.cells.len());
+    assert_eq!(batched.stats.simulated, scenarios.len());
+    for ((sa, ra), (sb, rb)) in per_cell.cells.iter().zip(batched.cells.iter()) {
+        assert_eq!(sa.key(), sb.key(), "scenario order must be preserved");
+        assert_eq!(ra.metrics.len(), rb.metrics.len(), "{}", sa.key());
+        for (k, v) in &ra.metrics {
+            assert_eq!(
+                rb.get(k).unwrap().to_bits(),
+                v.to_bits(),
+                "{}: metric {k} differs between batched and per-cell runs",
+                sa.key()
+            );
+        }
+    }
+}
+
+/// The batched runner honours the cache exactly like [`runner::run`]: a
+/// warm cache serves every cell without simulating, bit-identically.
+#[test]
+fn run_batched_serves_cache_hits() {
+    let scenarios = grid::by_name("smoke", 7).unwrap().expand();
+    let (dir, cache) = tmp_cache("batched");
+    let first = runner::run_batched(&scenarios, Some(&cache)).unwrap();
+    assert_eq!(first.stats.simulated, scenarios.len());
+    let second = runner::run_batched(&scenarios, Some(&cache)).unwrap();
+    assert_eq!(second.stats.simulated, 0, "warm cache must serve every cell");
+    for ((_, a), (_, b)) in first.cells.iter().zip(second.cells.iter()) {
+        assert_eq!(a, b);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// `Grid::len` stays truthful for ad-hoc grids (the CLI prints it before
 /// sweeping).
 #[test]

@@ -10,13 +10,13 @@
 //! configuration grid.
 
 use dagsgd::cluster::presets;
-use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+use dagsgd::dag::builder::{self, build_ssgd_dag, JobSpec};
 use dagsgd::dag::graph::Dag;
 use dagsgd::dag::node::TaskId;
 use dagsgd::frameworks::strategy;
 use dagsgd::models::zoo;
 use dagsgd::sim::engine::EventQueue;
-use dagsgd::sim::executor::{simulate, simulate_with};
+use dagsgd::sim::executor::{simulate, simulate_replicas, simulate_with};
 use dagsgd::sim::resources::ResourcePool;
 use dagsgd::sim::scheduler::FifoScheduler;
 use std::collections::VecDeque;
@@ -25,7 +25,7 @@ use std::collections::VecDeque;
 fn reference_simulate(dag: &Dag, pool: &ResourcePool) -> (Vec<f64>, Vec<f64>, Vec<f64>, u64) {
     assert!(dag.is_acyclic());
     let n = dag.len();
-    let mut indeg: Vec<usize> = dag.preds.iter().map(|p| p.len()).collect();
+    let mut indeg: Vec<usize> = dag.indegrees();
 
     let nres = pool.len();
     let mut queue: Vec<VecDeque<TaskId>> = vec![VecDeque::new(); nres];
@@ -75,7 +75,7 @@ fn reference_simulate(dag: &Dag, pool: &ResourcePool) -> (Vec<f64>, Vec<f64>, Ve
         in_service[r] -= 1;
 
         newly_ready.clear();
-        for &s in &dag.succs[t] {
+        for &s in dag.succs_of(t) {
             indeg[s] -= 1;
             if indeg[s] == 0 {
                 newly_ready.push(s);
@@ -185,4 +185,76 @@ fn golden_fifo_degenerate_shapes() {
     };
     let (dag, res) = build_ssgd_dag(&cluster, &multi, &fw);
     assert_bit_identical(&dag, &res.pool, "alexnet 2x2 layerwise v100");
+}
+
+/// The CSR DAG + template cache must not perturb a single timestamp: a
+/// template-stamped (nameless) DAG simulates bit-identically to the named
+/// fresh build, across the paper grid.
+#[test]
+fn golden_template_stamp_full_grid() {
+    for cluster in [presets::k80_cluster(), presets::v100_cluster()] {
+        for net in zoo::all() {
+            for fw in strategy::all() {
+                let job = JobSpec {
+                    batch_per_gpu: net.default_batch,
+                    net: net.clone(),
+                    nodes: 2,
+                    gpus_per_node: 2,
+                    iterations: 4,
+                };
+                let (named, res) = build_ssgd_dag(&cluster, &job, &fw);
+                let dur = builder::durations(&cluster, &job, &fw);
+                let stamped = builder::build_with_cached(&res, &job, &fw, &dur);
+                let what = format!("{} {} {}", cluster.name, net.name, fw.name);
+                let a = simulate(&named, &res.pool);
+                let b = simulate(&stamped, &res.pool);
+                let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+                assert_eq!(bits(&a.start), bits(&b.start), "{what}: start");
+                assert_eq!(bits(&a.finish), bits(&b.finish), "{what}: finish");
+                assert_eq!(bits(&a.busy), bits(&b.busy), "{what}: busy");
+                assert_eq!(a.events, b.events, "{what}: events");
+            }
+        }
+    }
+}
+
+/// Batch-advancing K duration variants of one template through a single
+/// engine pass must reproduce each variant's solo reference run
+/// bit-for-bit (the `campaign::runner::run_batched` contract).
+#[test]
+fn golden_batched_replicas_match_reference() {
+    let cluster = presets::k80_cluster();
+    let fw = strategy::caffe_mpi();
+    let base = JobSpec {
+        batch_per_gpu: zoo::resnet50().default_batch,
+        net: zoo::resnet50(),
+        nodes: 2,
+        gpus_per_node: 2,
+        iterations: 4,
+    };
+    let res = cluster.build_resources(base.nodes, base.gpus_per_node);
+    let dur0 = builder::durations(&cluster, &base, &fw);
+    let tpl = builder::cached_template(&res, &base, &fw, &dur0);
+
+    // Duration variants from a batch-size axis: same structure signature.
+    let variants: Vec<_> = [1usize, 2, 4]
+        .iter()
+        .map(|&mult| {
+            let mut j = base.clone();
+            j.batch_per_gpu *= mult;
+            builder::durations(&cluster, &j, &fw)
+        })
+        .collect();
+    let durs: Vec<Vec<f64>> = variants.iter().map(|d| tpl.durations_vec(d)).collect();
+    let batched = simulate_replicas(tpl.dag(), &res.pool, &durs);
+
+    for (dur, got) in variants.iter().zip(&batched) {
+        let solo_dag = builder::build_with(&res, &base, &fw, dur);
+        let (start, finish, busy, events) = reference_simulate(&solo_dag, &res.pool);
+        let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+        assert_eq!(bits(&got.start), bits(&start), "replica start");
+        assert_eq!(bits(&got.finish), bits(&finish), "replica finish");
+        assert_eq!(bits(&got.busy), bits(&busy), "replica busy");
+        assert_eq!(got.events, events, "replica events");
+    }
 }

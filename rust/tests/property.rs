@@ -82,7 +82,7 @@ fn prop_simulator_completes_and_bounds() {
         }
         // Every task ran after its predecessors.
         for t in 0..dag.len() {
-            for &p in &dag.preds[t] {
+            for &p in dag.preds_of(t) {
                 prop_assert!(res.start[t] >= res.finish[p] - 1e-9);
             }
             prop_assert!(res.finish[t] >= res.start[t]);
@@ -277,7 +277,7 @@ fn assert_feasible(dag: &Dag, pool: &ResourcePool, res: &SimResult) -> Result<()
             "task {t} never ran"
         );
         prop_assert!(res.finish[t] >= res.start[t], "task {t} negative service");
-        for &p in &dag.preds[t] {
+        for &p in dag.preds_of(t) {
             prop_assert!(
                 res.start[t] >= res.finish[p] - 1e-9,
                 "task {t} started at {} before pred {p} finished at {}",
@@ -490,6 +490,89 @@ fn prop_steady_state_iter_time_stable() {
             t,
             expect
         );
+        Ok(())
+    });
+}
+
+/// Scale a duration entry by a random positive factor, preserving the
+/// zero pattern (zeros decide DAG structure, so they must stay zero).
+fn perturb(g: &mut Gen, x: f64) -> f64 {
+    if x > 0.0 {
+        x * g.f64(0.25, 4.0)
+    } else {
+        x
+    }
+}
+
+/// Re-stamping a `DagTemplate` with perturbed durations (same zero
+/// pattern, hence the same structure signature) must equal a fresh
+/// `build_with`: every duration bit, every edge, and every simulated
+/// timestamp, bit-for-bit.
+#[test]
+fn prop_template_stamp_equals_fresh_build() {
+    use dagsgd::cluster::presets;
+    use dagsgd::dag::builder::{self, DagTemplate, JobSpec};
+    use dagsgd::frameworks::strategy;
+    use dagsgd::models::zoo;
+
+    check(30, |g| {
+        let clusters = [presets::k80_cluster(), presets::v100_cluster()];
+        let cluster = &clusters[g.usize(0, clusters.len() - 1)];
+        let nets = zoo::all();
+        let net = nets[g.usize(0, nets.len() - 1)].clone();
+        let fws = strategy::all();
+        let mut fw = fws[g.usize(0, fws.len() - 1)].clone();
+        fw.layerwise_update = g.bool();
+        let job = JobSpec {
+            batch_per_gpu: net.default_batch,
+            net,
+            nodes: g.usize(1, 2),
+            gpus_per_node: g.usize(1, 2),
+            iterations: g.usize(3, 5),
+        };
+        let res = cluster.build_resources(job.nodes, job.gpus_per_node);
+        let dur1 = builder::durations(cluster, &job, &fw);
+
+        let mut dur2 = dur1.clone();
+        dur2.io = perturb(g, dur2.io);
+        dur2.decode = perturb(g, dur2.decode);
+        dur2.h2d = perturb(g, dur2.h2d);
+        dur2.update = perturb(g, dur2.update);
+        for l in 0..dur2.fwd.len() {
+            dur2.fwd[l] = perturb(g, dur2.fwd[l]);
+            dur2.bwd[l] = perturb(g, dur2.bwd[l]);
+            dur2.comm[l] = perturb(g, dur2.comm[l]);
+        }
+
+        let tpl = DagTemplate::build(&res, &job, &fw, &dur1);
+        prop_assert!(
+            tpl.matches(&dur2),
+            "perturbed durations changed the structure signature"
+        );
+        let stamped = tpl.stamp(&dur2);
+        let fresh = builder::build_with(&res, &job, &fw, &dur2);
+        prop_assert_eq!(stamped.len(), fresh.len());
+        prop_assert_eq!(stamped.edge_count(), fresh.edge_count());
+        for t in 0..fresh.len() {
+            prop_assert!(
+                stamped.tasks[t].duration.to_bits() == fresh.tasks[t].duration.to_bits(),
+                "task {} duration: stamped {} vs fresh {}",
+                t,
+                stamped.tasks[t].duration,
+                fresh.tasks[t].duration
+            );
+            prop_assert!(
+                stamped.succs_of(t) == fresh.succs_of(t),
+                "task {t} successor lists differ"
+            );
+        }
+        let a = simulate(&stamped, &res.pool);
+        let b = simulate(&fresh, &res.pool);
+        let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+        prop_assert!(bits(&a.start) == bits(&b.start), "start timelines differ");
+        prop_assert!(bits(&a.finish) == bits(&b.finish), "finish timelines differ");
+        prop_assert!(bits(&a.busy) == bits(&b.busy), "busy accounting differs");
+        prop_assert_eq!(a.events, b.events);
         Ok(())
     });
 }
