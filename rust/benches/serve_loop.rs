@@ -1,0 +1,78 @@
+//! Bench: the serve daemon's query loop.
+//!
+//! Measures the cold (simulating) and hot (fully cached) cost of one
+//! query batch through `serve::daemon::Engine`, asserts the hot wave
+//! performs **zero** simulation and answers bit-identically to the
+//! cold wave, and writes the daemon's own schema-versioned stats
+//! document to `BENCH_serve.json` at the repository root (override
+//! with `BENCH_SERVE_OUT`) with the harness timings appended, so the
+//! bench ratchet tracks daemon throughput alongside the other benches.
+//!
+//!     cargo bench --bench serve_loop
+
+use dagsgd::bench::harness::Bench;
+use dagsgd::campaign::runner;
+use dagsgd::experiments::whatif as whatif_exp;
+use dagsgd::serve::daemon::Engine;
+use dagsgd::serve::protocol;
+use dagsgd::util::json::{self, Json};
+use std::path::PathBuf;
+
+const BATCH: &str = r#"{"fabric": "measured,10gbe,ideal", "scheduler": "fifo,fusion"}"#;
+
+fn main() {
+    let mut bench = Bench::new("serve_loop").with_iters(1, 2);
+    let jobs = runner::auto_jobs();
+    let profile = whatif_exp::profile_at(8, 7, 2);
+
+    // How many cells one batch expands to (sets the per-second rate).
+    let probe = Engine::new(vec![profile.clone()], jobs).expect("probe engine");
+    let first = json::parse(&probe.answer_line(BATCH)).expect("probe response");
+    assert!(first.get("error").is_none(), "probe batch failed: {first}");
+    let per_batch = first.get("batch").unwrap().get("requested").unwrap().as_f64().unwrap();
+    println!("serve batch: {per_batch} queries");
+
+    // Cold: a fresh engine per run — every cell simulates.
+    let cold = bench.case("serve_cold_batch (q/s)", per_batch, || {
+        let engine = Engine::new(vec![profile.clone()], jobs).expect("cold engine");
+        engine.answer_line(BATCH)
+    });
+    let cj = json::parse(&cold).unwrap();
+    let cold_sim = cj.get("batch").unwrap().get("simulated").unwrap().as_f64().unwrap();
+    assert!(cold_sim > 0.0, "cold wave must simulate");
+
+    // Hot: one engine, repeated identical batches — zero simulation.
+    let engine = Engine::new(vec![profile], jobs).expect("hot engine");
+    let _ = engine.answer_line(BATCH); // warm the store
+    let hot = bench.case("serve_hot_batch (q/s)", per_batch, || engine.answer_line(BATCH));
+    let hj = json::parse(&hot).unwrap();
+    let hot_sim = hj.get("batch").unwrap().get("simulated").unwrap().as_f64().unwrap();
+    assert_eq!(hot_sim, 0.0, "hot wave must not simulate");
+    // Apart from cache provenance, the hot answer is the cold answer.
+    let cold_q = cj.get("queries").unwrap().to_string().replace("\"miss\"", "\"hit\"");
+    assert_eq!(cold_q, hj.get("queries").unwrap().to_string());
+
+    bench.report();
+
+    // The daemon's own stats document, harness rows appended.
+    let mut doc = engine.stats_json();
+    if let Json::Obj(m) = &mut doc {
+        let mut cases = match m.remove("bench_cases") {
+            Some(Json::Arr(rows)) => rows,
+            _ => Vec::new(),
+        };
+        if let Json::Arr(rows) = bench.rows_json() {
+            cases.extend(rows);
+        }
+        m.insert("bench_cases".to_string(), Json::Arr(cases));
+    }
+    protocol::validate_stats(&doc).expect("serve bench stats must be schema-valid");
+    let out = std::env::var("BENCH_SERVE_OUT").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("manifest dir has a parent")
+            .join("BENCH_serve.json")
+    });
+    std::fs::write(&out, doc.to_string()).expect("write BENCH_serve.json");
+    println!("wrote {}", out.display());
+}

@@ -1,0 +1,69 @@
+//! The unified what-if query API, programmatically: build a request
+//! with the crate-root surface (`dagsgd::{Request, CalibratedProfile,
+//! Fabric, Topology, SchedulerKind}`), stand up an in-process serve
+//! engine, and answer the same batch twice — cold (simulated) and hot
+//! (every cell from the content-addressed store). The second wave is
+//! byte-identical apart from its cache provenance, which is the serve
+//! daemon's determinism contract.
+//!
+//!     cargo run --release --example query_serve -- [--filter resnet50]
+use dagsgd::experiments::whatif as whatif_exp;
+use dagsgd::serve::daemon::Engine;
+use dagsgd::util::cli::Args;
+use dagsgd::util::json;
+use dagsgd::{CalibratedProfile, Fabric, Request, SchedulerKind, Topology};
+
+fn main() {
+    let args = Args::from_env();
+
+    // A demo profile: the paper grid calibrated from synthetic traces.
+    // (Real callers load one with `query::request::load_profile` or run
+    // `dagsgd calibrate --traces DIR --out profile.json`.)
+    let profile: CalibratedProfile = whatif_exp::profile_at(8, 7, 2);
+    println!("profile {} ({} entries)\n", profile.tag(), profile.entries.len());
+
+    // One request, three axes: what do these measured jobs do on an
+    // ideal fabric and a 2x4 layout, under fifo vs fusion scheduling?
+    let mut req = Request::new();
+    req.entry = args.get("filter").map(str::to_string);
+    req.fabrics = vec![Fabric::Measured, Fabric::Ideal];
+    req.topologies = vec![None, Some(Topology::new(2, 4).expect("2x4 topology"))];
+    req.schedulers = vec![SchedulerKind::Fifo, SchedulerKind::Fusion];
+    println!("query: {}\n", req.canonical());
+
+    let engine = Engine::new(vec![profile], 4).expect("engine");
+    let line = req.to_json().to_string();
+
+    for wave in ["cold", "hot"] {
+        let resp = json::parse(&engine.answer_line(&line)).expect("response line");
+        if let Some(err) = resp.get("error").and_then(|e| e.as_str()) {
+            eprintln!("query failed: {err}");
+            std::process::exit(1);
+        }
+        let batch = resp.get("batch").unwrap();
+        println!(
+            "{wave} wave: {} queries, {} simulated, {} cached",
+            batch.get("requested").unwrap(),
+            batch.get("simulated").unwrap(),
+            batch.get("cached").unwrap(),
+        );
+        for q in resp.get("queries").unwrap().as_arr().unwrap() {
+            println!(
+                "  {:44} {:>9.1} ms  gap-to-ideal {:>8.2} ms  [{}]",
+                q.get("key").and_then(|k| k.as_str()).unwrap_or("?"),
+                q.get("iter_time_s").unwrap().as_f64().unwrap() * 1e3,
+                q.get("gap_to_ideal_s").unwrap().as_f64().unwrap() * 1e3,
+                q.get("cache").unwrap().as_str().unwrap(),
+            );
+        }
+        println!();
+    }
+
+    let stats = engine.stats_snapshot();
+    println!(
+        "store: {} cells hot, hit rate {:.0}% across {} batches",
+        engine.cached_cells(),
+        stats.hit_rate() * 100.0,
+        stats.batches
+    );
+}

@@ -16,8 +16,10 @@
 use super::grid::{CellResult, Scenario};
 use super::report::{self, SCHEMA_VERSION};
 use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::process;
+use std::sync::Mutex;
 
 /// FNV-1a 64-bit (the classic offset basis / prime).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -30,7 +32,9 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 }
 
 /// Hash preimage for a cell: schema version prefix + canonical key.
-fn preimage(scenario: &Scenario) -> String {
+/// [`MemCache`] keys by the same string, so the in-memory and on-disk
+/// stores agree on cell identity (including schema bumps).
+pub(crate) fn preimage(scenario: &Scenario) -> String {
     format!("v{SCHEMA_VERSION}|{}", scenario.key())
 }
 
@@ -88,6 +92,46 @@ impl Cache {
         let tmp = path.with_extension(format!("tmp.{}", process::id()));
         std::fs::write(&tmp, entry.to_string())?;
         std::fs::rename(&tmp, &path)
+    }
+}
+
+/// The `serve` daemon's hot result store: the on-disk [`Cache`]'s
+/// content addressing (same schema-versioned [`preimage`]) held in a
+/// mutex-guarded map instead of one file per cell. Results are clones
+/// of what the workers computed — no serialization round trip — so hits
+/// are bit-identical to fresh cells by construction.
+#[derive(Debug, Default)]
+pub struct MemCache {
+    map: Mutex<BTreeMap<String, CellResult>>,
+}
+
+impl MemCache {
+    pub fn new() -> MemCache {
+        MemCache::default()
+    }
+
+    /// Cells currently held.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("memcache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn get(&self, scenario: &Scenario) -> Option<CellResult> {
+        self.map
+            .lock()
+            .expect("memcache poisoned")
+            .get(&preimage(scenario))
+            .cloned()
+    }
+
+    pub fn put(&self, scenario: &Scenario, result: &CellResult) {
+        self.map
+            .lock()
+            .expect("memcache poisoned")
+            .insert(preimage(scenario), result.clone());
     }
 }
 
@@ -176,5 +220,23 @@ mod tests {
         ]);
         std::fs::write(c.path_of(&s), old.to_string()).unwrap();
         assert!(c.get(&s).is_none());
+    }
+
+    #[test]
+    fn memcache_roundtrip_is_bit_identical() {
+        let m = MemCache::new();
+        let s = scenario();
+        assert!(m.is_empty() && m.get(&s).is_none());
+        let r = result();
+        m.put(&s, &r);
+        assert_eq!(m.len(), 1);
+        let back = m.get(&s).expect("hit after put");
+        for (k, v) in &r.metrics {
+            assert_eq!(back.get(k).unwrap().to_bits(), v.to_bits(), "metric {k}");
+        }
+        // Same preimage discipline as the on-disk cache: a different
+        // scenario (different seed) is a different cell.
+        let reseeded = grid::by_name("smoke", 8).unwrap().expand().remove(0);
+        assert!(m.get(&reseeded).is_none());
     }
 }

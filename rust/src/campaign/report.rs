@@ -72,53 +72,54 @@ pub fn metrics_from_json(j: &Json) -> Result<CellResult, String> {
     Ok(r)
 }
 
+/// One sweep cell as its schema-v1 report object — shared by the full
+/// campaign report and the `serve` daemon's per-query responses, so a
+/// daemon answer and a `BENCH_campaign.json` cell are the same shape.
+pub fn cell_to_json(s: &crate::campaign::grid::Scenario, r: &CellResult) -> Json {
+    Json::obj(vec![
+        ("key", Json::str(s.key())),
+        ("cluster", Json::str(s.cluster.clone())),
+        ("interconnect", Json::str(s.interconnect.name())),
+        ("net", Json::str(s.net.clone())),
+        ("framework", Json::str(s.framework.clone())),
+        ("nodes", Json::num(s.nodes as f64)),
+        ("gpus_per_node", Json::num(s.gpus_per_node as f64)),
+        (
+            "batch_per_gpu",
+            s.batch_per_gpu.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+        ),
+        ("iterations", Json::num(s.iterations as f64)),
+        ("scheduler", Json::str(s.scheduler.name())),
+        ("layerwise_update", Json::Bool(s.layerwise_update)),
+        ("seed", Json::num(s.seed as f64)),
+        (
+            "profile",
+            s.profile
+                .as_ref()
+                .map(|p| Json::str(p.clone()))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "fabric",
+            s.fabric
+                .as_ref()
+                .map(|f| Json::str(f.clone()))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "topology",
+            s.topology
+                .as_ref()
+                .map(|t| Json::str(t.clone()))
+                .unwrap_or(Json::Null),
+        ),
+        ("metrics", metrics_to_json(r)),
+    ])
+}
+
 /// Build the full report for a finished sweep.
 pub fn to_json(grid_name: &str, outcome: &Outcome) -> Json {
-    let cells: Vec<Json> = outcome
-        .cells
-        .iter()
-        .map(|(s, r)| {
-            Json::obj(vec![
-                ("key", Json::str(s.key())),
-                ("cluster", Json::str(s.cluster.clone())),
-                ("interconnect", Json::str(s.interconnect.name())),
-                ("net", Json::str(s.net.clone())),
-                ("framework", Json::str(s.framework.clone())),
-                ("nodes", Json::num(s.nodes as f64)),
-                ("gpus_per_node", Json::num(s.gpus_per_node as f64)),
-                (
-                    "batch_per_gpu",
-                    s.batch_per_gpu.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
-                ),
-                ("iterations", Json::num(s.iterations as f64)),
-                ("scheduler", Json::str(s.scheduler.name())),
-                ("layerwise_update", Json::Bool(s.layerwise_update)),
-                ("seed", Json::num(s.seed as f64)),
-                (
-                    "profile",
-                    s.profile
-                        .as_ref()
-                        .map(|p| Json::str(p.clone()))
-                        .unwrap_or(Json::Null),
-                ),
-                (
-                    "fabric",
-                    s.fabric
-                        .as_ref()
-                        .map(|f| Json::str(f.clone()))
-                        .unwrap_or(Json::Null),
-                ),
-                (
-                    "topology",
-                    s.topology
-                        .as_ref()
-                        .map(|t| Json::str(t.clone()))
-                        .unwrap_or(Json::Null),
-                ),
-                ("metrics", metrics_to_json(r)),
-            ])
-        })
-        .collect();
+    let cells: Vec<Json> = outcome.cells.iter().map(|(s, r)| cell_to_json(s, r)).collect();
     Json::obj(vec![
         ("schema_version", Json::num(SCHEMA_VERSION as f64)),
         ("bench", Json::str("campaign")),

@@ -10,7 +10,7 @@
 //! two sweeps of the same grid with the same seed must serialize to the
 //! same canonical bytes.
 
-use super::cache::Cache;
+use super::cache::{Cache, MemCache};
 use super::grid::{self, CellResult, Scenario};
 use crate::cluster::topology::ClusterSpec;
 use crate::dag::builder::{self, JobSpec};
@@ -47,6 +47,37 @@ pub struct Outcome {
 /// [`crate::util::cli::host_parallelism`] — one definition, two names.
 pub fn auto_jobs() -> usize {
     crate::util::cli::host_parallelism()
+}
+
+/// A scenario-keyed result store the sweep consults before simulating.
+/// Implementations must be safe to share across the worker pool; `put`
+/// is best-effort (an unwritable store degrades to recomputation,
+/// never to failure). The on-disk [`Cache`] and the daemon's
+/// [`MemCache`] both implement it, so one sweep loop serves the CLI
+/// and the `serve` daemon.
+pub trait Store: Sync {
+    fn get(&self, s: &Scenario) -> Option<CellResult>;
+    fn put(&self, s: &Scenario, r: &CellResult);
+}
+
+impl Store for Cache {
+    fn get(&self, s: &Scenario) -> Option<CellResult> {
+        Cache::get(self, s)
+    }
+
+    fn put(&self, s: &Scenario, r: &CellResult) {
+        let _ = Cache::put(self, s, r);
+    }
+}
+
+impl Store for MemCache {
+    fn get(&self, s: &Scenario) -> Option<CellResult> {
+        MemCache::get(self, s)
+    }
+
+    fn put(&self, s: &Scenario, r: &CellResult) {
+        MemCache::put(self, s, r);
+    }
 }
 
 /// Sweep `scenarios` with the standard cell measurement
@@ -196,6 +227,23 @@ pub fn run_with<F>(scenarios: &[Scenario], jobs: usize, cache: Option<&Cache>, c
 where
     F: Fn(&Scenario) -> CellResult + Sync,
 {
+    run_stored(scenarios, jobs, cache.map(|c| c as &dyn Store), cell)
+}
+
+/// [`run_with`] over any [`Store`] — the daemon passes its hot
+/// [`MemCache`] here, the CLI path passes the on-disk [`Cache`]. Same
+/// determinism contract: results are identical for any worker count and
+/// any store state (hits are byte-for-byte what a fresh `cell` call
+/// would produce).
+pub fn run_stored<F>(
+    scenarios: &[Scenario],
+    jobs: usize,
+    store: Option<&dyn Store>,
+    cell: F,
+) -> Outcome
+where
+    F: Fn(&Scenario) -> CellResult + Sync,
+{
     let t0 = Instant::now();
     let jobs = jobs.clamp(1, scenarios.len().max(1));
     let cursor = AtomicUsize::new(0);
@@ -217,15 +265,13 @@ where
                     break;
                 }
                 let s = &scenarios[i];
-                let result = match cache.and_then(|c| c.get(s)) {
+                let result = match store.and_then(|c| c.get(s)) {
                     Some(hit) => hit,
                     None => {
                         let fresh = cell(s);
                         simulated.fetch_add(1, Ordering::Relaxed);
-                        if let Some(c) = cache {
-                            // Best-effort: an unwritable cache degrades
-                            // to recomputation, never to failure.
-                            let _ = c.put(s, &fresh);
+                        if let Some(c) = store {
+                            c.put(s, &fresh);
                         }
                         fresh
                     }
@@ -321,5 +367,21 @@ mod tests {
         let out = run_with(&[], 4, None, fake_cell);
         assert!(out.cells.is_empty());
         assert_eq!(out.stats.simulated + out.stats.cached, 0);
+    }
+
+    #[test]
+    fn memcache_store_serves_the_second_wave() {
+        let store = MemCache::new();
+        let cells = smoke_cells();
+        let first = run_stored(&cells, 4, Some(&store), fake_cell);
+        assert_eq!(first.stats.simulated, cells.len());
+        assert_eq!(store.len(), cells.len());
+
+        let second = run_stored(&cells, 4, Some(&store), fake_cell);
+        assert_eq!(second.stats.simulated, 0, "hot store must serve every cell");
+        assert_eq!(second.stats.cached, cells.len());
+        for ((_, a), (_, b)) in first.cells.iter().zip(second.cells.iter()) {
+            assert_eq!(a, b, "hits must be bit-identical to fresh results");
+        }
     }
 }

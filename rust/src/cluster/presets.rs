@@ -92,7 +92,10 @@ pub fn by_name(name: &str) -> Option<ClusterSpec> {
     match name {
         "k80" | "cluster1" | "k80-pcie-10gbe" => Some(k80_cluster()),
         "v100" | "cluster2" | "v100-nvlink-ib" => Some(v100_cluster()),
-        "localhost" => Some(localhost_cluster(4)),
+        // "localhost-shm" is what the runtime trainer stamps its traces
+        // with (the cluster's own `name` field), so `calibrate` can
+        // resolve self-measured traces without a rename.
+        "localhost" | "localhost-shm" => Some(localhost_cluster(4)),
         _ => None,
     }
 }
@@ -122,5 +125,7 @@ mod tests {
         assert!(by_name("v100").is_some());
         assert!(by_name("nope").is_none());
         assert_eq!(by_name("cluster1").unwrap().name, "k80-pcie-10gbe");
+        // The trainer's trace cluster tag resolves to itself.
+        assert_eq!(by_name("localhost-shm").unwrap().name, "localhost-shm");
     }
 }

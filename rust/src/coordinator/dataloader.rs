@@ -119,11 +119,6 @@ impl Loader {
         self.rx.recv().expect("loader thread died")
     }
 
-    /// Non-blocking fetch; `None` when the buffer is empty (the consumer
-    /// would have stalled — an I/O-bound iteration).
-    pub fn try_next(&self) -> Option<Batch> {
-        self.rx.try_recv().ok()
-    }
 }
 
 impl Drop for Loader {

@@ -21,6 +21,14 @@
 //!   chunked ring all-reduce with wait-free-backprop bucketing, and emit
 //!   layer-wise traces in the paper's format.
 //!
+//! A third, thin layer is the **query surface** ([`query`], [`serve`],
+//! [`campaign`]): one [`Request`] type that the CLI, the `serve`
+//! prediction daemon and programmatic callers all resolve what-if
+//! questions through, answered from a content-addressed result cache.
+//! The stable entry points are re-exported at the crate root:
+//! [`Request`], [`CalibratedProfile`], [`Fabric`], [`Topology`],
+//! [`SchedulerKind`], [`Bench`].
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
 
@@ -62,7 +70,7 @@ pub mod comm {
     pub mod alpha_beta;
     pub mod allreduce;
     pub mod message_sim;
-    pub mod schedule;
+    pub(crate) mod schedule;
 }
 
 pub mod models {
@@ -103,6 +111,15 @@ pub mod campaign {
     pub mod runner;
 }
 
+pub mod query {
+    pub mod request;
+}
+
+pub mod serve {
+    pub mod daemon;
+    pub mod protocol;
+}
+
 pub mod experiments;
 
 pub mod bench {
@@ -119,8 +136,17 @@ pub mod runtime {
 pub mod coordinator {
     pub mod allreduce;
     pub mod bucket;
-    pub mod dataloader;
+    pub(crate) mod dataloader;
     pub mod metrics;
     pub mod trainer;
-    pub mod worker;
+    pub(crate) mod worker;
 }
+
+// The stable public surface, re-exported at the crate root so external
+// callers (and `examples/`) depend on one import path instead of the
+// internal module tree.
+pub use bench::harness::Bench;
+pub use calib::fit::CalibratedProfile;
+pub use calib::whatif::{Fabric, Topology};
+pub use query::request::Request;
+pub use sim::scheduler::SchedulerKind;

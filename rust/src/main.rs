@@ -18,6 +18,10 @@
 //!                                over fitted channels)
 //!   table5    [flags]            the Table V validation table end to end
 //!   train     [flags]            real S-SGD training via PJRT artifacts
+//!   serve     [flags]            prediction daemon: load calibrated
+//!                                profiles once, answer what-if queries
+//!                                over newline-delimited JSON (stdin or
+//!                                TCP) from a hot in-memory cache
 //!   ratchet   [flags]            compare two BENCH_*.json files and fail
 //!                                on throughput regressions (CI perf gate)
 //!
@@ -31,6 +35,7 @@ use dagsgd::dag::builder::{self, JobSpec};
 use dagsgd::experiments::{fig2, fig3, fig4, info, sched};
 use dagsgd::frameworks::strategy;
 use dagsgd::models::zoo;
+use dagsgd::query::request::{self as query, Request};
 use dagsgd::runtime::artifacts;
 use dagsgd::sim::scheduler::SchedulerKind;
 use dagsgd::sim::{executor, timeline};
@@ -56,11 +61,12 @@ fn main() {
         "whatif" => cmd_whatif(&args),
         "table5" => cmd_table5(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "analyze" => cmd_analyze(&args),
         "ratchet" => cmd_ratchet(&args),
         other => {
             eprintln!(
-                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|calibrate|whatif|table5|train|analyze|ratchet> [--flags]\n\
+                "usage: dagsgd <info|simulate|predict|sweep|fig4|sched|campaign|traces|calibrate|whatif|table5|train|serve|analyze|ratchet> [--flags]\n\
                  see README.md for per-command flags"
             );
             if other == "help" {
@@ -109,26 +115,23 @@ fn cmd_info() -> i32 {
     0
 }
 
-fn parse_scheduler(name: &str) -> SchedulerKind {
-    SchedulerKind::by_name(name).unwrap_or_else(|| {
-        eprintln!("unknown scheduler '{name}' (try fifo, priority, critical-path, fusion)");
+/// Parse `--scheduler fifo|priority|critical-path|fusion` (single
+/// value) via the shared query dialect.
+fn scheduler_arg(args: &Args) -> SchedulerKind {
+    query::parse_scheduler(&args.str_or("scheduler", "fifo")).unwrap_or_else(|e| {
+        eprintln!("{}", e.msg);
         std::process::exit(2);
     })
-}
-
-/// Parse `--scheduler fifo|priority|critical-path|fusion` (single value).
-fn scheduler_arg(args: &Args) -> SchedulerKind {
-    parse_scheduler(&args.str_or("scheduler", "fifo"))
 }
 
 /// Parse `--scheduler` as a comma list, falling back to `default` when
 /// the flag is absent (`sched` compares every policy by default; the
 /// profile sweep defaults to fifo only).
-fn scheduler_list_or(args: &Args, default: &[SchedulerKind]) -> Vec<SchedulerKind> {
-    match args.get("scheduler") {
-        None => default.to_vec(),
-        Some(v) => v.split(',').map(|n| parse_scheduler(n.trim())).collect(),
-    }
+fn scheduler_list_arg(args: &Args, default: &[SchedulerKind]) -> Vec<SchedulerKind> {
+    query::scheduler_list_or(args, default).unwrap_or_else(|e| {
+        eprintln!("{}", e.msg);
+        std::process::exit(2);
+    })
 }
 
 /// `dagsgd sched` — the scheduler-policy comparison experiment: one
@@ -152,7 +155,7 @@ fn cmd_sched(args: &Args) -> i32 {
     job.iterations = args.usize_or("iters", job.iterations);
     let mut fw = fw_arg(args);
     fw.layerwise_update = args.bool_or("layerwise", true);
-    let kinds = scheduler_list_or(args, &SchedulerKind::all());
+    let kinds = scheduler_list_arg(args, &SchedulerKind::all());
     let pts = sched::run(&cluster, &job, &fw, &kinds);
     print!("{}", sched::render(&job, &cluster, &fw, &pts));
     0
@@ -256,18 +259,6 @@ fn cmd_campaign(args: &Args) -> i32 {
     write_campaign_report(args, &grid_name, &outcome)
 }
 
-/// Load + schema-check a calibrated profile file.
-fn load_profile(path: &str) -> Result<dagsgd::calib::fit::CalibratedProfile, String> {
-    std::fs::read_to_string(path)
-        .map_err(|e| format!("cannot read {path}: {e}"))
-        .and_then(|t| {
-            dagsgd::util::json::parse(&t).map_err(|e| format!("{path}: invalid JSON: {e}"))
-        })
-        .and_then(|j| {
-            dagsgd::calib::fit::CalibratedProfile::from_json(&j).map_err(|e| format!("{path}: {e}"))
-        })
-}
-
 /// Shared `--cache-dir DIR|none` handling of the campaign sweeps.
 fn cache_arg(args: &Args) -> Result<Option<dagsgd::campaign::cache::Cache>, String> {
     let cache_dir = args.str_or("cache-dir", ".campaign-cache");
@@ -297,62 +288,6 @@ fn write_campaign_report(
     0
 }
 
-/// Parse the topology (scale-out) axis: `--topology LIST` where each
-/// element is `<nodes>x<gpus_per_node>` or the word `measured` (the
-/// entry's own layout), plus `--nodes N --gpus G` appending one explicit
-/// target. Defaults to the measured layout alone.
-fn topologies_arg(args: &Args) -> Result<Vec<Option<dagsgd::calib::whatif::Topology>>, String> {
-    use dagsgd::calib::whatif::Topology;
-    let mut topologies: Vec<Option<Topology>> = match args.get("topology") {
-        None => vec![],
-        Some(list) => list
-            .split(',')
-            .map(|t| match t.trim() {
-                "measured" => Ok(None),
-                s => Topology::parse(s).map(Some),
-            })
-            .collect::<Result<Vec<_>, String>>()?,
-    };
-    match (args.get("nodes"), args.get("gpus")) {
-        (None, None) => {}
-        (Some(n), Some(g)) => {
-            let nodes: usize = n.parse().map_err(|e| format!("--nodes: {e}"))?;
-            let gpus: usize = g.parse().map_err(|e| format!("--gpus: {e}"))?;
-            topologies.push(Some(Topology::new(nodes, gpus)?));
-        }
-        _ => return Err("--nodes and --gpus must be given together (one topology)".into()),
-    }
-    if topologies.is_empty() {
-        topologies.push(None);
-    }
-    Ok(topologies)
-}
-
-/// Parse the fabric axis: `--fabric NAME[,NAME...]` (measured, ideal,
-/// stock, 10gbe, 100gb-ib, cluster presets, or `alpha<S>-bw<B/S>`),
-/// plus `--alpha SECONDS --beta BYTES_PER_S` appending one explicit α–β
-/// channel. Defaults to the measured fabric alone.
-fn fabrics_arg(args: &Args) -> Result<Vec<dagsgd::calib::whatif::Fabric>, String> {
-    use dagsgd::calib::whatif::Fabric;
-    let mut fabrics = match args.get("fabric") {
-        None => vec![Fabric::Measured],
-        Some(list) => list
-            .split(',')
-            .map(|n| Fabric::parse(n.trim()))
-            .collect::<Result<Vec<_>, String>>()?,
-    };
-    match (args.get("alpha"), args.get("beta")) {
-        (None, None) => {}
-        (Some(a), Some(b)) => {
-            let alpha: f64 = a.parse().map_err(|e| format!("--alpha: {e}"))?;
-            let bw: f64 = b.parse().map_err(|e| format!("--beta: {e}"))?;
-            fabrics.push(Fabric::alpha_beta(alpha, bw)?);
-        }
-        _ => return Err("--alpha and --beta must be given together (one α–β fabric)".into()),
-    }
-    Ok(fabrics)
-}
-
 /// `dagsgd campaign --profile FILE` — sweep a calibrated profile: one
 /// cell per profile entry × scheduler (`--scheduler`, default fifo),
 /// each replaying the measured per-layer times through the DAG
@@ -360,15 +295,18 @@ fn fabrics_arg(args: &Args) -> Result<Vec<dagsgd::calib::whatif::Fabric>, String
 /// `--alpha/--beta`) and/or `--topology LIST` (and/or
 /// `--nodes/--gpus`) switches to the what-if axes — entries ×
 /// hypothetical topologies × fabrics × schedulers (`calib::whatif`).
-/// Cells are cached content-addressed (the profile's hash plus fabric
-/// and topology names are part of every key), and the report flows
-/// through the standard `BENCH_campaign.json` machinery with
-/// `grid: "calib"` or `"whatif"`.
+/// The flag dialect, validation and per-cell dispatch all live in
+/// [`query::Request`] — the same path the `whatif` command and the
+/// `serve` daemon resolve queries through. Cells are cached
+/// content-addressed (the profile's hash plus fabric and topology
+/// names are part of every key), and the report flows through the
+/// standard `BENCH_campaign.json` machinery with `grid: "calib"` or
+/// `"whatif"`.
 fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
-    use dagsgd::calib::{replay, whatif};
+    use dagsgd::calib::replay;
     use dagsgd::campaign::{report, runner};
 
-    let profile = match load_profile(path).and_then(|p| {
+    let profile = match query::load_profile(path).and_then(|p| {
         replay::validate_profile(&p)?;
         Ok(p)
     }) {
@@ -378,64 +316,32 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
             return 1;
         }
     };
-    let kinds = scheduler_list_or(args, &[SchedulerKind::Fifo]);
-    // A lone --nodes (or --gpus) must reach topologies_arg's pairing
-    // error instead of silently running a measured-scale sweep.
-    let whatif_axes = args.has("fabric")
-        || args.has("alpha")
-        || args.has("beta")
-        || args.has("topology")
-        || args.has("nodes")
-        || args.has("gpus");
-    let fabrics = if whatif_axes {
-        match fabrics_arg(args) {
-            Ok(f) => Some(f),
-            Err(e) => {
-                eprintln!("campaign: {e}");
-                return 2;
-            }
-        }
-    } else {
-        None
-    };
-    let (mut cells, grid_name) = match &fabrics {
-        Some(f) => {
-            let topologies = match topologies_arg(args) {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!("campaign: {e}");
-                    return 2;
-                }
-            };
-            if let Err(e) = whatif::validate_whatif(&profile, f, &topologies) {
-                eprintln!("{e}");
-                return 1;
-            }
-            (whatif::scenarios(&profile, f, &topologies, &kinds), "whatif")
-        }
-        None => (replay::scenarios(&profile, &kinds), "calib"),
-    };
-    if let Some(pat) = args.get("filter") {
-        cells.retain(|s| s.key().contains(pat));
-        if cells.is_empty() {
-            eprintln!("--filter matched none of the profile's cells");
+    let req = match Request::from_args(args, &[SchedulerKind::Fifo]) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{}", e.render("campaign"));
             return 2;
         }
+    };
+    if let Err(e) = req.validate(&profile) {
+        eprintln!("{e}");
+        return 1;
+    }
+    let cells = req.scenarios(&profile);
+    if cells.is_empty() {
+        eprintln!("--filter matched none of the profile's cells");
+        return 2;
     }
     // One measured replay per entry x scheduler appearing in a
     // hypothetical *retained* cell, shared instead of re-simulated per
     // cell (computed after --filter so narrowed sweeps pay only for
     // what they keep).
-    let baselines = if fabrics.is_some() {
-        match whatif::measured_baselines(&profile, &cells) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("{e}");
-                return 1;
-            }
+    let baselines = match req.baselines(&profile, &cells) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
         }
-    } else {
-        std::collections::BTreeMap::new()
     };
     let jobs = args.parallelism_or("jobs", 4);
     let cache = match cache_arg(args) {
@@ -445,17 +351,12 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
             return 1;
         }
     };
-    let outcome = match &fabrics {
-        Some(_) => runner::run_with(&cells, jobs, cache.as_ref(), |s| {
-            whatif::whatif_cell_with(&profile, s, &baselines)
-        }),
-        None => runner::run_with(&cells, jobs, cache.as_ref(), |s| {
-            replay::replay_cell(&profile, s)
-        }),
-    };
+    let outcome = runner::run_with(&cells, jobs, cache.as_ref(), |s| {
+        Request::cell(&profile, &baselines, s)
+    });
     print!("{}", report::render_table(&outcome));
-    println!("{grid_name} ({}): {}", profile.tag(), report::summary(&outcome));
-    write_campaign_report(args, grid_name, &outcome)
+    println!("{} ({}): {}", req.grid_name(), profile.tag(), report::summary(&outcome));
+    write_campaign_report(args, req.grid_name(), &outcome)
 }
 
 /// `dagsgd whatif` — the calibrated what-if engine: predict a profile's
@@ -483,8 +384,13 @@ fn cmd_whatif(args: &Args) -> i32 {
         });
     }
 
-    let kinds = scheduler_list_or(args, &[SchedulerKind::Fifo]);
-    let autotune = args.bool_or("autotune-fusion", false);
+    let req = match Request::from_args(args, &[SchedulerKind::Fifo]) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{}", e.render("whatif"));
+            return 2;
+        }
+    };
     let jobs = args.parallelism_or("jobs", 4);
     let ladder = args.bool_or("scale-ladder", false);
     if ladder {
@@ -499,36 +405,29 @@ fn cmd_whatif(args: &Args) -> i32 {
                 return 2;
             }
         }
-        if autotune {
+        if req.autotune_fusion {
             eprintln!("whatif: --scale-ladder does not support --autotune-fusion");
             return 2;
         }
     }
-    let topologies = match topologies_arg(args) {
-        Ok(t) => t,
-        Err(e) => {
-            eprintln!("whatif: {e}");
-            return 2;
-        }
-    };
 
-    let (profile, rows) = match args.get("profile") {
+    let (profile, rows) = match &req.profile {
         Some(path) => {
-            let profile = match load_profile(path) {
+            let profile = match query::load_profile(path) {
                 Ok(p) => p,
                 Err(e) => {
                     eprintln!("{e}");
                     return 1;
                 }
             };
-            let fabrics = match fabrics_arg(args) {
-                Ok(f) => f,
-                Err(e) => {
-                    eprintln!("whatif: {e}");
-                    return 2;
-                }
-            };
-            let swept = whatif::rows(&profile, &fabrics, &topologies, &kinds, autotune, jobs);
+            let swept = whatif::rows(
+                &profile,
+                &req.fabrics,
+                &req.topologies,
+                &req.schedulers,
+                req.autotune_fusion,
+                jobs,
+            );
             let rows = match swept {
                 Ok(r) => r,
                 Err(e) => {
@@ -543,7 +442,7 @@ fn cmd_whatif(args: &Args) -> i32 {
             // and predict 1/2/4/8-node jobs from it.
             let iters = args.usize_or("iters", whatif_exp::DEFAULT_TRACE_ITERS);
             let seed = args.u64_or("seed", 7);
-            match whatif_exp::run_scale(iters, seed, &kinds, jobs) {
+            match whatif_exp::run_scale(iters, seed, &req.schedulers, jobs) {
                 Ok(pair) => pair,
                 Err(e) => {
                     eprintln!("whatif: {e}");
@@ -556,19 +455,22 @@ fn cmd_whatif(args: &Args) -> i32 {
             // Explicit --fabric/--alpha/--beta are honored; otherwise
             // the experiment's standard fabric ladder is swept.
             let fabrics = if args.has("fabric") || args.has("alpha") || args.has("beta") {
-                match fabrics_arg(args) {
-                    Ok(f) => f,
-                    Err(e) => {
-                        eprintln!("whatif: {e}");
-                        return 2;
-                    }
-                }
+                req.fabrics.clone()
             } else {
                 whatif_exp::fabrics()
             };
             let iters = args.usize_or("iters", whatif_exp::DEFAULT_TRACE_ITERS);
             let seed = args.u64_or("seed", 7);
-            match whatif_exp::run(iters, seed, &fabrics, &topologies, &kinds, autotune, jobs) {
+            let swept = whatif_exp::run(
+                iters,
+                seed,
+                &fabrics,
+                &req.topologies,
+                &req.schedulers,
+                req.autotune_fusion,
+                jobs,
+            );
+            match swept {
                 Ok(pair) => pair,
                 Err(e) => {
                     eprintln!("whatif: {e}");
@@ -597,6 +499,100 @@ fn cmd_whatif(args: &Args) -> i32 {
             return 1;
         }
         println!("wrote {out}");
+    }
+    0
+}
+
+/// `dagsgd serve` — the prediction daemon: load one or more calibrated
+/// profiles (`--profile FILE[,FILE...]`), validate them once, then
+/// answer what-if queries over newline-delimited JSON — one request
+/// object per line in, one response per line out — from stdin (the
+/// default) or a TCP listener (`--listen ADDR`, one thread per
+/// connection, all sharing the hot in-memory result store). Requests
+/// select a profile by tag or framework name (default: the first
+/// loaded), and sweep the same fabric/topology/scheduler axes the
+/// `whatif` command takes; every answered cell is cached
+/// content-addressed, so a repeated batch performs zero simulation.
+/// `--jobs N` sizes the worker pool, `--max-conns N` stops accepting
+/// after N connections (the CI hook), `--stats-out PATH` writes the
+/// `BENCH_serve.json` counters (throughput, hit-rate, p99 latency) at
+/// shutdown. Tooling: `--check-stats FILE` schema-checks a stats file.
+fn cmd_serve(args: &Args) -> i32 {
+    use dagsgd::serve::{daemon, protocol};
+
+    if let Some(path) = args.get("check-stats") {
+        return check_json_file(path, |j| {
+            protocol::validate_stats(j).map(|n| format!("serve stats ok ({n} queries)"))
+        });
+    }
+
+    let Some(list) = args.get("profile") else {
+        eprintln!(
+            "serve: --profile FILE[,FILE...] is required (calibrate one with \
+             `dagsgd calibrate --traces DIR --out profile.json`)"
+        );
+        return 2;
+    };
+    let mut profiles = Vec::new();
+    for path in list.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        match query::load_profile(path) {
+            Ok(p) => profiles.push(p),
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    }
+    let jobs = args.parallelism_or("jobs", 4);
+    let engine = match daemon::Engine::new(profiles, jobs) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    };
+    // stdout carries responses; operational chatter goes to stderr.
+    let tags: Vec<String> = engine.profiles().iter().map(|p| p.tag()).collect();
+    eprintln!("serve: {} profile(s) loaded ({})", tags.len(), tags.join(", "));
+
+    let max_conns = match args.get("max-conns") {
+        None => None,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(e) => {
+                eprintln!("serve: --max-conns: {e}");
+                return 2;
+            }
+        },
+    };
+    let served = match args.get("listen") {
+        Some(addr) => match std::net::TcpListener::bind(addr) {
+            Ok(listener) => {
+                if let Ok(local) = listener.local_addr() {
+                    eprintln!("serve: listening on {local}");
+                }
+                daemon::serve_listener(&engine, listener, max_conns)
+            }
+            Err(e) => {
+                eprintln!("serve: cannot bind {addr}: {e}");
+                return 1;
+            }
+        },
+        None => daemon::serve_lines(&engine, std::io::stdin().lock(), std::io::stdout().lock())
+            .map_err(|e| format!("stdin loop failed: {e}")),
+    };
+    if let Err(e) = served {
+        eprintln!("serve: {e}");
+        return 1;
+    }
+    if let Some(path) = args.get("stats-out") {
+        let stats = engine.stats_json();
+        protocol::validate_stats(&stats).expect("generated stats must satisfy their own schema");
+        if let Err(e) = std::fs::write(path, stats.to_string()) {
+            eprintln!("cannot write {path}: {e}");
+            return 1;
+        }
+        eprintln!("serve: wrote {path}");
     }
     0
 }
@@ -898,7 +894,7 @@ fn cmd_simulate(args: &Args) -> i32 {
     // (`calib::fit::CalibratedComm`), so this model-driven simulation
     // runs its gradient exchange at the *calibrated* cost.
     if let Some(path) = args.get("profile") {
-        let profile = match load_profile(path) {
+        let profile = match query::load_profile(path) {
             Ok(p) => p,
             Err(e) => {
                 eprintln!("{e}");

@@ -213,8 +213,72 @@ pub fn resnet50() -> NetSpec {
     }
 }
 
-/// CLI lookup.
+/// The runtime trainer's transformer (`python/compile/model.py`), one
+/// entry per parameter tensor in the artifact ABI order plus the
+/// trace's `data` / `execute` rows — so a `train --trace-out` trace
+/// lines up row-for-row with this spec and can be fed straight back
+/// through `calibrate` (the selfcalib-drift gate). Dimensions the
+/// name doesn't carry (vocab, sequence length) are the runtime's
+/// compile-time defaults. Matmul tensors are [`LayerKind::Fc`] with
+/// per-sample MACs of `seq × numel`; embeddings are lookups (0 MACs);
+/// 1-D gains/biases are [`LayerKind::Norm`].
+pub fn transformer(n_layers: usize, d_model: usize) -> NetSpec {
+    use LayerKind::*;
+    let l = LayerSpec::new;
+    const VOCAB: u64 = 512;
+    const SEQ: u64 = 64;
+    let d = d_model as u64;
+    let d_ff = 4 * d;
+    let seq = SEQ as f64;
+    let mm = |numel: u64| seq * numel as f64; // seq tokens × one weight matrix
+    let matmul_numel = n_layers as u64 * (3 * d * d + d * d + 2 * d * d_ff) + d * VOCAB;
+    let mut layers = vec![
+        l("data", Data, 0, 0.0, seq),
+        // The fused XLA step: all fwd+bwd compute lands on this row.
+        l("execute", Act, 0, mm(matmul_numel), (SEQ * d) as f64),
+        l("tok_emb", Fc, VOCAB * d, 0.0, (SEQ * d) as f64),
+        l("pos_emb", Fc, SEQ * d, 0.0, (SEQ * d) as f64),
+    ];
+    for i in 0..n_layers {
+        let p = format!("block{i}.");
+        layers.push(l(&format!("{p}ln1.g"), Norm, d, 0.0, (SEQ * d) as f64));
+        layers.push(l(&format!("{p}ln1.b"), Norm, d, 0.0, 0.0));
+        let wqkv = 3 * d * d;
+        layers.push(l(&format!("{p}attn.wqkv"), Fc, wqkv, mm(wqkv), (SEQ * 3 * d) as f64));
+        layers.push(l(&format!("{p}attn.bqkv"), Norm, 3 * d, 0.0, 0.0));
+        layers.push(l(&format!("{p}attn.wo"), Fc, d * d, mm(d * d), (SEQ * d) as f64));
+        layers.push(l(&format!("{p}attn.bo"), Norm, d, 0.0, 0.0));
+        layers.push(l(&format!("{p}ln2.g"), Norm, d, 0.0, (SEQ * d) as f64));
+        layers.push(l(&format!("{p}ln2.b"), Norm, d, 0.0, 0.0));
+        layers.push(l(&format!("{p}mlp.w1"), Fc, d * d_ff, mm(d * d_ff), (SEQ * d_ff) as f64));
+        layers.push(l(&format!("{p}mlp.b1"), Norm, d_ff, 0.0, 0.0));
+        layers.push(l(&format!("{p}mlp.w2"), Fc, d_ff * d, mm(d_ff * d), (SEQ * d) as f64));
+        layers.push(l(&format!("{p}mlp.b2"), Norm, d, 0.0, 0.0));
+    }
+    layers.push(l("lnf.g", Norm, d, 0.0, (SEQ * d) as f64));
+    layers.push(l("lnf.b", Norm, d, 0.0, 0.0));
+    layers.push(l("head", Fc, d * VOCAB, mm(d * VOCAB), (SEQ * VOCAB) as f64));
+    NetSpec {
+        name: format!("transformer-l{n_layers}d{d_model}"),
+        layers,
+        input_bytes: (SEQ * 4) as usize, // one i32 token id per position
+        default_batch: 8,
+    }
+}
+
+/// CLI lookup. `transformer-l<N>d<D>` is parsed, not enumerated — the
+/// runtime stamps its traces with whatever dimensions it was compiled at.
 pub fn by_name(name: &str) -> Option<NetSpec> {
+    if let Some(rest) = name.strip_prefix("transformer-l") {
+        if let Some((n, d)) = rest.split_once('d') {
+            if let (Ok(n), Ok(d)) = (n.parse::<usize>(), d.parse::<usize>()) {
+                if n > 0 && d > 0 {
+                    return Some(transformer(n, d));
+                }
+            }
+        }
+        return None;
+    }
     match name {
         "alexnet" => Some(alexnet()),
         "googlenet" => Some(googlenet()),
@@ -299,6 +363,46 @@ mod tests {
         assert!(by_name("resnet-50").is_some());
         assert!(by_name("vgg").is_none());
         assert_eq!(all().len(), 3);
+    }
+
+    #[test]
+    fn transformer_matches_runtime_abi() {
+        // Row count = data + execute + the runtime's 2 + 12n + 3 tensors
+        // (pinned on the Python side by runtime::artifacts tests).
+        let net = transformer(2, 128);
+        assert_eq!(net.name, "transformer-l2d128");
+        assert_eq!(net.layers.len(), 12 * 2 + 7);
+        assert_eq!(net.learnable_layers(), 12 * 2 + 5);
+        // ABI order: the trace's rows must match name-for-name.
+        assert_eq!(net.layers[0].name, "data");
+        assert_eq!(net.layers[1].name, "execute");
+        assert_eq!(net.layers[2].name, "tok_emb");
+        assert_eq!(net.layers[3].name, "pos_emb");
+        assert_eq!(net.layers[4].name, "block0.ln1.g");
+        assert_eq!(net.layers[6].name, "block0.attn.wqkv");
+        assert_eq!(net.layers[16].name, "block1.ln1.g");
+        assert_eq!(net.layers[net.layers.len() - 1].name, "head");
+        assert_eq!(net.layers[net.layers.len() - 2].name, "lnf.b");
+        // Tensor sizes mirror model.py's param_spec shapes.
+        let by = |n: &str| net.layers.iter().find(|l| l.name == n).unwrap();
+        assert_eq!(by("tok_emb").params, 512 * 128);
+        assert_eq!(by("block0.attn.wqkv").params, 3 * 128 * 128);
+        assert_eq!(by("block1.mlp.w1").params, 128 * 512);
+        assert_eq!(by("head").params, 128 * 512);
+        assert_eq!(net.default_batch, 8);
+    }
+
+    #[test]
+    fn transformer_name_roundtrip() {
+        let net = by_name("transformer-l2d128").unwrap();
+        assert_eq!(net.name, "transformer-l2d128");
+        assert_eq!(by_name(&net.name).unwrap().layers.len(), net.layers.len());
+        // Other dimensions parse too; garbage does not.
+        assert_eq!(by_name("transformer-l4d64").unwrap().layers.len(), 12 * 4 + 7);
+        assert!(by_name("transformer-l0d128").is_none());
+        assert!(by_name("transformer-lXdY").is_none());
+        assert!(by_name("transformer-l2").is_none());
+        assert!(by_name("transformer").is_none());
     }
 
     #[test]

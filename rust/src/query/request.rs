@@ -1,0 +1,516 @@
+//! The unified what-if query API.
+//!
+//! One [`Request`] describes one prediction question against a
+//! [`CalibratedProfile`]: which entries (an optional key filter), which
+//! fabrics, which topologies, which schedulers, and whether to attach
+//! the fusion autotune. Every front end builds the same type —
+//!
+//! * the CLI (`whatif`, `campaign --profile`, `calibrate --replay`)
+//!   through [`Request::from_args`], which owns the flag dialect and
+//!   its error strings (previously triplicated across `main.rs`);
+//! * the `serve` daemon through [`Request::from_json`], one request per
+//!   protocol line;
+//! * programmatic callers through the struct literal / [`Request::new`].
+//!
+//! A request has a canonical string form ([`Request::canonical`]) built
+//! from the same axis names that [`crate::campaign::grid::Scenario::key`]
+//! embeds, so two requests that expand to the same cells canonicalize
+//! identically; [`Request::parse`] inverts it (round-trip identity is
+//! property-tested). Expansion to campaign scenarios, validation and
+//! per-cell measurement delegate to `calib::{replay,whatif}` — this
+//! module adds no second semantics, only one front door.
+
+use crate::calib::fit::CalibratedProfile;
+use crate::calib::replay;
+use crate::calib::whatif::{self, Fabric, Topology};
+use crate::campaign::grid::{CellResult, Scenario};
+use crate::sim::scheduler::SchedulerKind;
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// A flag-parsing error plus how the CLI reports it: `bare` errors
+/// print without the `<command>: ` prefix (scheduler typos always did),
+/// prefixed ones carry it. Both exit with status 2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgError {
+    pub msg: String,
+    pub bare: bool,
+}
+
+impl ArgError {
+    pub fn bare(msg: impl Into<String>) -> ArgError {
+        ArgError { msg: msg.into(), bare: true }
+    }
+
+    pub fn prefixed(msg: impl Into<String>) -> ArgError {
+        ArgError { msg: msg.into(), bare: false }
+    }
+
+    /// The line the CLI prints: byte-identical to the pre-redesign
+    /// per-command copies.
+    pub fn render(&self, command: &str) -> String {
+        if self.bare {
+            self.msg.clone()
+        } else {
+            format!("{command}: {}", self.msg)
+        }
+    }
+}
+
+/// Parse one scheduler name (the error string is pinned by test).
+pub fn parse_scheduler(name: &str) -> Result<SchedulerKind, ArgError> {
+    SchedulerKind::by_name(name).ok_or_else(|| {
+        ArgError::bare(format!(
+            "unknown scheduler '{name}' (try fifo, priority, critical-path, fusion)"
+        ))
+    })
+}
+
+/// Parse `--scheduler` as a comma list, falling back to `default` when
+/// the flag is absent (`sched` compares every policy by default; the
+/// profile sweeps default to fifo only).
+pub fn scheduler_list_or(args: &Args, default: &[SchedulerKind]) -> Result<Vec<SchedulerKind>, ArgError> {
+    match args.get("scheduler") {
+        None => Ok(default.to_vec()),
+        Some(v) => v.split(',').map(|n| parse_scheduler(n.trim())).collect(),
+    }
+}
+
+/// Load + schema-check a calibrated profile file (shared by every
+/// profile-consuming command and the daemon's startup).
+pub fn load_profile(path: &str) -> Result<CalibratedProfile, String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))
+        .and_then(|t| json::parse(&t).map_err(|e| format!("{path}: invalid JSON: {e}")))
+        .and_then(|j| CalibratedProfile::from_json(&j).map_err(|e| format!("{path}: {e}")))
+}
+
+/// Parse the fabric axis: `--fabric NAME[,NAME...]` (measured, ideal,
+/// stock, 10gbe, 100gb-ib, cluster presets, or `alpha<S>-bw<B/S>`),
+/// plus `--alpha SECONDS --beta BYTES_PER_S` appending one explicit α–β
+/// channel. Defaults to the measured fabric alone.
+fn fabrics_from_args(args: &Args) -> Result<Vec<Fabric>, String> {
+    let mut fabrics = match args.get("fabric") {
+        None => vec![Fabric::Measured],
+        Some(list) => list
+            .split(',')
+            .map(|n| Fabric::parse(n.trim()))
+            .collect::<Result<Vec<_>, String>>()?,
+    };
+    match (args.get("alpha"), args.get("beta")) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            let alpha: f64 = a.parse().map_err(|e| format!("--alpha: {e}"))?;
+            let bw: f64 = b.parse().map_err(|e| format!("--beta: {e}"))?;
+            fabrics.push(Fabric::alpha_beta(alpha, bw)?);
+        }
+        _ => return Err("--alpha and --beta must be given together (one α–β fabric)".into()),
+    }
+    Ok(fabrics)
+}
+
+/// Parse the topology (scale-out) axis: `--topology LIST` where each
+/// element is `<nodes>x<gpus_per_node>` or the word `measured` (the
+/// entry's own layout), plus `--nodes N --gpus G` appending one explicit
+/// target. Defaults to the measured layout alone.
+fn topologies_from_args(args: &Args) -> Result<Vec<Option<Topology>>, String> {
+    let mut topologies: Vec<Option<Topology>> = match args.get("topology") {
+        None => vec![],
+        Some(list) => list
+            .split(',')
+            .map(|t| match t.trim() {
+                "measured" => Ok(None),
+                s => Topology::parse(s).map(Some),
+            })
+            .collect::<Result<Vec<_>, String>>()?,
+    };
+    match (args.get("nodes"), args.get("gpus")) {
+        (None, None) => {}
+        (Some(n), Some(g)) => {
+            let nodes: usize = n.parse().map_err(|e| format!("--nodes: {e}"))?;
+            let gpus: usize = g.parse().map_err(|e| format!("--gpus: {e}"))?;
+            topologies.push(Some(Topology::new(nodes, gpus)?));
+        }
+        _ => return Err("--nodes and --gpus must be given together (one topology)".into()),
+    }
+    if topologies.is_empty() {
+        topologies.push(None);
+    }
+    Ok(topologies)
+}
+
+/// One what-if query: profile selector, entry filter, the three sweep
+/// axes and the autotune switch. `whatif: false` is the plain measured
+/// replay (`campaign --profile` without axis flags — grid `"calib"`);
+/// `true` is the prediction grid (`"whatif"`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Profile selector: a file path for the CLI, a loaded profile's
+    /// tag or framework name for the daemon, `None` for the default.
+    pub profile: Option<String>,
+    /// Substring filter over entry/cell keys (the CLI's `--filter`).
+    pub entry: Option<String>,
+    pub fabrics: Vec<Fabric>,
+    pub topologies: Vec<Option<Topology>>,
+    pub schedulers: Vec<SchedulerKind>,
+    pub autotune_fusion: bool,
+    pub whatif: bool,
+}
+
+impl Request {
+    /// The defaults every front end shares: measured fabric, measured
+    /// layout, fifo, no autotune, what-if semantics.
+    pub fn new() -> Request {
+        Request {
+            profile: None,
+            entry: None,
+            fabrics: vec![Fabric::Measured],
+            topologies: vec![None],
+            schedulers: vec![SchedulerKind::Fifo],
+            autotune_fusion: false,
+            whatif: true,
+        }
+    }
+
+    /// Build a request from CLI flags — the one copy of the dialect the
+    /// `whatif` / `campaign --profile` / `calibrate --replay` commands
+    /// used to parse independently. Axis errors keep their historical
+    /// per-command prefix via [`ArgError::render`]; scheduler errors
+    /// stay bare. Any fabric or topology flag switches the request to
+    /// what-if semantics (a lone `--nodes` still reaches the pairing
+    /// error instead of silently running a measured-scale sweep).
+    pub fn from_args(args: &Args, default_kinds: &[SchedulerKind]) -> Result<Request, ArgError> {
+        let schedulers = scheduler_list_or(args, default_kinds)?;
+        let whatif = args.has("fabric")
+            || args.has("alpha")
+            || args.has("beta")
+            || args.has("topology")
+            || args.has("nodes")
+            || args.has("gpus");
+        let fabrics = fabrics_from_args(args).map_err(ArgError::prefixed)?;
+        let topologies = topologies_from_args(args).map_err(ArgError::prefixed)?;
+        Ok(Request {
+            profile: args.get("profile").map(str::to_string),
+            entry: args.get("filter").map(str::to_string),
+            fabrics,
+            topologies,
+            schedulers,
+            autotune_fusion: args.bool_or("autotune-fusion", false),
+            whatif,
+        })
+    }
+
+    /// The canonical string form: `key=value` segments joined by `|`,
+    /// axis values in the same spelling [`Scenario::key`] embeds
+    /// (fabric/topology/scheduler names), absent selectors as `-`.
+    /// [`Request::parse`] inverts it exactly.
+    pub fn canonical(&self) -> String {
+        let opt = |o: &Option<String>| o.clone().unwrap_or_else(|| "-".into());
+        let fabrics: Vec<String> = self.fabrics.iter().map(|f| f.name()).collect();
+        let topologies: Vec<String> = self
+            .topologies
+            .iter()
+            .map(|t| t.map(|t| t.name()).unwrap_or_else(|| "measured".into()))
+            .collect();
+        let schedulers: Vec<String> =
+            self.schedulers.iter().map(|k| k.name().to_string()).collect();
+        format!(
+            "mode={}|profile={}|entry={}|fabric={}|topology={}|scheduler={}|autotune={}",
+            if self.whatif { "whatif" } else { "replay" },
+            opt(&self.profile),
+            opt(&self.entry),
+            fabrics.join(","),
+            topologies.join(","),
+            schedulers.join(","),
+            self.autotune_fusion,
+        )
+    }
+
+    /// Parse a canonical string (segments may come in any order;
+    /// omitted segments keep the [`Request::new`] defaults). Selector
+    /// values must not contain `|`; `-` means absent.
+    pub fn parse(s: &str) -> Result<Request, String> {
+        let mut req = Request::new();
+        for seg in s.split('|') {
+            let (key, value) = seg
+                .split_once('=')
+                .ok_or_else(|| format!("bad query segment '{seg}' (want key=value)"))?;
+            req.set_field(key, value)?;
+        }
+        Ok(req)
+    }
+
+    /// Parse one protocol line: a JSON object with the same fields the
+    /// canonical form spells (`fabric`/`topology`/`scheduler` take the
+    /// CLI's comma-list syntax; `autotune_fusion` is a bool; `mode` is
+    /// `whatif` or `replay`). Unknown keys are errors so a typo never
+    /// silently queries the defaults.
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let Json::Obj(map) = j else {
+            return Err("request must be a JSON object".into());
+        };
+        let mut req = Request::new();
+        for (key, value) in map {
+            match (key.as_str(), value) {
+                ("autotune_fusion", Json::Bool(b)) => req.autotune_fusion = *b,
+                ("autotune_fusion", _) => {
+                    return Err("request field 'autotune_fusion' must be a bool".into())
+                }
+                (k, Json::Str(v)) => req.set_field(k, v)?,
+                (k, _) => return Err(format!("request field '{k}' must be a string")),
+            }
+        }
+        Ok(req)
+    }
+
+    /// The request as a protocol line body (inverse of
+    /// [`Request::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let fabrics: Vec<String> = self.fabrics.iter().map(|f| f.name()).collect();
+        let topologies: Vec<String> = self
+            .topologies
+            .iter()
+            .map(|t| t.map(|t| t.name()).unwrap_or_else(|| "measured".into()))
+            .collect();
+        let schedulers: Vec<String> =
+            self.schedulers.iter().map(|k| k.name().to_string()).collect();
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if let Some(p) = &self.profile {
+            pairs.push(("profile", Json::str(p.clone())));
+        }
+        if let Some(e) = &self.entry {
+            pairs.push(("entry", Json::str(e.clone())));
+        }
+        pairs.push(("mode", Json::str(if self.whatif { "whatif" } else { "replay" })));
+        pairs.push(("fabric", Json::str(fabrics.join(","))));
+        pairs.push(("topology", Json::str(topologies.join(","))));
+        pairs.push(("scheduler", Json::str(schedulers.join(","))));
+        pairs.push(("autotune_fusion", Json::Bool(self.autotune_fusion)));
+        Json::obj(pairs)
+    }
+
+    /// Assign one canonical-form field (shared by [`Request::parse`]
+    /// and [`Request::from_json`]).
+    fn set_field(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let opt = |v: &str| if v == "-" { None } else { Some(v.to_string()) };
+        match key {
+            "mode" => {
+                self.whatif = match value {
+                    "whatif" => true,
+                    "replay" => false,
+                    other => return Err(format!("bad mode '{other}' (want whatif or replay)")),
+                }
+            }
+            "profile" => self.profile = opt(value),
+            "entry" => self.entry = opt(value),
+            "fabric" => {
+                self.fabrics = value
+                    .split(',')
+                    .map(|n| Fabric::parse(n.trim()))
+                    .collect::<Result<Vec<_>, String>>()?
+            }
+            "topology" => {
+                self.topologies = value
+                    .split(',')
+                    .map(|t| match t.trim() {
+                        "measured" => Ok(None),
+                        s => Topology::parse(s).map(Some),
+                    })
+                    .collect::<Result<Vec<_>, String>>()?
+            }
+            "scheduler" => {
+                self.schedulers = value
+                    .split(',')
+                    .map(|n| parse_scheduler(n.trim()).map_err(|e| e.msg))
+                    .collect::<Result<Vec<_>, String>>()?
+            }
+            "autotune" => {
+                self.autotune_fusion = match value {
+                    "true" => true,
+                    "false" => false,
+                    other => return Err(format!("bad autotune '{other}' (want true or false)")),
+                }
+            }
+            other => return Err(format!("unknown query key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// The campaign grid name the request's cells report under.
+    pub fn grid_name(&self) -> &'static str {
+        if self.whatif {
+            "whatif"
+        } else {
+            "calib"
+        }
+    }
+
+    /// Pre-sweep gate, one path for CLI and daemon: profile coherence
+    /// always, plus fabric/topology sweepability for what-if requests
+    /// (`calib::whatif::validate_whatif` — error strings unchanged).
+    pub fn validate(&self, profile: &CalibratedProfile) -> Result<(), String> {
+        if self.schedulers.is_empty() {
+            return Err("no schedulers to sweep".into());
+        }
+        if self.whatif {
+            whatif::validate_whatif(profile, &self.fabrics, &self.topologies)
+        } else {
+            replay::validate_profile(profile)
+        }
+    }
+
+    /// Expand to campaign scenarios: the profile's entries × the
+    /// request axes, narrowed by the entry filter. Content-addressed
+    /// cache keys come straight from these cells.
+    pub fn scenarios(&self, profile: &CalibratedProfile) -> Vec<Scenario> {
+        let mut cells = if self.whatif {
+            whatif::scenarios(profile, &self.fabrics, &self.topologies, &self.schedulers)
+        } else {
+            replay::scenarios(profile, &self.schedulers)
+        };
+        if let Some(pat) = &self.entry {
+            cells.retain(|s| s.key().contains(pat.as_str()));
+        }
+        cells
+    }
+
+    /// Measured baselines for the request's cells (empty for plain
+    /// replays, which are their own baseline).
+    pub fn baselines(
+        &self,
+        profile: &CalibratedProfile,
+        cells: &[Scenario],
+    ) -> Result<BTreeMap<(String, String), f64>, String> {
+        if self.whatif {
+            whatif::measured_baselines(profile, cells)
+        } else {
+            Ok(BTreeMap::new())
+        }
+    }
+
+    /// The per-cell measurement behind this request — what-if cells
+    /// carry a fabric, plain replay cells don't, so dispatch is by the
+    /// scenario itself (a mixed list is fine, e.g. the daemon folding
+    /// ideal-fabric companions into a replay batch).
+    pub fn cell(
+        profile: &CalibratedProfile,
+        baselines: &BTreeMap<(String, String), f64>,
+        s: &Scenario,
+    ) -> CellResult {
+        if s.fabric.is_some() {
+            whatif::whatif_cell_with(profile, s, baselines)
+        } else {
+            replay::replay_cell(profile, s)
+        }
+    }
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::grid::Interconnect;
+    use crate::experiments::whatif as whatif_exp;
+
+    fn args(v: &[&str]) -> Args {
+        Args::from_iter(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_match_the_cli_dialect() {
+        let req = Request::from_args(&args(&[]), &[SchedulerKind::Fifo]).unwrap();
+        let mut want = Request::new();
+        want.whatif = false; // no axis flags: plain measured replay
+        assert_eq!(req, want);
+    }
+
+    #[test]
+    fn axis_flags_switch_to_whatif() {
+        let req =
+            Request::from_args(&args(&["--fabric", "ideal"]), &[SchedulerKind::Fifo]).unwrap();
+        assert!(req.whatif);
+        assert_eq!(req.fabrics, vec![Fabric::Ideal]);
+        let req = Request::from_args(&args(&["--topology", "2x4,measured"]), &[SchedulerKind::Fifo])
+            .unwrap();
+        assert!(req.whatif);
+        assert_eq!(req.topologies.len(), 2);
+        assert!(req.topologies[1].is_none());
+    }
+
+    #[test]
+    fn lone_nodes_or_alpha_is_a_pairing_error() {
+        let e = Request::from_args(&args(&["--nodes", "2"]), &[SchedulerKind::Fifo]).unwrap_err();
+        assert_eq!(e.msg, "--nodes and --gpus must be given together (one topology)");
+        assert!(!e.bare);
+        let e = Request::from_args(&args(&["--alpha", "1e-5"]), &[SchedulerKind::Fifo]).unwrap_err();
+        assert_eq!(e.msg, "--alpha and --beta must be given together (one α–β fabric)");
+    }
+
+    #[test]
+    fn scheduler_errors_are_bare() {
+        let e = Request::from_args(&args(&["--scheduler", "bogus"]), &[SchedulerKind::Fifo])
+            .unwrap_err();
+        assert!(e.bare);
+        assert_eq!(e.render("whatif"), "unknown scheduler 'bogus' (try fifo, priority, critical-path, fusion)");
+    }
+
+    #[test]
+    fn canonical_round_trips() {
+        let req = Request {
+            profile: Some("profile.json".into()),
+            entry: Some("resnet50 @ k80-pcie-10gbe".into()),
+            fabrics: vec![
+                Fabric::Measured,
+                Fabric::Ideal,
+                Fabric::Interconnect(Interconnect::TenGbE),
+                Fabric::alpha_beta(2e-5, 1.25e9).unwrap(),
+            ],
+            topologies: vec![None, Some(Topology::new(4, 4).unwrap())],
+            schedulers: vec![SchedulerKind::Fifo, SchedulerKind::Fusion],
+            autotune_fusion: true,
+            whatif: true,
+        };
+        let canon = req.canonical();
+        assert_eq!(Request::parse(&canon).unwrap(), req);
+        // JSON form round-trips too.
+        assert_eq!(Request::from_json(&req.to_json()).unwrap(), req);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Request::parse("no-equals-sign").is_err());
+        assert!(Request::parse("mode=sideways").is_err());
+        assert!(Request::parse("fabric=warp-drive").is_err());
+        assert!(Request::parse("colour=blue").is_err());
+        assert!(Request::from_json(&Json::str("not an object")).is_err());
+        assert!(Request::from_json(&Json::obj(vec![("autotune_fusion", Json::num(1.0))])).is_err());
+    }
+
+    #[test]
+    fn scenarios_filter_and_grid_name() {
+        let profile = whatif_exp::profile_at(8, 7, 2);
+        let mut req = Request::new();
+        req.whatif = false;
+        assert_eq!(req.grid_name(), "calib");
+        let all = req.scenarios(&profile);
+        assert_eq!(all.len(), profile.entries.len());
+        req.entry = Some("resnet50".into());
+        let narrowed = req.scenarios(&profile);
+        assert!(!narrowed.is_empty() && narrowed.len() < all.len());
+        assert!(narrowed.iter().all(|s| s.key().contains("resnet50")));
+
+        req.whatif = true;
+        req.fabrics = vec![Fabric::Measured, Fabric::Ideal];
+        assert_eq!(req.grid_name(), "whatif");
+        assert!(req.validate(&profile).is_ok());
+        let cells = req.scenarios(&profile);
+        assert_eq!(cells.len(), 2 * narrowed.len());
+        assert!(cells.iter().all(|s| s.fabric.is_some()));
+    }
+}

@@ -1,0 +1,449 @@
+//! The `serve` prediction daemon: one calibration, unbounded cheap
+//! queries.
+//!
+//! An [`Engine`] loads one or more [`CalibratedProfile`]s at startup
+//! (validated once, up front) and answers query batches forever. Each
+//! request line parses into a [`Request`](crate::query::request::Request),
+//! expands to campaign [`Scenario`]s through the same `query` path the
+//! CLI speaks, and fans through [`runner::run_stored`] against a hot
+//! in-memory [`MemCache`] keyed by the campaign cache's
+//! content-addressed preimage — so a repeated batch performs **zero
+//! simulation** and the response is bit-identical to the cold run (the
+//! store returns clones of the original cells, and the response JSON
+//! carries no timing fields).
+//!
+//! For every queried cell the engine also runs its *ideal-fabric twin*
+//! (same entry/topology/scheduler on [`Fabric::Ideal`], deduplicated
+//! and cached like any other cell) and reports `gap_to_ideal_s`: how
+//! far the predicted iteration time sits above the zero-communication
+//! bound — the paper's headroom question, answered per query.
+//!
+//! Measured baselines and fusion autotunes are memoized per profile
+//! across batches, and baselines are only computed for cells that miss
+//! the store, so warm traffic never touches the simulator.
+
+use crate::calib::fit::CalibratedProfile;
+use crate::calib::replay;
+use crate::calib::whatif::{self, Fabric, FusionTune, Topology};
+use crate::campaign::cache::MemCache;
+use crate::campaign::grid::Scenario;
+use crate::campaign::{report, runner};
+use crate::frameworks::strategy;
+use crate::query::request::Request;
+use crate::serve::protocol::{self, ServeStats};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpListener;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Baseline memo key: profile tag × entry key × scheduler name.
+type BaselineKey = (String, String, String);
+/// Tune memo key: profile tag × entry key × topology (or `-`) × fabric.
+type TuneKey = (String, String, String, String);
+
+/// A loaded, validated set of profiles plus the hot result store.
+/// Shared across connection threads by reference; all interior state
+/// is mutex-guarded.
+pub struct Engine {
+    profiles: Vec<CalibratedProfile>,
+    store: MemCache,
+    baselines: Mutex<BTreeMap<BaselineKey, f64>>,
+    tunes: Mutex<BTreeMap<TuneKey, Option<FusionTune>>>,
+    stats: Mutex<ServeStats>,
+    jobs: usize,
+}
+
+impl Engine {
+    /// Validate every profile once (same gate the CLI runs before a
+    /// sweep) and reject duplicate tags; the first profile is the
+    /// default for requests that name none.
+    pub fn new(profiles: Vec<CalibratedProfile>, jobs: usize) -> Result<Engine, String> {
+        if profiles.is_empty() {
+            return Err("no profiles loaded".to_string());
+        }
+        let mut tags: Vec<String> = Vec::new();
+        for p in &profiles {
+            let tag = p.tag();
+            replay::validate_profile(p).map_err(|e| format!("{tag}: {e}"))?;
+            if tags.contains(&tag) {
+                return Err(format!("duplicate profile tag '{tag}'"));
+            }
+            tags.push(tag);
+        }
+        Ok(Engine {
+            profiles,
+            store: MemCache::new(),
+            baselines: Mutex::new(BTreeMap::new()),
+            tunes: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(ServeStats::new()),
+            jobs: jobs.max(1),
+        })
+    }
+
+    pub fn profiles(&self) -> &[CalibratedProfile] {
+        &self.profiles
+    }
+
+    /// Cells resident in the hot store.
+    pub fn cached_cells(&self) -> usize {
+        self.store.len()
+    }
+
+    /// A copy of the running counters (for `--stats-out` and benches).
+    pub fn stats_snapshot(&self) -> ServeStats {
+        self.stats.lock().expect("stats poisoned").clone()
+    }
+
+    /// The `BENCH_serve.json` document for the current counters.
+    pub fn stats_json(&self) -> Json {
+        self.stats_snapshot().to_json()
+    }
+
+    /// Resolve a request's profile selector: `None` means the first
+    /// loaded profile; a selector matches a profile tag
+    /// (`framework#hash`) or, as a convenience, a framework name.
+    fn resolve_profile(&self, selector: Option<&str>) -> Result<&CalibratedProfile, String> {
+        let Some(sel) = selector else {
+            return Ok(&self.profiles[0]);
+        };
+        if let Some(p) = self.profiles.iter().find(|p| p.tag() == sel) {
+            return Ok(p);
+        }
+        if let Some(p) = self.profiles.iter().find(|p| p.framework == sel) {
+            return Ok(p);
+        }
+        let tags: Vec<String> = self.profiles.iter().map(|p| p.tag()).collect();
+        Err(format!("unknown profile '{sel}' (loaded: {})", tags.join(", ")))
+    }
+
+    /// Measured baselines for the given cells, computed lazily: only
+    /// (entry × scheduler) pairs some *store-missing* cell needs and
+    /// the memo does not already hold are replayed. Warm batches hand
+    /// the runner an empty-enough map for free.
+    fn baselines_for(
+        &self,
+        profile: &CalibratedProfile,
+        cells: &[Scenario],
+    ) -> Result<BTreeMap<(String, String), f64>, String> {
+        let tag = profile.tag();
+        let mut memo = self.baselines.lock().expect("baseline memo poisoned");
+        let mut need: Vec<Scenario> = Vec::new();
+        for s in cells {
+            if s.fabric.is_none() || self.store.get(s).is_some() {
+                continue; // replay cells are their own baseline; hits never simulate
+            }
+            if s.fabric.as_deref() == Some("measured") && s.topology.is_none() {
+                continue;
+            }
+            let Some(entry) = replay::entry_for(profile, s) else {
+                continue; // validated requests never hit this
+            };
+            let key = (tag.clone(), entry.key(), s.scheduler.name().to_string());
+            if !memo.contains_key(&key) {
+                need.push(s.clone());
+            }
+        }
+        if !need.is_empty() {
+            for ((entry, sched), base) in whatif::measured_baselines(profile, &need)? {
+                memo.insert((tag.clone(), entry, sched), base);
+            }
+        }
+        let mut out = BTreeMap::new();
+        for ((t, entry, sched), base) in memo.iter() {
+            if *t == tag {
+                out.insert((entry.clone(), sched.clone()), *base);
+            }
+        }
+        Ok(out)
+    }
+
+    /// The fusion autotune for one what-if cell, memoized across
+    /// batches (autotunes share scenario keys with plain cells, so
+    /// they live in their own memo, never the result store). `None`
+    /// means the entry has nothing to fuse on that fabric.
+    fn fusion_for(&self, profile: &CalibratedProfile, s: &Scenario) -> Option<FusionTune> {
+        let entry = replay::entry_for(profile, s)?;
+        let fabric_name = s.fabric.clone()?;
+        let topo_key = s.topology.clone().unwrap_or_else(|| "-".to_string());
+        let key = (profile.tag(), entry.key(), topo_key, fabric_name.clone());
+        let mut memo = self.tunes.lock().expect("tune memo poisoned");
+        if let Some(tune) = memo.get(&key) {
+            return tune.clone();
+        }
+        let fw = strategy::by_name(&profile.framework).expect("profile validated at startup");
+        let fabric = Fabric::parse(&fabric_name).expect("fabric validated per request");
+        let topo = s
+            .topology
+            .as_deref()
+            .map(|t| Topology::parse(t).expect("topology validated per request"));
+        let tune = whatif::autotune_fusion_at(entry, &fabric, &fw, topo).ok();
+        memo.insert(key, tune.clone());
+        tune
+    }
+
+    /// Answer one parsed request: expand to scenarios, append each
+    /// cell's deduplicated ideal-fabric twin, fan through the worker
+    /// pool against the hot store, and assemble the response. Returns
+    /// `(response, queries, hits, misses)`.
+    fn answer(&self, req: &Request) -> Result<(Json, usize, usize, usize), String> {
+        let profile = self.resolve_profile(req.profile.as_deref())?;
+        req.validate(profile)?;
+        let cells = req.scenarios(profile);
+        if cells.is_empty() {
+            return Err(match &req.entry {
+                Some(e) => format!("entry filter '{e}' matched none of the profile's cells"),
+                None => "request expanded to no cells".to_string(),
+            });
+        }
+
+        // Ideal twins: one per distinct (entry, topology, scheduler),
+        // shared with any queried cell already on the ideal fabric.
+        // `Fabric::Ideal` always has a channel (zero), so a twin can
+        // never fail where its cell succeeded.
+        let ideal = Fabric::Ideal.name();
+        let mut all = cells.clone();
+        let mut twin_at: BTreeMap<String, usize> = BTreeMap::new();
+        let mut twin: Vec<usize> = Vec::with_capacity(cells.len());
+        for s in &cells {
+            let mut t = s.clone();
+            t.fabric = Some(ideal.clone());
+            let at = *twin_at.entry(t.key()).or_insert_with(|| {
+                if s.fabric.as_deref() == Some(ideal.as_str()) {
+                    all.iter().position(|c| c.key() == t.key()).expect("cell is its own twin")
+                } else {
+                    all.push(t.clone());
+                    all.len() - 1
+                }
+            });
+            twin.push(at);
+        }
+
+        // Provenance probe before the run: which queried cells are
+        // already hot? (Bookkeeping only — the run itself re-probes.)
+        let pre: Vec<bool> = cells.iter().map(|s| self.store.get(s).is_some()).collect();
+        let hits = pre.iter().filter(|h| **h).count();
+        let misses = cells.len() - hits;
+
+        let baselines = self.baselines_for(profile, &all)?;
+        let outcome = runner::run_stored(&all, self.jobs, Some(&self.store), |s| {
+            Request::cell(profile, &baselines, s)
+        });
+
+        let mut rows = Vec::with_capacity(cells.len());
+        for (i, (s, r)) in outcome.cells.iter().take(cells.len()).enumerate() {
+            let iter_s = r.get("iter_time_s").expect("cells carry iter_time_s");
+            let (_, ideal) = &outcome.cells[twin[i]];
+            let gap = iter_s - ideal.get("iter_time_s").expect("twins carry iter_time_s");
+            let mut row = report::cell_to_json(s, r);
+            if let Json::Obj(m) = &mut row {
+                m.insert("cache".into(), Json::str(if pre[i] { "hit" } else { "miss" }));
+                m.insert("gap_to_ideal_s".into(), Json::num(gap));
+                if req.autotune_fusion {
+                    if let Some(t) = self.fusion_for(profile, s) {
+                        m.insert("fusion".into(), fusion_json(&t));
+                    }
+                }
+            }
+            rows.push(row);
+        }
+
+        let resp = Json::obj(vec![
+            ("protocol", Json::num(protocol::PROTOCOL_VERSION as f64)),
+            ("profile", Json::str(profile.tag())),
+            ("grid", Json::str(req.grid_name())),
+            ("queries", Json::Arr(rows)),
+            (
+                "batch",
+                Json::obj(vec![
+                    ("requested", Json::num(cells.len() as f64)),
+                    ("scenarios", Json::num(all.len() as f64)),
+                    ("simulated", Json::num(outcome.stats.simulated as f64)),
+                    ("cached", Json::num(outcome.stats.cached as f64)),
+                ]),
+            ),
+        ]);
+        Ok((resp, cells.len(), hits, misses))
+    }
+
+    /// Answer one request line, recording stats; always returns a
+    /// single-line JSON response (result or error).
+    pub fn answer_line(&self, line: &str) -> String {
+        let start = Instant::now();
+        let answered = protocol::parse_request(line).and_then(|req| self.answer(&req));
+        let (resp, queries, hits, misses, erred) = match answered {
+            Ok((j, q, h, m)) => (j, q, h, m, false),
+            Err(msg) => (protocol::error_json(&msg), 0, 0, 0, true),
+        };
+        let mut st = self.stats.lock().expect("stats poisoned");
+        st.batches += 1;
+        st.queries += queries;
+        st.cache_hits += hits;
+        st.cache_misses += misses;
+        if erred {
+            st.errors += 1;
+        }
+        st.latencies_s.push(start.elapsed().as_secs_f64());
+        resp.to_string()
+    }
+}
+
+/// The fusion autotune object attached to a cell, same field names as
+/// the what-if report.
+fn fusion_json(t: &FusionTune) -> Json {
+    Json::obj(vec![
+        ("cap_bytes", Json::num(t.cap_bytes)),
+        ("buckets", Json::num(t.buckets as f64)),
+        ("scan_iter_s", Json::num(t.scan_iter_s)),
+        ("replayed_iter_s", Json::num(t.replayed_iter_s)),
+        ("layerwise_iter_s", Json::num(t.layerwise_iter_s)),
+        ("gain_pct", Json::num(t.gain_pct())),
+    ])
+}
+
+/// Serve request lines from a reader to a writer (the stdin mode, and
+/// what each TCP connection runs). Blank lines are skipped; each
+/// response is flushed before the next request is read.
+pub fn serve_lines<R: BufRead, W: Write>(
+    engine: &Engine,
+    input: R,
+    mut output: W,
+) -> std::io::Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        output.write_all(engine.answer_line(&line).as_bytes())?;
+        output.write_all(b"\n")?;
+        output.flush()?;
+    }
+    Ok(())
+}
+
+/// Accept connections forever (or until `max_conns` have been
+/// accepted — the test/CI hook), one thread per connection, all
+/// sharing the engine and its hot store.
+pub fn serve_listener(
+    engine: &Engine,
+    listener: TcpListener,
+    max_conns: Option<usize>,
+) -> Result<(), String> {
+    std::thread::scope(|scope| {
+        let mut accepted = 0usize;
+        for conn in listener.incoming() {
+            let stream = conn.map_err(|e| format!("accept failed: {e}"))?;
+            scope.spawn(move || {
+                let reader = BufReader::new(stream.try_clone().expect("clone tcp stream"));
+                let writer = BufWriter::new(stream);
+                // A dropped connection mid-batch only ends that client.
+                let _ = serve_lines(engine, reader, writer);
+            });
+            accepted += 1;
+            if max_conns.is_some_and(|max| accepted >= max) {
+                break;
+            }
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::whatif as whatif_exp;
+    use crate::util::json;
+
+    fn engine() -> Engine {
+        Engine::new(vec![whatif_exp::profile_at(8, 11, 2)], 2).unwrap()
+    }
+
+    #[test]
+    fn empty_profile_set_and_duplicates_are_rejected() {
+        assert_eq!(Engine::new(vec![], 1).unwrap_err(), "no profiles loaded");
+        let p = whatif_exp::profile_at(8, 11, 2);
+        let err = Engine::new(vec![p.clone(), p], 1).unwrap_err();
+        assert!(err.contains("duplicate profile tag"), "{err}");
+    }
+
+    #[test]
+    fn unknown_profile_selector_lists_loaded_tags() {
+        let e = engine();
+        let tag = e.profiles()[0].tag();
+        let resp = e.answer_line("{\"profile\": \"nope\"}");
+        let j = json::parse(&resp).unwrap();
+        let msg = j.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("unknown profile 'nope'") && msg.contains(&tag), "{msg}");
+        // Framework name also selects the profile.
+        let ok = e.answer_line(&format!(
+            "{{\"profile\": \"{}\", \"entry\": \"alexnet\"}}",
+            e.profiles()[0].framework
+        ));
+        assert!(json::parse(&ok).unwrap().get("error").is_none(), "{ok}");
+    }
+
+    #[test]
+    fn second_identical_batch_is_served_without_simulation() {
+        let e = engine();
+        let line = "{\"entry\": \"alexnet\", \"fabric\": \"10gbe,ideal\", \"scheduler\": \"fifo\"}";
+        let cold = e.answer_line(line);
+        let warm = e.answer_line(line);
+        let cj = json::parse(&cold).unwrap();
+        let wj = json::parse(&warm).unwrap();
+        assert!(cj.get("batch").unwrap().get("simulated").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(wj.get("batch").unwrap().get("simulated").unwrap().as_f64().unwrap(), 0.0);
+        // Predictions are bit-identical apart from provenance (only
+        // the batch counters differ between the waves).
+        let cold_q = cj.get("queries").unwrap().to_string().replace("\"miss\"", "\"hit\"");
+        assert_eq!(cold_q, wj.get("queries").unwrap().to_string());
+        for q in wj.get("queries").unwrap().as_arr().unwrap() {
+            assert_eq!(q.get("cache").unwrap().as_str().unwrap(), "hit");
+            let gap = q.get("gap_to_ideal_s").unwrap().as_f64().unwrap();
+            if q.get("fabric").unwrap().as_str() == Some("ideal") {
+                assert_eq!(gap, 0.0, "ideal cells sit on the bound");
+            } else {
+                assert!(gap >= 0.0, "gap below the ideal bound: {gap}");
+            }
+        }
+        let st = e.stats_snapshot();
+        assert_eq!(st.batches, 2);
+        assert_eq!(st.cache_hits, st.cache_misses, "warm wave mirrors the cold wave");
+        assert!(protocol::validate_stats(&e.stats_json()).is_ok());
+    }
+
+    #[test]
+    fn replay_mode_requests_answer_with_ideal_gap() {
+        let e = engine();
+        let resp =
+            e.answer_line("{\"mode\": \"replay\", \"entry\": \"alexnet\", \"scheduler\": \"fifo\"}");
+        let j = json::parse(&resp).unwrap();
+        assert!(j.get("error").is_none(), "{resp}");
+        assert_eq!(j.get("grid").unwrap().as_str().unwrap(), "calib");
+        let qs = j.get("queries").unwrap().as_arr().unwrap();
+        assert!(!qs.is_empty());
+        for q in qs {
+            assert!(q.get("gap_to_ideal_s").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        // Twins ran: more scenarios than queries.
+        let batch = j.get("batch").unwrap();
+        let requested = batch.get("requested").unwrap().as_f64().unwrap();
+        let scenarios = batch.get("scenarios").unwrap().as_f64().unwrap();
+        assert!(scenarios > requested, "{scenarios} twins for {requested} cells");
+    }
+
+    #[test]
+    fn serve_lines_answers_each_line_and_skips_blanks() {
+        let e = engine();
+        let input = b"{\"entry\": \"alexnet\"}\n\n{bad\n".to_vec();
+        let mut out = Vec::new();
+        serve_lines(&e, &input[..], &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "blank line skipped: {text}");
+        assert!(json::parse(lines[0]).unwrap().get("queries").is_some());
+        let err = json::parse(lines[1]).unwrap();
+        assert!(err.get("error").unwrap().as_str().unwrap().starts_with("invalid JSON"));
+        assert_eq!(e.stats_snapshot().errors, 1);
+    }
+}

@@ -1,0 +1,260 @@
+//! Wire protocol for the `serve` prediction daemon.
+//!
+//! The daemon speaks newline-delimited JSON: one request object per
+//! line in, one response object per line out, in order. A request is
+//! the JSON form of a [`Request`](crate::query::request::Request)
+//! (`{"profile": ..., "entry": ..., "fabric": ..., "topology": ...,
+//! "scheduler": ..., "autotune_fusion": ...}` — every field optional);
+//! a response either carries the predicted cells under `"queries"` or
+//! a single `"error"` string. Both directions are tagged with
+//! [`PROTOCOL_VERSION`] so clients can reject a daemon they do not
+//! understand.
+//!
+//! The daemon also accumulates [`ServeStats`] — query/batch counts,
+//! cache hit-rate, and per-batch latency percentiles — and renders
+//! them as the `BENCH_serve.json` document ([`ServeStats::to_json`]).
+//! That document doubles as a bench-ratchet input: its `bench_cases`
+//! array uses the same row shape as
+//! [`Bench::rows_json`](crate::bench::harness::Bench::rows_json), so
+//! CI ratchets daemon throughput alongside the other benches.
+//! [`validate_stats`] is the schema gate (`serve --check-stats`).
+
+use crate::query::request::Request;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+/// Version tag on every request/response line.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Version tag on the `BENCH_serve.json` stats document.
+pub const STATS_SCHEMA_VERSION: u64 = 1;
+
+/// Parse one request line into a [`Request`].
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = json::parse(line).map_err(|e| format!("invalid JSON: {e}"))?;
+    Request::from_json(&j)
+}
+
+/// The error response for a rejected request line.
+pub fn error_json(msg: &str) -> Json {
+    Json::obj(vec![
+        ("protocol", Json::num(PROTOCOL_VERSION as f64)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+/// Running counters for a daemon lifetime. Latencies are per *batch*
+/// (one request line = one batch of scenarios); queries count the
+/// cells answered, which is what the throughput figure is quoted in.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Request lines answered (including error responses).
+    pub batches: usize,
+    /// Cells answered across all successful batches.
+    pub queries: usize,
+    /// Request lines rejected with an error response.
+    pub errors: usize,
+    /// Cells already resident in the hot store when their batch arrived.
+    pub cache_hits: usize,
+    /// Cells that had to be simulated.
+    pub cache_misses: usize,
+    /// Wall-clock seconds per answered batch, in arrival order.
+    pub latencies_s: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Fraction of cells served from the hot store (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Cells answered per second of busy time (0 when idle).
+    pub fn throughput_qps(&self) -> f64 {
+        let busy: f64 = self.latencies_s.iter().sum();
+        if busy > 0.0 {
+            self.queries as f64 / busy
+        } else {
+            0.0
+        }
+    }
+
+    /// The `BENCH_serve.json` document: counters, hit-rate, latency
+    /// percentiles (p99 included — the tail is the service-level
+    /// number), and a ratchet-compatible `bench_cases` row quoting
+    /// throughput in queries/s.
+    pub fn to_json(&self) -> Json {
+        let lat = &self.latencies_s;
+        let mean = stats::mean(lat);
+        let p50 = stats::percentile(lat, 50.0);
+        let p95 = stats::percentile(lat, 95.0);
+        let max = if lat.is_empty() { 0.0 } else { stats::max(lat) };
+        let latency = Json::obj(vec![
+            ("mean_s", Json::num(mean)),
+            ("p50_s", Json::num(p50)),
+            ("p95_s", Json::num(p95)),
+            ("p99_s", Json::num(stats::percentile(lat, 99.0))),
+            ("max_s", Json::num(max)),
+        ]);
+        let bench_cases = Json::Arr(vec![Json::obj(vec![
+            ("case", Json::str("serve_queries (q/s)")),
+            ("mean_s", Json::num(mean)),
+            ("p50_s", Json::num(p50)),
+            ("p95_s", Json::num(p95)),
+            ("rate_per_s", Json::num(self.throughput_qps())),
+        ])]);
+        Json::obj(vec![
+            ("schema_version", Json::num(STATS_SCHEMA_VERSION as f64)),
+            ("bench", Json::str("serve")),
+            ("protocol", Json::num(PROTOCOL_VERSION as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("queries", Json::num(self.queries as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+            ("throughput_qps", Json::num(self.throughput_qps())),
+            ("latency", latency),
+            ("bench_cases", bench_cases),
+        ])
+    }
+}
+
+fn finite(j: &Json, key: &str) -> Result<f64, String> {
+    let v = j
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("missing numeric field '{key}'"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("field '{key}' must be finite and >= 0, got {v}"));
+    }
+    Ok(v)
+}
+
+/// Schema-check a `BENCH_serve.json` document; returns the query count
+/// on success. This is what `serve --check-stats` and the CI
+/// serve-smoke job run against the uploaded artifact.
+pub fn validate_stats(j: &Json) -> Result<usize, String> {
+    let schema = finite(j, "schema_version")?;
+    if schema != STATS_SCHEMA_VERSION as f64 {
+        return Err(format!(
+            "schema_version {schema} != {STATS_SCHEMA_VERSION}"
+        ));
+    }
+    match j.get("bench").and_then(|v| v.as_str()) {
+        Some("serve") => {}
+        other => return Err(format!("bench must be \"serve\", got {other:?}")),
+    }
+    finite(j, "protocol")?;
+    let queries = finite(j, "queries")? as usize;
+    finite(j, "batches")?;
+    finite(j, "errors")?;
+    let hits = finite(j, "cache_hits")?;
+    let misses = finite(j, "cache_misses")?;
+    let rate = finite(j, "hit_rate")?;
+    if !(0.0..=1.0).contains(&rate) {
+        return Err(format!("hit_rate must be in [0, 1], got {rate}"));
+    }
+    if hits + misses > 0.0 {
+        let want = hits / (hits + misses);
+        if (rate - want).abs() > 1e-9 {
+            return Err(format!("hit_rate {rate} inconsistent with hits/misses ({want})"));
+        }
+    }
+    finite(j, "throughput_qps")?;
+    let latency = j.get("latency").ok_or("missing 'latency' object")?;
+    for key in ["mean_s", "p50_s", "p95_s", "p99_s", "max_s"] {
+        finite(latency, key)?;
+    }
+    let cases = j
+        .get("bench_cases")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing 'bench_cases' array")?;
+    if cases.is_empty() {
+        return Err("bench_cases must not be empty".into());
+    }
+    for (i, case) in cases.iter().enumerate() {
+        case.get("case")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("bench_cases[{i}]: missing string field 'case'"))?;
+        for key in ["mean_s", "p50_s", "p95_s", "rate_per_s"] {
+            finite(case, key).map_err(|e| format!("bench_cases[{i}]: {e}"))?;
+        }
+    }
+    Ok(queries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_json_is_tagged_and_parses_back() {
+        let e = error_json("boom: no such profile");
+        let back = json::parse(&e.to_string()).unwrap();
+        assert_eq!(back.get("protocol").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(back.get("error").unwrap().as_str().unwrap(), "boom: no such profile");
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage_and_accepts_defaults() {
+        assert!(parse_request("{nope").unwrap_err().starts_with("invalid JSON"));
+        assert!(parse_request("{\"bogus\": 1}").is_err());
+        let req = parse_request("{}").unwrap();
+        assert_eq!(req, Request::new());
+        let req = parse_request("{\"fabric\": \"ideal\", \"scheduler\": \"fifo,fusion\"}").unwrap();
+        assert_eq!(req.schedulers.len(), 2);
+    }
+
+    #[test]
+    fn stats_roundtrip_validates() {
+        let mut st = ServeStats::new();
+        assert_eq!(st.hit_rate(), 0.0);
+        assert_eq!(st.throughput_qps(), 0.0);
+        st.batches = 3;
+        st.queries = 12;
+        st.cache_hits = 8;
+        st.cache_misses = 4;
+        st.latencies_s = vec![0.25, 0.5, 0.25];
+        let j = st.to_json();
+        let back = json::parse(&j.to_string()).unwrap();
+        assert_eq!(validate_stats(&back).unwrap(), 12);
+        assert!((back.get("hit_rate").unwrap().as_f64().unwrap() - 8.0 / 12.0).abs() < 1e-12);
+        assert!((back.get("throughput_qps").unwrap().as_f64().unwrap() - 12.0).abs() < 1e-9);
+        let p99 = back.get("latency").unwrap().get("p99_s").unwrap().as_f64().unwrap();
+        assert!(p99 > 0.25 && p99 <= 0.5, "p99 between p50 and max, got {p99}");
+    }
+
+    #[test]
+    fn validate_stats_rejects_broken_documents() {
+        let good = {
+            let mut st = ServeStats::new();
+            st.batches = 1;
+            st.queries = 2;
+            st.cache_misses = 2;
+            st.latencies_s = vec![0.1];
+            st.to_json()
+        };
+        assert!(validate_stats(&good).is_ok());
+
+        let wrong_bench = json::parse(&good.to_string().replace("\"serve\"", "\"other\"")).unwrap();
+        assert!(validate_stats(&wrong_bench).unwrap_err().contains("bench"));
+
+        let bad_rate = json::parse(
+            &good.to_string().replace("\"hit_rate\":0", "\"hit_rate\":2"),
+        )
+        .unwrap();
+        assert!(validate_stats(&bad_rate).is_err());
+
+        let no_cases = json::parse(&good.to_string().replace("bench_cases", "cases")).unwrap();
+        assert!(validate_stats(&no_cases).unwrap_err().contains("bench_cases"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration tests for the unified query API (`query::request`).
+//!
+//! The redesign collapsed three per-command copies of the axis-flag
+//! dialect into [`Request::from_args`]; these tests pin its error
+//! strings **byte-for-byte** — they are the CLI's compatibility
+//! contract — and property-test that the canonical string and JSON
+//! forms of a request round-trip under randomly drawn axes.
+
+use dagsgd::query::request::{self as query, ArgError};
+use dagsgd::util::cli::Args;
+use dagsgd::util::quickcheck::{check, Gen};
+use dagsgd::{prop_assert_eq, Fabric, Request, SchedulerKind, Topology};
+
+fn args(v: &[&str]) -> Args {
+    Args::from_iter(v.iter().map(|s| s.to_string()))
+}
+
+fn parse_err(v: &[&str]) -> ArgError {
+    Request::from_args(&args(v), &[SchedulerKind::Fifo]).unwrap_err()
+}
+
+#[test]
+fn scheduler_errors_are_bare_and_pinned() {
+    let e = parse_err(&["--scheduler", "bogus"]);
+    assert!(e.bare);
+    assert_eq!(
+        e.msg,
+        "unknown scheduler 'bogus' (try fifo, priority, critical-path, fusion)"
+    );
+    // Bare errors render identically under every command name.
+    assert_eq!(e.render("whatif"), e.msg);
+    assert_eq!(e.render("campaign"), e.msg);
+    assert_eq!(e.render("calibrate"), e.msg);
+    // The list form trips on the first bad element.
+    let e = query::scheduler_list_or(&args(&["--scheduler", "fifo,nope"]), &[]).unwrap_err();
+    assert_eq!(e.msg, "unknown scheduler 'nope' (try fifo, priority, critical-path, fusion)");
+}
+
+#[test]
+fn axis_errors_are_prefixed_and_pinned() {
+    let cases: &[(&[&str], &str)] = &[
+        (
+            &["--fabric", "warp-drive"],
+            "unknown fabric 'warp-drive' (try measured, ideal, stock, 10gbe, \
+             100gb-ib, a cluster preset, or alpha<S>-bw<B/S>)",
+        ),
+        (
+            &["--fabric", "alphaooops"],
+            "bad α–β fabric 'alphaooops' (want alpha<SECONDS>-bw<BYTES/S>)",
+        ),
+        (&["--topology", "3"], "bad topology '3' (want <nodes>x<gpus_per_node>)"),
+        (&["--topology", "0x4"], "topology 0x4 has no GPUs (both counts must be ≥ 1)"),
+        (&["--nodes", "2"], "--nodes and --gpus must be given together (one topology)"),
+        (&["--alpha", "1e-5"], "--alpha and --beta must be given together (one α–β fabric)"),
+        (&["--alpha", "1e-5", "--beta", "x"], "--beta: invalid float literal"),
+    ];
+    for (flags, want) in cases {
+        let e = parse_err(flags);
+        assert!(!e.bare, "{flags:?}");
+        assert_eq!(e.msg, *want, "{flags:?}");
+        // Every command prefixes the same way: "<command>: <msg>".
+        assert_eq!(e.render("whatif"), format!("whatif: {want}"));
+        assert_eq!(e.render("campaign"), format!("campaign: {want}"));
+    }
+}
+
+#[test]
+fn load_profile_errors_name_the_path() {
+    let e = query::load_profile("/definitely/not/here.json").unwrap_err();
+    assert!(e.starts_with("cannot read /definitely/not/here.json: "), "{e}");
+
+    let path = std::env::temp_dir().join("dagsgd_query_test_garbage.json");
+    std::fs::write(&path, "{nope").unwrap();
+    let e = query::load_profile(path.to_str().unwrap()).unwrap_err();
+    assert!(e.contains(": invalid JSON: "), "{e}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// A random but always-valid request: axes drawn from the full fabric
+/// vocabulary (including a random α–β channel), mixed measured/explicit
+/// topologies, a non-empty scheduler subset.
+fn random_request(g: &mut Gen) -> Request {
+    let fabric_names = ["measured", "ideal", "stock", "10gbe", "100gb-ib", "k80", "v100"];
+    let mut fabrics = Vec::new();
+    for _ in 0..g.usize(1, 3) {
+        fabrics.push(Fabric::parse(g.choice(&fabric_names)).unwrap());
+    }
+    if g.bool() {
+        fabrics.push(Fabric::alpha_beta(g.f64(1e-6, 1e-4), g.f64(1e8, 1e10)).unwrap());
+    }
+    let mut topologies = Vec::new();
+    for _ in 0..g.usize(1, 3) {
+        topologies.push(if g.bool() {
+            None
+        } else {
+            Some(Topology::new(g.usize(1, 4), g.usize(1, 4)).unwrap())
+        });
+    }
+    let all = SchedulerKind::all();
+    let mut schedulers: Vec<SchedulerKind> = all.iter().copied().filter(|_| g.bool()).collect();
+    if schedulers.is_empty() {
+        schedulers.push(*g.choice(&all));
+    }
+    let entries = ["alexnet", "resnet50 @ k80-pcie-10gbe", "googlenet x8"];
+    Request {
+        profile: if g.bool() {
+            Some(format!("profiles/p{}.json", g.usize(0, 9)))
+        } else {
+            None
+        },
+        entry: if g.bool() { Some(g.choice(&entries).to_string()) } else { None },
+        fabrics,
+        topologies,
+        schedulers,
+        autotune_fusion: g.bool(),
+        whatif: g.bool(),
+    }
+}
+
+#[test]
+fn prop_canonical_and_json_forms_round_trip() {
+    check(200, |g| {
+        let req = random_request(g);
+        let canon = req.canonical();
+        let back = Request::parse(&canon).map_err(|e| format!("parse({canon}): {e}"))?;
+        prop_assert_eq!(back, req.clone());
+        // Canonicalization is a fixed point.
+        prop_assert_eq!(back.canonical(), canon);
+        let viajson =
+            Request::from_json(&req.to_json()).map_err(|e| format!("from_json: {e}"))?;
+        prop_assert_eq!(viajson, req);
+        Ok(())
+    });
+}

@@ -1,0 +1,123 @@
+//! End-to-end daemon tests over a real TCP socket.
+//!
+//! The determinism contract: N concurrent clients issuing the same
+//! batch get **byte-identical** response lines, and once a batch has
+//! been answered, repeating it performs zero simulation — every cell
+//! is served from the hot store.
+
+use dagsgd::experiments::whatif as whatif_exp;
+use dagsgd::serve::daemon::{serve_listener, Engine};
+use dagsgd::serve::protocol;
+use dagsgd::util::json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::thread;
+
+const BATCH: &str = r#"{"entry": "alexnet", "fabric": "measured,ideal", "scheduler": "fifo"}"#;
+
+/// One client session: send one request line, read one response line.
+fn query_once(addr: SocketAddr, line: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect to daemon");
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut resp = String::new();
+    BufReader::new(stream).read_line(&mut resp).unwrap();
+    resp.trim_end().to_string()
+}
+
+#[test]
+fn concurrent_clients_get_identical_fully_cached_answers() {
+    const CLIENTS: usize = 4;
+    let engine = Engine::new(vec![whatif_exp::profile_at(8, 5, 2)], 2).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    thread::scope(|scope| {
+        let engine_ref = &engine;
+        let server = scope.spawn(move || serve_listener(engine_ref, listener, Some(1 + CLIENTS)));
+
+        // Wave 1: a single cold client populates the hot store.
+        let cold = query_once(addr, BATCH);
+        let cj = json::parse(&cold).unwrap();
+        assert!(cj.get("error").is_none(), "cold wave failed: {cold}");
+        let simulated = cj.get("batch").unwrap().get("simulated").unwrap().as_f64().unwrap();
+        assert!(simulated > 0.0, "cold wave must simulate, got {cold}");
+
+        // Wave 2: N concurrent clients, all issuing the same batch.
+        let handles: Vec<_> =
+            (0..CLIENTS).map(|_| scope.spawn(move || query_once(addr, BATCH))).collect();
+        let warm: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        server.join().unwrap().unwrap();
+
+        for resp in &warm {
+            assert_eq!(resp, &warm[0], "concurrent responses must be byte-identical");
+        }
+        // Apart from cache provenance, the warm answers are the cold answer.
+        let wj = json::parse(&warm[0]).unwrap();
+        let cold_queries = cj.get("queries").unwrap().to_string().replace("\"miss\"", "\"hit\"");
+        assert_eq!(cold_queries, wj.get("queries").unwrap().to_string());
+
+        let batch = wj.get("batch").unwrap();
+        assert_eq!(
+            batch.get("simulated").unwrap().as_f64().unwrap(),
+            0.0,
+            "repeat wave must not simulate"
+        );
+        for q in wj.get("queries").unwrap().as_arr().unwrap() {
+            assert_eq!(q.get("cache").unwrap().as_str().unwrap(), "hit");
+            assert!(q.get("gap_to_ideal_s").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    });
+
+    // Accounting: 1 cold batch of misses, CLIENTS warm batches of hits.
+    let st = engine.stats_snapshot();
+    assert_eq!(st.batches, 1 + CLIENTS);
+    assert_eq!(st.errors, 0);
+    assert!(st.cache_misses > 0);
+    assert_eq!(st.cache_hits, CLIENTS * st.cache_misses);
+    // The stats document the daemon would write passes its own schema gate.
+    let doc = json::parse(&engine.stats_json().to_string()).unwrap();
+    assert_eq!(protocol::validate_stats(&doc).unwrap(), st.queries);
+}
+
+#[test]
+fn protocol_errors_do_not_kill_the_connection() {
+    let engine = Engine::new(vec![whatif_exp::profile_at(8, 5, 2)], 2).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    thread::scope(|scope| {
+        let engine_ref = &engine;
+        let server = scope.spawn(move || serve_listener(engine_ref, listener, Some(1)));
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"{broken\n").unwrap();
+        stream
+            .write_all(b"{\"entry\": \"alexnet\", \"scheduler\": \"fifo\", \"mode\": \"replay\"}\n")
+            .unwrap();
+        stream.flush().unwrap();
+        stream.shutdown(Shutdown::Write).unwrap();
+
+        let reader = BufReader::new(stream);
+        let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        server.join().unwrap().unwrap();
+
+        assert_eq!(lines.len(), 2, "one response per request line: {lines:?}");
+        let first = json::parse(&lines[0]).unwrap();
+        assert!(first
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("invalid JSON"));
+        let second = json::parse(&lines[1]).unwrap();
+        assert!(second.get("error").is_none(), "{}", lines[1]);
+        assert_eq!(second.get("grid").unwrap().as_str().unwrap(), "calib");
+    });
+
+    let st = engine.stats_snapshot();
+    assert_eq!(st.batches, 2);
+    assert_eq!(st.errors, 1);
+}
