@@ -9,7 +9,7 @@
 //!
 //!     cargo bench --bench campaign_sweep
 
-use dagsgd::bench::harness::Bench;
+use dagsgd::bench::harness::{self, Bench};
 use dagsgd::campaign::cache::Cache;
 use dagsgd::campaign::{grid, report, runner};
 use dagsgd::util::json::Json;
@@ -68,6 +68,7 @@ fn main() {
     let mut top = report::to_json("paper", &parallel);
     if let Json::Obj(m) = &mut top {
         m.insert("bench_cases".to_string(), bench.rows_json());
+        m.insert("sim_metrics".to_string(), harness::sim_metrics_json());
     }
     report::validate(&top).expect("campaign bench report must be schema-valid");
     let out = std::env::var("BENCH_CAMPAIGN_OUT").map(PathBuf::from).unwrap_or_else(|_| {

@@ -12,7 +12,7 @@
 //!
 //!     cargo bench --bench perf_hotpath
 
-use dagsgd::bench::harness::Bench;
+use dagsgd::bench::harness::{self, Bench};
 use dagsgd::cluster::presets;
 use dagsgd::coordinator::allreduce::{flat_allreduce, ring_allreduce, DEFAULT_CHUNK};
 use dagsgd::coordinator::bucket::make_buckets;
@@ -133,6 +133,7 @@ fn main() {
         ("bench", Json::str("perf_hotpath")),
         ("generated", Json::num(1.0)),
         ("bench_cases", bench.rows_json()),
+        ("sim_metrics", harness::sim_metrics_json()),
     ]);
     let out = std::env::var("BENCH_HOTPATH_OUT").map(PathBuf::from).unwrap_or_else(|_| {
         PathBuf::from(env!("CARGO_MANIFEST_DIR"))

@@ -13,7 +13,7 @@
 //!
 //!     cargo bench --bench whatif_scale
 
-use dagsgd::bench::harness::Bench;
+use dagsgd::bench::harness::{self, Bench};
 use dagsgd::calib::whatif::{self, Fabric, Topology};
 use dagsgd::experiments::whatif as exp;
 use dagsgd::frameworks::strategy;
@@ -84,6 +84,7 @@ fn main() {
         ("bench", Json::str("whatif_scale")),
         ("generated", Json::num(1.0)),
         ("bench_cases", bench.rows_json()),
+        ("sim_metrics", harness::sim_metrics_json()),
     ]);
     let out = std::env::var("BENCH_WHATIF_SCALE_OUT").map(PathBuf::from).unwrap_or_else(|_| {
         PathBuf::from(env!("CARGO_MANIFEST_DIR"))

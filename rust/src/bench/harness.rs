@@ -125,6 +125,16 @@ impl Bench {
     }
 }
 
+/// Snapshot of the simulator self-metrics
+/// ([`crate::obs::metrics::snapshot`]) in the shape every persisted
+/// bench report embeds next to its `bench_cases`. The counters are
+/// process-global, so the section covers all simulation the binary did
+/// — cache hit rates and event volume ride the same trajectory files
+/// the bench ratchet reads.
+pub fn sim_metrics_json() -> Json {
+    crate::obs::metrics::snapshot().to_json()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +160,24 @@ mod tests {
         assert_eq!(arr[0].get("case").unwrap().as_str(), Some("x"));
         assert!(arr[0].get("rate_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(arr[1].get("rate_per_s").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn sim_metrics_section_carries_every_counter() {
+        let j = sim_metrics_json();
+        for key in [
+            "events_processed",
+            "peak_queue_len",
+            "template_hits",
+            "template_misses",
+            "store_hits",
+            "store_misses",
+            "tasks_stamped",
+            "tasks_built",
+        ] {
+            let v = j.get(key).and_then(|v| v.as_f64());
+            assert!(v.is_some_and(|v| v.is_finite() && v >= 0.0), "{key}: {v:?}");
+        }
     }
 
     #[test]

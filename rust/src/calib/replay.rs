@@ -19,12 +19,15 @@ use super::fit::{split_ranks, CalibratedProfile, NetCalibration};
 use crate::analytic::{eqs, fusion};
 use crate::campaign::grid::{CellResult, Interconnect, Scenario};
 use crate::cluster::presets;
-use crate::cluster::topology::ClusterSpec;
+use crate::cluster::topology::{ClusterResources, ClusterSpec};
+use crate::coordinator::metrics::PhaseTotals;
 use crate::dag::builder::{self, Durations, JobSpec};
+use crate::dag::graph::Dag;
 use crate::frameworks::strategy::{self, Strategy};
 use crate::models::perf::PerfModel;
 use crate::models::zoo;
-use crate::sim::executor;
+use crate::obs::breakdown;
+use crate::sim::executor::{self, SimResult};
 use crate::sim::scheduler::SchedulerKind;
 
 /// One replayed job.
@@ -194,6 +197,40 @@ pub fn replay_entry_with_comm_capped(
     at: Option<(usize, usize)>,
     cap_override: Option<f64>,
 ) -> Result<Replayed, String> {
+    Ok(replay_sim_with_comm_capped(entry, kind, fw, comm, at, cap_override)?.replayed)
+}
+
+/// A replay with its simulation artifacts retained: the stamped DAG,
+/// the resource layout it ran on, and the scheduled timeline — exactly
+/// the inputs [`crate::obs::breakdown`] explains a prediction from.
+/// [`replay_entry_with_comm_capped`] is this with the artifacts dropped.
+pub struct ReplaySim {
+    pub replayed: Replayed,
+    pub dag: Dag,
+    pub res: ClusterResources,
+    pub sim: SimResult,
+}
+
+impl ReplaySim {
+    /// The per-phase/critical-path/exposed-comm decomposition of this
+    /// replay's timeline.
+    pub fn breakdown(&self) -> breakdown::Breakdown {
+        breakdown::breakdown(&self.dag, &self.res.pool, &self.sim)
+    }
+}
+
+/// [`replay_entry_with_comm_capped`], keeping the DAG, resources and
+/// timeline alive for explanation/tracing instead of discarding them.
+/// Same computation in the same order — `.replayed` is bit-identical to
+/// what the plain entry points return.
+pub fn replay_sim_with_comm_capped(
+    entry: &NetCalibration,
+    kind: SchedulerKind,
+    fw: &Strategy,
+    comm: Option<&[f64]>,
+    at: Option<(usize, usize)>,
+    cap_override: Option<f64>,
+) -> Result<ReplaySim, String> {
     let (cluster, job) = resolve_at(entry, at)?;
     let pm = PerfModel::for_cluster(&cluster);
     let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
@@ -230,12 +267,13 @@ pub fn replay_entry_with_comm_capped(
     let mut sched = kind.build_with_fusion_cap(&job.net, fusion_cap);
     let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
     let iter = executor::steady_state_from(&sim, &dag, job.iterations, 2);
-    Ok(Replayed {
+    let replayed = Replayed {
         iter_time_s: iter,
         makespan_s: sim.makespan,
         samples_per_s: (job.ranks() * job.batch_per_gpu) as f64 / iter,
         tasks: dag.len(),
-    })
+    };
+    Ok(ReplaySim { replayed, dag, res, sim })
 }
 
 /// The measurement-driven fusion bucket cap for an entry: the optimum of
@@ -311,6 +349,58 @@ pub fn traced_iter_time(entry: &NetCalibration, fw: &Strategy) -> Result<f64, St
         t_u: dur.update,
     };
     Ok(eqs::iter_time(&inputs, fw.prefetch_io, fw.wfbp))
+}
+
+/// The trace's own per-phase totals for one steady-state iteration on
+/// one rank — the *measured* side of the calibrate report's phase
+/// table. I/O is scaled by the storage-sharing factor exactly as
+/// [`traced_iter_time`] scales it, and the whole-iteration figure *is*
+/// the traced estimate, so the table's `iter` sub-row reproduces the
+/// Table V measured column.
+pub fn measured_phase_totals(
+    entry: &NetCalibration,
+    fw: &Strategy,
+) -> Result<PhaseTotals, String> {
+    let (cluster, job) = resolve(entry)?;
+    let pm = PerfModel::for_cluster(&cluster);
+    let h2d = (job.batch_per_gpu as u64 * job.net.input_bytes) as f64 / cluster.h2d_bw;
+    let dur = durations_from(entry, &job, &pm, h2d);
+    Ok(PhaseTotals {
+        io_wait: entry.t_io_s * cluster.io_sharing(job.nodes, job.gpus_per_node) + h2d,
+        execute: dur.fwd.iter().sum::<f64>() + dur.bwd.iter().sum::<f64>(),
+        comm: dur.comm.iter().sum(),
+        update: dur.update,
+        iter: traced_iter_time(entry, fw)?,
+    })
+}
+
+/// Measured-vs-predicted phase totals for one entry: the trace's own
+/// per-phase sums next to the replayed DAG's [`crate::obs::breakdown`]
+/// totals, normalized to one steady-state iteration on one rank so the
+/// two sides are unit-compatible (the simulated totals span all ranks
+/// and all [`REPLAY_ITERS`] iterations; collectives span ranks by
+/// construction, so `comm` divides by iterations only). Per-phase gaps
+/// are expected and are the point of the diagnostic — overlap and
+/// contention move simulated time between phases while the measured
+/// side counts raw durations.
+pub fn phase_comparison(
+    entry: &NetCalibration,
+    kind: SchedulerKind,
+    fw: &Strategy,
+) -> Result<(PhaseTotals, PhaseTotals), String> {
+    let measured = measured_phase_totals(entry, fw)?;
+    let rs = replay_sim_with_comm_capped(entry, kind, fw, None, None, None)?;
+    let totals = rs.breakdown().phase_totals();
+    let ranks = entry.gpus.max(1) as f64;
+    let iters = REPLAY_ITERS as f64;
+    let predicted = PhaseTotals {
+        io_wait: totals.io_wait / (ranks * iters),
+        execute: totals.execute / (ranks * iters),
+        comm: totals.comm / iters,
+        update: totals.update / (ranks * iters),
+        iter: rs.replayed.iter_time_s,
+    };
+    Ok((measured, predicted))
 }
 
 /// One scored calibration entry: the DAG replay, the closed-form traced
@@ -420,17 +510,24 @@ pub fn entry_for<'a>(
 
 /// The per-cell measurement for profile-driven sweeps: replay the
 /// matching entry under the cell's scheduler and attach the closed-form
-/// traced estimate + prediction error.
+/// traced estimate + prediction error, plus the obs breakdown metrics
+/// (per-phase totals, critical-path split, exposed comm, bottleneck) so
+/// explained reports serve straight from the cached cell.
 pub fn replay_cell(profile: &CalibratedProfile, s: &Scenario) -> CellResult {
     let fw = strategy::by_name(&profile.framework).expect("profile validated before sweep");
     let entry = entry_for(profile, s).expect("scenario was built from this profile");
-    let scored = score_entry(entry, s.scheduler, &fw).expect("profile validated before sweep");
+    let rs = replay_sim_with_comm_capped(entry, s.scheduler, &fw, None, None, None)
+        .expect("profile validated before sweep");
+    let traced = traced_iter_time(entry, &fw).expect("profile validated before sweep");
     let mut r = CellResult::new();
-    r.set("iter_time_s", scored.replayed.iter_time_s)
-        .set("samples_per_s", scored.replayed.samples_per_s)
-        .set("makespan_s", scored.replayed.makespan_s)
-        .set("traced_iter_s", scored.traced_iter_s)
-        .set("error_pct", scored.error_pct);
+    r.set("iter_time_s", rs.replayed.iter_time_s)
+        .set("samples_per_s", rs.replayed.samples_per_s)
+        .set("makespan_s", rs.replayed.makespan_s)
+        .set("traced_iter_s", traced)
+        .set("error_pct", 100.0 * ((rs.replayed.iter_time_s - traced) / traced).abs());
+    for (k, v) in rs.breakdown().metric_pairs() {
+        r.set(k, v);
+    }
     r
 }
 
@@ -545,6 +642,9 @@ mod tests {
         for (s, r) in &outcome.cells {
             assert!(r.get("iter_time_s").unwrap() > 0.0, "{}", s.key());
             assert!(r.get("error_pct").unwrap().is_finite());
+            // Every profile cell carries the obs breakdown metrics.
+            assert!(r.get("comm_exposed_frac").unwrap().is_finite(), "{}", s.key());
+            assert!(r.get("bottleneck_code").is_some(), "{}", s.key());
         }
     }
 
@@ -590,6 +690,24 @@ mod tests {
         let sim = crate::sim::executor::simulate_with(&dag, &res.pool, hand.as_mut());
         let iter = crate::sim::executor::steady_state_from(&sim, &dag, job.iterations, 2);
         assert_eq!(replayed.iter_time_s.to_bits(), iter.to_bits());
+    }
+
+    /// The phase-comparison diagnostic: both sides finite and positive
+    /// where the job has work, and the `iter` sub-rows are exactly the
+    /// replayed steady-state time and the traced estimate — the same
+    /// numbers Table V scores.
+    #[test]
+    fn phase_comparison_sides_are_finite_and_positive() {
+        let e = entry(2, 4, 10);
+        let fw = fws::caffe_mpi();
+        let (m, p) = phase_comparison(&e, SchedulerKind::Fifo, &fw).unwrap();
+        for t in [&m, &p] {
+            assert!(t.io_wait > 0.0 && t.execute > 0.0 && t.update > 0.0, "{t:?}");
+            assert!(t.comm >= 0.0 && t.iter > 0.0, "{t:?}");
+        }
+        let replayed = replay_entry(&e, SchedulerKind::Fifo, &fw).unwrap();
+        assert_eq!(p.iter.to_bits(), replayed.iter_time_s.to_bits());
+        assert_eq!(m.iter.to_bits(), traced_iter_time(&e, &fw).unwrap().to_bits());
     }
 
     #[test]

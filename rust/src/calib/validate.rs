@@ -11,6 +11,7 @@
 
 use super::fit::CalibratedProfile;
 use super::replay;
+use crate::coordinator::metrics::PhaseTotals;
 use crate::frameworks::strategy;
 use crate::sim::scheduler::SchedulerKind;
 use crate::util::json::Json;
@@ -94,6 +95,65 @@ pub fn render(rows: &[PredictionRow]) -> String {
             fmt_dur(r.predicted_iter_s),
             f(r.error_pct, 1),
         ]);
+    }
+    t.render()
+}
+
+/// One entry's measured-vs-predicted phase pair — the observability
+/// sidebar of the Table-V report. `measured` is the trace's own
+/// per-phase sums ([`replay::measured_phase_totals`]); `predicted` is
+/// the replayed DAG's breakdown normalized to the same units
+/// ([`replay::phase_comparison`]).
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    /// Entry address (`net @ cluster gN bM`).
+    pub key: String,
+    pub measured: PhaseTotals,
+    pub predicted: PhaseTotals,
+}
+
+/// Build the per-phase comparison rows for a profile, one per entry,
+/// replayed under `kind` like [`prediction_rows`].
+pub fn phase_rows(
+    profile: &CalibratedProfile,
+    kind: SchedulerKind,
+) -> Result<Vec<PhaseRow>, String> {
+    let fw = strategy::by_name(&profile.framework)
+        .ok_or_else(|| format!("unknown framework '{}' in profile", profile.framework))?;
+    profile
+        .entries
+        .iter()
+        .map(|entry| {
+            let (measured, predicted) = replay::phase_comparison(entry, kind, &fw)
+                .map_err(|e| format!("{}: {e}", entry.key()))?;
+            Ok(PhaseRow { key: entry.key(), measured, predicted })
+        })
+        .collect()
+}
+
+/// Render the measured-vs-predicted phase table: five sub-rows per
+/// entry (io+h2d, fwd+bwd, comm, update, iter). The per-phase error
+/// column is a diagnostic, not a gate — overlap legitimately moves
+/// simulated time between phases — but the `iter` sub-row's error is
+/// exactly the Table-V error for the entry.
+pub fn render_phases(rows: &[PhaseRow]) -> String {
+    let mut t = Table::new(&["entry", "phase", "measured", "predicted", "err%"]);
+    for r in rows {
+        let sub = [
+            ("io+h2d", r.measured.io_wait, r.predicted.io_wait),
+            ("fwd+bwd", r.measured.execute, r.predicted.execute),
+            ("comm", r.measured.comm, r.predicted.comm),
+            ("update", r.measured.update, r.predicted.update),
+            ("iter", r.measured.iter, r.predicted.iter),
+        ];
+        for (name, m, p) in sub {
+            let err = if m > 0.0 {
+                f(100.0 * ((p - m) / m).abs(), 1)
+            } else {
+                "-".to_string()
+            };
+            t.row(&[r.key.clone(), name.to_string(), fmt_dur(m), fmt_dur(p), err]);
+        }
     }
     t.render()
 }
@@ -243,6 +303,21 @@ mod tests {
         let means = mean_errors(&rows);
         assert_eq!(means.len(), 2);
         assert!(means.iter().all(|(_, e)| e.is_finite()));
+    }
+
+    #[test]
+    fn phase_table_renders_five_sub_rows_per_entry() {
+        let p = profile();
+        let rows = phase_rows(&p, SchedulerKind::Fifo).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.measured.iter > 0.0 && r.predicted.iter > 0.0, "{r:?}");
+        }
+        let table = render_phases(&rows);
+        assert_eq!(table.lines().count(), 2 + 5 * rows.len());
+        for phase in ["io+h2d", "fwd+bwd", "comm", "update", "iter"] {
+            assert!(table.contains(phase), "missing {phase} sub-row:\n{table}");
+        }
     }
 
     #[test]

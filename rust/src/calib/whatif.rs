@@ -37,6 +37,7 @@ use crate::comm::alpha_beta::Link;
 use crate::dag::builder::{comm_topo, JobSpec};
 use crate::frameworks::strategy::{self, CalibratedComm, Strategy};
 use crate::models::perf::PerfModel;
+use crate::obs::breakdown::{self, Bottleneck};
 use crate::sim::scheduler::SchedulerKind;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
@@ -46,6 +47,11 @@ use std::collections::BTreeMap;
 /// Version of the `BENCH_whatif.json` format; bump on any layout change.
 /// v2 added the scale-out axis (`topology` + `pred_gpus` per row).
 pub const WHATIF_SCHEMA_VERSION: u64 = 2;
+
+/// Version of the report's `explain` section (the obs breakdown per
+/// row); independent of the row schema so explain consumers can evolve
+/// without re-versioning the whole report.
+pub const EXPLAIN_SCHEMA_VERSION: u64 = 1;
 
 /// Rank ceiling for hypothetical topologies: generous headroom over the
 /// paper's testbeds while keeping a typo'd `1000x1000` from building a
@@ -531,6 +537,22 @@ pub fn predict_entry_at(
     fw: &Strategy,
     baseline: Option<f64>,
 ) -> Result<Prediction, String> {
+    Ok(predict_sim_at(entry, fabric, topo, kind, fw, baseline)?.0)
+}
+
+/// [`predict_entry_at`], keeping the replay's simulation artifacts (the
+/// stamped DAG, resources and scheduled timeline) alive alongside the
+/// prediction — the inputs `obs::breakdown` and the Chrome-trace
+/// exporter explain it from. Same computation in the same order, so the
+/// `Prediction` is bit-identical to the plain entry points.
+pub fn predict_sim_at(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    topo: Option<Topology>,
+    kind: SchedulerKind,
+    fw: &Strategy,
+    baseline: Option<f64>,
+) -> Result<(Prediction, replay::ReplaySim), String> {
     let (topo, scaled, at) = rescaled_for(entry, topo, fw)?;
     let eff = scaled.as_ref().unwrap_or(entry);
     let comm = comm_override_at(eff, fabric, fw, at)?;
@@ -544,8 +566,8 @@ pub fn predict_entry_at(
     } else {
         None
     };
-    let replayed =
-        replay::replay_entry_with_comm_capped(eff, kind, fw, comm.as_deref(), at, cap)?;
+    let rs = replay::replay_sim_with_comm_capped(eff, kind, fw, comm.as_deref(), at, cap)?;
+    let replayed = rs.replayed.clone();
     let comm_total_s = match &comm {
         Some(v) => v.iter().sum(),
         None => eff.layers.iter().map(|l| l.comm_s).sum(),
@@ -560,7 +582,7 @@ pub fn predict_entry_at(
             None => replay::replay_entry(entry, kind, fw)?.iter_time_s,
         }
     };
-    Ok(Prediction {
+    let p = Prediction {
         fabric: fabric.clone(),
         topology: topo,
         pred_gpus: topo.map(|t| t.ranks()).unwrap_or(entry.gpus),
@@ -568,7 +590,8 @@ pub fn predict_entry_at(
         replayed,
         comm_total_s,
         measured_iter_s,
-    })
+    };
+    Ok((p, rs))
 }
 
 /// Assemble the fusion-scan inputs of an entry against a channel at a
@@ -795,9 +818,15 @@ pub fn whatif_cell_with(
     let base = baselines
         .get(&(entry.key(), s.scheduler.name().to_string()))
         .copied();
-    let p = predict_entry_at(entry, &fabric, cell_topology(s), s.scheduler, &fw, base)
+    let (p, rs) = predict_sim_at(entry, &fabric, cell_topology(s), s.scheduler, &fw, base)
         .expect("fabric/topology validated before sweep");
-    metrics_of(&p)
+    let mut r = metrics_of(&p);
+    // The obs breakdown rides the flat metric map, so explanations are
+    // content-addressed alongside the cell in both result caches.
+    for (k, v) in rs.breakdown().metric_pairs() {
+        r.set(k, v);
+    }
+    r
 }
 
 /// Pre-sweep gate: the profile must be sweepable, every entry must be
@@ -861,6 +890,10 @@ pub struct WhatIfRow {
     pub measured_iter_s: f64,
     pub speedup_vs_measured: f64,
     pub fusion: Option<FusionTune>,
+    /// The obs breakdown metrics of the predicted timeline, keyed by
+    /// [`breakdown::METRIC_KEYS`]. `None` only for cells from caches
+    /// that predate the obs layer.
+    pub explain: Option<BTreeMap<String, f64>>,
 }
 
 /// Sweep a profile across topologies × fabrics × schedulers on `jobs`
@@ -947,6 +980,13 @@ pub fn rows(
             .clone()
             .unwrap_or_else(|| format!("{}x{}", s.nodes, s.gpus_per_node));
         let metric = |k: &str| r.get(k).expect("whatif cell metric");
+        let mut explain: BTreeMap<String, f64> = BTreeMap::new();
+        for k in breakdown::METRIC_KEYS {
+            if let Some(v) = r.get(k) {
+                explain.insert(k.to_string(), v);
+            }
+        }
+        let explain = (explain.len() == breakdown::METRIC_KEYS.len()).then_some(explain);
         out.push(WhatIfRow {
             net: s.net.clone(),
             cluster: s.cluster.clone(),
@@ -962,6 +1002,7 @@ pub fn rows(
             measured_iter_s: metric("measured_iter_s"),
             speedup_vs_measured: metric("speedup_vs_measured"),
             fusion: tunes.get(&(entry.key(), topo_key, fabric_name)).cloned(),
+            explain,
         });
     }
     Ok(out)
@@ -1006,7 +1047,58 @@ pub fn render(rows: &[WhatIfRow]) -> String {
     t.render()
 }
 
-/// Serialize the report (schema v`WHATIF_SCHEMA_VERSION`).
+/// Render the `--explain` companion table: where each predicted
+/// iteration's critical path goes, how much communication the
+/// prediction is actually exposed to, and what bounds it.
+pub fn render_explain(rows: &[WhatIfRow]) -> String {
+    let mut t = Table::new(&[
+        "net",
+        "topo",
+        "fabric",
+        "scheduler",
+        "bottleneck",
+        "comm exposed",
+        "exposed %",
+        "cp compute",
+        "cp comm",
+        "cp io",
+        "cp bubble",
+    ]);
+    for r in rows {
+        let m = |k: &str| r.explain.as_ref().and_then(|e| e.get(k).copied());
+        let dash = || "-".to_string();
+        let label = m("bottleneck_code")
+            .and_then(Bottleneck::from_code)
+            .map(|b| b.name().to_string())
+            .unwrap_or_else(dash);
+        let dur = |k: &str| m(k).map(fmt_dur).unwrap_or_else(dash);
+        let pair = |a: &str, b: &str| match (m(a), m(b)) {
+            (Some(x), Some(y)) => fmt_dur(x + y),
+            _ => dash(),
+        };
+        let frac = m("comm_exposed_frac")
+            .map(|v| format!("{}%", f(100.0 * v, 1)))
+            .unwrap_or_else(dash);
+        t.row(&[
+            r.net.clone(),
+            r.topology.clone(),
+            r.fabric.clone(),
+            r.scheduler.name().to_string(),
+            label,
+            dur("comm_exposed_s"),
+            frac,
+            pair("cp_fwd_s", "cp_bwd_s"),
+            dur("cp_agg_s"),
+            pair("cp_io_s", "cp_h2d_s"),
+            dur("cp_bubble_s"),
+        ]);
+    }
+    t.render()
+}
+
+/// Serialize the report (schema v`WHATIF_SCHEMA_VERSION`). Rows that
+/// carry the obs breakdown additionally emit an `explain` section
+/// (schema v`EXPLAIN_SCHEMA_VERSION`, aligned with `rows`).
 pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) -> Json {
     let row_json: Vec<Json> = rows
         .iter()
@@ -1039,16 +1131,34 @@ pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) ->
             ])
         })
         .collect();
-    Json::obj(vec![
+    let mut doc = vec![
         ("schema_version", Json::num(WHATIF_SCHEMA_VERSION as f64)),
         ("bench", Json::str("whatif")),
         ("framework", Json::str(framework)),
         ("profile", Json::str(profile_tag)),
         ("rows", Json::Arr(row_json)),
-    ])
+    ];
+    if rows.iter().any(|r| r.explain.is_some()) {
+        let explained: Vec<Json> = rows
+            .iter()
+            .map(|r| match &r.explain {
+                Some(e) => breakdown::explain_json(&|k| e.get(k).copied()).unwrap_or(Json::Null),
+                None => Json::Null,
+            })
+            .collect();
+        doc.push((
+            "explain",
+            Json::obj(vec![
+                ("schema_version", Json::num(EXPLAIN_SCHEMA_VERSION as f64)),
+                ("rows", Json::Arr(explained)),
+            ]),
+        ));
+    }
+    Json::obj(doc)
 }
 
-/// Validate a `BENCH_whatif.json` against schema v2. Returns the row
+/// Validate a `BENCH_whatif.json` against schema v2 (and, when
+/// present, its `explain` section against schema v1). Returns the row
 /// count.
 pub fn validate_report(report: &Json) -> Result<usize, String> {
     let version = report
@@ -1133,6 +1243,57 @@ pub fn validate_report(report: &Json) -> Result<usize, String> {
                     if v <= 0.0 {
                         return Err(format!("{at}.fusion: field '{field}' must be positive"));
                     }
+                }
+            }
+        }
+    }
+    if let Some(explain) = report.get("explain") {
+        let v = explain
+            .get("schema_version")
+            .and_then(|v| v.as_f64())
+            .ok_or("explain: missing schema_version")?;
+        if v != EXPLAIN_SCHEMA_VERSION as f64 {
+            return Err(format!(
+                "explain schema_version {v} != supported {EXPLAIN_SCHEMA_VERSION}"
+            ));
+        }
+        let erows = explain
+            .get("rows")
+            .and_then(|v| v.as_arr())
+            .ok_or("explain: missing rows array")?;
+        if erows.len() != rows.len() {
+            return Err(format!(
+                "explain has {} rows but the report has {}",
+                erows.len(),
+                rows.len()
+            ));
+        }
+        for (i, e) in erows.iter().enumerate() {
+            if matches!(e, Json::Null) {
+                continue;
+            }
+            let at = format!("explain.rows[{i}]");
+            for section in ["phases", "critical_path", "comm"] {
+                e.get(section).ok_or_else(|| format!("{at}: missing '{section}' object"))?;
+            }
+            let label = e
+                .get("bottleneck")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("{at}: missing bottleneck label"))?;
+            let known = ["compute-bound", "comm-bound", "io-bound", "update-bound"];
+            if !known.contains(&label) {
+                return Err(format!("{at}: unknown bottleneck '{label}'"));
+            }
+            for (section, field) in
+                [("critical_path", "bubble_s"), ("comm", "exposed_s"), ("comm", "hidden_s")]
+            {
+                let v = e
+                    .get(section)
+                    .and_then(|s| s.get(field))
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("{at}.{section}: missing numeric '{field}'"))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("{at}.{section}.{field} must be finite and ≥ 0"));
                 }
             }
         }
@@ -1301,6 +1462,10 @@ mod tests {
             assert!(r.get("speedup_vs_measured").unwrap() > 0.0);
             if s.fabric.as_deref() == Some("ideal") {
                 assert_eq!(r.get("comm_total_s"), Some(0.0));
+                // No aggregation tasks are built at all on the ideal
+                // fabric, so exposure is exactly zero, not epsilon.
+                assert_eq!(r.get("comm_exposed_s"), Some(0.0), "{}", s.key());
+                assert_eq!(r.get("comm_hidden_s"), Some(0.0), "{}", s.key());
             }
             if s.topology.as_deref() == Some("8x4") {
                 assert_eq!(r.get("pred_gpus"), Some(32.0), "{}", s.key());
@@ -1467,5 +1632,18 @@ mod tests {
         assert!(check(&text.replace("\"rows\":[", "\"cells\":[")).is_err());
         assert!(check(&text.replace("\"topology\":", "\"layout\":")).is_err());
         assert!(check("{\"schema_version\":2,\"bench\":\"whatif\"}").is_err());
+
+        // Fresh rows always carry the obs breakdown: the explain
+        // section rides the report, renders, and tampering is caught.
+        assert!(rows.iter().all(|r| r.explain.is_some()));
+        let etable = render_explain(&rows);
+        assert!(etable.contains("bottleneck"), "{etable}");
+        assert!(etable.contains("-bound"), "{etable}");
+        // Keys serialize sorted, so the explain section reads
+        // {"rows":[...],"schema_version":1} and its version tag is the
+        // only "schema_version":1} in the document.
+        assert!(text.contains("\"explain\":{\"rows\":["), "{text}");
+        assert!(check(&text.replace("\"schema_version\":1}", "\"schema_version\":9}")).is_err());
+        assert!(check(&text.replace("\"bottleneck\":\"", "\"bottleneck\":\"x")).is_err());
     }
 }

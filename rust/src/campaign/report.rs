@@ -290,6 +290,56 @@ pub fn render_table(outcome: &Outcome) -> String {
     t.render()
 }
 
+/// Render the observability sidebar (`--explain`): bottleneck class,
+/// exposed communication and the critical-path split per cell, read
+/// from the same flat metrics the cache stores. Cells without
+/// breakdown metrics (bespoke grids) degrade to dashes, like
+/// [`render_table`] does for its optional columns.
+pub fn render_explain(outcome: &Outcome) -> String {
+    use crate::obs::breakdown::Bottleneck;
+    let mut t = Table::new(&[
+        "net",
+        "fabric",
+        "topo",
+        "scheduler",
+        "bottleneck",
+        "comm exposed",
+        "exposed %",
+        "cp compute",
+        "cp comm",
+        "cp bubble",
+    ]);
+    for (s, r) in &outcome.cells {
+        let dur = |k: &str| r.get(k).map(fmt_dur).unwrap_or_else(|| "-".into());
+        let label = r
+            .get("bottleneck_code")
+            .and_then(Bottleneck::from_code)
+            .map(|b| b.name().to_string())
+            .unwrap_or_else(|| "-".into());
+        let pct = r
+            .get("comm_exposed_frac")
+            .map(|v| format!("{}%", f(100.0 * v, 0)))
+            .unwrap_or_else(|| "-".into());
+        let cp_compute = match (r.get("cp_fwd_s"), r.get("cp_bwd_s")) {
+            (Some(a), Some(b)) => fmt_dur(a + b),
+            _ => "-".into(),
+        };
+        t.row(&[
+            s.net.clone(),
+            s.fabric.clone().unwrap_or_else(|| s.interconnect.name().to_string()),
+            s.topology.clone().unwrap_or_else(|| format!("{}x{}", s.nodes, s.gpus_per_node)),
+            s.scheduler.name().to_string(),
+            label,
+            dur("comm_exposed_s"),
+            pct,
+            cp_compute,
+            dur("cp_agg_s"),
+            dur("cp_bubble_s"),
+        ]);
+    }
+    t.render()
+}
+
 /// One-line sweep summary for the CLI.
 pub fn summary(outcome: &Outcome) -> String {
     format!(
@@ -414,5 +464,26 @@ mod tests {
         assert!(table.contains("googlenet") && table.contains("cntk"));
         let s = summary(&out);
         assert!(s.contains("4 cells") && s.contains("4 simulated"));
+    }
+
+    #[test]
+    fn explain_table_degrades_to_dashes_without_breakdown_metrics() {
+        let mut out = fake_outcome();
+        let table = render_explain(&out);
+        assert_eq!(table.lines().count(), out.cells.len() + 2);
+        assert!(table.contains('-'), "cells without breakdowns show dashes:\n{table}");
+        // With breakdown metrics present, the label and split render.
+        out.cells[0]
+            .1
+            .set("bottleneck_code", 1.0)
+            .set("comm_exposed_s", 0.04)
+            .set("comm_exposed_frac", 0.8)
+            .set("cp_fwd_s", 0.05)
+            .set("cp_bwd_s", 0.1)
+            .set("cp_agg_s", 0.04)
+            .set("cp_bubble_s", 0.01);
+        let table = render_explain(&out);
+        assert!(table.contains("comm-bound"), "{table}");
+        assert!(table.contains("80%"), "{table}");
     }
 }

@@ -15,6 +15,7 @@ use super::grid::{self, CellResult, Scenario};
 use crate::cluster::topology::ClusterSpec;
 use crate::dag::builder::{self, JobSpec};
 use crate::frameworks::strategy::Strategy;
+use crate::obs::metrics as obs_metrics;
 use crate::sim::executor;
 use crate::sim::scheduler::SchedulerKind;
 use std::collections::BTreeMap;
@@ -128,8 +129,12 @@ pub fn run_batched(scenarios: &[Scenario], cache: Option<&Cache>) -> Result<Outc
 
     for (i, s) in scenarios.iter().enumerate() {
         if let Some(hit) = cache.and_then(|c| c.get(s)) {
+            obs_metrics::record_store(true);
             slots[i] = Some(hit);
             continue;
+        }
+        if cache.is_some() {
+            obs_metrics::record_store(false);
         }
         let batchable = s.scheduler == SchedulerKind::Fifo
             && s.profile.is_none()
@@ -266,8 +271,14 @@ where
                 }
                 let s = &scenarios[i];
                 let result = match store.and_then(|c| c.get(s)) {
-                    Some(hit) => hit,
+                    Some(hit) => {
+                        obs_metrics::record_store(true);
+                        hit
+                    }
                     None => {
+                        if store.is_some() {
+                            obs_metrics::record_store(false);
+                        }
                         let fresh = cell(s);
                         simulated.fetch_add(1, Ordering::Relaxed);
                         if let Some(c) = store {

@@ -15,6 +15,7 @@ use crate::comm::allreduce::CommTopo;
 use crate::frameworks::strategy::Strategy;
 use crate::models::layer::{LayerKind, NetSpec};
 use crate::models::perf::PerfModel;
+use crate::obs::metrics as obs_metrics;
 use crate::util::units::us;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
@@ -282,6 +283,7 @@ impl DagTemplate {
         for (task, key) in dag.tasks.iter_mut().zip(&self.keys) {
             task.duration = key.value(dur);
         }
+        obs_metrics::record_tasks_stamped(self.keys.len() as u64);
         dag
     }
 }
@@ -364,9 +366,11 @@ pub fn cached_template(
     let sig = template_signature(res, job, strategy, dur);
     if let Some(t) = lock_cache().get(&sig) {
         if t.matches(dur) {
+            obs_metrics::record_template(true);
             return Arc::clone(t);
         }
     }
+    obs_metrics::record_template(false);
     let t = Arc::new(DagTemplate::build(res, job, strategy, dur));
     let mut cache = lock_cache();
     if cache.len() >= TEMPLATE_CACHE_CAP {
@@ -644,6 +648,7 @@ fn build_impl(
             }
         }
     }
+    obs_metrics::record_tasks_built(dag.len() as u64);
     (dag, keys)
 }
 

@@ -25,6 +25,9 @@
 //! [`campaign`]): one [`Request`] type that the CLI, the `serve`
 //! prediction daemon and programmatic callers all resolve what-if
 //! questions through, answered from a content-addressed result cache.
+//! The [`obs`] layer explains those answers: per-phase breakdowns with
+//! exposed-vs-hidden communication ([`obs::breakdown`]) and simulator
+//! self-metrics ([`obs::metrics`]) folded into every bench report.
 //! The stable entry points are re-exported at the crate root:
 //! [`Request`], [`CalibratedProfile`], [`Fabric`], [`Topology`],
 //! [`SchedulerKind`], [`Bench`].
@@ -111,6 +114,11 @@ pub mod campaign {
     pub mod runner;
 }
 
+pub mod obs {
+    pub mod breakdown;
+    pub mod metrics;
+}
+
 pub mod query {
     pub mod request;
 }
@@ -148,5 +156,6 @@ pub mod coordinator {
 pub use bench::harness::Bench;
 pub use calib::fit::CalibratedProfile;
 pub use calib::whatif::{Fabric, Topology};
+pub use obs::breakdown::{breakdown, Bottleneck, Breakdown};
 pub use query::request::Request;
 pub use sim::scheduler::SchedulerKind;

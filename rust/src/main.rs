@@ -301,7 +301,9 @@ fn write_campaign_report(
 /// content-addressed (the profile's hash plus fabric and topology
 /// names are part of every key), and the report flows through the
 /// standard `BENCH_campaign.json` machinery with `grid: "calib"` or
-/// `"whatif"`.
+/// `"whatif"`. `--explain` appends the observability sidebar
+/// (bottleneck class, exposed comm, critical-path split per cell),
+/// served from the same cached metrics.
 fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
     use dagsgd::calib::replay;
     use dagsgd::campaign::{report, runner};
@@ -355,6 +357,9 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
         Request::cell(&profile, &baselines, s)
     });
     print!("{}", report::render_table(&outcome));
+    if req.explain {
+        print!("{}", report::render_explain(&outcome));
+    }
     println!("{} ({}): {}", req.grid_name(), profile.tag(), report::summary(&outcome));
     write_campaign_report(args, req.grid_name(), &outcome)
 }
@@ -372,8 +377,12 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
 /// [PATH]` writes the schema-validated `BENCH_whatif.json`. Without a
 /// profile it runs the in-process demo sweep (synthesize → calibrate →
 /// what-if; `--scale-ladder` demos the 1→2→4→8-node prediction from a
-/// 2-node profile instead; see `experiments::whatif`). Tooling:
-/// `--check-report FILE`.
+/// 2-node profile instead; see `experiments::whatif`). `--explain`
+/// appends the observability sidebar (bottleneck, exposed comm,
+/// critical-path split per prediction) and adds the explain section to
+/// the report; `--chrome-trace FILE` writes a Chrome/Perfetto trace of
+/// the first predicted cell (flow arrows along DAG edges, critical-path
+/// category, engine counter track). Tooling: `--check-report FILE`.
 fn cmd_whatif(args: &Args) -> i32 {
     use dagsgd::calib::whatif;
     use dagsgd::experiments::whatif as whatif_exp;
@@ -481,6 +490,9 @@ fn cmd_whatif(args: &Args) -> i32 {
     };
 
     print!("{}", whatif::render(&rows));
+    if req.explain {
+        print!("{}", whatif::render_explain(&rows));
+    }
     println!(
         "whatif ({}): {} prediction(s), {} with a fusion autotune",
         profile.tag(),
@@ -500,6 +512,42 @@ fn cmd_whatif(args: &Args) -> i32 {
         }
         println!("wrote {out}");
     }
+    if let Some(path) = args.get("chrome-trace") {
+        // Trace the first swept cell (first entry × fabric × topology ×
+        // scheduler) — enough to inspect the predicted schedule in
+        // chrome://tracing / Perfetto without a file per cell.
+        let fw = strategy::by_name(&profile.framework).expect("profile validated");
+        let (entry, fabric, kind) = match (
+            profile.entries.first(),
+            req.fabrics.first(),
+            req.schedulers.first(),
+        ) {
+            (Some(e), Some(fb), Some(k)) => (e, fb, *k),
+            _ => {
+                eprintln!("whatif: nothing to trace (empty profile or sweep axes)");
+                return 2;
+            }
+        };
+        let topo = req.topologies.first().copied().flatten();
+        match whatif::predict_sim_at(entry, fabric, topo, kind, &fw, None) {
+            Ok((_, rs)) => {
+                let json = timeline::chrome_trace(&rs.dag, &rs.res.pool, &rs.sim);
+                if let Err(e) = std::fs::write(path, json.to_string()) {
+                    eprintln!("cannot write {path}: {e}");
+                    return 1;
+                }
+                println!(
+                    "chrome trace written to {path} ({} on {})",
+                    entry.key(),
+                    fabric.name()
+                );
+            }
+            Err(e) => {
+                eprintln!("whatif: chrome trace failed: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
@@ -515,8 +563,12 @@ fn cmd_whatif(args: &Args) -> i32 {
 /// content-addressed, so a repeated batch performs zero simulation.
 /// `--jobs N` sizes the worker pool, `--max-conns N` stops accepting
 /// after N connections (the CI hook), `--stats-out PATH` writes the
-/// `BENCH_serve.json` counters (throughput, hit-rate, p99 latency) at
-/// shutdown. Tooling: `--check-stats FILE` schema-checks a stats file.
+/// `BENCH_serve.json` counters (throughput, hit-rate, p99 latency,
+/// simulator self-metrics) at shutdown. Requests carrying
+/// `"explain": true` get the observability breakdown attached to every
+/// answered cell; the `{"stats": true}` control verb returns the live
+/// counters on the wire. Tooling: `--check-stats FILE` schema-checks a
+/// stats file.
 fn cmd_serve(args: &Args) -> i32 {
     use dagsgd::serve::{daemon, protocol};
 
@@ -660,6 +712,9 @@ fn cmd_ratchet(args: &Args) -> i32 {
 /// optionally replay every entry through the DAG simulator under a
 /// policy (`--replay --scheduler S`) and write the Table-V-style
 /// prediction-error report (`--report [PATH]`, schema-validated).
+/// `--explain` (implied by `--report`) prints the measured-vs-predicted
+/// per-phase table next to the Table-V totals; `--chrome-trace FILE`
+/// writes a Chrome/Perfetto trace of the first entry's replay.
 /// Tooling: `--check-profile FILE` / `--check-report FILE`.
 fn cmd_calibrate(args: &Args) -> i32 {
     use dagsgd::calib::{fit, ingest, replay, validate};
@@ -751,6 +806,7 @@ fn cmd_calibrate(args: &Args) -> i32 {
 
     let kind = scheduler_arg(args);
     let want_report = args.has("report");
+    let explain = args.bool_or("explain", false);
     // `--max-err FRAC` (e.g. 0.15) is the self-calibration drift gate:
     // replay the freshly fitted profile and fail when the mean
     // |simulated − traced| error leaves the Table-V-style band. It
@@ -765,7 +821,7 @@ fn cmd_calibrate(args: &Args) -> i32 {
             }
         },
     };
-    if args.bool_or("replay", false) || want_report || max_err.is_some() {
+    if args.bool_or("replay", false) || want_report || max_err.is_some() || explain {
         let rows = match validate::prediction_rows(&profile, kind) {
             Ok(r) => r,
             Err(e) => {
@@ -776,6 +832,17 @@ fn cmd_calibrate(args: &Args) -> i32 {
         print!("{}", validate::render(&rows));
         for (net, err) in validate::mean_errors(&rows) {
             println!("mean |err| {net}: {}%", f(err, 1));
+        }
+        // The observability sidebar: measured-vs-predicted per-phase
+        // totals next to the Table-V iteration totals.
+        if explain || want_report {
+            match validate::phase_rows(&profile, kind) {
+                Ok(pr) => print!("{}", validate::render_phases(&pr)),
+                Err(e) => {
+                    eprintln!("phase comparison failed: {e}");
+                    return 1;
+                }
+            }
         }
         if want_report {
             let path = match args.get("report") {
@@ -813,6 +880,24 @@ fn cmd_calibrate(args: &Args) -> i32 {
                     f(mean, 1),
                     f(band * 100.0, 1)
                 );
+                return 1;
+            }
+        }
+    }
+    if let Some(path) = args.get("chrome-trace") {
+        // Trace the first entry's replay under the selected policy.
+        let entry = &profile.entries[0];
+        match replay::replay_sim_with_comm_capped(entry, kind, &fw, None, None, None) {
+            Ok(rs) => {
+                let json = timeline::chrome_trace(&rs.dag, &rs.res.pool, &rs.sim);
+                if let Err(e) = std::fs::write(path, json.to_string()) {
+                    eprintln!("cannot write {path}: {e}");
+                    return 1;
+                }
+                println!("chrome trace written to {path} ({})", entry.key());
+            }
+            Err(e) => {
+                eprintln!("calibrate: chrome trace failed: {e}");
                 return 1;
             }
         }

@@ -1,0 +1,559 @@
+//! Paper-faithful phase accounting for a finished simulation: where an
+//! iteration's time went, and why.
+//!
+//! [`breakdown`] decomposes any [`SimResult`] + DAG into the paper's
+//! `t_io/t_f/t_b/t_c/t_u` ledger (§IV–VI of arxiv 1805.03812), three
+//! ways at once:
+//!
+//! - **Per-phase totals** — the sum of task service times per phase,
+//!   across all resources (work volume, ignoring overlap).
+//! - **Critical-chain attribution** — a walk of the *scheduled*
+//!   timeline from the last finisher back through the tasks that gated
+//!   it, attributing every second of the makespan to a phase or to
+//!   `bubble` (idle gaps where nothing on the chain ran). The invariant
+//!   `Σ critical phases + bubble == makespan` holds to float rounding
+//!   and is pinned in `tests/obs.rs`.
+//! - **Exposed vs hidden communication** — aggregation time overlapped
+//!   with backward computation (hidden by wait-free backprop) vs
+//!   aggregation time the iteration actually waits on (exposed). The
+//!   identity `exposed + hidden == total comm` is exact by
+//!   construction; an ideal fabric builds no aggregation tasks, so it
+//!   reports exactly zero exposed comm.
+//!
+//! The [`Bottleneck`] classification answers the user-facing question
+//! ("is the 10GbE cell comm-bound or a pipeline bubble?") from the
+//! critical-chain groups, and [`Breakdown::metric_pairs`] flattens the
+//! whole accounting into the campaign cell-metric dialect so
+//! breakdowns ride the content-addressed result caches bit-identically
+//! alongside their cells.
+
+use crate::coordinator::metrics::PhaseTotals;
+use crate::dag::graph::Dag;
+use crate::dag::node::{Phase, TaskId};
+use crate::sim::executor::SimResult;
+use crate::sim::resources::ResourcePool;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// The cell-metric keys [`Breakdown::metric_pairs`] emits, in emission
+/// order — the one list explain consumers (report sections, the serve
+/// daemon) read flattened breakdowns back through.
+pub const METRIC_KEYS: [&str; 17] = [
+    "phase_io_s",
+    "phase_h2d_s",
+    "phase_fwd_s",
+    "phase_bwd_s",
+    "phase_agg_s",
+    "phase_upd_s",
+    "cp_io_s",
+    "cp_h2d_s",
+    "cp_fwd_s",
+    "cp_bwd_s",
+    "cp_agg_s",
+    "cp_upd_s",
+    "cp_bubble_s",
+    "comm_exposed_s",
+    "comm_hidden_s",
+    "comm_exposed_frac",
+    "bottleneck_code",
+];
+
+/// Seconds per S-SGD phase — one slot per [`Phase`] variant.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PerPhase {
+    pub io_s: f64,
+    pub h2d_s: f64,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub agg_s: f64,
+    pub upd_s: f64,
+    /// Synthetic barrier/bookkeeping tasks; the builder never emits
+    /// them, so this is zero on every production path.
+    pub ctl_s: f64,
+}
+
+impl PerPhase {
+    fn slot(&mut self, p: Phase) -> &mut f64 {
+        match p {
+            Phase::Io => &mut self.io_s,
+            Phase::H2d => &mut self.h2d_s,
+            Phase::Forward => &mut self.fwd_s,
+            Phase::Backward => &mut self.bwd_s,
+            Phase::Aggregate => &mut self.agg_s,
+            Phase::Update => &mut self.upd_s,
+            Phase::Control => &mut self.ctl_s,
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.io_s + self.h2d_s + self.fwd_s + self.bwd_s + self.agg_s + self.upd_s + self.ctl_s
+    }
+}
+
+/// What bounds the iteration, judged by which critical-chain group
+/// holds the most makespan. Ties resolve in declaration order
+/// (compute, then comm, then io, then update).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bottleneck {
+    Compute,
+    Comm,
+    Io,
+    Update,
+}
+
+impl Bottleneck {
+    pub fn name(self) -> &'static str {
+        match self {
+            Bottleneck::Compute => "compute-bound",
+            Bottleneck::Comm => "comm-bound",
+            Bottleneck::Io => "io-bound",
+            Bottleneck::Update => "update-bound",
+        }
+    }
+
+    /// Stable numeric code for the flat cell-metric encoding.
+    pub fn code(self) -> f64 {
+        match self {
+            Bottleneck::Compute => 0.0,
+            Bottleneck::Comm => 1.0,
+            Bottleneck::Io => 2.0,
+            Bottleneck::Update => 3.0,
+        }
+    }
+
+    /// Inverse of [`Bottleneck::code`] (how the serve daemon recovers
+    /// the label from a cached cell's `bottleneck_code` metric).
+    pub fn from_code(code: f64) -> Option<Bottleneck> {
+        match code as i64 {
+            0 => Some(Bottleneck::Compute),
+            1 => Some(Bottleneck::Comm),
+            2 => Some(Bottleneck::Io),
+            3 => Some(Bottleneck::Update),
+            _ => None,
+        }
+    }
+}
+
+/// Per-resource occupancy: busy time, utilization, and the bubble
+/// (idle) time the resource spent waiting inside the makespan.
+#[derive(Clone, Debug)]
+pub struct ResourceUse {
+    pub name: String,
+    pub class: &'static str,
+    pub busy_s: f64,
+    pub util: f64,
+    pub bubble_s: f64,
+}
+
+/// The full explained accounting of one simulation.
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub makespan_s: f64,
+    /// Per-phase sums of task service times (work volume).
+    pub totals: PerPhase,
+    /// Per-phase attribution of the scheduled critical chain.
+    pub critical: PerPhase,
+    /// Makespan seconds on no chain task (idle gaps).
+    pub bubble_s: f64,
+    /// Aggregation time the iteration waits on (not overlapped).
+    pub comm_exposed_s: f64,
+    /// Aggregation time hidden behind backward computation (WFBP).
+    pub comm_hidden_s: f64,
+    pub resources: Vec<ResourceUse>,
+    pub bottleneck: Bottleneck,
+}
+
+impl Breakdown {
+    /// Fraction of communication the iteration is actually exposed to
+    /// (0 when the cell moves no gradient bytes at all).
+    pub fn comm_exposed_frac(&self) -> f64 {
+        let total = self.comm_exposed_s + self.comm_hidden_s;
+        if total > 0.0 {
+            self.comm_exposed_s / total
+        } else {
+            0.0
+        }
+    }
+
+    /// The measured-runtime bridge: this breakdown in the
+    /// [`PhaseTotals`] shape the real trainer reports, so simulated and
+    /// measured decompositions compare field for field.
+    pub fn phase_totals(&self) -> PhaseTotals {
+        PhaseTotals {
+            io_wait: self.totals.io_s + self.totals.h2d_s,
+            execute: self.totals.fwd_s + self.totals.bwd_s,
+            comm: self.totals.agg_s,
+            update: self.totals.upd_s,
+            iter: self.makespan_s,
+        }
+    }
+
+    /// Flatten into campaign cell metrics. Every value is finite, so
+    /// the pairs ride [`crate::campaign::grid::CellResult`] through
+    /// validation, serialization and both result caches unchanged.
+    pub fn metric_pairs(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("phase_io_s", self.totals.io_s),
+            ("phase_h2d_s", self.totals.h2d_s),
+            ("phase_fwd_s", self.totals.fwd_s),
+            ("phase_bwd_s", self.totals.bwd_s),
+            ("phase_agg_s", self.totals.agg_s),
+            ("phase_upd_s", self.totals.upd_s),
+            ("cp_io_s", self.critical.io_s),
+            ("cp_h2d_s", self.critical.h2d_s),
+            ("cp_fwd_s", self.critical.fwd_s),
+            ("cp_bwd_s", self.critical.bwd_s),
+            ("cp_agg_s", self.critical.agg_s),
+            ("cp_upd_s", self.critical.upd_s),
+            ("cp_bubble_s", self.bubble_s),
+            ("comm_exposed_s", self.comm_exposed_s),
+            ("comm_hidden_s", self.comm_hidden_s),
+            ("comm_exposed_frac", self.comm_exposed_frac()),
+            ("bottleneck_code", self.bottleneck.code()),
+        ]
+    }
+}
+
+/// Shape a cell's flat breakdown metrics back into the nested explain
+/// object reports and the serve daemon expose. `get` reads one metric
+/// by key (from a campaign cell, a report row, …); the result is `None`
+/// unless every [`METRIC_KEYS`] entry is present and the bottleneck
+/// code decodes — cells cached before the obs layer simply carry no
+/// explanation.
+pub fn explain_json(get: &dyn Fn(&str) -> Option<f64>) -> Option<Json> {
+    let mut m: BTreeMap<&str, f64> = BTreeMap::new();
+    for key in METRIC_KEYS {
+        m.insert(key, get(key)?);
+    }
+    let bottleneck = Bottleneck::from_code(m["bottleneck_code"])?;
+    let phases = Json::obj(vec![
+        ("io_s", Json::num(m["phase_io_s"])),
+        ("h2d_s", Json::num(m["phase_h2d_s"])),
+        ("fwd_s", Json::num(m["phase_fwd_s"])),
+        ("bwd_s", Json::num(m["phase_bwd_s"])),
+        ("agg_s", Json::num(m["phase_agg_s"])),
+        ("upd_s", Json::num(m["phase_upd_s"])),
+    ]);
+    let critical = Json::obj(vec![
+        ("io_s", Json::num(m["cp_io_s"])),
+        ("h2d_s", Json::num(m["cp_h2d_s"])),
+        ("fwd_s", Json::num(m["cp_fwd_s"])),
+        ("bwd_s", Json::num(m["cp_bwd_s"])),
+        ("agg_s", Json::num(m["cp_agg_s"])),
+        ("upd_s", Json::num(m["cp_upd_s"])),
+        ("bubble_s", Json::num(m["cp_bubble_s"])),
+    ]);
+    let comm = Json::obj(vec![
+        ("exposed_s", Json::num(m["comm_exposed_s"])),
+        ("hidden_s", Json::num(m["comm_hidden_s"])),
+        ("exposed_frac", Json::num(m["comm_exposed_frac"])),
+    ]);
+    Some(Json::obj(vec![
+        ("phases", phases),
+        ("critical_path", critical),
+        ("comm", comm),
+        ("bottleneck", Json::str(bottleneck.name())),
+    ]))
+}
+
+/// The scheduled critical chain, first task to last: walk back from the
+/// last finisher through tasks that finished no later than each start.
+/// Zero-duration tasks carry no time and are skipped (their gating
+/// collapses onto the positive-duration task behind them). Returns an
+/// empty chain when no task occupies time.
+pub fn critical_chain(dag: &Dag, sim: &SimResult) -> Vec<TaskId> {
+    let n = dag.len();
+    let live = |i: TaskId| dag.tasks[i].duration > 0.0;
+    let mut cur: Option<TaskId> = None;
+    let mut best = f64::NEG_INFINITY;
+    for i in 0..n {
+        if live(i) && sim.finish[i] > best {
+            best = sim.finish[i];
+            cur = Some(i);
+        }
+    }
+    let mut on_chain = vec![false; n];
+    let mut chain = Vec::new();
+    while let Some(c) = cur {
+        on_chain[c] = true;
+        chain.push(c);
+        // Predecessor on the timeline: the latest finisher at or before
+        // this start (ties to the lowest id; float rounding can leave a
+        // finish exactly equal to its own start, so exclude visited
+        // tasks to guarantee termination).
+        let gate = sim.start[c];
+        let mut next: Option<TaskId> = None;
+        let mut best = f64::NEG_INFINITY;
+        for i in 0..n {
+            if live(i) && !on_chain[i] && sim.finish[i] <= gate && sim.finish[i] > best {
+                best = sim.finish[i];
+                next = Some(i);
+            }
+        }
+        cur = next;
+    }
+    chain.reverse();
+    chain
+}
+
+/// Compute the full breakdown of a finished simulation.
+pub fn breakdown(dag: &Dag, pool: &ResourcePool, sim: &SimResult) -> Breakdown {
+    let n = dag.len();
+    let makespan_s = sim.makespan;
+
+    let mut totals = PerPhase::default();
+    for t in &dag.tasks {
+        *totals.slot(t.phase) += t.duration;
+    }
+
+    // Critical-chain attribution + bubbles: the chain tiles
+    // [0, makespan] with task intervals and the gaps between them.
+    let chain = critical_chain(dag, sim);
+    let mut critical = PerPhase::default();
+    let mut bubble_s = 0.0;
+    let mut prev_finish = 0.0;
+    for &t in &chain {
+        bubble_s += sim.start[t] - prev_finish;
+        *critical.slot(dag.tasks[t].phase) += sim.finish[t] - sim.start[t];
+        prev_finish = sim.finish[t];
+    }
+    bubble_s += makespan_s - prev_finish;
+
+    // Exposed vs hidden comm: merge backward intervals into a disjoint
+    // union, then clip every aggregation interval against it.
+    let mut bwd: Vec<(f64, f64)> = (0..n)
+        .filter(|&i| dag.tasks[i].phase == Phase::Backward && dag.tasks[i].duration > 0.0)
+        .map(|i| (sim.start[i], sim.finish[i]))
+        .collect();
+    bwd.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(bwd.len());
+    for (s, f) in bwd {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(f),
+            _ => merged.push((s, f)),
+        }
+    }
+    let mut hidden = 0.0;
+    for i in 0..n {
+        if dag.tasks[i].phase != Phase::Aggregate {
+            continue;
+        }
+        let (s, f) = (sim.start[i], sim.finish[i]);
+        for &(bs, bf) in &merged {
+            if bs >= f {
+                break;
+            }
+            if bf > s {
+                hidden += bf.min(f) - bs.max(s);
+            }
+        }
+    }
+    // `exposed + hidden == total` exactly, and an ideal fabric (no
+    // aggregation tasks at all) yields exactly 0.0 exposed.
+    let comm_hidden_s = hidden.min(totals.agg_s);
+    let comm_exposed_s = (totals.agg_s - comm_hidden_s).max(0.0);
+
+    let resources = pool
+        .specs
+        .iter()
+        .enumerate()
+        .map(|(rid, spec)| ResourceUse {
+            name: spec.name.clone(),
+            class: spec.class.short(),
+            busy_s: sim.busy[rid],
+            util: sim.utilization(rid),
+            bubble_s: (makespan_s - sim.busy[rid]).max(0.0),
+        })
+        .collect();
+
+    // Classification: which critical-chain group owns the makespan.
+    let groups = [
+        (Bottleneck::Compute, critical.fwd_s + critical.bwd_s),
+        (Bottleneck::Comm, critical.agg_s),
+        (Bottleneck::Io, critical.io_s + critical.h2d_s),
+        (Bottleneck::Update, critical.upd_s),
+    ];
+    let mut bottleneck = Bottleneck::Compute;
+    let mut top = groups[0].1;
+    for &(b, v) in &groups[1..] {
+        if v > top {
+            top = v;
+            bottleneck = b;
+        }
+    }
+
+    Breakdown {
+        makespan_s,
+        totals,
+        critical,
+        bubble_s,
+        comm_exposed_s,
+        comm_hidden_s,
+        resources,
+        bottleneck,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::node::Task;
+    use crate::sim::executor::simulate;
+    use crate::sim::resources::ResourceClass;
+
+    fn t(name: &str, phase: Phase, res: usize, dur: f64) -> Task {
+        Task {
+            name: name.into(),
+            phase,
+            resource: res,
+            duration: dur,
+            iter: 0,
+            gpu: Some(0),
+            layer: None,
+        }
+    }
+
+    /// One hand-built iteration with both hidden and exposed comm:
+    ///   io [0,1] → fwd [1,2] → bwd [2,4] → agg2 [4,6] → upd [6,6.5]
+    ///                 └→ agg1 [2,3]  (fully inside bwd: hidden)
+    fn wfbp_fixture() -> (Dag, ResourcePool, SimResult) {
+        let mut pool = ResourcePool::new();
+        let disk = pool.add("disk0", ResourceClass::Disk, 1);
+        let gpu = pool.add("gpu0", ResourceClass::Gpu, 1);
+        let coll = pool.add("coll", ResourceClass::Collective, 1);
+        let mut dag = Dag::new();
+        let io = dag.add(t("io", Phase::Io, disk, 1.0));
+        let fwd = dag.add(t("fwd", Phase::Forward, gpu, 1.0));
+        let bwd = dag.add(t("bwd", Phase::Backward, gpu, 2.0));
+        let agg1 = dag.add(t("agg1", Phase::Aggregate, coll, 1.0));
+        let agg2 = dag.add(t("agg2", Phase::Aggregate, coll, 2.0));
+        let upd = dag.add(t("upd", Phase::Update, gpu, 0.5));
+        dag.edge(io, fwd);
+        dag.edge(fwd, bwd);
+        dag.edge(fwd, agg1);
+        dag.edge(bwd, agg2);
+        dag.edge(agg2, upd);
+        let sim = simulate(&dag, &pool);
+        (dag, pool, sim)
+    }
+
+    #[test]
+    fn phase_totals_and_makespan() {
+        let (dag, pool, sim) = wfbp_fixture();
+        let b = breakdown(&dag, &pool, &sim);
+        assert!((b.makespan_s - 6.5).abs() < 1e-12);
+        assert!((b.totals.io_s - 1.0).abs() < 1e-12);
+        assert!((b.totals.fwd_s - 1.0).abs() < 1e-12);
+        assert!((b.totals.bwd_s - 2.0).abs() < 1e-12);
+        assert!((b.totals.agg_s - 3.0).abs() < 1e-12);
+        assert!((b.totals.upd_s - 0.5).abs() < 1e-12);
+        assert_eq!(b.totals.h2d_s, 0.0);
+    }
+
+    #[test]
+    fn exposed_and_hidden_comm_split_by_backward_overlap() {
+        let (dag, pool, sim) = wfbp_fixture();
+        let b = breakdown(&dag, &pool, &sim);
+        // agg1 [2,3] hides inside bwd [2,4]; agg2 [4,6] is exposed.
+        assert!((b.comm_hidden_s - 1.0).abs() < 1e-12);
+        assert!((b.comm_exposed_s - 2.0).abs() < 1e-12);
+        assert!((b.comm_exposed_s + b.comm_hidden_s - b.totals.agg_s).abs() < 1e-12);
+        assert!((b.comm_exposed_frac() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_chain_sums_to_makespan() {
+        let (dag, pool, sim) = wfbp_fixture();
+        let b = breakdown(&dag, &pool, &sim);
+        // Chain io → fwd → bwd → agg2 → upd, zero bubble.
+        let chain = critical_chain(&dag, &sim);
+        assert_eq!(chain, vec![0, 1, 2, 4, 5]);
+        assert!((b.critical.agg_s - 2.0).abs() < 1e-12, "agg1 is off-chain");
+        assert!(b.bubble_s.abs() < 1e-12);
+        assert!((b.critical.sum() + b.bubble_s - b.makespan_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_classifies_from_the_chain() {
+        let (dag, pool, sim) = wfbp_fixture();
+        let b = breakdown(&dag, &pool, &sim);
+        // Chain compute = fwd 1 + bwd 2 = 3 > comm 2 > io 1 > upd 0.5.
+        assert_eq!(b.bottleneck, Bottleneck::Compute);
+        assert_eq!(b.bottleneck.name(), "compute-bound");
+        assert_eq!(Bottleneck::from_code(b.bottleneck.code()), Some(Bottleneck::Compute));
+        assert_eq!(Bottleneck::from_code(9.0), None);
+    }
+
+    #[test]
+    fn resource_rows_and_phase_totals_bridge() {
+        let (dag, pool, sim) = wfbp_fixture();
+        let b = breakdown(&dag, &pool, &sim);
+        assert_eq!(b.resources.len(), 3);
+        let gpu = &b.resources[1];
+        assert_eq!(gpu.class, "gpu");
+        assert!((gpu.busy_s - 3.5).abs() < 1e-12);
+        assert!((gpu.busy_s + gpu.bubble_s - b.makespan_s).abs() < 1e-9);
+        let pt = b.phase_totals();
+        assert!((pt.io_wait - 1.0).abs() < 1e-12);
+        assert!((pt.execute - 3.0).abs() < 1e-12);
+        assert!((pt.comm - 3.0).abs() < 1e-12);
+        assert!((pt.update - 0.5).abs() < 1e-12);
+        assert!((pt.iter - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_pairs_are_finite_and_complete() {
+        let (dag, pool, sim) = wfbp_fixture();
+        let b = breakdown(&dag, &pool, &sim);
+        let pairs = b.metric_pairs();
+        assert_eq!(pairs.len(), 17);
+        let keys: Vec<&str> = pairs.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, METRIC_KEYS, "METRIC_KEYS mirrors metric_pairs");
+        for (k, v) in &pairs {
+            assert!(v.is_finite() && *v >= 0.0, "{k} = {v}");
+        }
+        let get = |key: &str| pairs.iter().find(|(k, _)| *k == key).unwrap().1;
+        let cp = ["cp_io_s", "cp_h2d_s", "cp_fwd_s", "cp_bwd_s", "cp_agg_s", "cp_upd_s"];
+        let cp_sum = cp.iter().map(|&k| get(k)).sum::<f64>() + get("cp_bubble_s");
+        assert!((cp_sum - b.makespan_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn explain_json_round_trips_the_flat_metrics() {
+        let (dag, pool, sim) = wfbp_fixture();
+        let b = breakdown(&dag, &pool, &sim);
+        let pairs = b.metric_pairs();
+        let get = |key: &str| pairs.iter().find(|(k, _)| *k == key).map(|&(_, v)| v);
+        let j = explain_json(&get).expect("every key present");
+        let phases = j.get("phases").unwrap();
+        assert_eq!(phases.get("agg_s").and_then(|v| v.as_f64()), Some(b.totals.agg_s));
+        let comm = j.get("comm").unwrap();
+        assert_eq!(comm.get("exposed_s").and_then(|v| v.as_f64()), Some(b.comm_exposed_s));
+        assert_eq!(j.get("bottleneck").and_then(|v| v.as_str()), Some(b.bottleneck.name()));
+        let cp = j.get("critical_path").unwrap();
+        assert_eq!(cp.get("bubble_s").and_then(|v| v.as_f64()), Some(b.bubble_s));
+        // A cell missing any key (pre-obs cache) has no explanation.
+        let partial = |key: &str| if key == "cp_io_s" { None } else { get(key) };
+        assert!(explain_json(&partial).is_none());
+    }
+
+    #[test]
+    fn empty_and_zero_duration_dags_do_not_loop() {
+        let mut pool = ResourcePool::new();
+        let gpu = pool.add("gpu0", ResourceClass::Gpu, 1);
+        let dag = Dag::new();
+        let sim = simulate(&dag, &pool);
+        let b = breakdown(&dag, &pool, &sim);
+        assert_eq!(b.makespan_s, 0.0);
+        assert!(critical_chain(&dag, &sim).is_empty());
+
+        let mut zeros = Dag::new();
+        let a = zeros.add(t("z0", Phase::Control, gpu, 0.0));
+        let c = zeros.add(t("z1", Phase::Control, gpu, 0.0));
+        zeros.edge(a, c);
+        let sim = simulate(&zeros, &pool);
+        let b = breakdown(&zeros, &pool, &sim);
+        assert!(critical_chain(&zeros, &sim).is_empty());
+        assert!((b.critical.sum() + b.bubble_s - b.makespan_s).abs() < 1e-12);
+    }
+}

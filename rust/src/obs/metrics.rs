@@ -1,0 +1,181 @@
+//! Simulator self-metrics: process-global counters the hot paths bump
+//! as they run, snapshotted into every `bench_cases` report so a
+//! bench-ratchet regression arrives with its own diagnosis.
+//!
+//! The counters are plain relaxed atomics — recording is a single
+//! `fetch_add` on the hot path, cheap enough for the event loop — and
+//! they are *cumulative for the process lifetime*: the test harness
+//! runs many tests in one process, so consumers must reason in deltas
+//! ([`SimMetrics::delta_since`]) rather than absolute values, and
+//! nothing ever resets them.
+//!
+//! What is counted, and by whom:
+//! - `events_processed`, `peak_queue_len` — the discrete-event executor
+//!   ([`crate::sim::executor`]), per finished simulation.
+//! - `template_hits` / `template_misses` — the DAG template cache in
+//!   [`crate::dag::builder::cached_template`].
+//! - `tasks_stamped` vs `tasks_built` — duration-stamped reuses of a
+//!   cached structure vs tasks constructed from scratch; the ratio is
+//!   the arena-reuse win the PR 6 hot-path overhaul bought.
+//! - `store_hits` / `store_misses` — result-store probes in
+//!   [`crate::campaign::runner`] (disk cache and the serve daemon's
+//!   `MemCache` alike).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static EVENTS_PROCESSED: AtomicU64 = AtomicU64::new(0);
+static PEAK_QUEUE_LEN: AtomicU64 = AtomicU64::new(0);
+static TEMPLATE_HITS: AtomicU64 = AtomicU64::new(0);
+static TEMPLATE_MISSES: AtomicU64 = AtomicU64::new(0);
+static STORE_HITS: AtomicU64 = AtomicU64::new(0);
+static STORE_MISSES: AtomicU64 = AtomicU64::new(0);
+static TASKS_STAMPED: AtomicU64 = AtomicU64::new(0);
+static TASKS_BUILT: AtomicU64 = AtomicU64::new(0);
+
+/// Credit one finished simulation: its event count and the high-water
+/// mark of its event queue.
+pub fn record_simulation(events: u64, peak_queue: u64) {
+    EVENTS_PROCESSED.fetch_add(events, Ordering::Relaxed);
+    PEAK_QUEUE_LEN.fetch_max(peak_queue, Ordering::Relaxed);
+}
+
+/// Record a DAG-template cache probe.
+pub fn record_template(hit: bool) {
+    let c = if hit { &TEMPLATE_HITS } else { &TEMPLATE_MISSES };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record a campaign result-store probe (disk cache or `MemCache`).
+pub fn record_store(hit: bool) {
+    let c = if hit { &STORE_HITS } else { &STORE_MISSES };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record `n` tasks materialized by stamping durations onto a cached
+/// structure.
+pub fn record_tasks_stamped(n: u64) {
+    TASKS_STAMPED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record `n` tasks built from scratch.
+pub fn record_tasks_built(n: u64) {
+    TASKS_BUILT.fetch_add(n, Ordering::Relaxed);
+}
+
+/// A point-in-time copy of the global counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimMetrics {
+    pub events_processed: u64,
+    pub peak_queue_len: u64,
+    pub template_hits: u64,
+    pub template_misses: u64,
+    pub store_hits: u64,
+    pub store_misses: u64,
+    pub tasks_stamped: u64,
+    pub tasks_built: u64,
+}
+
+/// Snapshot the process-global counters.
+pub fn snapshot() -> SimMetrics {
+    SimMetrics {
+        events_processed: EVENTS_PROCESSED.load(Ordering::Relaxed),
+        peak_queue_len: PEAK_QUEUE_LEN.load(Ordering::Relaxed),
+        template_hits: TEMPLATE_HITS.load(Ordering::Relaxed),
+        template_misses: TEMPLATE_MISSES.load(Ordering::Relaxed),
+        store_hits: STORE_HITS.load(Ordering::Relaxed),
+        store_misses: STORE_MISSES.load(Ordering::Relaxed),
+        tasks_stamped: TASKS_STAMPED.load(Ordering::Relaxed),
+        tasks_built: TASKS_BUILT.load(Ordering::Relaxed),
+    }
+}
+
+impl SimMetrics {
+    /// Counter growth since an `earlier` snapshot. Counters subtract
+    /// (saturating, so a racing recorder can never produce wraparound);
+    /// `peak_queue_len` is a high-water mark and carries the current
+    /// value.
+    pub fn delta_since(&self, earlier: &SimMetrics) -> SimMetrics {
+        SimMetrics {
+            events_processed: self.events_processed.saturating_sub(earlier.events_processed),
+            peak_queue_len: self.peak_queue_len,
+            template_hits: self.template_hits.saturating_sub(earlier.template_hits),
+            template_misses: self.template_misses.saturating_sub(earlier.template_misses),
+            store_hits: self.store_hits.saturating_sub(earlier.store_hits),
+            store_misses: self.store_misses.saturating_sub(earlier.store_misses),
+            tasks_stamped: self.tasks_stamped.saturating_sub(earlier.tasks_stamped),
+            tasks_built: self.tasks_built.saturating_sub(earlier.tasks_built),
+        }
+    }
+
+    /// The `sim_metrics` section folded into bench documents.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("peak_queue_len", Json::num(self.peak_queue_len as f64)),
+            ("template_hits", Json::num(self.template_hits as f64)),
+            ("template_misses", Json::num(self.template_misses as f64)),
+            ("store_hits", Json::num(self.store_hits as f64)),
+            ("store_misses", Json::num(self.store_misses as f64)),
+            ("tasks_stamped", Json::num(self.tasks_stamped as f64)),
+            ("tasks_built", Json::num(self.tasks_built as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The counters are process-global and the test harness runs tests
+    // concurrently, so every assertion here is about *deltas* being at
+    // least what this test contributed — never absolute values.
+
+    #[test]
+    fn recording_moves_the_counters_forward() {
+        let before = snapshot();
+        record_simulation(120, 7);
+        record_template(true);
+        record_template(false);
+        record_store(true);
+        record_store(false);
+        record_tasks_stamped(40);
+        record_tasks_built(8);
+        let d = snapshot().delta_since(&before);
+        assert!(d.events_processed >= 120);
+        assert!(d.peak_queue_len >= 7);
+        assert!(d.template_hits >= 1 && d.template_misses >= 1);
+        assert!(d.store_hits >= 1 && d.store_misses >= 1);
+        assert!(d.tasks_stamped >= 40 && d.tasks_built >= 8);
+    }
+
+    #[test]
+    fn json_section_carries_every_counter() {
+        record_simulation(1, 1);
+        let j = snapshot().to_json();
+        for key in [
+            "events_processed",
+            "peak_queue_len",
+            "template_hits",
+            "template_misses",
+            "store_hits",
+            "store_misses",
+            "tasks_stamped",
+            "tasks_built",
+        ] {
+            let v = j.get(key).and_then(|v| v.as_f64()).unwrap();
+            assert!(v.is_finite() && v >= 0.0, "{key} = {v}");
+        }
+        assert!(j.get("events_processed").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn delta_is_zero_against_itself_except_peak() {
+        record_simulation(5, 3);
+        let s = snapshot();
+        let d = s.delta_since(&s);
+        assert_eq!(d.events_processed, 0);
+        assert_eq!(d.template_hits, 0);
+        assert_eq!(d.peak_queue_len, s.peak_queue_len, "peak is a level, not a rate");
+    }
+}

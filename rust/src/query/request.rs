@@ -156,6 +156,9 @@ pub struct Request {
     pub schedulers: Vec<SchedulerKind>,
     pub autotune_fusion: bool,
     pub whatif: bool,
+    /// Attach the observability breakdown (per-phase totals, exposed
+    /// communication, critical-path split) to every answered cell.
+    pub explain: bool,
 }
 
 impl Request {
@@ -170,6 +173,7 @@ impl Request {
             schedulers: vec![SchedulerKind::Fifo],
             autotune_fusion: false,
             whatif: true,
+            explain: false,
         }
     }
 
@@ -198,6 +202,7 @@ impl Request {
             schedulers,
             autotune_fusion: args.bool_or("autotune-fusion", false),
             whatif,
+            explain: args.bool_or("explain", false),
         })
     }
 
@@ -216,7 +221,7 @@ impl Request {
         let schedulers: Vec<String> =
             self.schedulers.iter().map(|k| k.name().to_string()).collect();
         format!(
-            "mode={}|profile={}|entry={}|fabric={}|topology={}|scheduler={}|autotune={}",
+            "mode={}|profile={}|entry={}|fabric={}|topology={}|scheduler={}|autotune={}|explain={}",
             if self.whatif { "whatif" } else { "replay" },
             opt(&self.profile),
             opt(&self.entry),
@@ -224,6 +229,7 @@ impl Request {
             topologies.join(","),
             schedulers.join(","),
             self.autotune_fusion,
+            self.explain,
         )
     }
 
@@ -257,6 +263,8 @@ impl Request {
                 ("autotune_fusion", _) => {
                     return Err("request field 'autotune_fusion' must be a bool".into())
                 }
+                ("explain", Json::Bool(b)) => req.explain = *b,
+                ("explain", _) => return Err("request field 'explain' must be a bool".into()),
                 (k, Json::Str(v)) => req.set_field(k, v)?,
                 (k, _) => return Err(format!("request field '{k}' must be a string")),
             }
@@ -287,6 +295,7 @@ impl Request {
         pairs.push(("topology", Json::str(topologies.join(","))));
         pairs.push(("scheduler", Json::str(schedulers.join(","))));
         pairs.push(("autotune_fusion", Json::Bool(self.autotune_fusion)));
+        pairs.push(("explain", Json::Bool(self.explain)));
         Json::obj(pairs)
     }
 
@@ -330,6 +339,13 @@ impl Request {
                     "true" => true,
                     "false" => false,
                     other => return Err(format!("bad autotune '{other}' (want true or false)")),
+                }
+            }
+            "explain" => {
+                self.explain = match value {
+                    "true" => true,
+                    "false" => false,
+                    other => return Err(format!("bad explain '{other}' (want true or false)")),
                 }
             }
             other => return Err(format!("unknown query key '{other}'")),
@@ -475,6 +491,7 @@ mod tests {
             schedulers: vec![SchedulerKind::Fifo, SchedulerKind::Fusion],
             autotune_fusion: true,
             whatif: true,
+            explain: true,
         };
         let canon = req.canonical();
         assert_eq!(Request::parse(&canon).unwrap(), req);
@@ -488,8 +505,10 @@ mod tests {
         assert!(Request::parse("mode=sideways").is_err());
         assert!(Request::parse("fabric=warp-drive").is_err());
         assert!(Request::parse("colour=blue").is_err());
+        assert!(Request::parse("explain=maybe").is_err());
         assert!(Request::from_json(&Json::str("not an object")).is_err());
         assert!(Request::from_json(&Json::obj(vec![("autotune_fusion", Json::num(1.0))])).is_err());
+        assert!(Request::from_json(&Json::obj(vec![("explain", Json::num(1.0))])).is_err());
     }
 
     #[test]

@@ -21,6 +21,12 @@
 //! Measured baselines and fusion autotunes are memoized per profile
 //! across batches, and baselines are only computed for cells that miss
 //! the store, so warm traffic never touches the simulator.
+//!
+//! Requests with `"explain": true` additionally attach each cell's
+//! observability breakdown (`obs::breakdown`), shaped from the same
+//! content-addressed metrics the store holds — so explained answers
+//! are as byte-deterministic as plain ones. The `{"stats": true}`
+//! control verb returns the live [`ServeStats`] document on the wire.
 
 use crate::calib::fit::CalibratedProfile;
 use crate::calib::replay;
@@ -29,6 +35,7 @@ use crate::campaign::cache::MemCache;
 use crate::campaign::grid::Scenario;
 use crate::campaign::{report, runner};
 use crate::frameworks::strategy;
+use crate::obs::breakdown;
 use crate::query::request::Request;
 use crate::serve::protocol::{self, ServeStats};
 use crate::util::json::Json;
@@ -240,6 +247,13 @@ impl Engine {
             if let Json::Obj(m) = &mut row {
                 m.insert("cache".into(), Json::str(if pre[i] { "hit" } else { "miss" }));
                 m.insert("gap_to_ideal_s".into(), Json::num(gap));
+                if req.explain {
+                    // Shaped from the cell's own (content-addressed)
+                    // metrics, so warm answers match cold ones byte
+                    // for byte.
+                    let shaped = breakdown::explain_json(&|k| r.get(k));
+                    m.insert("breakdown".into(), shaped.unwrap_or(Json::Null));
+                }
                 if req.autotune_fusion {
                     if let Some(t) = self.fusion_for(profile, s) {
                         m.insert("fusion".into(), fusion_json(&t));
@@ -268,8 +282,13 @@ impl Engine {
     }
 
     /// Answer one request line, recording stats; always returns a
-    /// single-line JSON response (result or error).
+    /// single-line JSON response (result or error). The `stats`
+    /// control verb short-circuits to the live counters without
+    /// touching them — asking about the daemon is not a batch.
     pub fn answer_line(&self, line: &str) -> String {
+        if protocol::is_stats_request(line) {
+            return self.stats_json().to_string();
+        }
         let start = Instant::now();
         let answered = protocol::parse_request(line).and_then(|req| self.answer(&req));
         let (resp, queries, hits, misses, erred) = match answered {
@@ -430,6 +449,48 @@ mod tests {
         let requested = batch.get("requested").unwrap().as_f64().unwrap();
         let scenarios = batch.get("scenarios").unwrap().as_f64().unwrap();
         assert!(scenarios > requested, "{scenarios} twins for {requested} cells");
+    }
+
+    #[test]
+    fn explained_batches_attach_breakdowns_and_stay_deterministic() {
+        let e = engine();
+        let line = "{\"entry\": \"alexnet\", \"fabric\": \"10gbe,ideal\", \"explain\": true}";
+        let cold = e.answer_line(line);
+        let warm = e.answer_line(line);
+        let cj = json::parse(&cold).unwrap();
+        assert!(cj.get("error").is_none(), "{cold}");
+        for q in cj.get("queries").unwrap().as_arr().unwrap() {
+            let b = q.get("breakdown").unwrap();
+            let label = b.get("bottleneck").unwrap().as_str().unwrap();
+            assert!(label.ends_with("-bound"), "{label}");
+            let exposed = b.get("comm").unwrap().get("exposed_s").unwrap().as_f64().unwrap();
+            assert!(exposed >= 0.0);
+            if q.get("fabric").unwrap().as_str() == Some("ideal") {
+                assert_eq!(exposed, 0.0, "ideal fabric exposes no communication");
+            }
+        }
+        // Warm answers are byte-identical apart from cache provenance.
+        let wj = json::parse(&warm).unwrap();
+        let cold_q = cj.get("queries").unwrap().to_string().replace("\"miss\"", "\"hit\"");
+        assert_eq!(cold_q, wj.get("queries").unwrap().to_string());
+        // Without the flag the same batch carries no breakdowns.
+        let plain = e.answer_line("{\"entry\": \"alexnet\", \"fabric\": \"10gbe,ideal\"}");
+        let pj = json::parse(&plain).unwrap();
+        let qs = pj.get("queries").unwrap().as_arr().unwrap();
+        assert!(qs.iter().all(|q| q.get("breakdown").is_none()), "{plain}");
+    }
+
+    #[test]
+    fn stats_verb_returns_live_counters_without_counting_itself() {
+        let e = engine();
+        e.answer_line("{\"entry\": \"alexnet\"}");
+        let j = json::parse(&e.answer_line("{\"stats\": true}")).unwrap();
+        assert!(protocol::validate_stats(&j).is_ok(), "{j:?}");
+        assert_eq!(j.get("batches").unwrap().as_f64().unwrap(), 1.0);
+        // Asking again: still one batch — the verb is not a query.
+        let again = json::parse(&e.answer_line("{\"stats\": true}")).unwrap();
+        assert_eq!(again.get("batches").unwrap().as_f64().unwrap(), 1.0);
+        assert!(again.get("queries").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]

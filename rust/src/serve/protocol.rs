@@ -8,7 +8,16 @@
 //! a response either carries the predicted cells under `"queries"` or
 //! a single `"error"` string. Both directions are tagged with
 //! [`PROTOCOL_VERSION`] so clients can reject a daemon they do not
-//! understand.
+//! understand. A request with `"explain": true` gets each cell's
+//! observability breakdown attached (per-phase totals, exposed
+//! communication, critical-path split) — derived from the same
+//! content-addressed metrics the store holds, so explained responses
+//! stay byte-identical between cold and warm batches.
+//!
+//! One *control verb* rides the same line protocol: `{"stats": true}`
+//! ([`is_stats_request`]) answers with the live [`ServeStats`]
+//! document instead of a prediction batch, without perturbing the
+//! counters it reports.
 //!
 //! The daemon also accumulates [`ServeStats`] — query/batch counts,
 //! cache hit-rate, and per-batch latency percentiles — and renders
@@ -19,6 +28,7 @@
 //! CI ratchets daemon throughput alongside the other benches.
 //! [`validate_stats`] is the schema gate (`serve --check-stats`).
 
+use crate::obs::metrics as obs_metrics;
 use crate::query::request::Request;
 use crate::util::json::{self, Json};
 use crate::util::stats;
@@ -33,6 +43,17 @@ pub const STATS_SCHEMA_VERSION: u64 = 1;
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let j = json::parse(line).map_err(|e| format!("invalid JSON: {e}"))?;
     Request::from_json(&j)
+}
+
+/// Is this line the `stats` control verb? Exactly `{"stats": true}`
+/// (whitespace aside) — anything else falls through to request
+/// parsing, so a typo still earns a parse error rather than a silent
+/// stats dump.
+pub fn is_stats_request(line: &str) -> bool {
+    match json::parse(line) {
+        Ok(Json::Obj(m)) => m.len() == 1 && matches!(m.get("stats"), Some(Json::Bool(true))),
+        _ => false,
+    }
 }
 
 /// The error response for a rejected request line.
@@ -124,6 +145,7 @@ impl ServeStats {
             ("throughput_qps", Json::num(self.throughput_qps())),
             ("latency", latency),
             ("bench_cases", bench_cases),
+            ("sim_metrics", obs_metrics::snapshot().to_json()),
         ])
     }
 }
@@ -188,6 +210,19 @@ pub fn validate_stats(j: &Json) -> Result<usize, String> {
         for key in ["mean_s", "p50_s", "p95_s", "rate_per_s"] {
             finite(case, key).map_err(|e| format!("bench_cases[{i}]: {e}"))?;
         }
+    }
+    let sim = j.get("sim_metrics").ok_or("missing 'sim_metrics' object")?;
+    for key in [
+        "events_processed",
+        "peak_queue_len",
+        "template_hits",
+        "template_misses",
+        "store_hits",
+        "store_misses",
+        "tasks_stamped",
+        "tasks_built",
+    ] {
+        finite(sim, key).map_err(|e| format!("sim_metrics: {e}"))?;
     }
     Ok(queries)
 }
@@ -256,5 +291,18 @@ mod tests {
 
         let no_cases = json::parse(&good.to_string().replace("bench_cases", "cases")).unwrap();
         assert!(validate_stats(&no_cases).unwrap_err().contains("bench_cases"));
+
+        let no_sim = json::parse(&good.to_string().replace("sim_metrics", "sim")).unwrap();
+        assert!(validate_stats(&no_sim).unwrap_err().contains("sim_metrics"));
+    }
+
+    #[test]
+    fn stats_verb_is_recognized_strictly() {
+        assert!(is_stats_request("{\"stats\": true}"));
+        assert!(is_stats_request("  {\"stats\":true}  "));
+        assert!(!is_stats_request("{\"stats\": false}"));
+        assert!(!is_stats_request("{\"stats\": true, \"entry\": \"alexnet\"}"));
+        assert!(!is_stats_request("{\"entry\": \"alexnet\"}"));
+        assert!(!is_stats_request("{nope"));
     }
 }

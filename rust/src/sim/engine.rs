@@ -37,6 +37,8 @@ pub struct EventQueue<E> {
     now: f64,
     seq: u64,
     processed: u64,
+    /// High-water mark of the in-flight population (self-metrics).
+    peak: usize,
 }
 
 impl<E> EventQueue<E> {
@@ -56,6 +58,7 @@ impl<E> EventQueue<E> {
             now: 0.0,
             seq: 0,
             processed: 0,
+            peak: 0,
         }
     }
 
@@ -67,6 +70,12 @@ impl<E> EventQueue<E> {
     /// Number of events popped so far (engine throughput metric).
     pub fn processed(&self) -> u64 {
         self.processed
+    }
+
+    /// Largest in-flight event population seen so far (self-metrics:
+    /// how deep the queue actually ran vs its capacity bound).
+    pub fn peak_len(&self) -> usize {
+        self.peak
     }
 
     /// `true` iff slot `a` orders strictly before slot `b`. Timestamps are
@@ -150,6 +159,7 @@ impl<E> EventQueue<E> {
         };
         self.seq += 1;
         self.heap.push(slot);
+        self.peak = self.peak.max(self.heap.len());
         self.sift_up(self.heap.len() - 1);
     }
 
@@ -283,6 +293,22 @@ mod tests {
         }
         while q.pop().is_some() {}
         assert_eq!(q.processed(), 10);
+        assert_eq!(q.peak_len(), 10, "all 10 were in flight at once");
+    }
+
+    #[test]
+    fn peak_tracks_high_water_not_current_len() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        q.pop();
+        q.schedule_at(3.0, "c");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak_len(), 2, "never more than 2 in flight");
+        q.pop();
+        q.pop();
+        assert!(q.is_empty());
+        assert_eq!(q.peak_len(), 2, "peak survives the drain");
     }
 
     #[test]

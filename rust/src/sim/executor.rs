@@ -30,6 +30,7 @@ use super::resources::ResourcePool;
 use super::scheduler::{FifoScheduler, Scheduler};
 use crate::dag::graph::Dag;
 use crate::dag::node::TaskId;
+use crate::obs::metrics as obs_metrics;
 use std::collections::VecDeque;
 
 /// Simulation result for one DAG run.
@@ -203,6 +204,7 @@ fn simulate_fifo_multi(dag: &Dag, pool: &ResourcePool, durs: &[&[f64]]) -> Vec<S
             drain_resource!(kiu, rep, tr, now);
         }
     }
+    obs_metrics::record_simulation(ev.processed(), ev.peak_len() as u64);
 
     reps.into_iter()
         .map(|rep| {
@@ -367,6 +369,7 @@ pub fn simulate_with(dag: &Dag, pool: &ResourcePool, sched: &mut dyn Scheduler) 
         sched.name()
     );
     let makespan = finish.iter().copied().fold(0.0, f64::max);
+    obs_metrics::record_simulation(ev.processed(), ev.peak_len() as u64);
     SimResult {
         start,
         finish,

@@ -5,22 +5,119 @@
 use super::executor::SimResult;
 use super::resources::ResourcePool;
 use crate::dag::graph::Dag;
+use crate::dag::node::TaskKind;
+use crate::obs::breakdown;
 use crate::util::json::Json;
 
-/// Chrome trace-event format ("X" complete events, µs units). Open in
-/// chrome://tracing or Perfetto.
+/// Chrome trace-event format (µs units). Open in chrome://tracing or
+/// Perfetto.
+///
+/// Beyond one "X" complete event per task, the trace carries:
+///
+/// - a `critical-path` category on every task the simulated critical
+///   chain runs through ([`breakdown::critical_chain`]), so the chain
+///   highlights with one category filter;
+/// - one "s"/"f" flow pair per DAG edge, anchored at the producer's
+///   finish and the consumer's start — the viewer draws the precedence
+///   arrows;
+/// - a "C" counter track sampling event-queue depth (running tasks ==
+///   pending finish events) and in-flight communication at every task
+///   boundary.
+///
+/// Template-stamped tasks carry empty names; labels are synthesized
+/// from phase/iter/gpu so no span renders blank. Every name is
+/// serialized through `util::json`'s escaper, so hostile strings stay
+/// valid JSON.
 pub fn chrome_trace(dag: &Dag, pool: &ResourcePool, res: &SimResult) -> Json {
-    let mut events = Vec::with_capacity(dag.len());
+    let chain = breakdown::critical_chain(dag, res);
+    let mut on_chain = vec![false; dag.len()];
+    for &t in &chain {
+        on_chain[t] = true;
+    }
+    let mut events = Vec::with_capacity(2 * dag.len() + 2 * dag.edge_count());
     for (i, task) in dag.tasks.iter().enumerate() {
+        let name = if task.name.is_empty() {
+            match task.gpu {
+                Some(g) => format!("{} i{} g{}", task.phase.short(), task.iter, g),
+                None => format!("{} i{}", task.phase.short(), task.iter),
+            }
+        } else {
+            task.name.clone()
+        };
+        let cat = if on_chain[i] {
+            format!("{},critical-path", task.phase.short())
+        } else {
+            task.phase.short().to_string()
+        };
         events.push(Json::obj(vec![
-            ("name", Json::str(task.name.clone())),
-            ("cat", Json::str(task.phase.short())),
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
             ("ph", Json::str("X")),
             ("ts", Json::num(res.start[i] * 1e6)),
             ("dur", Json::num(task.duration * 1e6)),
             // pid = resource, tid = gpu rank (or 0).
             ("pid", Json::num(task.resource as f64)),
             ("tid", Json::num(task.gpu.unwrap_or(0) as f64)),
+        ]));
+    }
+    // Flow events: one arrow per precedence edge.
+    let mut flow = 0u64;
+    for from in 0..dag.len() {
+        for &to in dag.succs_of(from) {
+            events.push(Json::obj(vec![
+                ("name", Json::str("dep")),
+                ("cat", Json::str("dep")),
+                ("ph", Json::str("s")),
+                ("id", Json::num(flow as f64)),
+                ("ts", Json::num(res.finish[from] * 1e6)),
+                ("pid", Json::num(dag.tasks[from].resource as f64)),
+                ("tid", Json::num(dag.tasks[from].gpu.unwrap_or(0) as f64)),
+            ]));
+            events.push(Json::obj(vec![
+                ("name", Json::str("dep")),
+                ("cat", Json::str("dep")),
+                ("ph", Json::str("f")),
+                ("bp", Json::str("e")),
+                ("id", Json::num(flow as f64)),
+                ("ts", Json::num(res.start[to] * 1e6)),
+                ("pid", Json::num(dag.tasks[to].resource as f64)),
+                ("tid", Json::num(dag.tasks[to].gpu.unwrap_or(0) as f64)),
+            ]));
+            flow += 1;
+        }
+    }
+    // Counter track: sweep every positive-duration task boundary.
+    let mut deltas: Vec<(f64, i64, i64)> = Vec::with_capacity(2 * dag.len());
+    for (i, task) in dag.tasks.iter().enumerate() {
+        if task.duration <= 0.0 {
+            continue;
+        }
+        let comm = i64::from(task.kind() == TaskKind::Comm);
+        deltas.push((res.start[i], 1, comm));
+        deltas.push((res.finish[i], -1, -comm));
+    }
+    deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let (mut running, mut comm) = (0i64, 0i64);
+    let mut k = 0;
+    while k < deltas.len() {
+        let t = deltas[k].0;
+        while k < deltas.len() && deltas[k].0.total_cmp(&t).is_eq() {
+            running += deltas[k].1;
+            comm += deltas[k].2;
+            k += 1;
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::str("engine")),
+            ("ph", Json::str("C")),
+            ("ts", Json::num(t * 1e6)),
+            ("pid", Json::num(0.0)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("queue_depth", Json::num(running as f64)),
+                    ("comm_in_flight", Json::num(comm as f64)),
+                ]),
+            ),
         ]));
     }
     // Resource-name metadata.
@@ -129,14 +226,88 @@ mod tests {
     }
 
     #[test]
-    fn chrome_trace_is_valid_json_with_all_tasks() {
+    fn chrome_trace_carries_tasks_flows_counters_and_metadata() {
         let (dag, pool) = tiny();
         let res = simulate(&dag, &pool);
         let trace = chrome_trace(&dag, &pool, &res);
         let parsed = json::parse(&trace.to_string()).unwrap();
         let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
-        // 2 tasks + 2 metadata.
-        assert_eq!(events.len(), 4);
+        let of_ph = |ph: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").unwrap().as_str() == Some(ph))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(of_ph("X").len(), 2, "one complete event per task");
+        assert_eq!(of_ph("s").len(), 1, "one flow start per DAG edge");
+        assert_eq!(of_ph("f").len(), 1, "one flow finish per DAG edge");
+        assert_eq!(of_ph("C").len(), 3, "counter samples at t = 0, 1, 3");
+        assert_eq!(of_ph("M").len(), 2, "one process_name record per resource");
+
+        // Both tasks sit on this two-task chain's critical path.
+        for e in of_ph("X") {
+            let cat = e.get("cat").unwrap().as_str().unwrap();
+            assert!(cat.ends_with(",critical-path"), "{cat}");
+        }
+        // The flow arrow leaves io's finish and lands on fwd's start,
+        // both at t = 1s, sharing one flow id.
+        let (s, f) = (of_ph("s")[0], of_ph("f")[0]);
+        assert_eq!(s.get("ts").unwrap().as_f64().unwrap(), 1e6);
+        assert_eq!(f.get("ts").unwrap().as_f64().unwrap(), 1e6);
+        assert_eq!(s.get("id").unwrap().as_f64(), f.get("id").unwrap().as_f64());
+        assert_eq!(f.get("bp").unwrap().as_str().unwrap(), "e");
+        // First counter sample: io running, and io is communication.
+        let args = of_ph("C")[0].get("args").unwrap();
+        assert_eq!(args.get("queue_depth").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(args.get("comm_in_flight").unwrap().as_f64().unwrap(), 1.0);
+        // Last sample: everything drained.
+        let args = of_ph("C")[2].get("args").unwrap();
+        assert_eq!(args.get("queue_depth").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(args.get("comm_in_flight").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn hostile_names_stay_valid_json_and_empty_names_get_labels() {
+        let mut pool = ResourcePool::new();
+        let gpu = pool.add("gpu \"zero\"\n\\evil", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        let a = dag.add(Task {
+            name: "layer \"conv1\\7x7\"\n\ttab".into(),
+            phase: Phase::Forward,
+            resource: gpu,
+            duration: 1.0,
+            iter: 0,
+            gpu: Some(0),
+            layer: Some(0),
+        });
+        let b = dag.add(Task {
+            name: String::new(), // template-stamped tasks carry no names
+            phase: Phase::Backward,
+            resource: gpu,
+            duration: 2.0,
+            iter: 3,
+            gpu: Some(1),
+            layer: Some(0),
+        });
+        dag.edge(a, b);
+        let res = simulate(&dag, &pool);
+        let text = chrome_trace(&dag, &pool, &res).to_string();
+        // The serialized trace parses back: escaping covered every name.
+        let parsed = json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            events.iter().filter_map(|e| e.get("name").unwrap().as_str()).collect();
+        assert!(names.contains(&"layer \"conv1\\7x7\"\n\ttab"), "{names:?}");
+        assert!(names.contains(&"bwd i3 g1"), "synthesized label missing: {names:?}");
+        // Metadata pins the hostile resource name, escaped and recovered.
+        let meta = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .unwrap();
+        let recovered = meta.get("args").unwrap().get("name").unwrap().as_str().unwrap();
+        assert_eq!(recovered, "gpu \"zero\"\n\\evil");
+        // Canonicalizable: parse → serialize is a fixed point.
+        assert_eq!(parsed.to_string(), text);
     }
 
     #[test]

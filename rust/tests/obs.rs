@@ -1,0 +1,116 @@
+//! The breakdown accounting identities, pinned across the model zoo and
+//! every scheduling policy:
+//!
+//! - critical-chain phases + bubble tile the makespan exactly;
+//! - exposed + hidden communication equals the total aggregation time;
+//! - an ideal fabric (no aggregation tasks at all) reports exactly zero
+//!   exposed *and* hidden communication.
+//!
+//! These are the properties every explained report, serve response and
+//! Chrome trace downstream relies on, so they are exercised on real
+//! builder-produced DAGs, not hand-built fixtures.
+
+use dagsgd::calib::whatif::{self, Fabric};
+use dagsgd::cluster::presets;
+use dagsgd::dag::builder::{self, JobSpec};
+use dagsgd::experiments::whatif as whatif_exp;
+use dagsgd::frameworks::strategy;
+use dagsgd::models::zoo;
+use dagsgd::obs::breakdown::{breakdown, Bottleneck, Breakdown, METRIC_KEYS};
+use dagsgd::sim::executor;
+use dagsgd::sim::scheduler::SchedulerKind;
+
+/// The invariants one breakdown must satisfy, with a relative tolerance
+/// scaled to the makespan (the chain accumulates one addition per task).
+fn assert_identities(b: &Breakdown, ctx: &str) {
+    let tol = 1e-9 * b.makespan_s.max(1.0);
+    let tiled = b.critical.sum() + b.bubble_s;
+    assert!(
+        (tiled - b.makespan_s).abs() < tol,
+        "{ctx}: chain {tiled} + bubble must tile makespan {}",
+        b.makespan_s
+    );
+    let split = b.comm_exposed_s + b.comm_hidden_s;
+    assert!(
+        (split - b.totals.agg_s).abs() < tol,
+        "{ctx}: exposed {} + hidden {} must equal total comm {}",
+        b.comm_exposed_s,
+        b.comm_hidden_s,
+        b.totals.agg_s
+    );
+    assert!(b.bubble_s >= 0.0 && b.comm_exposed_s >= 0.0 && b.comm_hidden_s >= 0.0, "{ctx}");
+    let frac = b.comm_exposed_frac();
+    assert!((0.0..=1.0).contains(&frac), "{ctx}: exposed fraction {frac}");
+    assert!(b.bottleneck.name().ends_with("-bound"), "{ctx}");
+    assert_eq!(Bottleneck::from_code(b.bottleneck.code()), Some(b.bottleneck), "{ctx}");
+    let pairs = b.metric_pairs();
+    assert_eq!(pairs.len(), METRIC_KEYS.len(), "{ctx}");
+    for (k, v) in &pairs {
+        assert!(v.is_finite() && *v >= 0.0, "{ctx}: {k} = {v}");
+    }
+}
+
+#[test]
+fn identities_hold_on_every_zoo_net_and_scheduler() {
+    let cluster = presets::k80_cluster();
+    let fw = strategy::caffe_mpi();
+    for net in zoo::all() {
+        for kind in SchedulerKind::all() {
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net: net.clone(),
+                nodes: 2,
+                gpus_per_node: 2,
+                iterations: 4,
+            };
+            let (dag, res) = builder::build_ssgd_dag(&cluster, &job, &fw);
+            let mut sched = kind.build(&job.net);
+            let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
+            let b = breakdown(&dag, &res.pool, &sim);
+            let ctx = format!("{} under {}", job.net.name, kind.name());
+            assert!(b.makespan_s > 0.0, "{ctx}");
+            assert_identities(&b, &ctx);
+            // A multi-rank job aggregates gradients, so the ledger must
+            // see communication somewhere.
+            assert!(b.totals.agg_s > 0.0, "{ctx}: multi-rank job moves gradients");
+        }
+    }
+}
+
+#[test]
+fn ideal_fabric_cells_report_exactly_zero_exposed_comm() {
+    let profile = whatif_exp::profile_at(6, 5, 2);
+    let fw = strategy::by_name(&profile.framework).unwrap();
+    for entry in &profile.entries {
+        for kind in [SchedulerKind::Fifo, SchedulerKind::Priority] {
+            let (_, rs) =
+                whatif::predict_sim_at(entry, &Fabric::Ideal, None, kind, &fw, None).unwrap();
+            let b = rs.breakdown();
+            let ctx = format!("{} on ideal under {}", entry.key(), kind.name());
+            assert_identities(&b, &ctx);
+            // No aggregation tasks exist at all, so both sides of the
+            // split are exactly — not approximately — zero.
+            assert_eq!(b.totals.agg_s, 0.0, "{ctx}");
+            assert_eq!(b.comm_exposed_s, 0.0, "{ctx}");
+            assert_eq!(b.comm_hidden_s, 0.0, "{ctx}");
+            assert_eq!(b.comm_exposed_frac(), 0.0, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn measured_fabric_replays_satisfy_the_identities_too() {
+    let profile = whatif_exp::profile_at(6, 5, 2);
+    let fw = strategy::by_name(&profile.framework).unwrap();
+    for entry in &profile.entries {
+        let (_, rs) =
+            whatif::predict_sim_at(entry, &Fabric::Measured, None, SchedulerKind::Fifo, &fw, None)
+                .unwrap();
+        let b = rs.breakdown();
+        let ctx = format!("{} on measured", entry.key());
+        assert_identities(&b, &ctx);
+        if entry.gpus > 1 {
+            assert!(b.totals.agg_s > 0.0, "{ctx}: multi-rank entry moves gradients");
+        }
+    }
+}

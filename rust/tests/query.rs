@@ -114,6 +114,7 @@ fn random_request(g: &mut Gen) -> Request {
         schedulers,
         autotune_fusion: g.bool(),
         whatif: g.bool(),
+        explain: g.bool(),
     }
 }
 

@@ -14,6 +14,8 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::thread;
 
 const BATCH: &str = r#"{"entry": "alexnet", "fabric": "measured,ideal", "scheduler": "fifo"}"#;
+const EXPLAINED: &str =
+    r#"{"entry": "alexnet", "fabric": "measured,ideal", "scheduler": "fifo", "explain": true}"#;
 
 /// One client session: send one request line, read one response line.
 fn query_once(addr: SocketAddr, line: &str) -> String {
@@ -80,6 +82,79 @@ fn concurrent_clients_get_identical_fully_cached_answers() {
     // The stats document the daemon would write passes its own schema gate.
     let doc = json::parse(&engine.stats_json().to_string()).unwrap();
     assert_eq!(protocol::validate_stats(&doc).unwrap(), st.queries);
+}
+
+#[test]
+fn explained_batches_are_byte_identical_across_concurrent_repeats() {
+    const CLIENTS: usize = 3;
+    let engine = Engine::new(vec![whatif_exp::profile_at(8, 5, 2)], 2).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    thread::scope(|scope| {
+        let engine_ref = &engine;
+        let server = scope.spawn(move || serve_listener(engine_ref, listener, Some(1 + CLIENTS)));
+
+        let cold = query_once(addr, EXPLAINED);
+        let cj = json::parse(&cold).unwrap();
+        assert!(cj.get("error").is_none(), "cold explained wave failed: {cold}");
+        for q in cj.get("queries").unwrap().as_arr().unwrap() {
+            let b = q.get("breakdown").unwrap();
+            assert!(b.get("bottleneck").unwrap().as_str().unwrap().ends_with("-bound"));
+            let comm = b.get("comm").unwrap();
+            let exposed = comm.get("exposed_s").unwrap().as_f64().unwrap();
+            let hidden = comm.get("hidden_s").unwrap().as_f64().unwrap();
+            assert!(exposed >= 0.0 && hidden >= 0.0);
+            if q.get("fabric").unwrap().as_str() == Some("ideal") {
+                assert_eq!(exposed, 0.0, "ideal fabric exposes no communication");
+                assert_eq!(hidden, 0.0, "ideal fabric hides no communication");
+            }
+        }
+
+        let handles: Vec<_> =
+            (0..CLIENTS).map(|_| scope.spawn(move || query_once(addr, EXPLAINED))).collect();
+        let warm: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        server.join().unwrap().unwrap();
+
+        for resp in &warm {
+            assert_eq!(resp, &warm[0], "explained responses must be byte-identical");
+        }
+        let wj = json::parse(&warm[0]).unwrap();
+        let cold_q = cj.get("queries").unwrap().to_string().replace("\"miss\"", "\"hit\"");
+        assert_eq!(cold_q, wj.get("queries").unwrap().to_string());
+        let simulated = wj.get("batch").unwrap().get("simulated").unwrap().as_f64().unwrap();
+        assert_eq!(simulated, 0.0, "explained repeats stay fully cached");
+    });
+}
+
+#[test]
+fn stats_verb_answers_on_the_wire() {
+    let engine = Engine::new(vec![whatif_exp::profile_at(8, 5, 2)], 2).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    thread::scope(|scope| {
+        let engine_ref = &engine;
+        let server = scope.spawn(move || serve_listener(engine_ref, listener, Some(2)));
+
+        let resp = query_once(addr, BATCH);
+        assert!(json::parse(&resp).unwrap().get("error").is_none(), "{resp}");
+
+        let stats = query_once(addr, r#"{"stats": true}"#);
+        let j = json::parse(&stats).unwrap();
+        assert!(protocol::validate_stats(&j).unwrap() >= 1);
+        assert_eq!(j.get("batches").unwrap().as_f64().unwrap(), 1.0);
+        let events = j
+            .get("sim_metrics")
+            .unwrap()
+            .get("events_processed")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(events > 0.0, "the cold batch simulated, so events were processed");
+        server.join().unwrap().unwrap();
+    });
+    assert_eq!(engine.stats_snapshot().batches, 1, "the stats verb is not a batch");
 }
 
 #[test]
