@@ -34,8 +34,9 @@ use crate::campaign::runner;
 use crate::cluster::presets;
 use crate::cluster::topology::ClusterSpec;
 use crate::comm::alpha_beta::Link;
+use crate::comm::network::{self, LinkUse, RoutedCollective, RoutedSpec};
 use crate::dag::builder::{comm_topo, JobSpec};
-use crate::frameworks::strategy::{self, CalibratedComm, Strategy};
+use crate::frameworks::strategy::{self, Backend, CalibratedComm, Strategy};
 use crate::models::perf::PerfModel;
 use crate::obs::breakdown::{self, Bottleneck};
 use crate::sim::scheduler::SchedulerKind;
@@ -298,6 +299,13 @@ pub enum Fabric {
     Interconnect(Interconnect),
     /// An explicit α–β collective channel (plus fitted overhead).
     AlphaBeta { alpha_s: f64, bw_bps: f64 },
+    /// A routed, contention-aware fabric graph built from a cluster
+    /// preset's links ([`crate::comm::network`]): GPUs under node
+    /// switches, NICs under a spine with a finite backplane, collectives
+    /// lowered to per-link flow sets under max-min sharing. The
+    /// `dedicated` variant prices every flow on a private link and is
+    /// bit-identical to the flat backend model — the keystone contract.
+    Routed(RoutedSpec),
 }
 
 impl Fabric {
@@ -320,18 +328,22 @@ impl Fabric {
             Fabric::Cluster(c) => c.clone(),
             Fabric::Interconnect(i) => i.name().into(),
             Fabric::AlphaBeta { alpha_s, bw_bps } => format!("alpha{alpha_s}-bw{bw_bps}"),
+            Fabric::Routed(spec) => spec.name(),
         }
     }
 
     /// Resolve a fabric name: `measured`, `ideal`, an interconnect name
-    /// (`stock`, `10gbe`, `100gb-ib`), a cluster preset, or the explicit
-    /// `alpha<SECONDS>-bw<BYTES/S>` form.
+    /// (`stock`, `10gbe`, `100gb-ib`), a cluster preset, the explicit
+    /// `alpha<SECONDS>-bw<BYTES/S>` form, or a routed graph
+    /// (`routed:<cluster>[:dedicated|:spine=<k>]`).
     pub fn parse(name: &str) -> Result<Fabric, String> {
         match name {
             "measured" => Ok(Fabric::Measured),
             "ideal" => Ok(Fabric::Ideal),
             _ => {
-                if let Some(rest) = name.strip_prefix("alpha") {
+                if name.starts_with("routed:") {
+                    Ok(Fabric::Routed(RoutedSpec::parse(name)?))
+                } else if let Some(rest) = name.strip_prefix("alpha") {
                     let (a, b) = rest.split_once("-bw").ok_or_else(|| {
                         format!("bad α–β fabric '{name}' (want alpha<SECONDS>-bw<BYTES/S>)")
                     })?;
@@ -347,7 +359,8 @@ impl Fabric {
                 } else {
                     Err(format!(
                         "unknown fabric '{name}' (try measured, ideal, stock, 10gbe, \
-                         100gb-ib, a cluster preset, or alpha<S>-bw<B/S>)"
+                         100gb-ib, a cluster preset, alpha<S>-bw<B/S>, or \
+                         routed:<cluster>[:spine=<k>])"
                     ))
                 }
             }
@@ -401,22 +414,7 @@ pub fn channel_at(
             Ok(Box::new(move |bytes| overhead + link.xfer(bytes)))
         }
         Fabric::Cluster(name) => {
-            let mut hypo = presets::by_name(name)
-                .ok_or_else(|| format!("unknown cluster fabric '{name}'"))?;
-            let fits = job.nodes <= hypo.nodes && job.gpus_per_node <= hypo.gpus_per_node;
-            if at.is_none() && !fits {
-                return Err(format!(
-                    "{}: {}x{} GPUs do not fit fabric cluster '{}' ({}x{})",
-                    entry.key(),
-                    job.nodes,
-                    job.gpus_per_node,
-                    hypo.name,
-                    hypo.nodes,
-                    hypo.gpus_per_node
-                ));
-            }
-            hypo.nodes = hypo.nodes.max(job.nodes);
-            hypo.gpus_per_node = hypo.gpus_per_node.max(job.gpus_per_node);
+            let hypo = hypo_cluster_at(&entry.key(), name, &job, at)?;
             let topo = comm_topo(&hypo, job.nodes, job.gpus_per_node);
             let mut base = fw.clone();
             base.calibrated_comm = None;
@@ -432,7 +430,95 @@ pub fn channel_at(
             base.calibrated_comm = None;
             Ok(Box::new(move |bytes| overhead + base.comm_time(&topo, bytes)))
         }
+        Fabric::Routed(spec) => match routed_collective_at(entry, spec, fw, at)? {
+            Some(rc) => Ok(Box::new(move |bytes| overhead + rc.time(bytes))),
+            None => {
+                // gRPC parameter-server traffic serializes at the server
+                // NIC; routing shares nothing beyond what the flat
+                // backend model already prices.
+                let hypo = hypo_cluster_at(&entry.key(), &spec.cluster, &job, at)?;
+                let topo = comm_topo(&hypo, job.nodes, job.gpus_per_node);
+                let mut base = fw.clone();
+                base.calibrated_comm = None;
+                Ok(Box::new(move |bytes| overhead + base.comm_time(&topo, bytes)))
+            }
+        },
     }
+}
+
+/// Resolve and scale-enlarge a named hypothetical cluster for a job —
+/// the shared front half of the cluster and routed fabrics. Without an
+/// explicit topology the strict "does the job fit this fabric" check
+/// stands; with one, a smaller preset is scaled out like the measured
+/// cluster (that is what the axis asks for).
+fn hypo_cluster_at(
+    entry_key: &str,
+    name: &str,
+    job: &JobSpec,
+    at: Option<(usize, usize)>,
+) -> Result<ClusterSpec, String> {
+    let mut hypo =
+        presets::by_name(name).ok_or_else(|| format!("unknown cluster fabric '{name}'"))?;
+    let fits = job.nodes <= hypo.nodes && job.gpus_per_node <= hypo.gpus_per_node;
+    if at.is_none() && !fits {
+        return Err(format!(
+            "{entry_key}: {}x{} GPUs do not fit fabric cluster '{}' ({}x{})",
+            job.nodes, job.gpus_per_node, hypo.name, hypo.nodes, hypo.gpus_per_node
+        ));
+    }
+    hypo.nodes = hypo.nodes.max(job.nodes);
+    hypo.gpus_per_node = hypo.gpus_per_node.max(job.gpus_per_node);
+    Ok(hypo)
+}
+
+/// The lowered routed collective of a routed-fabric prediction at an
+/// entry's (optionally rescaled) layout — the link-level view shared by
+/// [`channel_at`] pricing and [`fabric_link_usage`]. `Ok(None)` when
+/// there is nothing to route: single-rank layouts, or the gRPC backend
+/// (parameter-server traffic serializes at the server, so the flat
+/// backend model already prices it and [`channel_at`] falls back there).
+fn routed_collective_at(
+    entry: &NetCalibration,
+    spec: &RoutedSpec,
+    fw: &Strategy,
+    at: Option<(usize, usize)>,
+) -> Result<Option<RoutedCollective>, String> {
+    let (_, job) = resolve_at(entry, at)?;
+    if job.ranks() <= 1 {
+        return Ok(None);
+    }
+    let Backend::Nccl(algo) = fw.backend else {
+        return Ok(None);
+    };
+    let hypo = hypo_cluster_at(&entry.key(), &spec.cluster, &job, at)?;
+    let topo = comm_topo(&hypo, job.nodes, job.gpus_per_node);
+    let rf = spec.fabric(&hypo, job.nodes, job.gpus_per_node);
+    let rc = network::lower_allreduce(algo, &topo, &rf)
+        .map_err(|e| format!("{} on '{}': {e}", entry.key(), spec.name()))?;
+    Ok(Some(rc))
+}
+
+/// Per-link utilization of a what-if prediction on a routed fabric: the
+/// flow count and peak bandwidth share of every fabric edge the lowered
+/// collective crosses — the input to the obs layer's saturated-link
+/// verdict. The max-min allocation is message-size-independent, so this
+/// is a pure function of the scenario (fabric × entry × topology).
+/// `Ok(None)` for non-routed fabrics and for routed predictions with no
+/// shared graph to account (single rank, gRPC backend, dedicated links).
+pub fn fabric_link_usage(
+    entry: &NetCalibration,
+    fabric: &Fabric,
+    topo: Option<Topology>,
+    fw: &Strategy,
+) -> Result<Option<Vec<LinkUse>>, String> {
+    let Fabric::Routed(spec) = fabric else {
+        return Ok(None);
+    };
+    let (_, scaled, at) = rescaled_for(entry, topo, fw)?;
+    let eff = scaled.as_ref().unwrap_or(entry);
+    Ok(routed_collective_at(eff, spec, fw, at)?
+        .map(|rc| rc.links)
+        .filter(|links| !links.is_empty()))
 }
 
 /// The substituted per-layer collective-cost vector for an entry on a
@@ -894,6 +980,10 @@ pub struct WhatIfRow {
     /// [`breakdown::METRIC_KEYS`]. `None` only for cells from caches
     /// that predate the obs layer.
     pub explain: Option<BTreeMap<String, f64>>,
+    /// Per-link utilization of the routed fabric graph the prediction's
+    /// collectives crossed ([`fabric_link_usage`]); `None` off routed
+    /// fabrics and when no link is shared.
+    pub links: Option<Vec<LinkUse>>,
 }
 
 /// Sweep a profile across topologies × fabrics × schedulers on `jobs`
@@ -987,6 +1077,13 @@ pub fn rows(
             }
         }
         let explain = (explain.len() == breakdown::METRIC_KEYS.len()).then_some(explain);
+        // Per-link fabric usage is a pure function of the scenario (the
+        // max-min rates are message-size-independent), so it is computed
+        // at assembly time instead of riding the cached flat metric map.
+        let links = Fabric::parse(&fabric_name)
+            .ok()
+            .and_then(|fab| fabric_link_usage(entry, &fab, cell_topology(s), &fw).ok())
+            .flatten();
         out.push(WhatIfRow {
             net: s.net.clone(),
             cluster: s.cluster.clone(),
@@ -1003,6 +1100,7 @@ pub fn rows(
             speedup_vs_measured: metric("speedup_vs_measured"),
             fusion: tunes.get(&(entry.key(), topo_key, fabric_name)).cloned(),
             explain,
+            links,
         });
     }
     Ok(out)
@@ -1063,6 +1161,7 @@ pub fn render_explain(rows: &[WhatIfRow]) -> String {
         "cp comm",
         "cp io",
         "cp bubble",
+        "hot link",
     ]);
     for r in rows {
         let m = |k: &str| r.explain.as_ref().and_then(|e| e.get(k).copied());
@@ -1091,6 +1190,10 @@ pub fn render_explain(rows: &[WhatIfRow]) -> String {
             dur("cp_agg_s"),
             pair("cp_io_s", "cp_h2d_s"),
             dur("cp_bubble_s"),
+            r.links
+                .as_deref()
+                .map(breakdown::link_verdict)
+                .unwrap_or_else(dash),
         ]);
     }
     t.render()
@@ -1113,6 +1216,20 @@ pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) ->
                     ("layerwise_iter_s", Json::num(t.layerwise_iter_s)),
                 ]),
             };
+            let links = match &r.links {
+                None => Json::Null,
+                Some(ls) => Json::Arr(
+                    ls.iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("link", Json::str(l.label.clone())),
+                                ("utilization", Json::num(l.utilization)),
+                                ("flows", Json::num(l.flows as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            };
             Json::obj(vec![
                 ("net", Json::str(r.net.clone())),
                 ("cluster", Json::str(r.cluster.clone())),
@@ -1128,6 +1245,7 @@ pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) ->
                 ("measured_iter_s", Json::num(r.measured_iter_s)),
                 ("speedup_vs_measured", Json::num(r.speedup_vs_measured)),
                 ("fusion", fusion),
+                ("links", links),
             ])
         })
         .collect();
@@ -1246,6 +1364,29 @@ pub fn validate_report(report: &Json) -> Result<usize, String> {
                 }
             }
         }
+        match row.get("links") {
+            None | Some(Json::Null) => {}
+            Some(links) => {
+                let arr = links
+                    .as_arr()
+                    .ok_or_else(|| format!("{at}: 'links' must be null or an array"))?;
+                for (j, l) in arr.iter().enumerate() {
+                    let lat = format!("{at}.links[{j}]");
+                    l.get("link")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| format!("{lat}: missing string field 'link'"))?;
+                    let u = req_num(l, "utilization", &lat)?;
+                    // A max-min share can never exceed its link's capacity.
+                    if u > 1.0 {
+                        return Err(format!("{lat}: utilization {u} exceeds capacity"));
+                    }
+                    let flows = req_num(l, "flows", &lat)?;
+                    if flows < 1.0 {
+                        return Err(format!("{lat}: 'flows' must be ≥ 1"));
+                    }
+                }
+            }
+        }
     }
     if let Some(explain) = report.get("explain") {
         let v = explain
@@ -1347,6 +1488,8 @@ mod tests {
             Fabric::Interconnect(Interconnect::TenGbE),
             Fabric::Interconnect(Interconnect::Stock),
             Fabric::alpha_beta(4e-5, 1.25e9).unwrap(),
+            Fabric::parse("routed:v100:dedicated").unwrap(),
+            Fabric::parse("routed:k80:spine=2").unwrap(),
         ];
         for f in &fabrics {
             let back = Fabric::parse(&f.name()).unwrap_or_else(|e| panic!("{}: {e}", f.name()));
@@ -1354,10 +1497,87 @@ mod tests {
         }
         assert!(Fabric::parse("warpdrive").is_err());
         assert!(Fabric::parse("alpha1e-5").is_err(), "missing -bw part");
+        assert!(Fabric::parse("routed:warpdrive").is_err(), "unknown preset");
+        assert!(Fabric::parse("routed:v100:spine=-1").is_err());
         assert!(Fabric::alpha_beta(-1.0, 1e9).is_err());
         assert!(Fabric::alpha_beta(0.0, 0.0).is_err());
         // Short cluster aliases canonicalize to the full preset name.
         assert_eq!(Fabric::parse("v100").unwrap().name(), "v100-nvlink-ib");
+        // A bare routed fabric defaults to the shared spine.
+        assert_eq!(
+            Fabric::parse("routed:v100").unwrap().name(),
+            format!("routed:v100-nvlink-ib:spine={}", network::DEFAULT_SPINE_FLOWS)
+        );
+    }
+
+    /// The tentpole's bit-identity keystone at the what-if level: routed
+    /// pricing over dedicated links is the flat backend model, so a
+    /// `routed:<cluster>:dedicated` prediction is bit-identical to the
+    /// plain cluster fabric — at the measured layout and rescaled.
+    #[test]
+    fn routed_dedicated_fabric_matches_cluster_fabric() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::alexnet(), &cluster, 2, 4);
+        let fw = fws::caffe_mpi();
+        let flat = Fabric::Cluster("k80-pcie-10gbe".into());
+        let routed = Fabric::parse("routed:k80:dedicated").unwrap();
+        for topo in [None, Some(Topology::new(8, 4).unwrap())] {
+            let pf =
+                predict_entry_at(&entry, &flat, topo, SchedulerKind::Fifo, &fw, None).unwrap();
+            let pr =
+                predict_entry_at(&entry, &routed, topo, SchedulerKind::Fifo, &fw, None).unwrap();
+            assert_eq!(
+                pf.replayed.iter_time_s.to_bits(),
+                pr.replayed.iter_time_s.to_bits(),
+                "dedicated routing must be bit-identical at {topo:?}"
+            );
+            assert_eq!(pf.comm_total_s.to_bits(), pr.comm_total_s.to_bits());
+        }
+        // Nothing is shared on dedicated links, so there is no link
+        // ledger to report.
+        assert_eq!(fabric_link_usage(&entry, &routed, None, &fw).unwrap(), None);
+    }
+
+    /// The contention keystone: a shared-spine routed fabric is never
+    /// faster than the flat (infinite-backplane) model of the same
+    /// cluster, the gap grows as a 2-node profile is laddered past the
+    /// spine's line-rate flow budget, and the saturated link is named.
+    #[test]
+    fn routed_spine_contends_and_names_the_saturated_link() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::resnet50(), &cluster, 2, 4);
+        let fw = fws::caffe_mpi();
+        let flat = Fabric::Cluster("k80-pcie-10gbe".into());
+        let routed = Fabric::parse("routed:k80:spine=4").unwrap();
+        let bytes = 25e6;
+        let mut prev = 0.0;
+        for nodes in [2usize, 4, 8, 16, 64] {
+            let at = Some((nodes, 4));
+            let cf = channel_at(&entry, &flat, &fw, at).unwrap();
+            let cr = channel_at(&entry, &routed, &fw, at).unwrap();
+            assert!(
+                cr(bytes) > cf(bytes),
+                "{nodes} nodes: routed {} must exceed flat {}",
+                cr(bytes),
+                cf(bytes)
+            );
+            assert!(cr(bytes) > prev, "{nodes} nodes: contention must grow");
+            prev = cr(bytes);
+        }
+        // The full prediction agrees: more comm, never a faster iteration.
+        let topo = Some(Topology::new(8, 4).unwrap());
+        let pf = predict_entry_at(&entry, &flat, topo, SchedulerKind::Fifo, &fw, None).unwrap();
+        let pr = predict_entry_at(&entry, &routed, topo, SchedulerKind::Fifo, &fw, None).unwrap();
+        assert!(pr.comm_total_s > pf.comm_total_s);
+        assert!(pr.replayed.iter_time_s >= pf.replayed.iter_time_s - 1e-12);
+        // Past the spine's flow budget (4 line-rate flows, 8 node rings
+        // crossing), the backplane is the named bottleneck.
+        let links = fabric_link_usage(&entry, &routed, topo, &fw).unwrap().unwrap();
+        let hot = breakdown::saturated_link(&links).expect("spine must saturate at 8 nodes");
+        assert_eq!(hot.label, "spine-backplane");
+        assert_eq!(hot.flows, 8);
+        assert!(hot.utilization >= 0.999);
+        assert!(breakdown::link_verdict(&links).contains("spine-backplane saturated"));
     }
 
     /// The bit-identity contract: the measured fabric takes the exact
@@ -1483,6 +1703,14 @@ mod tests {
         let err = validate_whatif(&profile, &[Fabric::Cluster("localhost-shm".into())], &[None])
             .unwrap_err();
         assert!(err.contains("do not fit"), "{err}");
+        // Routed fabrics share the same strict fit gate.
+        let routed_local = Fabric::parse("routed:localhost").unwrap();
+        let err = validate_whatif(&profile, &[routed_local], &[None]).unwrap_err();
+        assert!(err.contains("do not fit"), "{err}");
+        // And a routed preset that fits validates across the axes.
+        let routed = Fabric::parse("routed:k80:spine=2").unwrap();
+        validate_whatif(&profile, &[routed], &[None, Some(Topology::new(8, 4).unwrap())])
+            .unwrap();
         // The measured fabric is exempt from channel checks.
         validate_whatif(&profile, &[Fabric::Measured, Fabric::Ideal], &[None]).unwrap();
         // Topology gates run pre-sweep too: a single-GPU-measured entry
@@ -1645,5 +1873,49 @@ mod tests {
         assert!(text.contains("\"explain\":{\"rows\":["), "{text}");
         assert!(check(&text.replace("\"schema_version\":1}", "\"schema_version\":9}")).is_err());
         assert!(check(&text.replace("\"bottleneck\":\"", "\"bottleneck\":\"x")).is_err());
+    }
+
+    /// Routed rows carry the per-link utilization ledger end to end:
+    /// computed at assembly, named in the explain table's hot-link
+    /// column, serialized in the report, and schema-checked.
+    #[test]
+    fn routed_links_ride_rows_and_report() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let profile = profile_for(&cluster);
+        let fabrics = [Fabric::Measured, Fabric::parse("routed:k80:spine=2").unwrap()];
+        let topologies = [None, Some(Topology::new(8, 4).unwrap())];
+        let rows =
+            rows(&profile, &fabrics, &topologies, &[SchedulerKind::Fifo], false, 2).unwrap();
+        assert_eq!(rows.len(), 2 * 2 * 2);
+        for r in &rows {
+            if r.fabric.starts_with("routed:") {
+                let links = r.links.as_ref().expect("routed multi-node rows carry links");
+                assert!(!links.is_empty());
+                assert!(links.iter().all(|l| l.utilization > 0.0 && l.utilization <= 1.0));
+                assert!(links.iter().any(|l| l.label == "spine-backplane"));
+            } else {
+                assert!(r.links.is_none(), "{}: flat fabrics have no link ledger", r.fabric);
+            }
+        }
+        // Laddered past the 2-flow spine budget, the verdict names it.
+        let wide = rows
+            .iter()
+            .find(|r| r.fabric.starts_with("routed:") && r.topology == "8x4")
+            .unwrap();
+        let hot = breakdown::saturated_link(wide.links.as_deref().unwrap()).unwrap();
+        assert_eq!(hot.label, "spine-backplane");
+        let etable = render_explain(&rows);
+        assert!(etable.contains("hot link"), "{etable}");
+        assert!(etable.contains("spine-backplane saturated"), "{etable}");
+
+        let report = report_to_json(&rows, &profile.framework, &profile.tag());
+        let text = report.to_string();
+        assert!(text.contains("\"links\":[{"), "{text}");
+        assert!(text.contains("spine-backplane"), "{text}");
+        let back = json::parse(&text).unwrap();
+        assert_eq!(validate_report(&back).unwrap(), rows.len());
+        let check = |s: &str| validate_report(&json::parse(s).unwrap());
+        assert!(check(&text.replace("\"link\":", "\"lnk\":")).is_err());
+        assert!(check(&text.replace("\"utilization\":0.", "\"utilization\":-0.")).is_err());
     }
 }

@@ -62,6 +62,11 @@ pub struct CommTopo {
     /// rendezvous, gRPC dispatch). This term is why layer-wise exchange
     /// of many small tensors wastes bandwidth — paper finding #4.
     pub launch_overhead: f64,
+    /// Overhead of an intra-node constituent collective inside a
+    /// multi-node algorithm (hierarchical's local ring, the tree's local
+    /// reduction). A local NCCL launch has no network rendezvous, so it
+    /// is much cheaper than `launch_overhead`.
+    pub intra_overhead: f64,
 }
 
 impl CommTopo {
@@ -80,26 +85,37 @@ pub fn ring_time(n: usize, bytes: f64, link: Link) -> f64 {
     steps as f64 * link.xfer(bytes / n as f64)
 }
 
+/// ⌈log2 n⌉ without going through floats: `(n as f64).log2().ceil()` can
+/// round 2^k up to k+1 when the conversion lands a hair above the exact
+/// power, costing a phantom round.
+pub fn ceil_log2(n: usize) -> u32 {
+    debug_assert!(n >= 1);
+    n.ilog2() + (!n.is_power_of_two()) as u32
+}
+
 /// Reduction tree + broadcast: 2·⌈log2 n⌉ rounds each moving the full buffer.
 pub fn tree_time(n: usize, bytes: f64, link: Link) -> f64 {
     if n <= 1 || bytes <= 0.0 {
         return 0.0;
     }
-    let rounds = 2 * (n as f64).log2().ceil() as usize;
+    let rounds = 2 * ceil_log2(n) as usize;
     rounds as f64 * link.xfer(bytes)
 }
 
-/// One all-reduce of `bytes` under `algo` on `topo`. Includes the fixed
-/// launch overhead (once per call).
+/// One all-reduce of `bytes` under `algo` on `topo`. The fixed launch
+/// overhead is charged *per constituent collective*: `Hierarchical`
+/// issues an intra ring plus an inter ring and multi-node `Tree` issues
+/// two trees, so each constituent pays its own launch (intra-node
+/// constituents pay the cheaper `intra_overhead`).
 pub fn allreduce_time(algo: Algorithm, topo: &CommTopo, bytes: f64) -> f64 {
     let n = topo.ranks();
     if n <= 1 || bytes <= 0.0 {
         return 0.0;
     }
-    let t = match algo {
+    let (t, overhead) = match algo {
         Algorithm::Ring => {
             if topo.nodes == 1 {
-                ring_time(n, bytes, topo.intra)
+                (ring_time(n, bytes, topo.intra), topo.launch_overhead)
             } else {
                 // A flat ring crossing node boundaries is bottlenecked by
                 // the NIC hops; every one of the 2(n-1) steps is paced by
@@ -108,44 +124,55 @@ pub fn allreduce_time(algo: Algorithm, topo: &CommTopo, bytes: f64) -> f64 {
                     alpha: topo.net.alpha,
                     bw: topo.net.bw.min(topo.intra.bw),
                 };
-                ring_time(n, bytes, slow)
+                (ring_time(n, bytes, slow), topo.launch_overhead)
             }
         }
         Algorithm::Tree => {
             if topo.nodes == 1 {
-                tree_time(n, bytes, topo.intra)
+                (tree_time(n, bytes, topo.intra), topo.launch_overhead)
             } else {
-                // Intra trees + inter tree among node roots.
-                tree_time(topo.gpus_per_node, bytes, topo.intra)
-                    + tree_time(topo.nodes, bytes, topo.net)
+                // Intra trees + inter tree among node roots; each launched
+                // separately.
+                let mut t = tree_time(topo.nodes, bytes, topo.net);
+                let mut oh = topo.launch_overhead;
+                if topo.gpus_per_node > 1 {
+                    t += tree_time(topo.gpus_per_node, bytes, topo.intra);
+                    oh += topo.intra_overhead;
+                }
+                (t, oh)
             }
         }
         Algorithm::Hierarchical => {
             // Intra-node reduce to a local root + final broadcast:
             // 2(g−1) transfers of bytes/g each, plus inter-node ring among
-            // the node roots over the NIC.
+            // the node roots over the NIC. Each constituent is its own
+            // collective call with its own launch.
             let g = topo.gpus_per_node;
-            let intra = if g > 1 {
-                ring_time(g, bytes, topo.intra)
-            } else {
-                0.0
-            };
-            let inter = if topo.nodes > 1 {
-                ring_time(topo.nodes, bytes, topo.net)
-            } else {
-                0.0
-            };
-            intra + inter
+            let mut t = 0.0;
+            let mut oh = 0.0;
+            if g > 1 {
+                t += ring_time(g, bytes, topo.intra);
+                oh += if topo.nodes > 1 {
+                    topo.intra_overhead
+                } else {
+                    topo.launch_overhead
+                };
+            }
+            if topo.nodes > 1 {
+                t += ring_time(topo.nodes, bytes, topo.net);
+                oh += topo.launch_overhead;
+            }
+            (t, oh)
         }
         Algorithm::ParameterServer => {
             // All n workers push `bytes` to the server and pull `bytes`
             // back; the server NIC serializes 2·n transfers. Intra-node
             // workers still cross the NIC (the PS is a separate process).
             let link = if topo.nodes == 1 { topo.intra } else { topo.net };
-            2.0 * n as f64 * link.xfer(bytes)
+            (2.0 * n as f64 * link.xfer(bytes), topo.launch_overhead)
         }
     };
-    t + topo.launch_overhead
+    t + overhead
 }
 
 /// Sum of layer-wise all-reduces (no overlap) — the naive S-SGD Eq. (2)
@@ -186,7 +213,49 @@ mod tests {
             intra: Link::new(cluster.intra_lat, cluster.intra_bw),
             net: Link::new(cluster.net_lat, cluster.net_bw),
             launch_overhead: us(300.0),
+            intra_overhead: us(30.0),
         }
+    }
+
+    /// Power-of-two rank counts must see exactly 2·k rounds — the old
+    /// float `log2().ceil()` could round 2^k up and charge a phantom round.
+    #[test]
+    fn tree_rounds_exact_at_powers_of_two() {
+        for k in 0..20u32 {
+            let n = 1usize << k;
+            assert_eq!(ceil_log2(n), k, "n={n}");
+        }
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1023), 10);
+        assert_eq!(ceil_log2(1025), 11);
+        // 2·⌈log2 n⌉ rounds of the full buffer, no latency term.
+        let link = Link::new(0.0, 1e9);
+        for k in 1..12u32 {
+            let n = 1usize << k;
+            let t = tree_time(n, 1e6, link);
+            let expect = 2.0 * k as f64 * 1e6 / 1e9;
+            assert!((t - expect).abs() < 1e-12, "n={n} t={t} expect={expect}");
+        }
+    }
+
+    /// Hierarchical on a multi-node job launches two collectives (intra
+    /// ring + inter ring); each constituent pays its own launch overhead.
+    #[test]
+    fn overhead_charged_per_constituent() {
+        let c = presets::v100_cluster();
+        let topo = topo_of(&c, 4, 4);
+        let bytes = 1e6;
+        let g = topo.gpus_per_node;
+        let body = ring_time(g, bytes, topo.intra) + ring_time(topo.nodes, bytes, topo.net);
+        let t = allreduce_time(Algorithm::Hierarchical, &topo, bytes);
+        let expect = body + topo.intra_overhead + topo.launch_overhead;
+        assert!((t - expect).abs() < 1e-12, "t={t} expect={expect}");
+        // Inter-only shapes (1 GPU per node) pay a single launch.
+        let thin = topo_of(&c, 4, 1);
+        let t1 = allreduce_time(Algorithm::Hierarchical, &thin, bytes);
+        let expect1 = ring_time(4, bytes, thin.net) + thin.launch_overhead;
+        assert!((t1 - expect1).abs() < 1e-12);
     }
 
     #[test]

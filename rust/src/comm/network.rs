@@ -1,0 +1,817 @@
+//! Routed, contention-aware fabric model.
+//!
+//! The flat α–β channel of [`super::allreduce`] prices every collective
+//! against one link, so an 8→512-node what-if can never saturate a
+//! ToR/spine the way real PCIe/NVLink/10GbE/IB hierarchies do. This
+//! module models the fabric as a **routed graph**: GPU / NIC / switch
+//! vertices joined by directed per-link α–β edges with finite
+//! capacities, static (BFS shortest-hop) routing, and a
+//! progressive-filling **max-min** bandwidth model, so concurrent
+//! collective flows that traverse the same link split its bandwidth
+//! instead of each seeing the full line rate (the sharing effect
+//! arXiv:1711.05979 measures dominating multi-node iteration time).
+//!
+//! The collective algorithms of [`super::allreduce`] are *lowered* to
+//! per-step flow sets ([`lower_allreduce`]): a step is a set of
+//! concurrent point-to-point transfers, its duration the slowest flow's
+//! `Σ path α + chunk / allocated rate`, repeated as many times as the
+//! algorithm's closed form repeats it. Because max-min rates depend only
+//! on routes — not on message size — lowering happens once per channel
+//! and pricing a collective of any byte count is O(flows).
+//!
+//! Two contracts the tests pin:
+//!
+//! * **Dedicated ≡ flat.** On a fabric where every route is a single
+//!   dedicated link ([`RoutedFabric::Dedicated`]), every allocated rate
+//!   is the link's full capacity and the step costs reproduce
+//!   [`super::allreduce::allreduce_time`] **bit-identically** — routing
+//!   is a strict generalization of the flat model, not a reimplementation.
+//! * **Shared spine saturates.** On the tree fabric
+//!   ([`FabricGraph::tree`]: GPUs under a node switch, NICs under a
+//!   spine with a finite backplane), the inter-node ring's `n` crossing
+//!   flows share the backplane, so once `n · net_bw` exceeds it the
+//!   per-flow rate decays like `1/n` and predicted throughput grows
+//!   sublinearly — the spine saturates by construction.
+
+use super::allreduce::{ceil_log2, Algorithm, CommTopo};
+use super::alpha_beta::Link;
+use crate::cluster::topology::ClusterSpec;
+
+/// One directed link of the fabric graph.
+#[derive(Clone, Debug)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    /// Per-traversal latency contribution, seconds.
+    pub alpha: f64,
+    /// Capacity shared by every flow routed through this edge, bytes/s.
+    pub cap: f64,
+    /// Human-readable name (`"nic3-up"`, `"spine-backplane"`); the
+    /// saturated-link verdict surfaces it.
+    pub label: String,
+}
+
+/// A routed fabric: vertices (GPUs, NICs, switches) joined by directed
+/// α–β edges. Vertices are plain indices; [`FabricGraph::tree`] lays
+/// them out and records which vertex carries each GPU rank.
+#[derive(Clone, Debug)]
+pub struct FabricGraph {
+    pub edges: Vec<Edge>,
+    /// Outgoing edge ids per vertex, in insertion order (BFS visits them
+    /// deterministically, so routes are static).
+    adj: Vec<Vec<usize>>,
+    /// GPU rank → vertex id.
+    gpu_vert: Vec<usize>,
+}
+
+impl FabricGraph {
+    fn with_vertices(verts: usize) -> FabricGraph {
+        FabricGraph {
+            edges: Vec::new(),
+            adj: vec![Vec::new(); verts],
+            gpu_vert: Vec::new(),
+        }
+    }
+
+    fn link(&mut self, from: usize, to: usize, alpha: f64, cap: f64, label: String) {
+        let id = self.edges.len();
+        self.edges.push(Edge {
+            from,
+            to,
+            alpha,
+            cap,
+            label,
+        });
+        self.adj[from].push(id);
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.gpu_vert.len()
+    }
+
+    /// The tree fabric of a cluster at a rank layout: every node holds a
+    /// non-blocking node switch (NVLink/PCIe) with its GPUs and its NIC
+    /// behind it; NICs hang off a spine whose backplane moves at most
+    /// `spine_cap` bytes/s aggregate. Intra-node hops split the
+    /// cluster's intra latency, NIC hops split its net latency, so a
+    /// GPU→GPU route inside a node costs exactly `intra_lat`, and a
+    /// cross-node route costs `intra_lat + net_lat` (one switch
+    /// traversal more than the flat model charges — the honest price of
+    /// actually crossing the host).
+    pub fn tree(cluster: &ClusterSpec, nodes: usize, gpus_per_node: usize, spine_cap: f64) -> FabricGraph {
+        let n = nodes * gpus_per_node;
+        // Vertex layout: [gpus | node switches | nics | spine-in, spine-out].
+        let sw0 = n;
+        let nic0 = n + nodes;
+        let spine_in = n + 2 * nodes;
+        let spine_out = spine_in + 1;
+        let mut g = FabricGraph::with_vertices(spine_out + 1);
+        let half_intra = cluster.intra_lat / 2.0;
+        let half_net = cluster.net_lat / 2.0;
+        for k in 0..nodes {
+            for l in 0..gpus_per_node {
+                let gpu = k * gpus_per_node + l;
+                g.gpu_vert.push(gpu);
+                g.link(gpu, sw0 + k, half_intra, cluster.intra_bw, format!("gpu{gpu}-up"));
+                g.link(sw0 + k, gpu, half_intra, cluster.intra_bw, format!("gpu{gpu}-down"));
+            }
+            g.link(sw0 + k, nic0 + k, 0.0, cluster.intra_bw, format!("node{k}-nic{k}"));
+            g.link(nic0 + k, sw0 + k, 0.0, cluster.intra_bw, format!("nic{k}-node{k}"));
+            g.link(nic0 + k, spine_in, half_net, cluster.net_bw, format!("nic{k}-up"));
+            g.link(spine_out, nic0 + k, half_net, cluster.net_bw, format!("nic{k}-down"));
+        }
+        g.link(spine_in, spine_out, 0.0, spine_cap, "spine-backplane".into());
+        g
+    }
+
+    /// Static route between two GPU ranks: BFS shortest-hop path,
+    /// deterministic because adjacency is explored in insertion order.
+    /// `None` when the ranks are disconnected (malformed graph) —
+    /// callers surface that as an error, never a panic.
+    pub fn route(&self, from_rank: usize, to_rank: usize) -> Option<Vec<usize>> {
+        let (src, dst) = (self.gpu_vert[from_rank], self.gpu_vert[to_rank]);
+        if src == dst {
+            return Some(Vec::new());
+        }
+        let mut prev: Vec<Option<usize>> = vec![None; self.adj.len()];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(src);
+        let mut seen = vec![false; self.adj.len()];
+        seen[src] = true;
+        while let Some(v) = queue.pop_front() {
+            for &e in &self.adj[v] {
+                let to = self.edges[e].to;
+                if !seen[to] {
+                    seen[to] = true;
+                    prev[to] = Some(e);
+                    if to == dst {
+                        let mut path = Vec::new();
+                        let mut at = dst;
+                        while at != src {
+                            let e = prev[at].expect("walked back along BFS parents");
+                            path.push(e);
+                            at = self.edges[e].from;
+                        }
+                        path.reverse();
+                        return Some(path);
+                    }
+                    queue.push_back(to);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Max-min fair rates (progressive filling) for flows over shared edges:
+/// repeatedly find the tightest edge (least remaining capacity per
+/// unfrozen flow), freeze its flows at that fair share, subtract, and
+/// continue until every flow is frozen. Flows with empty routes come
+/// back as `f64::INFINITY` (a rank talking to itself transfers in zero
+/// time). With one flow per edge every rate is the edge's full capacity
+/// — exactly, which is what the dedicated ≡ flat contract rests on.
+pub fn maxmin_rates(edges: &[Edge], routes: &[Vec<usize>]) -> Vec<f64> {
+    let nf = routes.len();
+    let mut rate = vec![f64::INFINITY; nf];
+    let mut frozen: Vec<bool> = routes.iter().map(|r| r.is_empty()).collect();
+    let mut cap_left: Vec<f64> = edges.iter().map(|e| e.cap).collect();
+    loop {
+        let mut active = vec![0usize; edges.len()];
+        for (f, r) in routes.iter().enumerate() {
+            if !frozen[f] {
+                for &e in r {
+                    active[e] += 1;
+                }
+            }
+        }
+        let mut tightest: Option<(usize, f64)> = None;
+        for e in 0..edges.len() {
+            if active[e] > 0 {
+                let share = cap_left[e] / active[e] as f64;
+                if tightest.map_or(true, |(_, s)| share < s) {
+                    tightest = Some((e, share));
+                }
+            }
+        }
+        let Some((bottleneck, share)) = tightest else {
+            break;
+        };
+        for f in 0..nf {
+            if !frozen[f] && routes[f].contains(&bottleneck) {
+                frozen[f] = true;
+                rate[f] = share;
+                for &e in &routes[f] {
+                    cap_left[e] = (cap_left[e] - share).max(0.0);
+                }
+            }
+        }
+    }
+    rate
+}
+
+/// One lowered collective step: a set of concurrent flows, each reduced
+/// to `(Σ path α, max-min rate)`, repeated `repeats` times, each flow
+/// moving `bytes / chunk_div`. Rates are message-size-independent, so a
+/// step prices any byte count without re-running the allocator.
+#[derive(Clone, Debug)]
+pub struct StepCost {
+    /// `(Σ path α, allocated rate)` per concurrent flow.
+    pub flows: Vec<(f64, f64)>,
+    /// How many times the collective repeats this step (ring: `2(n−1)`,
+    /// tree: `2⌈log2 n⌉`, parameter server: `2n`).
+    pub repeats: usize,
+    /// Each flow moves `bytes / chunk_div` per repetition.
+    pub chunk_div: f64,
+}
+
+impl StepCost {
+    /// Seconds to run all repetitions at `bytes` total payload. The
+    /// float expression mirrors `ring_time`/`tree_time` exactly
+    /// (`repeats as f64 * (α + chunk / rate)`) so dedicated routing is
+    /// bit-identical to the flat closed forms.
+    pub fn time(&self, bytes: f64) -> f64 {
+        let chunk = bytes / self.chunk_div;
+        let mut worst = 0.0f64;
+        for &(alpha, rate) in &self.flows {
+            worst = worst.max(alpha + chunk / rate);
+        }
+        self.repeats as f64 * worst
+    }
+}
+
+/// Utilization of one fabric link under a lowered collective's binding
+/// step: the fraction of its capacity the concurrent flows' max-min
+/// rates consume (1.0 = saturated), and how many flows share it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkUse {
+    pub label: String,
+    pub utilization: f64,
+    pub flows: usize,
+}
+
+/// A collective lowered onto a fabric: ordered constituent steps plus
+/// the per-constituent launch overheads, and (graph fabrics only) the
+/// per-link utilization ledger of the most contended step each link saw.
+#[derive(Clone, Debug)]
+pub struct RoutedCollective {
+    pub steps: Vec<StepCost>,
+    /// Σ of the constituent collectives' launch overheads, charged once
+    /// per call — the same accumulation `allreduce_time` performs.
+    pub overhead: f64,
+    /// Per-link peak utilization across steps; empty for dedicated
+    /// fabrics (nothing is shared, nothing saturates).
+    pub links: Vec<LinkUse>,
+}
+
+impl RoutedCollective {
+    /// One all-reduce of `bytes`: constituent step times summed in
+    /// lowering order, plus the launch overheads.
+    pub fn time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let mut t = 0.0;
+        for s in &self.steps {
+            t += s.time(bytes);
+        }
+        t + self.overhead
+    }
+
+    /// The saturated link, if any ([`saturated_link`]).
+    pub fn saturated(&self) -> Option<&LinkUse> {
+        saturated_link(&self.links)
+    }
+}
+
+/// The saturated link of a per-link usage ledger, if any: the highest
+/// peak utilization at ≥ 99.9 % of capacity with real sharing (> 1
+/// flow). One flow at line rate is a busy private link, not contention.
+pub fn saturated_link(links: &[LinkUse]) -> Option<&LinkUse> {
+    links
+        .iter()
+        .filter(|l| l.utilization >= 0.999 && l.flows > 1)
+        .max_by(|a, b| a.utilization.total_cmp(&b.utilization))
+}
+
+/// How routes are priced: over a shared graph, or over dedicated
+/// point-to-point links (one private α–β link per flow — the fabric the
+/// flat model implicitly assumes).
+#[derive(Clone, Debug)]
+pub enum RoutedFabric {
+    /// Every flow owns a private link: intra-node pairs the cluster's
+    /// intra link, cross-node pairs its net link. No edge is shared, so
+    /// pricing collapses onto the flat closed forms bit-for-bit.
+    Dedicated,
+    /// Flows share the graph's edges under max-min filling.
+    Graph(FabricGraph),
+}
+
+/// A rank pair a lowered step moves data between.
+#[derive(Clone, Copy, Debug)]
+struct Pair {
+    from: usize,
+    to: usize,
+}
+
+/// Price one concurrent flow set on the fabric, returning the per-flow
+/// `(Σ α, rate)` list and folding the step's per-link usage into `links`.
+fn price_step(
+    fabric: &RoutedFabric,
+    topo: &CommTopo,
+    pairs: &[Pair],
+    links: &mut Vec<LinkUse>,
+) -> Result<Vec<(f64, f64)>, String> {
+    match fabric {
+        RoutedFabric::Dedicated => Ok(pairs
+            .iter()
+            .map(|p| {
+                let same_node =
+                    p.from / topo.gpus_per_node == p.to / topo.gpus_per_node;
+                let link: Link = if same_node { topo.intra } else { topo.net };
+                (link.alpha, link.bw)
+            })
+            .collect()),
+        RoutedFabric::Graph(g) => {
+            let routes: Vec<Vec<usize>> = pairs
+                .iter()
+                .map(|p| {
+                    g.route(p.from, p.to).ok_or_else(|| {
+                        format!("no route from rank {} to rank {}", p.from, p.to)
+                    })
+                })
+                .collect::<Result<_, String>>()?;
+            let rates = maxmin_rates(&g.edges, &routes);
+            // Fold this step's per-link load into the peak ledger.
+            let mut load = vec![0.0f64; g.edges.len()];
+            let mut nflows = vec![0usize; g.edges.len()];
+            for (r, &rate) in routes.iter().zip(&rates) {
+                for &e in r {
+                    load[e] += rate;
+                    nflows[e] += 1;
+                }
+            }
+            if links.is_empty() {
+                links.extend(g.edges.iter().map(|e| LinkUse {
+                    label: e.label.clone(),
+                    utilization: 0.0,
+                    flows: 0,
+                }));
+            }
+            for (e, l) in links.iter_mut().enumerate() {
+                // `share * active` can overshoot cap by an ulp; clamp so
+                // utilization stays a true fraction of capacity.
+                let u = (load[e] / g.edges[e].cap).min(1.0);
+                if u > l.utilization {
+                    l.utilization = u;
+                    l.flows = nflows[e];
+                }
+            }
+            Ok(routes
+                .iter()
+                .zip(&rates)
+                .map(|(r, &rate)| {
+                    let mut alpha = 0.0;
+                    for &e in r {
+                        alpha += g.edges[e].alpha;
+                    }
+                    (alpha, rate)
+                })
+                .collect())
+        }
+    }
+}
+
+/// Lower one all-reduce algorithm at a rank layout onto a fabric. The
+/// constituent structure (which sub-collectives run, their step
+/// repetition counts, their launch overheads) mirrors
+/// [`super::allreduce::allreduce_time`] exactly; only the per-step link
+/// pricing is generalized from "one flat link" to "routed flows under
+/// max-min sharing".
+pub fn lower_allreduce(
+    algo: Algorithm,
+    topo: &CommTopo,
+    fabric: &RoutedFabric,
+) -> Result<RoutedCollective, String> {
+    let n = topo.ranks();
+    let g = topo.gpus_per_node;
+    let mut steps = Vec::new();
+    let mut links = Vec::new();
+    let mut overhead = 0.0;
+    if n <= 1 {
+        return Ok(RoutedCollective {
+            steps,
+            overhead,
+            links,
+        });
+    }
+    // Ring over `count` members listed in `members`, `repeats = 2(m−1)`.
+    let ring = |members: &dyn Fn(usize) -> usize,
+                m: usize,
+                every: usize,
+                links: &mut Vec<LinkUse>|
+     -> Result<StepCost, String> {
+        // `every` concurrent rings of `m` members each (hierarchical
+        // runs one intra ring per node at once).
+        let mut pairs = Vec::with_capacity(every * m);
+        for ringno in 0..every {
+            for i in 0..m {
+                pairs.push(Pair {
+                    from: members(ringno * m + i),
+                    to: members(ringno * m + (i + 1) % m),
+                });
+            }
+        }
+        Ok(StepCost {
+            flows: price_step(fabric, topo, &pairs, links)?,
+            repeats: 2 * (m - 1),
+            chunk_div: m as f64,
+        })
+    };
+    // Binomial tree over `m` members: `2⌈log2 m⌉` rounds of the full
+    // buffer. All rounds are priced at the first (widest) round's
+    // contention — on a dedicated fabric every round costs the same, on
+    // a shared graph the widest round binds.
+    let tree = |members: &dyn Fn(usize) -> usize,
+                m: usize,
+                every: usize,
+                links: &mut Vec<LinkUse>|
+     -> Result<StepCost, String> {
+        let mut pairs = Vec::new();
+        for treeno in 0..every {
+            let mut i = 1;
+            while i < m {
+                pairs.push(Pair {
+                    from: members(treeno * m + i),
+                    to: members(treeno * m + (i - 1)),
+                });
+                i += 2;
+            }
+        }
+        Ok(StepCost {
+            flows: price_step(fabric, topo, &pairs, links)?,
+            repeats: 2 * ceil_log2(m) as usize,
+            chunk_div: 1.0,
+        })
+    };
+    let ident = |i: usize| i;
+    let roots = |i: usize| i * g; // lane-0 GPU of node i
+    match algo {
+        Algorithm::Ring => {
+            // One flat ring across all ranks, node-major; crossing flows
+            // route over the spine on graph fabrics (the routed
+            // replacement for the flat model's bw.min() bottleneck hack).
+            steps.push(ring(&ident, n, 1, &mut links)?);
+            overhead += topo.launch_overhead;
+        }
+        Algorithm::Tree => {
+            if topo.nodes == 1 {
+                steps.push(tree(&ident, n, 1, &mut links)?);
+                overhead += topo.launch_overhead;
+            } else {
+                let inter = tree(&roots, topo.nodes, 1, &mut links)?;
+                if g > 1 {
+                    steps.push(tree(&ident, g, topo.nodes, &mut links)?);
+                    overhead += topo.intra_overhead;
+                }
+                steps.push(inter);
+                overhead += topo.launch_overhead;
+            }
+        }
+        Algorithm::Hierarchical => {
+            if g > 1 {
+                steps.push(ring(&ident, g, topo.nodes, &mut links)?);
+                overhead += if topo.nodes > 1 {
+                    topo.intra_overhead
+                } else {
+                    topo.launch_overhead
+                };
+            }
+            if topo.nodes > 1 {
+                steps.push(ring(&roots, topo.nodes, 1, &mut links)?);
+                overhead += topo.launch_overhead;
+            }
+        }
+        Algorithm::ParameterServer => {
+            // 2n serialized transfers between the farthest worker and the
+            // rank-0 server: serialized traffic shares nothing, so the
+            // step holds a single flow repeated 2n times.
+            let pairs = [Pair {
+                from: n - 1,
+                to: 0,
+            }];
+            steps.push(StepCost {
+                flows: price_step(fabric, topo, &pairs, &mut links)?,
+                repeats: 2 * n,
+                chunk_div: 1.0,
+            });
+            overhead += topo.launch_overhead;
+        }
+    }
+    Ok(RoutedCollective {
+        steps,
+        overhead,
+        links,
+    })
+}
+
+/// The spec of a routed what-if fabric: which cluster's links to build
+/// the graph from, and how the spine is provisioned. Canonical string
+/// form (`routed:<cluster>:dedicated` / `routed:<cluster>:spine=<k>`)
+/// rides campaign cache keys and the serve protocol exactly like every
+/// other fabric name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutedSpec {
+    /// Cluster preset whose link parameters shape the graph.
+    pub cluster: String,
+    /// `None`: dedicated links (the keystone's bit-identity fabric).
+    /// `Some(k)`: shared tree with a spine backplane of `k · net_bw`
+    /// (k line-rate flows before the spine saturates).
+    pub spine: Option<f64>,
+}
+
+/// Default spine provisioning: the backplane sustains 4 line-rate flows
+/// — exactly enough for the paper's 4-node testbeds, so every scale-out
+/// rung beyond them contends.
+pub const DEFAULT_SPINE_FLOWS: f64 = 4.0;
+
+impl RoutedSpec {
+    /// Canonical name; [`RoutedSpec::parse`] round-trips it.
+    pub fn name(&self) -> String {
+        match self.spine {
+            None => format!("routed:{}:dedicated", self.cluster),
+            Some(k) => format!("routed:{}:spine={k}", self.cluster),
+        }
+    }
+
+    /// Parse `routed:<cluster>[:dedicated|:spine=<k>]` (default spine:
+    /// [`DEFAULT_SPINE_FLOWS`]). The cluster must be a known preset;
+    /// short aliases canonicalize so names stay cache-stable.
+    pub fn parse(s: &str) -> Result<RoutedSpec, String> {
+        let rest = s
+            .strip_prefix("routed:")
+            .ok_or_else(|| format!("bad routed fabric '{s}' (want routed:<cluster>[:spine=<k>])"))?;
+        let (cluster_part, spine) = match rest.split_once(':') {
+            None => (rest, Some(DEFAULT_SPINE_FLOWS)),
+            Some((c, "dedicated")) => (c, None),
+            Some((c, opt)) => {
+                let k = opt
+                    .strip_prefix("spine=")
+                    .ok_or_else(|| {
+                        format!("bad routed option '{opt}' in '{s}' (want dedicated or spine=<k>)")
+                    })?
+                    .parse::<f64>()
+                    .map_err(|e| format!("bad spine multiple in '{s}': {e}"))?;
+                if !k.is_finite() || k <= 0.0 {
+                    return Err(format!("spine multiple must be finite and > 0, got {k}"));
+                }
+                (c, Some(k))
+            }
+        };
+        let cluster = crate::cluster::presets::by_name(cluster_part)
+            .ok_or_else(|| format!("unknown cluster '{cluster_part}' in routed fabric '{s}'"))?;
+        Ok(RoutedSpec {
+            cluster: cluster.name,
+            spine,
+        })
+    }
+
+    /// Build the pricing fabric at a rank layout on `cluster` (already
+    /// resolved and scale-enlarged by the caller).
+    pub fn fabric(&self, cluster: &ClusterSpec, nodes: usize, gpus_per_node: usize) -> RoutedFabric {
+        match self.spine {
+            None => RoutedFabric::Dedicated,
+            Some(k) => RoutedFabric::Graph(FabricGraph::tree(
+                cluster,
+                nodes,
+                gpus_per_node,
+                k * cluster.net_bw,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::comm::allreduce::{allreduce_time, ring_time};
+    use crate::util::units::us;
+
+    fn topo(nodes: usize, g: usize) -> CommTopo {
+        let c = presets::v100_cluster();
+        CommTopo {
+            nodes,
+            gpus_per_node: g,
+            intra: Link::new(c.intra_lat, c.intra_bw),
+            net: Link::new(c.net_lat, c.net_bw),
+            launch_overhead: us(300.0),
+            intra_overhead: us(30.0),
+        }
+    }
+
+    /// Keystone: dedicated routing reproduces the flat closed forms
+    /// bit-for-bit, for every algorithm and layout shape.
+    #[test]
+    fn dedicated_is_bit_identical_to_flat_model() {
+        for (nodes, g) in [(1, 4), (4, 1), (4, 4), (2, 8), (8, 2)] {
+            let t = topo(nodes, g);
+            for algo in [
+                Algorithm::Ring,
+                Algorithm::Tree,
+                Algorithm::Hierarchical,
+                Algorithm::ParameterServer,
+            ] {
+                let rc = lower_allreduce(algo, &t, &RoutedFabric::Dedicated).unwrap();
+                for bytes in [1.0, 4096.0, 25e6, 400e6] {
+                    let flat = allreduce_time(algo, &t, bytes);
+                    let routed = rc.time(bytes);
+                    assert_eq!(
+                        routed.to_bits(),
+                        flat.to_bits(),
+                        "{algo:?} {nodes}x{g} @ {bytes}: routed {routed} != flat {flat}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A single flow over a multi-hop path prices exactly like the
+    /// equivalent flat α–β link (Σ α, min capacity).
+    #[test]
+    fn single_flow_equals_equivalent_flat_link() {
+        let c = presets::v100_cluster();
+        let g = FabricGraph::tree(&c, 2, 2, 1e18);
+        let rc = RoutedCollective {
+            steps: vec![StepCost {
+                flows: price_step(
+                    &RoutedFabric::Graph(g),
+                    &topo(2, 2),
+                    &[Pair { from: 0, to: 2 }],
+                    &mut Vec::new(),
+                )
+                .unwrap(),
+                repeats: 1,
+                chunk_div: 1.0,
+            }],
+            overhead: 0.0,
+            links: Vec::new(),
+        };
+        // Path: gpu0 → sw0 → nic0 → spine → nic1 → sw1 → gpu2:
+        // α = intra_lat + net_lat, bottleneck capacity = net_bw. (The
+        // hop αs sum in path order, so allow float-association slack;
+        // the exact bit-identity contract lives on dedicated links.)
+        let eq = Link::new(c.intra_lat + c.net_lat, c.net_bw);
+        for bytes in [1.0, 1e6, 1e9] {
+            let (got, want) = (rc.time(bytes), eq.xfer(bytes));
+            assert!(
+                (got - want).abs() <= 1e-15 * want,
+                "{bytes}: {got} vs {want}"
+            );
+        }
+    }
+
+    /// Max-min filling: two flows over a shared edge each get half; a
+    /// third flow on a private edge keeps the full rate.
+    #[test]
+    fn maxmin_splits_shared_edges() {
+        let mut g = FabricGraph::with_vertices(4);
+        g.link(0, 1, 0.0, 10.0, "shared".into());
+        g.link(2, 3, 0.0, 10.0, "private".into());
+        let routes = vec![vec![0], vec![0], vec![1]];
+        let rates = maxmin_rates(&g.edges, &routes);
+        assert_eq!(rates[0], 5.0);
+        assert_eq!(rates[1], 5.0);
+        assert_eq!(rates[2], 10.0);
+        // Empty route → infinite rate (self-transfer is free).
+        let rates = maxmin_rates(&g.edges, &vec![vec![], vec![0]]);
+        assert_eq!(rates[0], f64::INFINITY);
+        assert_eq!(rates[1], 10.0);
+    }
+
+    /// Bottleneck cascade: a narrow edge freezes its flows first, and
+    /// the leftover capacity is re-filled by the remaining flows.
+    #[test]
+    fn maxmin_progressive_filling_cascades() {
+        let mut g = FabricGraph::with_vertices(4);
+        g.link(0, 1, 0.0, 6.0, "wide".into());
+        g.link(1, 2, 0.0, 2.0, "narrow".into());
+        // Flow A: wide+narrow (bottlenecked at 2); flow B: wide only
+        // (gets the remaining 4, not just an equal 3).
+        let rates = maxmin_rates(&g.edges, &vec![vec![0, 1], vec![0]]);
+        assert_eq!(rates[0], 2.0);
+        assert_eq!(rates[1], 4.0);
+    }
+
+    /// Contention is monotone: concurrent collectives through a shared
+    /// spine are never faster than uncontended ones, and with enough
+    /// crossing flows the spine saturates and is named.
+    #[test]
+    fn shared_spine_contends_and_saturates() {
+        let c = presets::v100_cluster();
+        let bytes = 100e6;
+        let mut prev = 0.0;
+        for nodes in [2usize, 4, 8, 16, 64] {
+            let t = topo(nodes, 4);
+            let spec = RoutedSpec {
+                cluster: c.name.clone(),
+                spine: Some(4.0),
+            };
+            let fabric = spec.fabric(&c, nodes, 4);
+            let rc = lower_allreduce(Algorithm::Hierarchical, &t, &fabric).unwrap();
+            let routed = rc.time(bytes);
+            let flat = allreduce_time(Algorithm::Hierarchical, &t, bytes);
+            assert!(
+                routed > flat,
+                "{nodes} nodes: routed {routed} must exceed flat {flat}"
+            );
+            assert!(routed > prev, "{nodes} nodes: contention grows");
+            prev = routed;
+            let sat = rc.saturated();
+            if nodes > 4 {
+                let link = sat.expect("spine must saturate beyond 4 nodes");
+                assert_eq!(link.label, "spine-backplane");
+                assert!(link.utilization >= 0.999, "{}", link.utilization);
+                assert_eq!(link.flows, nodes);
+            }
+        }
+        // Beyond the spine's 4 line-rate flows the inter ring degrades
+        // toward linear-in-n: 64 nodes cost ≈ 16× the per-flow rate of
+        // 4 nodes. Sanity: time at 64 nodes is much more than the flat
+        // asymptote.
+        let t64 = topo(64, 4);
+        let spec = RoutedSpec {
+            cluster: c.name.clone(),
+            spine: Some(4.0),
+        };
+        let rc = lower_allreduce(
+            Algorithm::Hierarchical,
+            &t64,
+            &spec.fabric(&c, 64, 4),
+        )
+        .unwrap();
+        let flat_inter = ring_time(64, bytes, Link::new(c.net_lat, c.net_bw));
+        assert!(rc.time(bytes) > 5.0 * flat_inter);
+    }
+
+    /// Intra-node traffic through the node switch is uncontended and
+    /// exactly matches the flat intra ring (the half-α hops sum back to
+    /// the full intra latency).
+    #[test]
+    fn tree_graph_intra_ring_matches_flat() {
+        let c = presets::v100_cluster();
+        let t = topo(1, 4);
+        let spec = RoutedSpec {
+            cluster: c.name.clone(),
+            spine: Some(4.0),
+        };
+        let rc = lower_allreduce(Algorithm::Ring, &t, &spec.fabric(&c, 1, 4)).unwrap();
+        for bytes in [4096.0, 25e6] {
+            let flat = allreduce_time(Algorithm::Ring, &t, bytes);
+            assert_eq!(rc.time(bytes).to_bits(), flat.to_bits());
+        }
+        assert!(rc.saturated().is_none(), "non-blocking switch never saturates");
+    }
+
+    #[test]
+    fn routed_spec_names_round_trip() {
+        for spec in [
+            RoutedSpec {
+                cluster: "v100-nvlink-ib".into(),
+                spine: None,
+            },
+            RoutedSpec {
+                cluster: "k80-pcie-10gbe".into(),
+                spine: Some(4.0),
+            },
+            RoutedSpec {
+                cluster: "v100-nvlink-ib".into(),
+                spine: Some(0.5),
+            },
+        ] {
+            let back = RoutedSpec::parse(&spec.name()).unwrap();
+            assert_eq!(back, spec, "{}", spec.name());
+        }
+        // Default + alias canonicalization.
+        let d = RoutedSpec::parse("routed:v100").unwrap();
+        assert_eq!(d.cluster, "v100-nvlink-ib");
+        assert_eq!(d.spine, Some(DEFAULT_SPINE_FLOWS));
+        assert!(RoutedSpec::parse("routed:warp").is_err());
+        assert!(RoutedSpec::parse("routed:v100:spine=0").is_err());
+        assert!(RoutedSpec::parse("routed:v100:bogus").is_err());
+        assert!(RoutedSpec::parse("v100").is_err());
+    }
+
+    /// Routes are static and symmetric in hop count; disconnected ranks
+    /// are an error, not a panic.
+    #[test]
+    fn routing_is_deterministic() {
+        let c = presets::v100_cluster();
+        let g = FabricGraph::tree(&c, 2, 2, 1e18);
+        let a = g.route(0, 3).unwrap();
+        let b = g.route(0, 3).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 7, "gpu→sw→nic→spine-in→spine-out→nic→sw→gpu");
+        assert_eq!(g.route(0, 1).unwrap().len(), 2, "intra stays in the node");
+        assert_eq!(g.route(2, 2).unwrap().len(), 0, "self route is empty");
+    }
+}

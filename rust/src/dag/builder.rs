@@ -55,6 +55,7 @@ pub fn comm_topo(cluster: &ClusterSpec, nodes: usize, gpus_per_node: usize) -> C
         intra: Link::new(cluster.intra_lat, cluster.intra_bw),
         net: Link::new(cluster.net_lat, cluster.net_bw),
         launch_overhead: launch_overhead(nodes),
+        intra_overhead: launch_overhead(1),
     }
 }
 

@@ -208,6 +208,7 @@ mod tests {
             intra: Link::new(us(12.0), 15e9),
             net: Link::new(us(40.0), 1.25e9),
             launch_overhead: us(200.0),
+            intra_overhead: us(30.0),
         }
     }
 

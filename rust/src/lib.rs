@@ -73,6 +73,7 @@ pub mod comm {
     pub mod alpha_beta;
     pub mod allreduce;
     pub mod message_sim;
+    pub mod network;
     pub(crate) mod schedule;
 }
 

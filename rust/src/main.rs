@@ -368,7 +368,8 @@ fn cmd_campaign_profile(args: &Args, path: &str) -> i32 {
 /// measured workloads on hypothetical fabrics and/or at hypothetical
 /// scales. `--profile FILE` selects the profile; `--fabric LIST` picks
 /// the channels (measured, ideal, stock, 10gbe, 100gb-ib, cluster
-/// presets, `alpha<S>-bw<B/S>`), `--alpha S --beta BPS` adds one
+/// presets, `alpha<S>-bw<B/S>`, `routed:<cluster>[:spine=<k>]` for the
+/// contention-aware routed graph), `--alpha S --beta BPS` adds one
 /// explicit α–β channel, `--topology LIST` (`<N>x<G>` or `measured`)
 /// and/or `--nodes N --gpus G` rescale the predictions to other rank
 /// layouts, `--scheduler LIST` the policies, `--autotune-fusion`

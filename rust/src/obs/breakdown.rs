@@ -27,6 +27,7 @@
 //! breakdowns ride the content-addressed result caches bit-identically
 //! alongside their cells.
 
+use crate::comm::network::{self, LinkUse};
 use crate::coordinator::metrics::PhaseTotals;
 use crate::dag::graph::Dag;
 use crate::dag::node::{Phase, TaskId};
@@ -132,6 +133,28 @@ impl Bottleneck {
             _ => None,
         }
     }
+}
+
+/// The saturated fabric link of a routed what-if prediction, if any —
+/// the *why* behind a comm-bound verdict on a routed fabric: the named
+/// link is the resource the collective's flows actually queue on
+/// ([`network::saturated_link`]'s ≥ 99.9 % utilization, > 1 flow rule).
+pub fn saturated_link(links: &[LinkUse]) -> Option<&LinkUse> {
+    network::saturated_link(links)
+}
+
+/// Human verdict for the explain table's hot-link column: the saturated
+/// link with its flow count, or — when nothing saturates — the most
+/// utilized link with its share of capacity.
+pub fn link_verdict(links: &[LinkUse]) -> String {
+    if let Some(l) = saturated_link(links) {
+        return format!("{} saturated ({} flows)", l.label, l.flows);
+    }
+    links
+        .iter()
+        .max_by(|a, b| a.utilization.total_cmp(&b.utilization))
+        .map(|l| format!("{} {:.0}%", l.label, 100.0 * l.utilization))
+        .unwrap_or_else(|| "-".into())
 }
 
 /// Per-resource occupancy: busy time, utilization, and the bubble

@@ -87,8 +87,9 @@ pub fn load_profile(path: &str) -> Result<CalibratedProfile, String> {
 }
 
 /// Parse the fabric axis: `--fabric NAME[,NAME...]` (measured, ideal,
-/// stock, 10gbe, 100gb-ib, cluster presets, or `alpha<S>-bw<B/S>`),
-/// plus `--alpha SECONDS --beta BYTES_PER_S` appending one explicit α–β
+/// stock, 10gbe, 100gb-ib, cluster presets, `alpha<S>-bw<B/S>`, or the
+/// routed contention-aware graph `routed:<cluster>[:spine=<k>]`), plus
+/// `--alpha SECONDS --beta BYTES_PER_S` appending one explicit α–β
 /// channel. Defaults to the measured fabric alone.
 fn fabrics_from_args(args: &Args) -> Result<Vec<Fabric>, String> {
     let mut fabrics = match args.get("fabric") {
@@ -486,6 +487,9 @@ mod tests {
                 Fabric::Ideal,
                 Fabric::Interconnect(Interconnect::TenGbE),
                 Fabric::alpha_beta(2e-5, 1.25e9).unwrap(),
+                // Routed names carry ':' and an inner '=', which the
+                // first-'=' pair split and comma list must tolerate.
+                Fabric::parse("routed:v100:spine=2").unwrap(),
             ],
             topologies: vec![None, Some(Topology::new(4, 4).unwrap())],
             schedulers: vec![SchedulerKind::Fifo, SchedulerKind::Fusion],

@@ -31,10 +31,13 @@ pub fn inject(dag: &mut Dag, pool: &ResourcePool, faults: &[Fault]) {
     for fault in faults {
         match fault {
             Fault::StragglerGpu { rank, factor } => {
+                // Every task bound to the rank slows down — compute, but
+                // also its disk reads, decode, and H2D copies (a throttled
+                // host drags its whole per-rank pipeline, not just kernels).
+                // Shared tasks (gpu == None, e.g. collective aggregation)
+                // are untouched.
                 for t in dag.tasks.iter_mut() {
-                    if t.gpu == Some(*rank)
-                        && pool.class(t.resource) == ResourceClass::Gpu
-                    {
+                    if t.gpu == Some(*rank) {
                         t.duration *= factor;
                     }
                 }
@@ -100,12 +103,15 @@ mod tests {
             }],
         );
         let slowed = simulate(&dag, &res.pool).makespan;
+        // The whole per-rank pipeline (io/decode/h2d/compute) is derated,
+        // so the bulk-synchronous barrier tracks the straggler closely.
         assert!(
-            slowed > 1.5 * base,
+            slowed > 1.7 * base,
             "straggler should dominate: {slowed} vs base {base}"
         );
-        // And it is bounded by exactly 2x the original work.
-        assert!(slowed < 2.2 * base);
+        // And it is bounded by exactly 2x the original work (shared
+        // aggregation is not derated).
+        assert!(slowed < 2.1 * base);
     }
 
     #[test]

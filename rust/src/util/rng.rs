@@ -95,8 +95,12 @@ impl Rng {
     /// Log-normal multiplicative jitter with multiplicative sigma `s`
     /// (e.g. 0.05 ⇒ ~5 % spread). Used to give synthetic traces the
     /// iteration-to-iteration variance real traces show.
+    ///
+    /// Centered at `μ = −σ²/2` so `E[factor] = 1`: a plain
+    /// `exp(σ·N(0,1))` has mean `exp(σ²/2) > 1` and would systematically
+    /// inflate every jittered duration.
     pub fn jitter(&mut self, sigma: f64) -> f64 {
-        (self.normal() * sigma).exp()
+        (self.normal() * sigma - 0.5 * sigma * sigma).exp()
     }
 
     /// Fisher–Yates shuffle.
@@ -176,6 +180,32 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    /// The log-normal jitter must be mean-one: over many draws the
+    /// average factor converges to 1 (the −σ²/2 centering), and the
+    /// log-variance matches σ².
+    #[test]
+    fn jitter_is_mean_one() {
+        for &sigma in &[0.05, 0.2, 0.5] {
+            let mut r = Rng::new(17);
+            let n = 100_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.jitter(sigma)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            assert!(
+                (mean - 1.0).abs() < 0.01,
+                "sigma={sigma} mean={mean}"
+            );
+            let logs: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+            let lmean = logs.iter().sum::<f64>() / n as f64;
+            let lvar =
+                logs.iter().map(|x| (x - lmean) * (x - lmean)).sum::<f64>() / n as f64;
+            assert!(
+                (lvar.sqrt() - sigma).abs() < 0.05 * sigma + 0.005,
+                "sigma={sigma} sd={}",
+                lvar.sqrt()
+            );
+        }
     }
 
     #[test]
