@@ -39,6 +39,7 @@ use crate::dag::builder::{comm_topo, JobSpec};
 use crate::frameworks::strategy::{self, Backend, CalibratedComm, Strategy};
 use crate::models::perf::PerfModel;
 use crate::obs::breakdown::{self, Bottleneck};
+use crate::sim::lower_bound;
 use crate::sim::scheduler::SchedulerKind;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
@@ -47,7 +48,10 @@ use std::collections::BTreeMap;
 
 /// Version of the `BENCH_whatif.json` format; bump on any layout change.
 /// v2 added the scale-out axis (`topology` + `pred_gpus` per row).
-pub const WHATIF_SCHEMA_VERSION: u64 = 2;
+/// v3 added the optional `lower_bound_s` / `gap_to_bound` columns and
+/// the `portfolio_winner` tag on portfolio rows; v2 reports still
+/// validate ([`validate_report`] accepts both).
+pub const WHATIF_SCHEMA_VERSION: u64 = 3;
 
 /// Version of the report's `explain` section (the obs breakdown per
 /// row); independent of the row schema so explain consumers can evolve
@@ -639,6 +643,28 @@ pub fn predict_sim_at(
     fw: &Strategy,
     baseline: Option<f64>,
 ) -> Result<(Prediction, replay::ReplaySim), String> {
+    // The portfolio autotuner races every registered concrete policy
+    // through this same entry point and keeps the winner's prediction
+    // untouched (strict min on predicted iteration time, registry order
+    // breaking ties), so a portfolio prediction is bit-identical to the
+    // winning solo prediction by construction. The returned
+    // `Prediction.scheduler` names the winner. Per-kind measured
+    // baselines are recomputed — the caller's baseline was replayed
+    // under the portfolio, not under any one concrete policy.
+    if kind.is_portfolio() {
+        let mut best: Option<(Prediction, replay::ReplaySim)> = None;
+        for k in SchedulerKind::all() {
+            let cand = predict_sim_at(entry, fabric, topo, k, fw, None)?;
+            let better = match &best {
+                None => true,
+                Some((b, _)) => cand.0.replayed.iter_time_s < b.replayed.iter_time_s,
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        return Ok(best.expect("the registry always has concrete policies"));
+    }
     let (topo, scaled, at) = rescaled_for(entry, topo, fw)?;
     let eff = scaled.as_ref().unwrap_or(entry);
     let comm = comm_override_at(eff, fabric, fw, at)?;
@@ -865,6 +891,12 @@ pub fn measured_baselines(
         if s.fabric.as_deref() == Some("measured") && s.topology.is_none() {
             continue; // its own baseline
         }
+        if s.scheduler.is_portfolio() {
+            // The race recomputes per-concrete-kind baselines inside
+            // `predict_sim_at`; a portfolio-keyed baseline would never
+            // be read.
+            continue;
+        }
         let Some(entry) = replay::entry_for(profile, s) else {
             continue; // validated sweeps never hit this
         };
@@ -907,6 +939,15 @@ pub fn whatif_cell_with(
     let (p, rs) = predict_sim_at(entry, &fabric, cell_topology(s), s.scheduler, &fw, base)
         .expect("fabric/topology validated before sweep");
     let mut r = metrics_of(&p);
+    // The makespan lower bound of the predicted DAG on the predicted
+    // resources — no schedule can beat it, so `gap_to_bound` is how much
+    // of the row is the policy's fault rather than the hardware's.
+    let bound = lower_bound::makespan_lower_bound(&rs.dag, &rs.res.pool);
+    r.set("lower_bound_s", bound)
+        .set("gap_to_bound", lower_bound::gap_to_bound(p.replayed.makespan_s, bound));
+    if s.scheduler.is_portfolio() {
+        r.set("portfolio_winner_code", p.scheduler.index() as f64);
+    }
     // The obs breakdown rides the flat metric map, so explanations are
     // content-addressed alongside the cell in both result caches.
     for (k, v) in rs.breakdown().metric_pairs() {
@@ -975,6 +1016,16 @@ pub struct WhatIfRow {
     pub comm_total_s: f64,
     pub measured_iter_s: f64,
     pub speedup_vs_measured: f64,
+    /// Makespan lower bound of the predicted DAG on the predicted
+    /// resources ([`lower_bound::makespan_lower_bound`]); `None` only
+    /// for cells from caches that predate the bound columns.
+    pub lower_bound_s: Option<f64>,
+    /// Relative gap of the predicted makespan above `lower_bound_s`
+    /// ([`lower_bound::gap_to_bound`]), same provenance.
+    pub gap_to_bound: Option<f64>,
+    /// The concrete policy a `portfolio` row's race selected; `None` on
+    /// solo-policy rows.
+    pub portfolio_winner: Option<SchedulerKind>,
     pub fusion: Option<FusionTune>,
     /// The obs breakdown metrics of the predicted timeline, keyed by
     /// [`breakdown::METRIC_KEYS`]. `None` only for cells from caches
@@ -1098,6 +1149,11 @@ pub fn rows(
             comm_total_s: metric("comm_total_s"),
             measured_iter_s: metric("measured_iter_s"),
             speedup_vs_measured: metric("speedup_vs_measured"),
+            lower_bound_s: r.get("lower_bound_s"),
+            gap_to_bound: r.get("gap_to_bound"),
+            portfolio_winner: r
+                .get("portfolio_winner_code")
+                .and_then(|c| SchedulerKind::from_index(c as usize)),
             fusion: tunes.get(&(entry.key(), topo_key, fabric_name)).cloned(),
             explain,
             links,
@@ -1118,6 +1174,7 @@ pub fn render(rows: &[WhatIfRow]) -> String {
         "measured",
         "predicted",
         "speedup",
+        "vs bound",
         "comm",
         "fusion cap",
         "fusion gain",
@@ -1127,16 +1184,26 @@ pub fn render(rows: &[WhatIfRow]) -> String {
             Some(tune) => (fmt_bytes(tune.cap_bytes), format!("{}%", f(tune.gain_pct(), 1))),
             None => ("-".into(), "-".into()),
         };
+        // Portfolio rows name the concrete policy the race selected.
+        let sched = match r.portfolio_winner {
+            Some(w) => format!("{}→{}", r.scheduler.name(), w.name()),
+            None => r.scheduler.name().to_string(),
+        };
+        let gap = r
+            .gap_to_bound
+            .map(|g| format!("+{}%", f(100.0 * g, 1)))
+            .unwrap_or_else(|| "-".into());
         t.row(&[
             r.net.clone(),
             r.cluster.clone(),
             r.gpus.to_string(),
             r.topology.clone(),
             r.fabric.clone(),
-            r.scheduler.name().to_string(),
+            sched,
             fmt_dur(r.measured_iter_s),
             fmt_dur(r.iter_time_s),
             format!("{}x", f(r.speedup_vs_measured, 2)),
+            gap,
             fmt_dur(r.comm_total_s),
             cap,
             gain,
@@ -1244,6 +1311,20 @@ pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) ->
                 ("comm_total_s", Json::num(r.comm_total_s)),
                 ("measured_iter_s", Json::num(r.measured_iter_s)),
                 ("speedup_vs_measured", Json::num(r.speedup_vs_measured)),
+                (
+                    "lower_bound_s",
+                    r.lower_bound_s.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "gap_to_bound",
+                    r.gap_to_bound.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "portfolio_winner",
+                    r.portfolio_winner
+                        .map(|w| Json::str(w.name()))
+                        .unwrap_or(Json::Null),
+                ),
                 ("fusion", fusion),
                 ("links", links),
             ])
@@ -1275,17 +1356,18 @@ pub fn report_to_json(rows: &[WhatIfRow], framework: &str, profile_tag: &str) ->
     Json::obj(doc)
 }
 
-/// Validate a `BENCH_whatif.json` against schema v2 (and, when
-/// present, its `explain` section against schema v1). Returns the row
-/// count.
+/// Validate a `BENCH_whatif.json` against schema v3 — or v2, which
+/// differs only in lacking the optional bound/portfolio columns — and,
+/// when present, its `explain` section against schema v1. Returns the
+/// row count.
 pub fn validate_report(report: &Json) -> Result<usize, String> {
     let version = report
         .get("schema_version")
         .and_then(|v| v.as_f64())
         .ok_or("missing schema_version")?;
-    if version != WHATIF_SCHEMA_VERSION as f64 {
+    if version != 2.0 && version != WHATIF_SCHEMA_VERSION as f64 {
         return Err(format!(
-            "schema_version {version} != supported {WHATIF_SCHEMA_VERSION}"
+            "schema_version {version} is not supported (want 2 or {WHATIF_SCHEMA_VERSION})"
         ));
     }
     if report.get("bench").and_then(|v| v.as_str()) != Some("whatif") {
@@ -1345,6 +1427,34 @@ pub fn validate_report(report: &Json) -> Result<usize, String> {
         ] {
             if row.get(field).and_then(|v| v.as_f64()) == Some(0.0) {
                 return Err(format!("{at}: field '{field}' must be positive"));
+            }
+        }
+        // The v3 bound/portfolio columns are optional (cells from caches
+        // that predate them degrade to null), but when present they must
+        // be coherent: finite non-negative bound and gap, and a winner
+        // the scheduler registry actually resolves to a concrete policy.
+        for field in ["lower_bound_s", "gap_to_bound"] {
+            match row.get(field) {
+                None | Some(Json::Null) => {}
+                Some(_) => {
+                    req_num(row, field, &at)?;
+                }
+            }
+        }
+        match row.get("portfolio_winner") {
+            None | Some(Json::Null) => {}
+            Some(w) => {
+                let name = w
+                    .as_str()
+                    .ok_or_else(|| format!("{at}: 'portfolio_winner' must be a string"))?;
+                let k = SchedulerKind::by_name(name).ok_or_else(|| {
+                    format!("{at}: portfolio_winner '{name}' is not a registered scheduler")
+                })?;
+                if k.is_portfolio() {
+                    return Err(format!(
+                        "{at}: portfolio_winner must be a concrete policy, not '{name}'"
+                    ));
+                }
             }
         }
         match row.get("fusion") {
@@ -1834,6 +1944,109 @@ mod tests {
         }
     }
 
+    /// The portfolio autotuner races every registered policy and keeps
+    /// the winner's prediction untouched: bit-identical to the best
+    /// solo prediction, with the winner named on the result.
+    #[test]
+    fn portfolio_prediction_is_bit_identical_to_best_solo_policy() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let entry = entry_of(zoo::resnet50(), &cluster, 2, 4);
+        let fw = fws::caffe_mpi();
+        let fabric = Fabric::Interconnect(Interconnect::TenGbE);
+        let (p, _) =
+            predict_sim_at(&entry, &fabric, None, SchedulerKind::Portfolio, &fw, None).unwrap();
+        assert!(!p.scheduler.is_portfolio(), "the race must name a concrete winner");
+        let mut best: Option<Prediction> = None;
+        for k in SchedulerKind::all() {
+            let solo = predict_entry(&entry, &fabric, k, &fw).unwrap();
+            let better = match &best {
+                None => true,
+                Some(b) => solo.replayed.iter_time_s < b.replayed.iter_time_s,
+            };
+            if better {
+                best = Some(solo);
+            }
+        }
+        let best = best.unwrap();
+        assert_eq!(p.scheduler, best.scheduler, "registry order breaks ties");
+        assert_eq!(p.replayed.iter_time_s.to_bits(), best.replayed.iter_time_s.to_bits());
+        assert_eq!(p.replayed.makespan_s.to_bits(), best.replayed.makespan_s.to_bits());
+        assert_eq!(p.measured_iter_s.to_bits(), best.measured_iter_s.to_bits());
+    }
+
+    /// The bound and portfolio columns end to end at the what-if level:
+    /// every cell carries `lower_bound_s`/`gap_to_bound`, no cell beats
+    /// its bound, the portfolio cell is bit-identical to the winning
+    /// solo cell, and the winner rides the rows into the v3 report.
+    #[test]
+    fn whatif_cells_carry_bounds_and_portfolio_winner() {
+        let cluster = crate::cluster::presets::k80_cluster();
+        let profile = CalibratedProfile {
+            framework: "caffe-mpi".into(),
+            entries: vec![entry_of(zoo::alexnet(), &cluster, 2, 4)],
+        };
+        let fabrics = [Fabric::Measured, Fabric::Ideal];
+        let mut kinds = vec![SchedulerKind::Portfolio];
+        kinds.extend(SchedulerKind::all());
+        let cells = scenarios(&profile, &fabrics, &[None], &kinds);
+        let baselines = measured_baselines(&profile, &cells).unwrap();
+        let outcome =
+            runner::run_with(&cells, 2, None, |s| whatif_cell_with(&profile, s, &baselines));
+        for (s, r) in &outcome.cells {
+            let bound = r.get("lower_bound_s").expect("every cell carries the bound");
+            let gap = r.get("gap_to_bound").expect("every cell carries the gap");
+            assert!(bound > 0.0, "{}", s.key());
+            assert!(gap >= 0.0, "{}", s.key());
+            assert!(r.get("makespan_s").unwrap() >= bound - 1e-9, "{}", s.key());
+            if !s.scheduler.is_portfolio() {
+                assert_eq!(r.get("portfolio_winner_code"), None, "{}", s.key());
+            }
+        }
+        for fabric in ["measured", "ideal"] {
+            let cell = |kind: SchedulerKind| {
+                outcome
+                    .cells
+                    .iter()
+                    .find(|(s, _)| s.fabric.as_deref() == Some(fabric) && s.scheduler == kind)
+                    .map(|(_, r)| r)
+                    .unwrap()
+            };
+            let pf = cell(SchedulerKind::Portfolio);
+            let code = pf.get("portfolio_winner_code").expect("portfolio cells name a winner");
+            let winner = SchedulerKind::from_index(code as usize).expect("registered winner");
+            let solo = cell(winner);
+            for k in
+                ["iter_time_s", "makespan_s", "lower_bound_s", "gap_to_bound", "measured_iter_s"]
+            {
+                assert_eq!(
+                    pf.get(k).unwrap().to_bits(),
+                    solo.get(k).unwrap().to_bits(),
+                    "{fabric}/{k}: the portfolio must keep the winner's bits"
+                );
+            }
+            for k in SchedulerKind::all() {
+                assert!(
+                    pf.get("iter_time_s").unwrap() <= cell(k).get("iter_time_s").unwrap(),
+                    "{fabric}: no solo policy may beat the portfolio"
+                );
+            }
+        }
+        let rows =
+            rows(&profile, &fabrics, &[None], &[SchedulerKind::Portfolio], false, 2).unwrap();
+        assert!(rows.iter().all(|r| r.portfolio_winner.is_some()));
+        assert!(rows
+            .iter()
+            .all(|r| r.lower_bound_s.unwrap() > 0.0 && r.gap_to_bound.unwrap() >= 0.0));
+        let table = render(&rows);
+        assert!(table.contains("portfolio→"), "{table}");
+        let report = report_to_json(&rows, &profile.framework, &profile.tag());
+        let text = report.to_string();
+        assert!(text.contains("\"portfolio_winner\":\""), "{text}");
+        assert!(text.contains("\"lower_bound_s\":"), "{text}");
+        let back = json::parse(&text).unwrap();
+        assert_eq!(validate_report(&back).unwrap(), rows.len());
+    }
+
     #[test]
     fn report_roundtrips_and_validator_rejects_tampering() {
         let cluster = crate::cluster::presets::k80_cluster();
@@ -1855,11 +2068,24 @@ mod tests {
         let back = json::parse(&text).unwrap();
         assert_eq!(validate_report(&back).unwrap(), rows.len());
         let check = |s: &str| validate_report(&json::parse(s).unwrap());
-        assert!(check(&text.replace("\"schema_version\":2", "\"schema_version\":3")).is_err());
+        assert!(check(&text.replace("\"schema_version\":3", "\"schema_version\":4")).is_err());
+        // v2 reports (no bound/portfolio columns) still validate.
+        assert!(check(&text.replace("\"schema_version\":3", "\"schema_version\":2")).is_ok());
         assert!(check(&text.replace("\"bench\":\"whatif\"", "\"bench\":\"other\"")).is_err());
         assert!(check(&text.replace("\"rows\":[", "\"cells\":[")).is_err());
         assert!(check(&text.replace("\"topology\":", "\"layout\":")).is_err());
-        assert!(check("{\"schema_version\":2,\"bench\":\"whatif\"}").is_err());
+        assert!(check("{\"schema_version\":3,\"bench\":\"whatif\"}").is_err());
+        // Bound and winner tampering is caught: negative gaps and
+        // unregistered winners must not validate.
+        assert!(check(&text.replace("\"gap_to_bound\":", "\"gap_to_bound\":-1,\"x\":")).is_err());
+        assert!(check(
+            &text.replace("\"portfolio_winner\":null", "\"portfolio_winner\":\"warp\"")
+        )
+        .is_err());
+        assert!(check(
+            &text.replace("\"portfolio_winner\":null", "\"portfolio_winner\":\"portfolio\"")
+        )
+        .is_err());
 
         // Fresh rows always carry the obs breakdown: the explain
         // section rides the report, renders, and tampering is caught.

@@ -22,6 +22,7 @@ use crate::dag::builder::{self, JobSpec};
 use crate::frameworks::strategy::{self, Strategy};
 use crate::models::zoo;
 use crate::sim::scheduler::SchedulerKind;
+use crate::sim::{executor, lower_bound};
 use crate::util::units::{gbit_s, us};
 use std::collections::BTreeMap;
 
@@ -207,8 +208,11 @@ impl CellResult {
 
 /// The standard cell measurement: simulate the job's steady-state
 /// iteration under `kind`'s scheduling policy and attach the analytic
-/// predictions (Eq. 5 iteration time, Eq. 6 speedup) plus the WFBP
-/// comm/compute-overlap breakdown.
+/// predictions (Eq. 5 iteration time, Eq. 6 speedup), the WFBP
+/// comm/compute-overlap breakdown, and the makespan lower bound +
+/// gap-to-bound columns. `SchedulerKind::Portfolio` races every
+/// concrete policy through this same function and keeps the fastest
+/// cell unchanged, adding `portfolio_winner_code`.
 ///
 /// Bit-compatibility contract (property-tested): `iter_time_s` and
 /// `samples_per_s` are exactly [`builder::iteration_time_with`] /
@@ -221,9 +225,44 @@ pub fn measure_cell(
     fw: &Strategy,
     kind: SchedulerKind,
 ) -> CellResult {
+    if kind.is_portfolio() {
+        let mut best: Option<(SchedulerKind, CellResult)> = None;
+        for k in SchedulerKind::all() {
+            let cell = measure_cell(cluster, job, fw, k);
+            let better = match &best {
+                None => true,
+                Some((_, b)) => {
+                    cell.get("iter_time_s").unwrap_or(f64::INFINITY)
+                        < b.get("iter_time_s").unwrap_or(f64::INFINITY)
+                }
+            };
+            if better {
+                best = Some((k, cell));
+            }
+        }
+        let (w, mut cell) = best.expect("the registry has at least one concrete policy");
+        cell.set("portfolio_winner_code", w.index() as f64);
+        return cell;
+    }
+    // Inlined [`builder::iteration_time_with`] — the same operations in
+    // the same order, so `iter_time_s` stays bit-identical to it — with
+    // the stamped DAG and timeline kept alive for the bound columns.
+    let mut sim_job = job.clone();
+    if sim_job.iterations < 6 {
+        sim_job.iterations = 6;
+    }
+    let res = cluster.build_resources(sim_job.nodes, sim_job.gpus_per_node);
+    let dur = builder::durations(cluster, &sim_job, fw);
+    let dag = builder::build_with_cached(&res, &sim_job, fw, &dur);
     let mut sched = kind.build(&job.net);
-    let iter = builder::iteration_time_with(cluster, job, fw, sched.as_mut());
-    cell_from_iter(cluster, job, fw, iter)
+    let sim = executor::simulate_with(&dag, &res.pool, sched.as_mut());
+    let iter = executor::steady_state_from(&sim, &dag, sim_job.iterations, 2);
+    let mut r = cell_from_iter(cluster, job, fw, iter);
+    let bound = lower_bound::makespan_lower_bound(&dag, &res.pool);
+    r.set("makespan_s", sim.makespan)
+        .set("lower_bound_s", bound)
+        .set("gap_to_bound", lower_bound::gap_to_bound(sim.makespan, bound));
+    r
 }
 
 /// Assemble the standard cell metrics from an already-simulated
@@ -386,7 +425,8 @@ pub fn by_name(name: &str, seed: u64) -> Option<Grid> {
             iterations: 8,
             seed,
         }),
-        // Scheduler-policy comparison on the comm-bound headline job.
+        // Scheduler-policy comparison on the comm-bound headline job:
+        // the whole registered zoo, straight from the registry.
         "sched" => Some(Grid {
             name: "sched".into(),
             clusters: s(&["k80"]),
@@ -394,12 +434,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Grid> {
             nets: s(&["resnet50"]),
             frameworks: s(&["caffe-mpi"]),
             topologies: vec![(4, 4)],
-            schedulers: vec![
-                SchedulerKind::Fifo,
-                SchedulerKind::Priority,
-                SchedulerKind::CriticalPath,
-                SchedulerKind::Fusion,
-            ],
+            schedulers: SchedulerKind::all().to_vec(),
             layerwise: vec![true],
             profiles: vec![None],
             iterations: 8,
@@ -568,6 +603,70 @@ mod tests {
         let mut other = s.clone();
         other.topology = Some("4x4".into());
         assert_ne!(s.key(), other.key(), "distinct scales, distinct keys");
+    }
+
+    /// Every registered policy — portfolio included — gets its own cache
+    /// cell: the scheduler renders into the canonical key, so two
+    /// policies can never alias one cached result.
+    #[test]
+    fn every_policy_is_a_distinct_cache_cell() {
+        let mut g = tiny();
+        g.nets = vec!["resnet50".into()];
+        g.frameworks = vec!["caffe-mpi".into()];
+        g.schedulers = SchedulerKind::all().to_vec();
+        g.schedulers.push(SchedulerKind::Portfolio);
+        let cells = g.expand();
+        assert_eq!(cells.len(), SchedulerKind::all().len() + 1);
+        let mut keys: Vec<String> = cells.iter().map(|s| s.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len(), "scheduler must be part of the key");
+        for s in &cells {
+            assert!(
+                s.key().contains(&format!("scheduler={} ", s.scheduler.name())),
+                "{}",
+                s.key()
+            );
+        }
+    }
+
+    /// The standard cell carries the bound columns, `iter_time_s` stays
+    /// bit-identical to `builder::iteration_time_with` (the Fig. 2/3
+    /// contract), and a portfolio cell is the best solo cell's metrics
+    /// plus the winner code.
+    #[test]
+    fn measure_cell_bounds_and_portfolio() {
+        let s = tiny().expand().remove(0);
+        let (cluster, job, fw) = s.resolve().unwrap();
+        let solo: Vec<(SchedulerKind, CellResult)> = SchedulerKind::all()
+            .into_iter()
+            .map(|k| (k, measure_cell(&cluster, &job, &fw, k)))
+            .collect();
+        for (k, r) in &solo {
+            let mut sched = k.build(&job.net);
+            let reference = builder::iteration_time_with(&cluster, &job, &fw, sched.as_mut());
+            assert_eq!(
+                r.get("iter_time_s").unwrap().to_bits(),
+                reference.to_bits(),
+                "{}: iter_time_s must stay bit-identical to the builder path",
+                k.name()
+            );
+            let bound = r.get("lower_bound_s").unwrap();
+            assert!(bound > 0.0, "{}", k.name());
+            assert!(r.get("gap_to_bound").unwrap() >= 0.0, "{}", k.name());
+            assert!(r.get("makespan_s").unwrap() >= bound - 1e-12, "{}", k.name());
+        }
+        let portfolio = measure_cell(&cluster, &job, &fw, SchedulerKind::Portfolio);
+        let code = portfolio.get("portfolio_winner_code").expect("winner reported");
+        let winner = SchedulerKind::from_index(code as usize).expect("registered winner");
+        let (_, best) = solo.iter().find(|(k, _)| *k == winner).unwrap();
+        for key in ["iter_time_s", "makespan_s", "lower_bound_s", "gap_to_bound"] {
+            assert_eq!(
+                portfolio.get(key).unwrap().to_bits(),
+                best.get(key).unwrap().to_bits(),
+                "portfolio '{key}' is the winner's bits"
+            );
+        }
     }
 
     #[test]

@@ -3,11 +3,15 @@
 //! the canonical deterministic form (`campaign --canon`, diffed by CI's
 //! replay job) and the human table.
 //!
-//! Schema v1 (top-level object):
+//! Schema v2 (top-level object; v2 added the `makespan_s`,
+//! `lower_bound_s` and `gap_to_bound` metrics to every simulated cell
+//! and the `portfolio_winner_code` metric to portfolio cells — the
+//! version rides the cache-key preimage, so pre-bound cache entries
+//! degrade to misses instead of serving rows without the new columns):
 //!
 //! ```json
 //! {
-//!   "schema_version": 1,
+//!   "schema_version": 2,
 //!   "bench": "campaign",
 //!   "grid": "paper",
 //!   "cells": [
@@ -38,7 +42,9 @@ use crate::util::units::fmt_dur;
 
 /// Version of both the report schema and the cache-entry schema; bump
 /// on any change to cell layout, metric semantics or key canonical form.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: simulated cells carry `makespan_s`/`lower_bound_s`/`gap_to_bound`
+/// (and portfolio cells `portfolio_winner_code`).
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Metrics every campaign cell must carry (the standard cell writes
 /// more; bespoke cells at least these).
@@ -72,7 +78,7 @@ pub fn metrics_from_json(j: &Json) -> Result<CellResult, String> {
     Ok(r)
 }
 
-/// One sweep cell as its schema-v1 report object — shared by the full
+/// One sweep cell as its schema-v2 report object — shared by the full
 /// campaign report and the `serve` daemon's per-query responses, so a
 /// daemon answer and a `BENCH_campaign.json` cell are the same shape.
 pub fn cell_to_json(s: &crate::campaign::grid::Scenario, r: &CellResult) -> Json {
@@ -154,7 +160,7 @@ fn require_num(cell: &Json, field: &str, at: &str) -> Result<f64, String> {
     Ok(v)
 }
 
-/// Validate a report against schema v1. Returns the number of cells.
+/// Validate a report against schema v2. Returns the number of cells.
 pub fn validate(report: &Json) -> Result<usize, String> {
     let version = report
         .get("schema_version")
@@ -424,7 +430,7 @@ mod tests {
         };
         reject(
             &|m| {
-                m.insert("schema_version".into(), Json::num(2.0));
+                m.insert("schema_version".into(), Json::num(3.0));
             },
             "future schema version",
         );

@@ -17,6 +17,7 @@ use crate::dag::builder::{self, JobSpec};
 use crate::frameworks::strategy::Strategy;
 use crate::obs::metrics as obs_metrics;
 use crate::sim::executor;
+use crate::sim::lower_bound;
 use crate::sim::scheduler::SchedulerKind;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -197,10 +198,19 @@ pub fn run_batched(scenarios: &[Scenario], cache: Option<&Cache>) -> Result<Outc
             })
             .collect();
         let sims = executor::simulate_replicas(tpl.dag(), &res.pool, &durs);
-        for (p, sim) in cells.iter().zip(&sims) {
+        for ((p, sim), dur) in cells.iter().zip(&sims).zip(&durs) {
             let iters = p.job.iterations.max(6);
             let iter = executor::steady_state_from(sim, tpl.dag(), iters, 2);
-            let fresh = grid::cell_from_iter(&p.cluster, &p.job, &p.fw, iter);
+            let mut fresh = grid::cell_from_iter(&p.cluster, &p.job, &p.fw, iter);
+            // The bound columns `grid::measure_cell` attaches, computed
+            // from the shared template + this variant's durations — same
+            // arithmetic as the stamped solo path, so batched cells stay
+            // bit-identical to it.
+            let bound = lower_bound::makespan_lower_bound_with(tpl.dag(), dur, &res.pool);
+            fresh
+                .set("makespan_s", sim.makespan)
+                .set("lower_bound_s", bound)
+                .set("gap_to_bound", lower_bound::gap_to_bound(sim.makespan, bound));
             simulated += 1;
             if let Some(c) = cache {
                 let _ = c.put(&scenarios[p.idx], &fresh);

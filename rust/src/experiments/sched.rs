@@ -23,6 +23,7 @@ use crate::cluster::topology::ClusterSpec;
 use crate::dag::builder::{build_ssgd_dag, JobSpec};
 use crate::frameworks::strategy::Strategy;
 use crate::sim::executor::{simulate_with, steady_state_from};
+use crate::sim::lower_bound;
 use crate::sim::scheduler::SchedulerKind;
 use crate::util::table::{f, Table};
 use crate::util::units::fmt_dur;
@@ -73,25 +74,51 @@ pub fn scenarios(
 }
 
 /// Per-policy cell: build the job's DAG, simulate it under `kind`, and
-/// report makespan, steady-state iteration time and engine events. The
-/// steady-state iteration doubles as the schema's required
+/// report makespan, steady-state iteration time, the makespan lower
+/// bound (`sim::lower_bound`) and engine events. The steady-state
+/// iteration doubles as the schema's required
 /// `iter_time_s`/`samples_per_s` pair so sched cells flow through the
-/// shared report/cache plumbing like every other campaign cell.
+/// shared report/cache plumbing like every other campaign cell. The
+/// `portfolio` pseudo-policy races every registered concrete policy and
+/// keeps the winner's cell untouched (strict min on steady iteration,
+/// registry order breaking ties), tagging it `portfolio_winner_code`.
 pub fn policy_cell(
     cluster: &ClusterSpec,
     job: &JobSpec,
     strategy: &Strategy,
     kind: SchedulerKind,
 ) -> CellResult {
+    if kind.is_portfolio() {
+        let mut best: Option<(SchedulerKind, CellResult)> = None;
+        for k in SchedulerKind::all() {
+            let cand = policy_cell(cluster, job, strategy, k);
+            let better = match &best {
+                None => true,
+                Some((_, b)) => {
+                    cand.get("iter_time_s").expect("sched cell metric")
+                        < b.get("iter_time_s").expect("sched cell metric")
+                }
+            };
+            if better {
+                best = Some((k, cand));
+            }
+        }
+        let (winner, mut r) = best.expect("the registry always has concrete policies");
+        r.set("portfolio_winner_code", winner.index() as f64);
+        return r;
+    }
     let (dag, res) = build_ssgd_dag(cluster, job, strategy);
     let mut sched = kind.build(&job.net);
     let sim = simulate_with(&dag, &res.pool, sched.as_mut());
     let steady = steady_state_from(&sim, &dag, job.iterations, WARMUP);
+    let bound = lower_bound::makespan_lower_bound(&dag, &res.pool);
     let mut r = CellResult::new();
     r.set("makespan_s", sim.makespan)
         .set("steady_iter_s", steady)
         .set("iter_time_s", steady)
         .set("samples_per_s", (job.ranks() * job.batch_per_gpu) as f64 / steady)
+        .set("lower_bound_s", bound)
+        .set("gap_to_bound", lower_bound::gap_to_bound(sim.makespan, bound))
         .set("events", sim.events as f64);
     r
 }
@@ -213,10 +240,40 @@ mod tests {
     fn render_lists_every_policy() {
         let (cluster, job, fw) = setup();
         let pts = run(&cluster, &job, &fw, &SchedulerKind::all());
-        assert_eq!(pts.len(), 4);
+        assert_eq!(pts.len(), SchedulerKind::all().len());
         let s = render(&job, &cluster, &fw, &pts);
         for kind in SchedulerKind::all() {
             assert!(s.contains(kind.name()), "missing {}", kind.name());
+        }
+    }
+
+    /// The portfolio cell keeps the winning solo cell's bits, names the
+    /// winner, and no policy's makespan beats the cell's lower bound.
+    #[test]
+    fn portfolio_cell_matches_best_policy_and_respects_bound() {
+        let (cluster, job, fw) = setup();
+        let pf = policy_cell(&cluster, &job, &fw, SchedulerKind::Portfolio);
+        let code = pf.get("portfolio_winner_code").expect("winner tag");
+        let winner = SchedulerKind::from_index(code as usize).expect("registered winner");
+        let solo = policy_cell(&cluster, &job, &fw, winner);
+        for k in ["iter_time_s", "makespan_s", "lower_bound_s", "gap_to_bound", "events"] {
+            assert_eq!(
+                pf.get(k).unwrap().to_bits(),
+                solo.get(k).unwrap().to_bits(),
+                "{k}: portfolio must keep the winner's bits"
+            );
+        }
+        for k in SchedulerKind::all() {
+            let cell = policy_cell(&cluster, &job, &fw, k);
+            let bound = cell.get("lower_bound_s").expect("every cell carries the bound");
+            assert!(bound > 0.0);
+            assert!(cell.get("makespan_s").unwrap() >= bound - 1e-9, "{}", k.name());
+            assert!(cell.get("gap_to_bound").unwrap() >= 0.0);
+            assert!(
+                pf.get("iter_time_s").unwrap() <= cell.get("iter_time_s").unwrap(),
+                "{}: no solo policy may beat the portfolio",
+                k.name()
+            );
         }
     }
 

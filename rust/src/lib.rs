@@ -59,6 +59,7 @@ pub mod sim {
     pub mod engine;
     pub mod executor;
     pub mod failures;
+    pub mod lower_bound;
     pub mod resources;
     pub mod scheduler;
     pub mod timeline;

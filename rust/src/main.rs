@@ -115,8 +115,8 @@ fn cmd_info() -> i32 {
     0
 }
 
-/// Parse `--scheduler fifo|priority|critical-path|fusion` (single
-/// value) via the shared query dialect.
+/// Parse a single `--scheduler` value via the shared query dialect
+/// (any name or alias the scheduler registry resolves).
 fn scheduler_arg(args: &Args) -> SchedulerKind {
     query::parse_scheduler(&args.str_or("scheduler", "fifo")).unwrap_or_else(|e| {
         eprintln!("{}", e.msg);
@@ -1017,6 +1017,20 @@ fn cmd_simulate(args: &Args) -> i32 {
         }
     }
     let kind = scheduler_arg(args);
+    // The portfolio autotuner is a race over complete cells, not a
+    // policy a single engine pass can instantiate; point at the
+    // surfaces that race it and at the concrete policies this command
+    // can run directly.
+    if kind.is_portfolio() {
+        let concrete: Vec<&str> = SchedulerKind::all().iter().map(|k| k.name()).collect();
+        eprintln!(
+            "simulate: --scheduler portfolio races every policy per calibrated cell \
+             (use whatif, campaign --profile, calibrate --replay, or serve); \
+             pick a concrete policy here (try {})",
+            concrete.join(", ")
+        );
+        return 2;
+    }
     let mut sched = kind.build(&job.net);
     let (mut dag, res) = builder::build_ssgd_dag(&cluster, &job, &fw);
     let faults = faults_arg(args);

@@ -157,6 +157,19 @@ pub fn link_verdict(links: &[LinkUse]) -> String {
         .unwrap_or_else(|| "-".into())
 }
 
+/// Human verdict for a cell's `gap_to_bound` metric: how far the
+/// simulated schedule sits above the clairvoyant makespan lower bound
+/// (`sim::lower_bound`). A tight gap means the hardware, not the
+/// policy, is the ceiling — swapping schedulers (or racing the
+/// portfolio) cannot win back more than the gap.
+pub fn schedule_verdict(gap_to_bound: f64) -> String {
+    if gap_to_bound <= 0.005 {
+        "at the bound (schedule is optimal here)".into()
+    } else {
+        format!("schedule-bound: {:.1}% above lower bound", 100.0 * gap_to_bound)
+    }
+}
+
 /// Per-resource occupancy: busy time, utilization, and the bubble
 /// (idle) time the resource spent waiting inside the makespan.
 #[derive(Clone, Debug)]
@@ -458,6 +471,13 @@ mod tests {
         dag.edge(agg2, upd);
         let sim = simulate(&dag, &pool);
         (dag, pool, sim)
+    }
+
+    #[test]
+    fn schedule_verdict_names_tight_and_loose_gaps() {
+        assert_eq!(schedule_verdict(0.0), "at the bound (schedule is optimal here)");
+        assert_eq!(schedule_verdict(0.004), "at the bound (schedule is optimal here)");
+        assert_eq!(schedule_verdict(0.12), "schedule-bound: 12.0% above lower bound");
     }
 
     #[test]

@@ -58,11 +58,14 @@ impl ArgError {
     }
 }
 
-/// Parse one scheduler name (the error string is pinned by test).
+/// Parse one scheduler name (the error string is pinned by test; the
+/// hint comes from the scheduler registry, so new policies appear in it
+/// without touching this module).
 pub fn parse_scheduler(name: &str) -> Result<SchedulerKind, ArgError> {
     SchedulerKind::by_name(name).ok_or_else(|| {
         ArgError::bare(format!(
-            "unknown scheduler '{name}' (try fifo, priority, critical-path, fusion)"
+            "unknown scheduler '{name}' (try {})",
+            SchedulerKind::name_list()
         ))
     })
 }
@@ -474,7 +477,26 @@ mod tests {
         let e = Request::from_args(&args(&["--scheduler", "bogus"]), &[SchedulerKind::Fifo])
             .unwrap_err();
         assert!(e.bare);
-        assert_eq!(e.render("whatif"), "unknown scheduler 'bogus' (try fifo, priority, critical-path, fusion)");
+        assert_eq!(
+            e.render("whatif"),
+            "unknown scheduler 'bogus' (try fifo, priority, critical-path, fusion, \
+             cp-lookahead, dls, peft, portfolio)"
+        );
+    }
+
+    /// Registry aliases resolve through the query surface, and the
+    /// portfolio autotuner parses like any other policy.
+    #[test]
+    fn scheduler_lists_resolve_registry_aliases() {
+        let req = Request::from_args(
+            &args(&["--scheduler", "heft,auto, dynamic-level"]),
+            &[SchedulerKind::Fifo],
+        )
+        .unwrap();
+        assert_eq!(
+            req.schedulers,
+            vec![SchedulerKind::CriticalPath, SchedulerKind::Portfolio, SchedulerKind::Dls]
+        );
     }
 
     #[test]

@@ -480,6 +480,44 @@ mod tests {
         assert!(qs.iter().all(|q| q.get("breakdown").is_none()), "{plain}");
     }
 
+    /// A served portfolio query carries the makespan lower bound and
+    /// names the winning policy, and never loses to a solo policy in
+    /// the same batch.
+    #[test]
+    fn portfolio_queries_carry_bound_and_winner() {
+        use crate::sim::scheduler::SchedulerKind;
+        let e = engine();
+        let line =
+            "{\"entry\": \"alexnet\", \"fabric\": \"10gbe\", \"scheduler\": \"portfolio,fifo\"}";
+        let resp = e.answer_line(line);
+        let j = json::parse(&resp).unwrap();
+        assert!(j.get("error").is_none(), "{resp}");
+        let qs = j.get("queries").unwrap().as_arr().unwrap();
+        let mut portfolio_iter = None;
+        let mut fifo_iter = None;
+        for q in qs {
+            let m = q.get("metrics").unwrap();
+            let bound = m.get("lower_bound_s").unwrap().as_f64().unwrap();
+            let gap = m.get("gap_to_bound").unwrap().as_f64().unwrap();
+            assert!(bound > 0.0, "{resp}");
+            assert!(gap >= 0.0, "{resp}");
+            let iter_s = m.get("iter_time_s").unwrap().as_f64().unwrap();
+            match q.get("scheduler").unwrap().as_str().unwrap() {
+                "portfolio" => {
+                    let code = m.get("portfolio_winner_code").unwrap().as_f64().unwrap();
+                    assert!(SchedulerKind::from_index(code as usize).is_some(), "{resp}");
+                    portfolio_iter = Some(iter_s);
+                }
+                _ => {
+                    assert!(m.get("portfolio_winner_code").is_none(), "{resp}");
+                    fifo_iter = Some(iter_s);
+                }
+            }
+        }
+        let (pf, fifo) = (portfolio_iter.expect("portfolio row"), fifo_iter.expect("fifo row"));
+        assert!(pf <= fifo, "portfolio {pf} lost to fifo {fifo}");
+    }
+
     #[test]
     fn stats_verb_returns_live_counters_without_counting_itself() {
         let e = engine();

@@ -1,0 +1,152 @@
+//! Per-job makespan lower bound.
+//!
+//! No schedule — not even a clairvoyant one — can finish a weighted DAG
+//! faster than either of two classic bounds (cf. dslab-dag's
+//! `lower_bound.rs` and Graham's list-scheduling analysis):
+//!
+//! * **Critical path**: the longest duration-weighted dependency chain
+//!   must execute sequentially regardless of resource capacity.
+//! * **Resource saturation**: each resource must serve its total
+//!   assigned work through at most `capacity` concurrent slots, so it
+//!   is busy for at least `total_work / capacity`.
+//!
+//! The bound is the max of the two, computed from the same stamped task
+//! durations the simulator runs — so `simulated makespan ≥ bound` is an
+//! invariant (property-tested in `tests/property.rs`), and
+//! `gap_to_bound` quantifies how much of the remaining iteration time is
+//! the *schedule's* fault rather than the hardware's. Every campaign,
+//! what-if, replay and serve row carries both columns; the `portfolio`
+//! scheduler reports its winner's gap so "when to stop adding policies"
+//! becomes a measured question.
+
+use crate::dag::graph::Dag;
+use crate::sim::resources::ResourcePool;
+
+/// Makespan lower bound for `dag` on `pool`:
+/// `max(critical_path, max_r total_work(r) / capacity(r))`.
+///
+/// Panics on cyclic DAGs (the simulator rejects them anyway).
+pub fn makespan_lower_bound(dag: &Dag, pool: &ResourcePool) -> f64 {
+    let durs: Vec<f64> = (0..dag.len()).map(|t| dag.tasks[t].duration).collect();
+    makespan_lower_bound_with(dag, &durs, pool)
+}
+
+/// [`makespan_lower_bound`] over an explicit duration vector (indexed by
+/// task id) instead of the DAG's stamped durations. The batched campaign
+/// runner advances K duration variants of one template DAG through a
+/// single engine pass without restamping; this entry point lets it bound
+/// each variant from the shared structure — same arithmetic in the same
+/// order as the stamped path, so solo and batched cells agree bit for
+/// bit.
+pub fn makespan_lower_bound_with(dag: &Dag, durs: &[f64], pool: &ResourcePool) -> f64 {
+    assert_eq!(durs.len(), dag.len(), "one duration per task");
+    let order = dag
+        .topo_order()
+        .expect("makespan_lower_bound requires an acyclic DAG");
+    // Longest duration-weighted chain (earliest finish with infinite
+    // resources), over the supplied durations.
+    let mut finish = vec![0.0f64; dag.len()];
+    let mut bound = 0.0f64;
+    for &t in &order {
+        let start = dag.preds_of(t).iter().map(|&p| finish[p]).fold(0.0f64, f64::max);
+        finish[t] = start + durs[t];
+        bound = bound.max(finish[t]);
+    }
+    // Per-resource saturation: total assigned work through `capacity`
+    // concurrent slots.
+    let mut work = vec![0.0f64; pool.len()];
+    for t in 0..dag.len() {
+        work[dag.tasks[t].resource] += durs[t];
+    }
+    for (r, w) in work.iter().enumerate() {
+        let cap = pool.specs[r].capacity;
+        if cap > 0 {
+            bound = bound.max(w / cap as f64);
+        }
+    }
+    bound
+}
+
+/// Relative gap of a simulated `makespan` above `bound`:
+/// `(makespan − bound) / bound`, clamped at 0 (a schedule can tie the
+/// bound; floating-point noise must not report a negative gap). Zero
+/// when the bound itself is zero (empty DAG).
+pub fn gap_to_bound(makespan: f64, bound: f64) -> f64 {
+    if bound <= 0.0 {
+        return 0.0;
+    }
+    ((makespan - bound) / bound).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::node::{Phase, Task};
+    use crate::sim::executor::simulate;
+    use crate::sim::resources::{ResourceClass, ResourcePool};
+
+    fn task(name: &str, res: usize, dur: f64) -> Task {
+        Task {
+            name: name.into(),
+            phase: Phase::Forward,
+            resource: res,
+            duration: dur,
+            iter: 0,
+            gpu: Some(0),
+            layer: None,
+        }
+    }
+
+    #[test]
+    fn chain_is_critical_path_bound() {
+        // a(5) → b(3) on a capacity-2 resource: work bound is 4, the
+        // chain bound 8 dominates, and FIFO attains it exactly.
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 2);
+        let mut dag = Dag::new();
+        let a = dag.add(task("a", r, 5.0));
+        let b = dag.add(task("b", r, 3.0));
+        dag.edge(a, b);
+        let bound = makespan_lower_bound(&dag, &pool);
+        assert!((bound - 8.0).abs() < 1e-12, "bound {bound}");
+        let sim = simulate(&dag, &pool);
+        assert!((sim.makespan - bound).abs() < 1e-12);
+        assert_eq!(gap_to_bound(sim.makespan, bound), 0.0);
+    }
+
+    #[test]
+    fn saturated_resource_dominates_critical_path() {
+        // Four independent 3s tasks on one capacity-1 resource: the
+        // critical path is 3 but the resource must serve 12s of work.
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        for i in 0..4 {
+            dag.add(task(&format!("t{i}"), r, 3.0));
+        }
+        let bound = makespan_lower_bound(&dag, &pool);
+        assert!((bound - 12.0).abs() < 1e-12, "bound {bound}");
+        assert!(simulate(&dag, &pool).makespan >= bound - 1e-12);
+    }
+
+    #[test]
+    fn capacity_divides_the_work_bound() {
+        // Same four tasks on capacity 2: work bound 6 still beats the
+        // 3s critical path.
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 2);
+        let mut dag = Dag::new();
+        for i in 0..4 {
+            dag.add(task(&format!("t{i}"), r, 3.0));
+        }
+        let bound = makespan_lower_bound(&dag, &pool);
+        assert!((bound - 6.0).abs() < 1e-12, "bound {bound}");
+    }
+
+    #[test]
+    fn gap_is_clamped_and_relative() {
+        assert!((gap_to_bound(12.0, 10.0) - 0.2).abs() < 1e-12);
+        assert_eq!(gap_to_bound(10.0 - 1e-14, 10.0), 0.0, "fp noise clamps to 0");
+        assert_eq!(gap_to_bound(5.0, 0.0), 0.0, "empty DAG");
+    }
+}

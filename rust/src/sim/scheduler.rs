@@ -23,10 +23,21 @@
 //! * [`FusionAwareScheduler`] — consults the gradient-fusion bucketing
 //!   ([`crate::analytic::fusion`]) and launches each bucket's collectives
 //!   as one consecutive burst, modeling fused launch semantics.
+//! * [`CpLookaheadScheduler`] — critical path with one-step lookahead:
+//!   a ready task is ranked by its own upward rank *plus* the heaviest
+//!   chain hanging off any successor.
+//! * [`DlsScheduler`] — dynamic-level scheduling (Sih & Lee): static
+//!   level minus ready time, so later-arriving work must carry a longer
+//!   remaining path to preempt earlier arrivals.
+//! * [`PeftScheduler`] — PEFT-style optimistic cost table: rank by the
+//!   best-case cost remaining *after* the task finishes, so a cheap task
+//!   unblocking an expensive tail beats an expensive dead-end.
 //!
-//! To add a policy: implement [`Scheduler`], register a name in
-//! [`SchedulerKind`], and it is reachable from the CLI (`--scheduler`),
-//! the `sched` experiment, and the scheduler-sweep bench. See DESIGN.md.
+//! To add a policy: implement [`Scheduler`] and append a
+//! [`SchedulerDescriptor`] to the registry below — name resolution
+//! (`--scheduler`), scenario keys, the `sched` experiment, the
+//! scheduler-sweep bench and the `portfolio` race all read the registry;
+//! nothing else in the crate hard-codes policy names. See DESIGN.md.
 
 use super::context::SimContext;
 use crate::comm::schedule;
@@ -243,6 +254,158 @@ impl Scheduler for CriticalPathScheduler {
 }
 
 // ---------------------------------------------------------------------------
+// Critical path with one-step lookahead
+// ---------------------------------------------------------------------------
+
+/// Lookahead variant of [`CriticalPathScheduler`]: a ready task is ranked
+/// by its own upward rank **plus** the largest upward rank among its
+/// direct successors (HEFT-with-lookahead). Between two tasks with equal
+/// remaining paths, the one whose child heads the heavier chain starts
+/// first — it is the one whose delay propagates furthest.
+#[derive(Default)]
+pub struct CpLookaheadScheduler {
+    ready: ReadySet,
+    /// Negated lookahead rank per task (we minimize).
+    neg_rank: Vec<f64>,
+}
+
+impl CpLookaheadScheduler {
+    pub fn new() -> CpLookaheadScheduler {
+        CpLookaheadScheduler::default()
+    }
+}
+
+impl Scheduler for CpLookaheadScheduler {
+    fn name(&self) -> &'static str {
+        "cp-lookahead"
+    }
+
+    fn on_start(&mut self, ctx: &SimContext) {
+        self.ready.reset(ctx.pool.len());
+        let ranks = ctx
+            .dag
+            .upward_ranks()
+            .expect("CpLookaheadScheduler requires an acyclic DAG");
+        self.neg_rank = (0..ctx.dag.len())
+            .map(|t| {
+                let ahead =
+                    ctx.dag.succs_of(t).iter().map(|&s| ranks[s]).fold(0.0f64, f64::max);
+                -(ranks[t] + ahead)
+            })
+            .collect();
+    }
+
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext) {
+        self.ready.push(ctx.dag.tasks[task].resource, task);
+    }
+
+    fn pick_next(&mut self, resource: ResourceId, _ctx: &SimContext) -> Option<TaskId> {
+        let neg_rank = &self.neg_rank;
+        self.ready.take_min(resource, |t| neg_rank[t])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic-level scheduling
+// ---------------------------------------------------------------------------
+
+/// Dynamic-level scheduling (Sih & Lee): the *dynamic level* of a ready
+/// task is its static level (upward rank) minus the time it became
+/// ready. Maximizing it means a task that arrives late must carry a
+/// longer remaining path to overtake work that has been waiting — a
+/// time-aware refinement of plain critical-path ranking.
+#[derive(Default)]
+pub struct DlsScheduler {
+    ready: ReadySet,
+    /// Static level (upward rank) per task.
+    static_level: Vec<f64>,
+    /// `ready_at − static_level` per task (we minimize), stamped when the
+    /// task becomes ready.
+    key: Vec<f64>,
+}
+
+impl DlsScheduler {
+    pub fn new() -> DlsScheduler {
+        DlsScheduler::default()
+    }
+}
+
+impl Scheduler for DlsScheduler {
+    fn name(&self) -> &'static str {
+        "dls"
+    }
+
+    fn on_start(&mut self, ctx: &SimContext) {
+        self.ready.reset(ctx.pool.len());
+        self.static_level = ctx
+            .dag
+            .upward_ranks()
+            .expect("DlsScheduler requires an acyclic DAG");
+        self.key = vec![0.0; ctx.dag.len()];
+    }
+
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext) {
+        self.key[task] = ctx.now - self.static_level[task];
+        self.ready.push(ctx.dag.tasks[task].resource, task);
+    }
+
+    fn pick_next(&mut self, resource: ResourceId, _ctx: &SimContext) -> Option<TaskId> {
+        let key = &self.key;
+        self.ready.take_min(resource, |t| key[t])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PEFT (optimistic cost table)
+// ---------------------------------------------------------------------------
+
+/// PEFT-style optimistic cost table: a ready task is ranked by the
+/// best-case cost remaining **after** it finishes — on this crate's
+/// single-speed-per-resource model the optimistic cost table collapses to
+/// `OCT(t) = upward_rank(t) − duration(t)`, the heaviest chain hanging
+/// off `t`'s successors. Unlike critical-path rank this ignores the
+/// task's own service time: a cheap task unblocking an expensive tail
+/// outranks an expensive dead-end of equal total path.
+#[derive(Default)]
+pub struct PeftScheduler {
+    ready: ReadySet,
+    /// Negated OCT per task (we minimize).
+    neg_oct: Vec<f64>,
+}
+
+impl PeftScheduler {
+    pub fn new() -> PeftScheduler {
+        PeftScheduler::default()
+    }
+}
+
+impl Scheduler for PeftScheduler {
+    fn name(&self) -> &'static str {
+        "peft"
+    }
+
+    fn on_start(&mut self, ctx: &SimContext) {
+        self.ready.reset(ctx.pool.len());
+        let ranks = ctx
+            .dag
+            .upward_ranks()
+            .expect("PeftScheduler requires an acyclic DAG");
+        self.neg_oct = (0..ctx.dag.len())
+            .map(|t| ctx.dag.tasks[t].duration - ranks[t])
+            .collect();
+    }
+
+    fn on_task_ready(&mut self, task: TaskId, ctx: &SimContext) {
+        self.ready.push(ctx.dag.tasks[task].resource, task);
+    }
+
+    fn pick_next(&mut self, resource: ResourceId, _ctx: &SimContext) -> Option<TaskId> {
+        let neg_oct = &self.neg_oct;
+        self.ready.take_min(resource, |t| neg_oct[t])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fusion-aware gang launch
 // ---------------------------------------------------------------------------
 
@@ -370,47 +533,164 @@ impl Scheduler for FusionAwareScheduler {
 /// (25 MiB, the bucket size modern DDP implementations converged on).
 pub const DEFAULT_FUSION_CAP_BYTES: f64 = 25.0 * 1024.0 * 1024.0;
 
-/// Named scheduler policies, addressable from the CLI, the framework
-/// strategies, experiments and benches.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SchedulerKind {
-    Fifo,
-    Priority,
-    CriticalPath,
-    Fusion,
+/// One registered scheduling policy: canonical name, accepted CLI
+/// aliases, and a constructor. `build` receives the job's network (the
+/// fusion policy needs its gradient sizes) and an optional fusion-bucket
+/// cap override; policies that need neither ignore both.
+pub struct SchedulerDescriptor {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub build: fn(&NetSpec, Option<f64>) -> Box<dyn Scheduler>,
 }
 
+fn build_fifo(_net: &NetSpec, _cap: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(FifoScheduler::new())
+}
+
+fn build_priority(_net: &NetSpec, _cap: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(PriorityScheduler::new())
+}
+
+fn build_critical_path(_net: &NetSpec, _cap: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(CriticalPathScheduler::new())
+}
+
+fn build_fusion(net: &NetSpec, cap: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(FusionAwareScheduler::for_net(net, cap.unwrap_or(DEFAULT_FUSION_CAP_BYTES)))
+}
+
+fn build_cp_lookahead(_net: &NetSpec, _cap: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(CpLookaheadScheduler::new())
+}
+
+fn build_dls(_net: &NetSpec, _cap: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(DlsScheduler::new())
+}
+
+fn build_peft(_net: &NetSpec, _cap: Option<f64>) -> Box<dyn Scheduler> {
+    Box::new(PeftScheduler::new())
+}
+
+fn build_portfolio(_net: &NetSpec, _cap: Option<f64>) -> Box<dyn Scheduler> {
+    panic!(
+        "`portfolio` is not a concrete policy: race every kind in \
+         `SchedulerKind::all()` through the cell and keep the winner"
+    )
+}
+
+/// The scheduler registry — every policy this crate ships, in display
+/// order. Constraints: `fifo` stays first (experiments and campaign
+/// defaults pin it as the baseline) and the first four entries keep their
+/// seed-era names, which scenario cache keys and pinned CLI error strings
+/// render from. `portfolio` is last and *virtual*: it races every
+/// concrete policy and keeps the winner, so its `build` panics — cell
+/// code must check [`SchedulerKind::is_portfolio`] before building.
+const REGISTRY: &[SchedulerDescriptor] = &[
+    SchedulerDescriptor { name: "fifo", aliases: &[], build: build_fifo },
+    SchedulerDescriptor { name: "priority", aliases: &["prio"], build: build_priority },
+    SchedulerDescriptor {
+        name: "critical-path",
+        aliases: &["cp", "heft"],
+        build: build_critical_path,
+    },
+    SchedulerDescriptor { name: "fusion", aliases: &[], build: build_fusion },
+    SchedulerDescriptor {
+        name: "cp-lookahead",
+        aliases: &["lookahead"],
+        build: build_cp_lookahead,
+    },
+    SchedulerDescriptor { name: "dls", aliases: &["dynamic-level"], build: build_dls },
+    SchedulerDescriptor { name: "peft", aliases: &["oct"], build: build_peft },
+    SchedulerDescriptor { name: "portfolio", aliases: &["auto"], build: build_portfolio },
+];
+
+/// Named scheduler policies, addressable from the CLI, the framework
+/// strategies, experiments and benches. An index into the registry; the
+/// associated constants keep enum-style call sites
+/// (`SchedulerKind::Fifo`) and `match` patterns working unchanged.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SchedulerKind(u8);
+
+#[allow(non_upper_case_globals)]
 impl SchedulerKind {
+    pub const Fifo: SchedulerKind = SchedulerKind(0);
+    pub const Priority: SchedulerKind = SchedulerKind(1);
+    pub const CriticalPath: SchedulerKind = SchedulerKind(2);
+    pub const Fusion: SchedulerKind = SchedulerKind(3);
+    pub const CpLookahead: SchedulerKind = SchedulerKind(4);
+    pub const Dls: SchedulerKind = SchedulerKind(5);
+    pub const Peft: SchedulerKind = SchedulerKind(6);
+    /// Virtual race-them-all mode: not buildable, resolved by cell code.
+    pub const Portfolio: SchedulerKind = SchedulerKind(7);
+
+    /// Every registered descriptor, in display order (includes the
+    /// virtual `portfolio` entry).
+    pub fn registry() -> &'static [SchedulerDescriptor] {
+        REGISTRY
+    }
+
+    fn descriptor(self) -> &'static SchedulerDescriptor {
+        &REGISTRY[self.0 as usize]
+    }
+
     pub fn name(self) -> &'static str {
-        match self {
-            SchedulerKind::Fifo => "fifo",
-            SchedulerKind::Priority => "priority",
-            SchedulerKind::CriticalPath => "critical-path",
-            SchedulerKind::Fusion => "fusion",
-        }
+        self.descriptor().name
     }
 
+    /// Resolve a canonical name or registered alias (`prio`, `cp`,
+    /// `heft`, `lookahead`, `dynamic-level`, `oct`, `auto`).
     pub fn by_name(name: &str) -> Option<SchedulerKind> {
-        match name {
-            "fifo" => Some(SchedulerKind::Fifo),
-            "priority" | "prio" => Some(SchedulerKind::Priority),
-            "critical-path" | "cp" | "heft" => Some(SchedulerKind::CriticalPath),
-            "fusion" => Some(SchedulerKind::Fusion),
-            _ => None,
-        }
+        REGISTRY
+            .iter()
+            .position(|d| d.name == name || d.aliases.contains(&name))
+            .map(|i| SchedulerKind(i as u8))
     }
 
-    pub fn all() -> [SchedulerKind; 4] {
+    /// Every **concrete** policy, fifo first. Excludes `portfolio`, which
+    /// is defined as the argmin over exactly this list.
+    pub fn all() -> [SchedulerKind; 7] {
         [
             SchedulerKind::Fifo,
             SchedulerKind::Priority,
             SchedulerKind::CriticalPath,
             SchedulerKind::Fusion,
+            SchedulerKind::CpLookahead,
+            SchedulerKind::Dls,
+            SchedulerKind::Peft,
         ]
+    }
+
+    /// Stable registry index (drives the `portfolio_winner_code` metric).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Inverse of [`SchedulerKind::index`].
+    pub fn from_index(i: usize) -> Option<SchedulerKind> {
+        if i < REGISTRY.len() {
+            Some(SchedulerKind(i as u8))
+        } else {
+            None
+        }
+    }
+
+    /// Is this the virtual race-them-all mode? Cell code resolves it to
+    /// the best concrete policy instead of calling `build`.
+    pub fn is_portfolio(self) -> bool {
+        self == SchedulerKind::Portfolio
+    }
+
+    /// Comma-separated canonical names, for CLI hints and error strings.
+    pub fn name_list() -> String {
+        let names: Vec<&str> = REGISTRY.iter().map(|d| d.name).collect();
+        names.join(", ")
     }
 
     /// Instantiate the policy for a job on `net` (the fusion policy needs
     /// the network's gradient sizes; the rest ignore it).
+    ///
+    /// Panics for [`SchedulerKind::Portfolio`], which has no single
+    /// concrete instantiation.
     pub fn build(self, net: &NetSpec) -> Box<dyn Scheduler> {
         self.build_with_fusion_cap(net, None)
     }
@@ -425,15 +705,13 @@ impl SchedulerKind {
         net: &NetSpec,
         cap_bytes: Option<f64>,
     ) -> Box<dyn Scheduler> {
-        match self {
-            SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
-            SchedulerKind::Priority => Box::new(PriorityScheduler::new()),
-            SchedulerKind::CriticalPath => Box::new(CriticalPathScheduler::new()),
-            SchedulerKind::Fusion => Box::new(FusionAwareScheduler::for_net(
-                net,
-                cap_bytes.unwrap_or(DEFAULT_FUSION_CAP_BYTES),
-            )),
-        }
+        (self.descriptor().build)(net, cap_bytes)
+    }
+}
+
+impl std::fmt::Debug for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.descriptor().name)
     }
 }
 
@@ -461,8 +739,43 @@ mod tests {
     fn registry_roundtrip() {
         for kind in SchedulerKind::all() {
             assert_eq!(SchedulerKind::by_name(kind.name()), Some(kind));
+            assert!(!kind.is_portfolio());
+            assert_eq!(SchedulerKind::from_index(kind.index()), Some(kind));
         }
         assert!(SchedulerKind::by_name("random").is_none());
+        assert!(SchedulerKind::from_index(SchedulerKind::registry().len()).is_none());
+    }
+
+    #[test]
+    fn registry_resolves_aliases_and_portfolio() {
+        assert_eq!(SchedulerKind::by_name("prio"), Some(SchedulerKind::Priority));
+        assert_eq!(SchedulerKind::by_name("cp"), Some(SchedulerKind::CriticalPath));
+        assert_eq!(SchedulerKind::by_name("heft"), Some(SchedulerKind::CriticalPath));
+        assert_eq!(SchedulerKind::by_name("lookahead"), Some(SchedulerKind::CpLookahead));
+        assert_eq!(SchedulerKind::by_name("dynamic-level"), Some(SchedulerKind::Dls));
+        assert_eq!(SchedulerKind::by_name("oct"), Some(SchedulerKind::Peft));
+        let portfolio = SchedulerKind::by_name("portfolio").expect("portfolio registered");
+        assert_eq!(SchedulerKind::by_name("auto"), Some(portfolio));
+        assert!(portfolio.is_portfolio());
+        // The virtual mode never appears in the concrete list, and fifo
+        // stays first (experiments pin it as the baseline).
+        assert!(SchedulerKind::all().iter().all(|k| *k != portfolio));
+        assert_eq!(SchedulerKind::all()[0], SchedulerKind::Fifo);
+        // The hint string keeps the seed-era four as its prefix.
+        assert!(SchedulerKind::name_list()
+            .starts_with("fifo, priority, critical-path, fusion"));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a concrete policy")]
+    fn portfolio_is_not_buildable() {
+        let net = NetSpec {
+            name: "empty".into(),
+            layers: Vec::new(),
+            input_bytes: 0,
+            default_batch: 1,
+        };
+        let _ = SchedulerKind::Portfolio.build(&net);
     }
 
     #[test]
@@ -497,6 +810,78 @@ mod tests {
         let cp = simulate_with(&dag, &pool, &mut CriticalPathScheduler::new());
         assert!((fifo.makespan - 12.0).abs() < 1e-12, "fifo {}", fifo.makespan);
         assert!((cp.makespan - 11.0).abs() < 1e-12, "cp {}", cp.makespan);
+    }
+
+    #[test]
+    fn lookahead_breaks_cp_ties_by_successor_weight() {
+        // Two ready tasks on r with EQUAL upward ranks (6.0): `a` is
+        // expensive with a light child, `b` is cheap with a heavy child.
+        // Plain critical-path falls back to the id tie-break (a first);
+        // lookahead adds max successor rank (a: 6+4, b: 6+5) → b first.
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 1);
+        let x = pool.add("x", ResourceClass::Gpu, 1);
+        let y = pool.add("y", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        let a = dag.add(task("a", Phase::Forward, r, 2.0, None));
+        let b = dag.add(task("b", Phase::Forward, r, 1.0, None));
+        let c = dag.add(task("c", Phase::Forward, x, 4.0, None));
+        let d = dag.add(task("d", Phase::Forward, y, 5.0, None));
+        dag.edge(a, c);
+        dag.edge(b, d);
+
+        let cp = simulate_with(&dag, &pool, &mut CriticalPathScheduler::new());
+        assert!(cp.start[a] < cp.start[b], "cp tie-break is id order");
+        let la = simulate_with(&dag, &pool, &mut CpLookaheadScheduler::new());
+        assert!(la.start[b] < la.start[a], "lookahead prefers heavy child");
+    }
+
+    #[test]
+    fn dls_lets_late_long_path_work_preempt_queued_short_work() {
+        // At t=0, resource r holds `w` (heads a long chain) and the short
+        // dead-end `s`. When `w` finishes, it releases `h` (long chain)
+        // on r. FIFO serves s before h (it queued first); DLS ranks h's
+        // dynamic level (2 − 11) above s's (0 − 1) and runs h first.
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 1);
+        let y = pool.add("y", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        let w = dag.add(task("w", Phase::Forward, r, 2.0, None));
+        let s = dag.add(task("s", Phase::Forward, r, 1.0, None));
+        let h = dag.add(task("h", Phase::Forward, r, 1.0, None));
+        let g = dag.add(task("g", Phase::Forward, y, 10.0, None));
+        dag.edge(w, h);
+        dag.edge(h, g);
+
+        let fifo = simulate_with(&dag, &pool, &mut FifoScheduler::new());
+        assert!(fifo.start[s] < fifo.start[h], "fifo serves the queue in order");
+        let dls = simulate_with(&dag, &pool, &mut DlsScheduler::new());
+        assert!(dls.start[h] < dls.start[s], "dls promotes the long chain");
+        assert!(dls.makespan < fifo.makespan);
+    }
+
+    #[test]
+    fn peft_prefers_unblocking_expensive_tails() {
+        // `e` (dur 5, dead end) and `c` (dur 1, unblocks a 4s tail) tie
+        // on upward rank (5.0). Critical-path falls back to id order and
+        // runs the dead end first (makespan 10); PEFT's optimistic cost
+        // table ranks c's remaining-after-finish cost (4) above e's (0)
+        // and overlaps the tail (makespan 6).
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 1);
+        let x = pool.add("x", ResourceClass::Gpu, 1);
+        let mut dag = Dag::new();
+        let e = dag.add(task("e", Phase::Forward, r, 5.0, None));
+        let c = dag.add(task("c", Phase::Forward, r, 1.0, None));
+        let tail = dag.add(task("tail", Phase::Forward, x, 4.0, None));
+        dag.edge(c, tail);
+
+        let cp = simulate_with(&dag, &pool, &mut CriticalPathScheduler::new());
+        assert!((cp.makespan - 10.0).abs() < 1e-12, "cp {}", cp.makespan);
+        assert!(cp.start[e] < cp.start[c]);
+        let peft = simulate_with(&dag, &pool, &mut PeftScheduler::new());
+        assert!((peft.makespan - 6.0).abs() < 1e-12, "peft {}", peft.makespan);
+        assert!(peft.start[c] < peft.start[e]);
     }
 
     #[test]
@@ -570,5 +955,34 @@ mod tests {
         let r1 = simulate_with(&dag, &pool, &mut sched);
         let r2 = simulate_with(&dag, &pool, &mut sched);
         assert_eq!(r1.finish, r2.finish);
+    }
+
+    #[test]
+    fn every_registered_policy_is_deterministic_across_reruns() {
+        let net = NetSpec {
+            name: "empty".into(),
+            layers: Vec::new(),
+            input_bytes: 0,
+            default_batch: 1,
+        };
+        let mut pool = ResourcePool::new();
+        let r = pool.add("r", ResourceClass::Gpu, 2);
+        let coll = pool.add("coll", ResourceClass::Collective, 1);
+        let mut dag = Dag::new();
+        let a = dag.add(task("a", Phase::Forward, r, 1.5, Some(0)));
+        let b = dag.add(task("b", Phase::Backward, r, 2.0, Some(1)));
+        let agg = dag.add(task("agg", Phase::Aggregate, coll, 0.5, Some(1)));
+        let u = dag.add(task("u", Phase::Update, r, 0.25, Some(1)));
+        dag.edge(a, b);
+        dag.edge(b, agg);
+        dag.edge(agg, u);
+        for kind in SchedulerKind::all() {
+            let mut sched = kind.build(&net);
+            let r1 = simulate_with(&dag, &pool, sched.as_mut());
+            let r2 = simulate_with(&dag, &pool, sched.as_mut());
+            let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+            assert_eq!(bits(&r1.start), bits(&r2.start), "{}", kind.name());
+            assert_eq!(bits(&r1.finish), bits(&r2.finish), "{}", kind.name());
+        }
     }
 }

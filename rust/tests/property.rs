@@ -10,9 +10,10 @@ use dagsgd::dag::graph::Dag;
 use dagsgd::dag::node::{Phase, Task};
 use dagsgd::sim::executor::{simulate, simulate_with, SimResult};
 use dagsgd::sim::resources::{ResourceClass, ResourcePool};
+use dagsgd::sim::lower_bound::{gap_to_bound, makespan_lower_bound};
 use dagsgd::sim::scheduler::{
-    CriticalPathScheduler, FifoScheduler, FusionAwareScheduler, PriorityScheduler, Scheduler,
-    SchedulerKind,
+    CpLookaheadScheduler, CriticalPathScheduler, DlsScheduler, FifoScheduler,
+    FusionAwareScheduler, PeftScheduler, PriorityScheduler, Scheduler, SchedulerKind,
 };
 use dagsgd::trace::format::{LayerRecord, Trace};
 use dagsgd::util::quickcheck::{approx_eq, check, Gen};
@@ -322,6 +323,9 @@ fn prop_every_scheduler_feasible_on_random_dags() {
             Box::new(FifoScheduler::new()),
             Box::new(PriorityScheduler::new()),
             Box::new(CriticalPathScheduler::new()),
+            Box::new(CpLookaheadScheduler::new()),
+            Box::new(DlsScheduler::new()),
+            Box::new(PeftScheduler::new()),
             // No bucket map: the fusion policy degenerates to immediate
             // launch, which must still be feasible on arbitrary DAGs.
             Box::new(FusionAwareScheduler::new(Vec::new())),
@@ -391,6 +395,84 @@ fn prop_every_scheduler_feasible_on_ssgd_dags() {
                         kind.name()
                     );
                 }
+            }
+        }
+    }
+}
+
+/// No policy — however clever — may finish below `sim::lower_bound`:
+/// the bound is the max of the critical-path length and every
+/// resource's total-work/capacity, both of which hold for any feasible
+/// non-preemptive schedule. Checked on random layered DAGs with the
+/// explicit policy structs (the fusion policy in its degenerate
+/// bucket-free form), with the gap clamped and non-negative.
+#[test]
+fn prop_no_policy_beats_the_lower_bound_on_random_dags() {
+    check(60, |g| {
+        let (dag, pool) = random_dag(g);
+        let bound = makespan_lower_bound(&dag, &pool);
+        prop_assert!(bound > 0.0, "bound must be positive on non-empty DAGs");
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(FifoScheduler::new()),
+            Box::new(PriorityScheduler::new()),
+            Box::new(CriticalPathScheduler::new()),
+            Box::new(CpLookaheadScheduler::new()),
+            Box::new(DlsScheduler::new()),
+            Box::new(PeftScheduler::new()),
+            Box::new(FusionAwareScheduler::new(Vec::new())),
+        ];
+        for sched in scheds.iter_mut() {
+            let res = simulate_with(&dag, &pool, sched.as_mut());
+            prop_assert!(
+                res.makespan >= bound - 1e-9,
+                "{}: makespan {} beats lower bound {}",
+                sched.name(),
+                res.makespan,
+                bound
+            );
+            let gap = gap_to_bound(res.makespan, bound);
+            prop_assert!(gap >= 0.0, "{}: negative gap {gap}", sched.name());
+        }
+        Ok(())
+    });
+}
+
+/// The same invariant on the real S-SGD DAGs, through the registry: the
+/// bound is computed once per job and every registered concrete policy
+/// must respect it.
+#[test]
+fn prop_no_policy_beats_the_lower_bound_on_ssgd_dags() {
+    use dagsgd::cluster::presets;
+    use dagsgd::dag::builder::{build_ssgd_dag, JobSpec};
+    use dagsgd::frameworks::strategy;
+    use dagsgd::models::zoo;
+
+    for layerwise in [false, true] {
+        for (nodes, gpus) in [(1, 2), (2, 2), (4, 4)] {
+            let cluster = presets::k80_cluster();
+            let net = zoo::resnet50();
+            let job = JobSpec {
+                batch_per_gpu: net.default_batch,
+                net,
+                nodes,
+                gpus_per_node: gpus,
+                iterations: 4,
+            };
+            let mut fw = strategy::caffe_mpi();
+            fw.layerwise_update = layerwise;
+            let (dag, res) = build_ssgd_dag(&cluster, &job, &fw);
+            let bound = makespan_lower_bound(&dag, &res.pool);
+            assert!(bound > 0.0);
+            for kind in SchedulerKind::all() {
+                let mut sched = kind.build(&job.net);
+                let sim = simulate_with(&dag, &res.pool, sched.as_mut());
+                assert!(
+                    sim.makespan >= bound - 1e-9,
+                    "{} on {nodes}x{gpus} layerwise={layerwise}: makespan {} beats bound {}",
+                    kind.name(),
+                    sim.makespan,
+                    bound
+                );
             }
         }
     }

@@ -25,7 +25,8 @@ fn scheduler_errors_are_bare_and_pinned() {
     assert!(e.bare);
     assert_eq!(
         e.msg,
-        "unknown scheduler 'bogus' (try fifo, priority, critical-path, fusion)"
+        "unknown scheduler 'bogus' (try fifo, priority, critical-path, fusion, \
+         cp-lookahead, dls, peft, portfolio)"
     );
     // Bare errors render identically under every command name.
     assert_eq!(e.render("whatif"), e.msg);
@@ -33,7 +34,14 @@ fn scheduler_errors_are_bare_and_pinned() {
     assert_eq!(e.render("calibrate"), e.msg);
     // The list form trips on the first bad element.
     let e = query::scheduler_list_or(&args(&["--scheduler", "fifo,nope"]), &[]).unwrap_err();
-    assert_eq!(e.msg, "unknown scheduler 'nope' (try fifo, priority, critical-path, fusion)");
+    assert_eq!(
+        e.msg,
+        "unknown scheduler 'nope' (try fifo, priority, critical-path, fusion, \
+         cp-lookahead, dls, peft, portfolio)"
+    );
+    // The hint is the registry's listing, so a new policy registered in
+    // `sim/scheduler.rs` shows up here without touching the query layer.
+    assert!(e.msg.ends_with(&format!("(try {})", SchedulerKind::name_list())));
 }
 
 #[test]
@@ -42,7 +50,8 @@ fn axis_errors_are_prefixed_and_pinned() {
         (
             &["--fabric", "warp-drive"],
             "unknown fabric 'warp-drive' (try measured, ideal, stock, 10gbe, \
-             100gb-ib, a cluster preset, or alpha<S>-bw<B/S>)",
+             100gb-ib, a cluster preset, alpha<S>-bw<B/S>, or \
+             routed:<cluster>[:spine=<k>])",
         ),
         (
             &["--fabric", "alphaooops"],
